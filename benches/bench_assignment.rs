@@ -1,0 +1,50 @@
+//! Assignment-solver latency (paper Fig. 15 / 21 / Table 4 solve costs):
+//! greedy vs exact branch-and-bound vs beam vs static, at each model's
+//! expert count. The paper's claim: greedy ≈ free, Opt_plan prohibitive.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, black_box};
+use dali::config::Presets;
+use dali::coordinator::assignment::*;
+use dali::hw::CostModel;
+use dali::util::DetRng;
+
+fn main() {
+    let presets = Presets::load_default().unwrap();
+    println!("# bench_assignment — per-layer solve latency (paper Table 4 / Fig. 15 / Fig. 21)");
+    for (preset, batch) in [("mixtral-sim", 16), ("deepseek-sim", 32), ("qwen-sim", 32)] {
+        let model = presets.model(preset).unwrap();
+        let cost = CostModel::new(model, presets.hw("local-pc").unwrap());
+        let n = model.sim.n_routed;
+        let k = model.sim.top_k;
+        let mut rng = DetRng::new(9);
+        // realistic decode workloads: batch*k token-expert assignments
+        let mut workloads = vec![0u32; n];
+        for _ in 0..batch * k {
+            workloads[rng.usize_below(n)] += 1;
+        }
+        let resident: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cost,
+            gpu_free_slots: n,
+            layer: 0,
+            layers: model.sim.layers,
+        };
+        bench(&format!("greedy/{preset}/N{n}"), || {
+            black_box(GreedyAssigner::new().assign(&ctx));
+        });
+        bench(&format!("beam2/{preset}/N{n}"), || {
+            black_box(BeamAssigner::new(2).assign(&ctx));
+        });
+        bench(&format!("static/{preset}/N{n}"), || {
+            black_box(StaticThresholdAssigner::new().assign(&ctx));
+        });
+        bench(&format!("optimal/{preset}/N{n}"), || {
+            black_box(OptimalAssigner::new().assign(&ctx));
+        });
+    }
+}

@@ -1,0 +1,50 @@
+//! Cache-policy hot-path latency (paper §4.3 / Table 9 replacement costs):
+//! observe + window_tick for each replacement policy at each expert count.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+use bench_harness::bench;
+use dali::coordinator::cache::*;
+use dali::util::DetRng;
+
+fn churn(c: &mut dyn ExpertCache, n: usize, rng: &mut DetRng, step: usize) {
+    let w: Vec<u32> = (0..n).map(|_| rng.usize_below(6) as u32).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+    for l in 0..4 {
+        c.observe(l, &w, &g);
+        let e = rng.usize_below(n);
+        let fetched = !c.is_resident(l, e);
+        c.on_gpu_use(l, e, fetched);
+        c.window_tick(l, step);
+    }
+}
+
+fn main() {
+    println!("# bench_cache — per-step cache maintenance across policies");
+    for n in [8usize, 16, 32, 128] {
+        let cap = (n / 2).max(1);
+        let mut step = 0usize;
+
+        let mut wa = WorkloadAwareCache::new(4, n, cap, 4, (n / 4).max(1), 1);
+        let mut rng = DetRng::new(5);
+        bench(&format!("workload_aware/N{n}"), || {
+            step += 1;
+            churn(&mut wa, n, &mut rng, step);
+        });
+
+        let mut lru = LruCache::new(4, n, cap, 1);
+        let mut rng = DetRng::new(5);
+        bench(&format!("lru/N{n}"), || {
+            step += 1;
+            churn(&mut lru, n, &mut rng, step);
+        });
+
+        let mut sc = ScoreCache::new(4, n, cap, 1);
+        let mut rng = DetRng::new(5);
+        bench(&format!("score/N{n}"), || {
+            step += 1;
+            churn(&mut sc, n, &mut rng, step);
+        });
+    }
+}

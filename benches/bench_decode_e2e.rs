@@ -1,0 +1,57 @@
+//! End-to-end decode replay (paper Fig. 12's measurement loop): full
+//! 32-step decode over the recorded C4 trace per framework. Wall-clock here
+//! is the coordinator's own cost of simulating/scheduling the run; the
+//! reported simulated tokens/s is the paper metric (printed once).
+//!
+//! Requires trace pools (`dali prepare`).
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, black_box};
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::replay_decode;
+use dali::hw::CostModel;
+use dali::workload::prep;
+
+fn main() {
+    let presets = Presets::load_default().unwrap();
+    println!("# bench_decode_e2e — 32-step decode replay per framework (mixtral-sim, batch 16)");
+    let preset = "mixtral-sim";
+    let model = presets.model(preset).unwrap();
+    let cost = CostModel::new(model, presets.hw("local-pc").unwrap());
+    let calib = match prep::ensure_calib(preset) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("SKIP: {e:#} (run `dali prepare`)");
+            return;
+        }
+    };
+    let trace = prep::ensure_trace(preset, "c4-sim", 32, 16, 64).expect("trace pool");
+    let cfg = FrameworkCfg::paper_default(&model.sim);
+    let ids: Vec<usize> = (0..16).collect();
+    for fw in [
+        Framework::Naive,
+        Framework::LlamaCpp,
+        Framework::KTransformers,
+        Framework::MoELightning,
+        Framework::HybriMoE,
+        Framework::Dali,
+    ] {
+        // report the paper metric once
+        let m = replay_decode(
+            &trace, &ids, 32, &cost,
+            fw.bundle(&model.sim, &cost, &calib.freq, &cfg),
+            calib.freq.clone(), model.sim.n_shared, 7,
+        );
+        println!("  {:<14} simulated {:.2} tokens/s", fw.name(), m.tokens_per_s());
+        bench(&format!("replay_decode/{}", fw.name()), || {
+            black_box(replay_decode(
+                &trace, &ids, 32, &cost,
+                fw.bundle(&model.sim, &cost, &calib.freq, &cfg),
+                calib.freq.clone(), model.sim.n_shared, 7,
+            ));
+        });
+    }
+}

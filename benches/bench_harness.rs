@@ -1,0 +1,62 @@
+//! Minimal benchmark harness (the offline build has no criterion).
+//!
+//! Usage inside a `harness = false` bench target:
+//!
+//! ```ignore
+//! #[path = "bench_harness.rs"] mod bench_harness;
+//! use bench_harness::bench;
+//! bench("greedy_n16", || { ... });
+//! ```
+//!
+//! Reports mean / p50 / min / stddev over timed iterations after warm-up,
+//! in a stable plain-text format captured into bench_output.txt.
+
+use std::time::{Duration, Instant};
+
+/// Budget per benchmark (after warm-up).
+const BUDGET: Duration = Duration::from_millis(1200);
+const MAX_ITERS: usize = 2000;
+const WARMUP: usize = 3;
+
+pub fn bench<F: FnMut()>(name: &str, mut f: F) {
+    for _ in 0..WARMUP {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < BUDGET && samples.len() < MAX_ITERS {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e9);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n as f64;
+    let p50 = samples[n / 2];
+    let min = samples[0];
+    println!(
+        "bench {name:<42} iters {n:>5}  mean {}  p50 {}  min {}  sd {}",
+        fmt(mean),
+        fmt(p50),
+        fmt(min),
+        fmt(var.sqrt())
+    );
+}
+
+fn fmt(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:>8.3}s ", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:>8.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:>8.3}us", ns / 1e3)
+    } else {
+        format!("{:>8.0}ns", ns)
+    }
+}
+
+/// Keep a value alive / defeat dead-code elimination.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,57 @@
+//! Single-MoE-layer orchestration cost (paper §4 runtime loop): one
+//! simulated layer step per framework policy — the L3 hot path that must
+//! never rival the simulated compute it schedules.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+use bench_harness::bench;
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::{Phase, StepSimulator};
+use dali::hw::CostModel;
+use dali::util::DetRng;
+use dali::workload::trace::{BatchStep, LayerStepData};
+
+fn mk_step(layers: usize, n: usize, tokens: usize, rng: &mut DetRng) -> BatchStep {
+    let layers_data: Vec<LayerStepData> = (0..layers)
+        .map(|_| {
+            let mut workloads = vec![0u32; n];
+            for _ in 0..tokens * 2 {
+                workloads[rng.usize_below(n)] += 1;
+            }
+            LayerStepData {
+                gate_scores: workloads.iter().map(|&w| w as f32 * 0.3).collect(),
+                pred_raw: workloads.clone(),
+                pred_res: workloads.clone(),
+                workloads,
+            }
+        })
+        .collect();
+    BatchStep { tokens, layers: layers_data }
+}
+
+fn main() {
+    let presets = Presets::load_default().unwrap();
+    println!("# bench_moe_layer — one simulated batch step (all layers) per framework");
+    for preset in ["mixtral-sim", "qwen-sim"] {
+        let model = presets.model(preset).unwrap();
+        let dims = &model.sim;
+        let cost = CostModel::new(model, presets.hw("local-pc").unwrap());
+        let cfg = FrameworkCfg::paper_default(dims);
+        let freq = vec![vec![1.0 / dims.n_routed as f64; dims.n_routed]; dims.layers];
+        for fw in [Framework::Dali, Framework::HybriMoE, Framework::KTransformers, Framework::DaliOpt] {
+            let bundle = fw.bundle(dims, &cost, &freq, &cfg);
+            let mut sim = StepSimulator::new(
+                &cost, bundle, freq.clone(), dims.layers, dims.n_routed, dims.n_shared, 1,
+            );
+            let mut rng = DetRng::new(11);
+            let mut kv = 16usize;
+            bench(&format!("{}/{preset}/B16", fw.name()), || {
+                let step = mk_step(dims.layers, dims.n_routed, 16, &mut rng);
+                sim.run_step(&step, kv, Phase::Decode);
+                kv += 1;
+            });
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Predictor hot-path latency (paper §4.2): ranking cost per layer step for
+//! each prediction strategy, plus top-n selection.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, black_box};
+use dali::coordinator::prefetch::*;
+use dali::util::DetRng;
+
+fn main() {
+    println!("# bench_prefetch — per-layer prediction + ranking cost");
+    for n in [8usize, 16, 32, 128] {
+        let mut rng = DetRng::new(3);
+        let pred_raw: Vec<u32> = (0..n).map(|_| rng.usize_below(8) as u32).collect();
+        let pred_res: Vec<u32> = (0..n).map(|_| rng.usize_below(8) as u32).collect();
+        let cur: Vec<u32> = (0..n).map(|_| rng.usize_below(8) as u32).collect();
+        let freq: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+
+        let preds: Vec<(&str, Box<dyn Prefetcher>)> = vec![
+            ("residual", Box::new(ResidualPrefetcher)),
+            ("feature", Box::new(FeaturePrefetcher)),
+            ("statistical", Box::new(StatisticalPrefetcher)),
+            ("random", Box::new(RandomPrefetcher)),
+        ];
+        for (name, mut p) in preds {
+            let mut prng = DetRng::new(7);
+            bench(&format!("{name}/N{n}"), || {
+                let mut ctx = PrefetchCtx {
+                    pred_raw: &pred_raw,
+                    pred_res: &pred_res,
+                    cur_workloads: &cur,
+                    true_next: None,
+                    calib_freq_next: &freq,
+                    rng: &mut prng,
+                };
+                let scores = p.predict(&mut ctx);
+                black_box(top_n(&scores, 4));
+            });
+        }
+    }
+}

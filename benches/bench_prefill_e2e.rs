@@ -1,0 +1,58 @@
+//! End-to-end prefill replay (paper Fig. 13's measurement loop) plus the
+//! live-engine prefill wall cost (real PJRT numerics path).
+//!
+//! Requires artifacts; trace pools are generated on demand.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, black_box};
+use dali::config::Presets;
+use dali::coordinator::engine::InferenceEngine;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::replay_prefill;
+use dali::hw::CostModel;
+use dali::workload::corpus::{CorpusGen, TaskProfile};
+use dali::workload::prep;
+
+fn main() {
+    let presets = Presets::load_default().unwrap();
+    println!("# bench_prefill_e2e — prefill replay per framework (deepseek-sim, batch 32)");
+    let preset = "deepseek-sim";
+    let model = presets.model(preset).unwrap();
+    let cost = CostModel::new(model, presets.hw("local-pc").unwrap());
+    let calib = match prep::ensure_calib(preset) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("SKIP: {e:#} (run `dali prepare`)");
+            return;
+        }
+    };
+    let trace = prep::ensure_trace(preset, "c4-sim", 32, 16, 64).expect("trace pool");
+    let cfg = FrameworkCfg::paper_default(&model.sim);
+    let ids: Vec<usize> = (0..32).collect();
+    for fw in [Framework::LlamaCpp, Framework::KTransformers, Framework::HybriMoE, Framework::Dali] {
+        let m = replay_prefill(
+            &trace, &ids, &cost,
+            fw.bundle(&model.sim, &cost, &calib.freq, &cfg),
+            calib.freq.clone(), model.sim.n_shared, 7,
+        );
+        println!("  {:<14} simulated {:.1} tokens/s", fw.name(), m.tokens_per_s());
+        bench(&format!("replay_prefill/{}", fw.name()), || {
+            black_box(replay_prefill(
+                &trace, &ids, &cost,
+                fw.bundle(&model.sim, &cost, &calib.freq, &cfg),
+                calib.freq.clone(), model.sim.n_shared, 7,
+            ));
+        });
+    }
+
+    // live PJRT prefill wall cost (the real-numerics hot path)
+    println!("# live-engine prefill (real PJRT, wall clock)");
+    let eng = InferenceEngine::new(preset).expect("artifacts");
+    let mut gen = CorpusGen::new(model.sim.vocab, TaskProfile::c4(), 77);
+    let prompts = gen.batch(2, 16);
+    bench("live_prefill/deepseek-sim/B2xS16", || {
+        black_box(eng.run_batch(&prompts, 0, false).unwrap());
+    });
+}

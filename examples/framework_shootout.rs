@@ -1,0 +1,58 @@
+//! Framework shootout: decode the same workload under all six systems
+//! (llama.cpp, KTransformers, Fiddler, MoE-Lightning, HybriMoE, DALI) and
+//! print the comparison table — a one-command miniature of paper Fig. 12.
+//!
+//!     cargo run --release --example framework_shootout -- \
+//!         [--preset deepseek-sim] [--batch 16] [--steps 32]
+
+use anyhow::Result;
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::replay_decode;
+use dali::hw::CostModel;
+use dali::util::{Args, Table};
+use dali::workload::prep;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let preset = args.str_or("preset", "deepseek-sim");
+    let batch = args.usize_or("batch", 16);
+    let steps = args.usize_or("steps", 32);
+
+    let presets = Presets::load_default()?;
+    let model = presets.model(&preset)?;
+    let cost = CostModel::new(model, presets.hw("local-pc")?);
+    let calib = prep::ensure_calib(&preset)?;
+    let trace = prep::ensure_trace(&preset, "c4-sim", 32, 16, 64)?;
+    let cfg = FrameworkCfg::paper_default(&model.sim);
+    let seq_ids: Vec<usize> = (0..batch).collect();
+
+    let mut frameworks = vec![Framework::Naive, Framework::Fiddler];
+    frameworks.extend(Framework::comparison_set());
+
+    let mut table = Table::new(vec![
+        "framework", "tokens/s", "vs naive", "cache hit", "PCIe GB", "sched %",
+    ]);
+    let mut naive_tps = 0.0;
+    for fw in frameworks {
+        let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
+        let m = replay_decode(
+            &trace, &seq_ids, steps, &cost, bundle, calib.freq.clone(), model.sim.n_shared, 7,
+        );
+        let tps = m.tokens_per_s();
+        if fw == Framework::Naive {
+            naive_tps = tps;
+        }
+        table.row(vec![
+            fw.name().to_string(),
+            format!("{tps:.2}"),
+            format!("{:.2}x", tps / naive_tps.max(1e-9)),
+            format!("{:.1}%", 100.0 * m.cache_hit_rate()),
+            format!("{:.2}", m.pcie_total_bytes() as f64 / 1e9),
+            format!("{:.2}", 100.0 * m.sched_share()),
+        ]);
+    }
+    println!("decode shootout: {preset}, batch {batch}, {steps} steps (simulated local PC)\n");
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: load a preset, run live MoE inference with DALI's scheduler,
+//! and print generated tokens + simulated local-PC performance.
+//!
+//!     cargo run --release --example quickstart -- [--preset mixtral-sim]
+//!
+//! Requires `make artifacts`. Demonstrates the full public API surface:
+//! presets → engine → calibration → live batch → virtual-time metrics.
+
+use anyhow::Result;
+use dali::config::Presets;
+use dali::coordinator::engine::InferenceEngine;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::{Phase, StepSimulator};
+use dali::hw::CostModel;
+use dali::util::{fmt_ns, Args};
+use dali::workload::corpus::{CorpusGen, TaskProfile};
+use dali::workload::prep;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let preset = args.str_or("preset", "mixtral-sim");
+    let batch = args.usize_or("batch", 4);
+    let steps = args.usize_or("steps", 12);
+
+    // 1. configuration: scaled sim model + paper-scale hardware model
+    let presets = Presets::load_default()?;
+    let model = presets.model(&preset)?;
+    let hw = presets.hw("local-pc")?;
+    let cost = CostModel::new(model, hw);
+    println!("model   : {} ({} layers, {} experts, top-{})",
+        model.display, model.sim.layers, model.sim.n_routed, model.sim.top_k);
+    println!("hardware: {} (expert transfer {} over PCIe)",
+        hw.display, fmt_ns(cost.trans_time()));
+
+    // 2. offline calibration (residual vectors, Eq. 11) — cached on disk
+    let calib = prep::ensure_calib(&preset)?;
+    println!("calib   : {} tokens, {} residual vectors", calib.tokens, calib.res_vec.len());
+
+    // 3. live inference with trace recording (real PJRT numerics)
+    let engine = InferenceEngine::new(&preset)?;
+    let mut gen = CorpusGen::new(model.sim.vocab, TaskProfile::c4(), 1234);
+    let prompts = gen.batch(batch, 8);
+    let out = engine.run_batch(&prompts, steps, true)?;
+    for (i, g) in out.generated.iter().enumerate() {
+        println!("seq {i}: prompt {:?} → generated {:?}", prompts[i], g);
+    }
+
+    // 4. virtual-time pass: what would this cost on the paper's local PC?
+    let trace = out.trace.unwrap();
+    let cfg = FrameworkCfg::paper_default(&model.sim);
+    let bundle = Framework::Dali.bundle(&model.sim, &cost, &calib.freq, &cfg);
+    let mut sim = StepSimulator::new(
+        &cost, bundle, calib.freq.clone(),
+        model.sim.layers, model.sim.n_routed, model.sim.n_shared, 7,
+    );
+    let ids: Vec<usize> = (0..batch).collect();
+    sim.run_step(&trace.compose_prefill(&ids), 4, Phase::Prefill);
+    sim.reset_metrics();
+    for s in 0..trace.min_steps() {
+        sim.run_step(&trace.compose_decode(&ids, s), 8 + s, Phase::Decode);
+    }
+    let m = sim.finish();
+    println!("--- simulated local-PC decode ---");
+    println!("decode speed   : {:.2} tokens/s", m.tokens_per_s());
+    println!("virtual time   : {}", fmt_ns(m.total_ns));
+    println!("cache hit rate : {:.1}%", 100.0 * m.cache_hit_rate());
+    println!("PCIe busy      : {:.1}% of time", 100.0 * m.pcie_time_share());
+    Ok(())
+}

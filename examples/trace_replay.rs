@@ -1,0 +1,90 @@
+//! Trace replay: watch DALI's Workload-Aware cache adapt to a sequence's
+//! domain over time (the paper's Fig. 18d behaviour), then compare cache
+//! policies on the same trace.
+//!
+//!     cargo run --release --example trace_replay -- [--preset mixtral-sim]
+
+use anyhow::Result;
+use dali::config::Presets;
+use dali::coordinator::assignment::GreedyAssigner;
+use dali::coordinator::cache::{LruCache, ScoreCache, WorkloadAwareCache};
+use dali::coordinator::prefetch::NoPrefetcher;
+use dali::coordinator::simrun::{Phase, PolicyBundle, StepSimulator};
+use dali::hw::CostModel;
+use dali::util::{Args, Table};
+use dali::workload::prep;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let preset = args.str_or("preset", "mixtral-sim");
+    let batch = args.usize_or("batch", 4);
+
+    let presets = Presets::load_default()?;
+    let model = presets.model(&preset)?;
+    let dims = model.sim.clone();
+    let cost = CostModel::new(model, presets.hw("local-pc")?);
+    let calib = prep::ensure_calib(&preset)?;
+    let trace = prep::ensure_trace(&preset, "wikitext-sim", 16, 16, 48)?;
+    let seq_ids: Vec<usize> = (0..batch).collect();
+    let cache_size = (dims.n_routed / 2).max(1);
+
+    // --- hit rate as the sequence progresses (Fig. 18d style) ---------------
+    println!("cache hit rate vs token position ({preset}, workload-aware cache):\n");
+    let bundle = PolicyBundle {
+        assigner: Box::new(GreedyAssigner::new()),
+        prefetcher: Box::new(NoPrefetcher),
+        cache: Box::new(WorkloadAwareCache::new(dims.layers, dims.n_routed, cache_size, 8, 1, 3)),
+        prefetch_size: 0,
+        cpu_eff: 1.0,
+        layer_overhead_ns: 0,
+        gpu_free_slots: dims.n_routed,
+    };
+    let mut sim = StepSimulator::new(
+        &cost, bundle, calib.freq.clone(), dims.layers, dims.n_routed, dims.n_shared, 5,
+    );
+    sim.run_step(&trace.compose_prefill(&seq_ids), 8, Phase::Prefill);
+    sim.reset_metrics();
+    let group = 8;
+    let mut last = (0u64, 0u64);
+    for s in 0..trace.min_steps() {
+        sim.run_step(&trace.compose_decode(&seq_ids, s), 16 + s, Phase::Decode);
+        if (s + 1) % group == 0 {
+            let hits = sim.metrics.cache_hits - last.0;
+            let looks = sim.metrics.cache_lookups - last.1;
+            last = (sim.metrics.cache_hits, sim.metrics.cache_lookups);
+            let rate = if looks > 0 { hits as f64 / looks as f64 } else { 0.0 };
+            let bar = "#".repeat((rate * 40.0) as usize);
+            println!("tokens {:3}-{:3}: {:5.1}%  {bar}", s + 2 - group, s + 1, rate * 100.0);
+        }
+    }
+
+    // --- policy comparison on the same trace ---------------------------------
+    println!("\ncache policy comparison (same trace, same assignment):\n");
+    let mut table = Table::new(vec!["policy", "hit rate", "tokens/s"]);
+    for which in ["lru", "score", "workload_aware"] {
+        let cache: Box<dyn dali::coordinator::cache::ExpertCache> = match which {
+            "lru" => Box::new(LruCache::new(dims.layers, dims.n_routed, cache_size, 3)),
+            "score" => Box::new(ScoreCache::new(dims.layers, dims.n_routed, cache_size, 3)),
+            _ => Box::new(WorkloadAwareCache::new(dims.layers, dims.n_routed, cache_size, 4, 1, 3)),
+        };
+        let bundle = PolicyBundle {
+            assigner: Box::new(GreedyAssigner::new()),
+            prefetcher: Box::new(NoPrefetcher),
+            cache,
+            prefetch_size: 0,
+            cpu_eff: 1.0,
+            layer_overhead_ns: 0,
+            gpu_free_slots: dims.n_routed,
+        };
+        let m = dali::coordinator::simrun::replay_decode(
+            &trace, &seq_ids, 48, &cost, bundle, calib.freq.clone(), dims.n_shared, 5,
+        );
+        table.row(vec![
+            which.to_string(),
+            format!("{:.1}%", 100.0 * m.cache_hit_rate()),
+            format!("{:.2}", m.tokens_per_s()),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

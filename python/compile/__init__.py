@@ -1,0 +1,5 @@
+"""Build-time compile package: Layer-2 JAX model + Layer-1 Pallas kernels + AOT.
+
+Never imported at runtime — `make artifacts` runs `python -m compile.aot`
+once, and the Rust binary is self-contained afterwards.
+"""

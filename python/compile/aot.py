@@ -1,0 +1,191 @@
+"""AOT compile path: lower every Layer-2 function to HLO *text* artifacts.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Per preset this writes
+
+    artifacts/<preset>/
+      embed_t{T}.hlo.txt  gate_t{T}.hlo.txt  expert_t{T}.hlo.txt
+      head_t{T}.hlo.txt   attn_prefill_s{S}.hlo.txt attn_decode_b{B}.hlo.txt
+      weights/<name>.bin          # flat f32 little-endian
+      manifest.json               # dims, buckets, artifact + weight index
+      golden.json                 # python-reference activations for rust tests
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .presets import buckets, load_preset, preset_names
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def emit_preset(p, out_dir: str, bk: dict, quick: bool) -> dict:
+    """Lower all artifacts for one preset; returns the manifest dict."""
+    d, f, n, v = p.hidden, p.moe_inter, p.n_routed, p.vocab
+    os.makedirs(out_dir, exist_ok=True)
+    t_buckets = bk["tokens"][:4] if quick else bk["tokens"]
+    s_buckets = bk["prefill_seq"][:2] if quick else bk["prefill_seq"]
+    b_buckets = bk["decode_batch"][:2] if quick else bk["decode_batch"]
+    artifacts = {}
+
+    def emit(name, fn, *specs):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        text = lower(fn, *specs)
+        with open(path, "w") as fh:
+            fh.write(text)
+        artifacts[name] = os.path.basename(path)
+        print(f"  {name}: {len(text)} chars ({time.time() - t0:.2f}s)")
+
+    for t in t_buckets:
+        emit("embed_t%d" % t, M.embed, i32(t), i32(t), f32(v, d), f32(p.max_seq, d))
+        emit("gate_t%d" % t, M.gate, f32(t, d), f32(d), f32(d, n))
+        emit("expert_t%d" % t, M.expert, f32(t, d), f32(d, f), f32(f, d), f32(d, f))
+        emit("head_t%d" % t, M.head, f32(t, d), f32(d), f32(v, d))
+    ap = partial(M.attn_prefill, heads=p.heads, head_dim=p.head_dim)
+    for s in s_buckets:
+        emit(
+            "attn_prefill_s%d" % s,
+            ap,
+            f32(s, d), f32(d), f32(d, d), f32(d, d), f32(d, d), f32(d, d),
+        )
+    ad = partial(M.attn_decode, heads=p.heads, head_dim=p.head_dim)
+    cache = f32(0, p.max_seq, p.heads, p.head_dim)
+    for b in b_buckets:
+        cache = f32(b, p.max_seq, p.heads, p.head_dim)
+        emit(
+            "attn_decode_b%d" % b,
+            ad,
+            f32(b, d), cache, cache, i32(b),
+            f32(d), f32(d, d), f32(d, d), f32(d, d), f32(d, d),
+        )
+
+    # --- weights -----------------------------------------------------------
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    weights = M.gen_weights(p)
+    windex = {}
+    for name, arr in weights.items():
+        fname = name.replace("/", "_") + ".bin"
+        arr.astype("<f4").tofile(os.path.join(wdir, fname))
+        windex[name] = {"file": f"weights/{fname}", "shape": list(arr.shape)}
+
+    manifest = {
+        "preset": p.name,
+        "dims": {
+            "layers": p.layers, "hidden": d, "heads": p.heads,
+            "head_dim": p.head_dim, "n_routed": n, "top_k": p.top_k,
+            "n_shared": p.n_shared, "moe_inter": f, "vocab": v,
+            "max_seq": p.max_seq,
+        },
+        "buckets": {
+            "tokens": t_buckets, "prefill_seq": s_buckets,
+            "decode_batch": b_buckets,
+        },
+        "artifacts": artifacts,
+        "weights": windex,
+        "golden": "golden.json",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def emit_golden(p, out_dir: str, quick: bool) -> None:
+    """Run the python reference end-to-end on tiny fixed inputs and record
+    activations for the rust integration tests."""
+    w = {k: jnp.asarray(v) for k, v in M.gen_weights(p).items()}
+    rng = np.random.default_rng(7)
+    seqs = [rng.integers(0, p.vocab, size=8).tolist() for _ in range(2)]
+    decode_steps = 2 if quick else 4
+    golden = {"prompts": seqs, "decode_steps": decode_steps, "sequences": []}
+    for tokens in seqs:
+        x, kv, route_log = M.forward_prefill_ref(p, w, np.asarray(tokens))
+        logits = M.head(x, w["final.norm"], w["embed.table"])
+        entry = {
+            "prefill_routes": [r.tolist() for r in route_log],
+            "prefill_last_logits8": np.asarray(logits[-1][:8]).round(5).tolist(),
+            "decode": [],
+        }
+        pos = len(tokens)
+        tok = int(np.argmax(np.asarray(logits[-1])))
+        for _ in range(decode_steps):
+            logit, routes = M.forward_decode_ref(p, w, kv, tok, pos)
+            entry["decode"].append(
+                {
+                    "token_in": tok,
+                    "pos": pos,
+                    "routes": [r.tolist() for r in routes],
+                    "logits8": logit[:8].round(5).tolist(),
+                    "argmax": int(np.argmax(logit)),
+                }
+            )
+            tok = int(np.argmax(logit))
+            pos += 1
+        golden["sequences"].append(entry)
+    with open(os.path.join(out_dir, "golden.json"), "w") as fh:
+        json.dump(golden, fh)
+    print(f"  golden.json written ({decode_steps} decode steps x 2 seqs)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", action="append", help="subset of presets")
+    ap.add_argument("--quick", action="store_true", help="small bucket set (CI)")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+
+    names = args.preset or preset_names()
+    bk = buckets()
+    for name in names:
+        p = load_preset(name)
+        out = os.path.join(args.out_dir, name)
+        print(f"[aot] preset {name} → {out}")
+        emit_preset(p, out, bk, args.quick)
+        if not args.skip_golden:
+            emit_golden(p, out, args.quick)
+    # Stamp file consumed by the Makefile's up-to-date check.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as fh:
+        fh.write(json.dumps({"presets": names, "time": time.time()}))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the DALI reproduction.
+
+Everything here is *build-time only*: kernels are authored in Pallas, verified
+against the pure-jnp oracle in `ref.py`, lowered (inside the Layer-2 jax
+functions of `compile.model`) to HLO text by `compile.aot`, and executed from
+Rust via the PJRT CPU client. Kernels use ``interpret=True`` because the CPU
+PJRT plugin cannot run Mosaic custom-calls; on a real TPU the same BlockSpec
+structure compiles natively (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .expert_ffn import expert_ffn, expert_ffn_block_plan, vmem_footprint_bytes
+from .gate import gate_probs
+
+__all__ = ["expert_ffn", "expert_ffn_block_plan", "vmem_footprint_bytes", "gate_probs"]

@@ -1,0 +1,94 @@
+"""Pallas kernel for the MoE expert FFN (SwiGLU) — the paper's compute hot-spot.
+
+The paper's experts run as cuBLAS GEMMs inside CUDA threadblocks. On TPU the
+same insight (stream the wide FFN weight matrices through fast on-chip memory
+while the token block stays resident) maps onto a Pallas grid:
+
+* grid = (T_tiles, F_tiles), with the FFN-hidden axis F innermost so the
+  ``x`` block (T_t × d) stays in VMEM while w1/w3/w2 tiles stream HBM→VMEM —
+  the BlockSpec index maps express the overlap the paper gets from CUDA
+  streams / shared-memory double buffering.
+* tile shapes are chosen as multiples of the 128-lane MXU dimension when the
+  problem is large enough (the scaled sim models are smaller, so tiles clamp
+  to the full axis; the MXU-utilisation estimate lives in DESIGN.md §Perf).
+* the output block is revisited across the F grid axis (innermost, so the
+  revisit is consecutive — a Pallas requirement) and accumulated in f32.
+
+Computation (one expert, T tokens):
+
+    y = (silu(x @ w1) * (x @ w3)) @ w2          x: (T, d)   w1, w3: (d, F)
+                                                 w2: (F, d)  y: (T, d)
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def expert_ffn_block_plan(tokens: int, hidden: int, inter: int):
+    """Pick (T_tile, F_tile) for the kernel grid.
+
+    Prefers MXU-friendly 128 multiples, clamping to the actual axis size for
+    the scaled sim models. Returns (t_tile, f_tile, t_tiles, f_tiles).
+    """
+    t_tile = min(tokens, 128)
+    while tokens % t_tile != 0:  # buckets are powers of two, so this is cheap
+        t_tile //= 2
+    f_tile = min(inter, 128)
+    while inter % f_tile != 0:
+        f_tile //= 2
+    return t_tile, f_tile, tokens // t_tile, inter // f_tile
+
+
+def _expert_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, *, f_tiles: int):
+    """One (t, f) grid step: accumulate the f-slice's contribution to o."""
+    f_idx = pl.program_id(1)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (T_t, d) — resident across the whole f sweep
+    up = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    gate = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    act = jax.nn.silu(up) * gate  # (T_t, F_t)
+    o_ref[...] += jnp.dot(act, w2_ref[...], preferred_element_type=jnp.float32)
+
+
+def expert_ffn(x: jax.Array, w1: jax.Array, w2: jax.Array, w3: jax.Array) -> jax.Array:
+    """SwiGLU expert FFN via Pallas. x: (T, d); w1/w3: (d, F); w2: (F, d)."""
+    tokens, hidden = x.shape
+    inter = w1.shape[1]
+    t_tile, f_tile, t_tiles, f_tiles = expert_ffn_block_plan(tokens, hidden, inter)
+
+    return pl.pallas_call(
+        partial(_expert_kernel, f_tiles=f_tiles),
+        grid=(t_tiles, f_tiles),
+        in_specs=[
+            # x: one token tile, full hidden; constant across the f sweep.
+            pl.BlockSpec((t_tile, hidden), lambda t, f: (t, 0)),
+            # w1 / w3: stream F tiles through VMEM.
+            pl.BlockSpec((hidden, f_tile), lambda t, f: (0, f)),
+            pl.BlockSpec((hidden, f_tile), lambda t, f: (0, f)),
+            # w2: the matching F-tile of the down projection.
+            pl.BlockSpec((f_tile, hidden), lambda t, f: (f, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_tile, hidden), lambda t, f: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((tokens, hidden), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, w1, w3, w2)
+
+
+def vmem_footprint_bytes(tokens: int, hidden: int, inter: int) -> int:
+    """Estimated VMEM working set of one grid step (f32), for DESIGN.md §Perf."""
+    t_tile, f_tile, _, _ = expert_ffn_block_plan(tokens, hidden, inter)
+    words = (
+        t_tile * hidden  # x block
+        + 2 * hidden * f_tile  # w1, w3 tiles
+        + f_tile * hidden  # w2 tile
+        + t_tile * f_tile  # activation
+        + t_tile * hidden  # output accumulator
+    )
+    return 4 * words

@@ -1,0 +1,62 @@
+"""Pallas kernel for the MoE gate: RMSNorm + gate GEMM + softmax, fused.
+
+The gate is latency-critical on the request path (it runs once per layer per
+batch step, and a *second* time per layer for residual-based prefetch
+prediction — paper §4.2), so it is fused into a single VMEM-resident kernel:
+the token block is normalised, multiplied by Wg, and softmaxed without
+round-tripping to HBM. Outputs both the gate probabilities and the normalised
+activations (the same normalised activations feed the experts, so the norm is
+computed exactly once).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RMS_EPS = 1e-6
+
+
+def _gate_kernel(h_ref, g_ref, wg_ref, probs_ref, xn_ref):
+    h = h_ref[...]  # (T_t, d)
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    xn = h * jax.lax.rsqrt(ms + RMS_EPS) * g_ref[...]
+    logits = jnp.dot(xn, wg_ref[...], preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+    xn_ref[...] = xn
+
+
+def gate_probs(h: jax.Array, gamma: jax.Array, wg: jax.Array):
+    """Fused RMSNorm + gate + softmax.
+
+    h: (T, d) raw residual-stream input; gamma: (d,) RMSNorm weight;
+    wg: (d, N) gate weight. Returns (probs (T, N), xn (T, d)).
+    """
+    tokens, hidden = h.shape
+    n_exp = wg.shape[1]
+    t_tile = min(tokens, 128)
+    while tokens % t_tile != 0:
+        t_tile //= 2
+    t_tiles = tokens // t_tile
+
+    return pl.pallas_call(
+        _gate_kernel,
+        grid=(t_tiles,),
+        in_specs=[
+            pl.BlockSpec((t_tile, hidden), lambda t: (t, 0)),
+            pl.BlockSpec((hidden,), lambda t: (0,)),
+            pl.BlockSpec((hidden, n_exp), lambda t: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((t_tile, n_exp), lambda t: (t, 0)),
+            pl.BlockSpec((t_tile, hidden), lambda t: (t, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((tokens, n_exp), jnp.float32),
+            jax.ShapeDtypeStruct((tokens, hidden), jnp.float32),
+        ),
+        interpret=True,
+    )(h, gamma, wg)

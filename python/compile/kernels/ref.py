@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the Pallas kernels. Used by pytest only."""
+
+import jax
+import jax.numpy as jnp
+
+RMS_EPS = 1e-6
+
+
+def expert_ffn_ref(x, w1, w2, w3):
+    """SwiGLU expert FFN: (silu(x@w1) * (x@w3)) @ w2."""
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def rmsnorm_ref(h, gamma):
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    return h * jax.lax.rsqrt(ms + RMS_EPS) * gamma
+
+
+def gate_probs_ref(h, gamma, wg):
+    xn = rmsnorm_ref(h, gamma)
+    return jax.nn.softmax(xn @ wg, axis=-1), xn

@@ -1,0 +1,260 @@
+"""Layer-2 JAX model: the scaled MoE transformer the Rust engine composes.
+
+Each public function here becomes one AOT artifact (per shape bucket). The
+Rust coordinator (Layer 3) owns all *state* (KV caches, residual stream,
+expert selection, weighted combination of expert outputs) and calls these
+pure functions through PJRT; python is never on the request path.
+
+Decomposition mirrors the paper's execution model: the gate runs first and
+its output drives the scheduler (assignment/prefetch/cache), then individual
+experts execute on whichever simulated device the scheduler picked — hence
+`expert_ffn` is a standalone per-expert artifact rather than a fused MoE
+layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import expert_ffn, gate_probs
+from .kernels.ref import RMS_EPS
+from .presets import ModelPreset
+
+# ---------------------------------------------------------------------------
+# Model pieces (one artifact each)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(h, gamma):
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    return h * jax.lax.rsqrt(ms + RMS_EPS) * gamma
+
+
+def embed(tokens, pos, table, pos_table):
+    """Token embedding + sinusoidal-style learned position table.
+
+    tokens, pos: (T,) i32; table: (V, d); pos_table: (S_max, d) → (T, d).
+    """
+    return table[tokens] + pos_table[pos]
+
+
+def gate(h, gamma, wg):
+    """Fused RMSNorm + gate GEMM + softmax (Pallas kernel, paper Eq. 1).
+
+    Returns (probs (T, N), xn (T, d)); `xn` is reused as the expert input so
+    the norm is computed exactly once per layer.
+    """
+    return gate_probs(h, gamma, wg)
+
+
+def expert(xn, w1, w2, w3):
+    """One expert's SwiGLU FFN on its routed token block (Pallas kernel)."""
+    return expert_ffn(xn, w1, w2, w3)
+
+
+def attn_prefill(x, gamma, wq, wk, wv, wo, *, heads, head_dim):
+    """Causal self-attention over a full prompt (one sequence).
+
+    x: (S, d). Returns (h (S, d), k (S, H, hd), v (S, H, hd)); h includes the
+    residual connection, k/v seed the decode KV cache.
+    """
+    seq, hidden = x.shape
+    xn = rmsnorm(x, gamma)
+    q = (xn @ wq).reshape(seq, heads, head_dim)
+    k = (xn @ wk).reshape(seq, heads, head_dim)
+    v = (xn @ wv).reshape(seq, heads, head_dim)
+    scores = jnp.einsum("shd,thd->hst", q, k) / np.sqrt(head_dim)
+    causal = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hst,thd->shd", probs, v).reshape(seq, hidden)
+    return x + out @ wo, k, v
+
+
+def attn_decode(x, k_cache, v_cache, pos, gamma, wq, wk, wv, wo, *, heads, head_dim):
+    """Single-step attention against the KV cache for a batch of sequences.
+
+    x: (B, d); k_cache/v_cache: (B, S_max, H, hd); pos: (B,) i32 — the index
+    this step's token occupies (== current sequence length). Returns
+    (h (B, d), k_cache', v_cache') with the new K/V written at `pos`.
+    """
+    batch, hidden = x.shape
+    s_max = k_cache.shape[1]
+    xn = rmsnorm(x, gamma)
+    q = (xn @ wq).reshape(batch, heads, head_dim)
+    k_new = (xn @ wk).reshape(batch, heads, head_dim)
+    v_new = (xn @ wv).reshape(batch, heads, head_dim)
+
+    def upd(cache, new, p):
+        return jax.lax.dynamic_update_slice_in_dim(cache, new[None], p, axis=0)
+
+    k_cache = jax.vmap(upd)(k_cache, k_new, pos)
+    v_cache = jax.vmap(upd)(v_cache, v_new, pos)
+
+    scores = jnp.einsum("bhd,bshd->bhs", q, k_cache) / np.sqrt(head_dim)
+    valid = jnp.arange(s_max)[None, :] <= pos[:, None]  # (B, S)
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, v_cache).reshape(batch, hidden)
+    return x + out @ wo, k_cache, v_cache
+
+
+def head(h, gamma, table):
+    """Final RMSNorm + tied-embedding LM head. h: (T, d) → logits (T, V)."""
+    return rmsnorm(h, gamma) @ table.T
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+# Topic clusters in the synthetic vocab (mirrored by rust workload/corpus.rs).
+N_CLUSTERS = 16
+
+
+def _rng(preset: str, *parts) -> np.random.Generator:
+    seed = abs(hash((preset,) + parts)) % (2**31)
+    # hash() is salted per-process; use a deterministic fold instead.
+    acc = 0
+    for ch in "/".join([preset] + [str(p) for p in parts]):
+        acc = (acc * 131 + ord(ch)) % (2**31 - 1)
+    return np.random.default_rng(acc)
+
+
+def gen_weights(p: ModelPreset) -> dict:
+    """Deterministic synthetic weights for a preset.
+
+    Returns {name: np.ndarray(f32)}. Names are flat strings mirrored by the
+    rust loader (see artifacts/<preset>/manifest.json).
+    """
+    d, f, n = p.hidden, p.moe_inter, p.n_routed
+    w = {}
+    std = 0.05
+
+    def mat(name, shape, scale=std):
+        w[name] = _rng(p.name, name).normal(0.0, scale, size=shape).astype(np.float32)
+
+    # Clustered token embeddings: the vocab is partitioned into N_CLUSTERS
+    # contiguous blocks ("topics"); tokens within a block share a cluster
+    # centre plus noise. The synthetic corpus generator (rust
+    # workload/corpus.rs) emits sequences that dwell within a topic, which
+    # produces the adjacent-token routing locality the paper measures in
+    # Fig. 8 and exploits in §4.3 — real corpora get this from semantics.
+    n_clusters = N_CLUSTERS
+    block = p.vocab // n_clusters
+    centers = _rng(p.name, "embed.centers").normal(0.0, 1.0, size=(n_clusters, d))
+    noise = _rng(p.name, "embed.noise").normal(0.0, 0.35, size=(p.vocab, d))
+    table = centers[np.minimum(np.arange(p.vocab) // block, n_clusters - 1)] + noise
+    w["embed.table"] = table.astype(np.float32)
+    mat("embed.pos", (p.max_seq, d), 0.1)
+    w["final.norm"] = np.ones(d, dtype=np.float32)
+    for l in range(p.layers):
+        w[f"layer.{l}.attn.norm"] = np.ones(d, dtype=np.float32)
+        for nm in ("wq", "wk", "wv", "wo"):
+            mat(f"layer.{l}.attn.{nm}", (d, d), std)
+        w[f"layer.{l}.moe.norm"] = np.ones(d, dtype=np.float32)
+        # Gate weights get a larger scale so softmax scores are peaked enough
+        # to produce the skewed, input-dependent workloads the paper studies.
+        mat(f"layer.{l}.moe.gate", (d, n), 0.5)
+        for e in range(p.n_routed + p.n_shared):
+            kind = "expert" if e < p.n_routed else "shared"
+            idx = e if e < p.n_routed else e - p.n_routed
+            mat(f"layer.{l}.moe.{kind}.{idx}.w1", (d, f), std)
+            mat(f"layer.{l}.moe.{kind}.{idx}.w2", (f, d), std)
+            mat(f"layer.{l}.moe.{kind}.{idx}.w3", (d, f), std)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Full-model python reference (golden generation + pytest only)
+# ---------------------------------------------------------------------------
+
+
+def forward_prefill_ref(p: ModelPreset, w: dict, tokens: np.ndarray):
+    """Reference prefill of one sequence. tokens: (S,) → (h, kv, route_log).
+
+    route_log[l] = top-k expert ids per token (S, k) — lets rust verify its
+    routing byte-for-byte.
+    """
+    seq = tokens.shape[0]
+    x = embed(jnp.asarray(tokens), jnp.arange(seq), w["embed.table"], w["embed.pos"])
+    kv = []
+    route_log = []
+    for l in range(p.layers):
+        h, k, v = attn_prefill(
+            x,
+            w[f"layer.{l}.attn.norm"],
+            w[f"layer.{l}.attn.wq"],
+            w[f"layer.{l}.attn.wk"],
+            w[f"layer.{l}.attn.wv"],
+            w[f"layer.{l}.attn.wo"],
+            heads=p.heads,
+            head_dim=p.head_dim,
+        )
+        kv.append((k, v))
+        probs, xn = gate(h, w[f"layer.{l}.moe.norm"], w[f"layer.{l}.moe.gate"])
+        x = moe_combine_ref(p, w, l, h, probs, xn, route_log)
+    return x, kv, route_log
+
+
+def moe_combine_ref(p: ModelPreset, w: dict, l: int, h, probs, xn, route_log):
+    """Paper Eq. 2: h + sum_i G(x)_i E_i(xn) + shared experts."""
+    topk_val, topk_idx = jax.lax.top_k(probs, p.top_k)
+    route_log.append(np.asarray(topk_idx))
+    out = jnp.zeros_like(h)
+    for e in range(p.n_routed):
+        sel = (topk_idx == e).any(axis=-1)  # (T,)
+        if not bool(sel.any()):
+            continue
+        rows = jnp.where(sel)[0]
+        score = jnp.where(topk_idx == e, topk_val, 0.0).sum(axis=-1)[rows]
+        y = expert(
+            xn[rows],
+            w[f"layer.{l}.moe.expert.{e}.w1"],
+            w[f"layer.{l}.moe.expert.{e}.w2"],
+            w[f"layer.{l}.moe.expert.{e}.w3"],
+        )
+        out = out.at[rows].add(score[:, None] * y)
+    for s in range(p.n_shared):
+        out = out + expert(
+            xn,
+            w[f"layer.{l}.moe.shared.{s}.w1"],
+            w[f"layer.{l}.moe.shared.{s}.w2"],
+            w[f"layer.{l}.moe.shared.{s}.w3"],
+        )
+    return h + out
+
+
+def forward_decode_ref(p: ModelPreset, w: dict, kv, token: int, pos: int):
+    """Reference single-token decode for one sequence with list-based kv.
+
+    kv: list of (k (S,H,hd), v (S,H,hd)) grown in place. Returns
+    (logits (V,), route_log list of (k,) per layer).
+    """
+    x = embed(
+        jnp.asarray([token]), jnp.asarray([pos]), w["embed.table"], w["embed.pos"]
+    )
+    route_log = []
+    for l in range(p.layers):
+        k_old, v_old = kv[l]
+        s_max = p.max_seq
+        k_cache = jnp.zeros((1, s_max, p.heads, p.head_dim)).at[0, : k_old.shape[0]].set(k_old)
+        v_cache = jnp.zeros((1, s_max, p.heads, p.head_dim)).at[0, : v_old.shape[0]].set(v_old)
+        h, k_cache, v_cache = attn_decode(
+            x,
+            k_cache,
+            v_cache,
+            jnp.asarray([pos], dtype=jnp.int32),
+            w[f"layer.{l}.attn.norm"],
+            w[f"layer.{l}.attn.wq"],
+            w[f"layer.{l}.attn.wk"],
+            w[f"layer.{l}.attn.wv"],
+            w[f"layer.{l}.attn.wo"],
+            heads=p.heads,
+            head_dim=p.head_dim,
+        )
+        kv[l] = (k_cache[0, : pos + 1], v_cache[0, : pos + 1])
+        probs, xn = gate(h, w[f"layer.{l}.moe.norm"], w[f"layer.{l}.moe.gate"])
+        x = moe_combine_ref(p, w, l, h, probs, xn, route_log)
+    logits = head(x, w["final.norm"], w["embed.table"])
+    return np.asarray(logits[0]), [r[0] for r in route_log]

@@ -1,0 +1,46 @@
+"""Loader for configs/presets.json — the shared python/rust config source."""
+
+import json
+import os
+from dataclasses import dataclass
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+PRESETS_PATH = os.path.join(_REPO_ROOT, "configs", "presets.json")
+
+
+@dataclass(frozen=True)
+class ModelPreset:
+    name: str
+    layers: int
+    hidden: int
+    heads: int
+    head_dim: int
+    n_routed: int
+    top_k: int
+    n_shared: int
+    moe_inter: int
+    vocab: int
+    max_seq: int
+
+    @property
+    def n_experts(self) -> int:
+        """Routed + shared experts per layer."""
+        return self.n_routed + self.n_shared
+
+
+def load_raw() -> dict:
+    with open(PRESETS_PATH) as f:
+        return json.load(f)
+
+
+def load_preset(name: str) -> ModelPreset:
+    raw = load_raw()["models"][name]["sim"]
+    return ModelPreset(name=name, **raw)
+
+
+def preset_names() -> list:
+    return sorted(load_raw()["models"].keys())
+
+
+def buckets() -> dict:
+    return load_raw()["buckets"]

@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle, incl. hypothesis sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import expert_ffn, expert_ffn_block_plan, gate_probs
+from compile.kernels.expert_ffn import vmem_footprint_bytes
+from compile.kernels.ref import expert_ffn_ref, gate_probs_ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape, scale=0.5):
+    return jnp.asarray(RNG.normal(0, scale, size=shape).astype(np.float32))
+
+
+# --- expert_ffn -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t", [1, 2, 8, 32, 128, 256])
+def test_expert_matches_ref_token_buckets(t):
+    d, f = 64, 48
+    x, w1, w2, w3 = rand(t, d), rand(d, f), rand(f, d), rand(d, f)
+    got = expert_ffn(x, w1, w2, w3)
+    want = expert_ffn_ref(x, w1, w2, w3)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("d,f", [(256, 176), (256, 128), (256, 512)])
+def test_expert_matches_ref_preset_dims(d, f):
+    x, w1, w2, w3 = rand(16, d), rand(d, f), rand(f, d), rand(d, f)
+    np.testing.assert_allclose(
+        expert_ffn(x, w1, w2, w3), expert_ffn_ref(x, w1, w2, w3), rtol=2e-4, atol=1e-3
+    )
+
+
+def test_expert_multi_tile_grid():
+    # force t_tiles > 1 and f_tiles > 1 so accumulation-over-revisits is hit
+    t, d, f = 256, 32, 256
+    t_tile, f_tile, t_tiles, f_tiles = expert_ffn_block_plan(t, d, f)
+    assert t_tiles > 1 and f_tiles > 1
+    x, w1, w2, w3 = rand(t, d), rand(d, f), rand(f, d), rand(d, f)
+    np.testing.assert_allclose(
+        expert_ffn(x, w1, w2, w3), expert_ffn_ref(x, w1, w2, w3), rtol=2e-4, atol=1e-3
+    )
+
+
+def test_expert_zero_input_is_zero():
+    d, f = 32, 16
+    x = jnp.zeros((4, d))
+    out = expert_ffn(x, rand(d, f), rand(f, d), rand(d, f))
+    np.testing.assert_allclose(out, jnp.zeros((4, d)), atol=1e-7)
+
+
+def test_expert_jit_composes():
+    d, f = 32, 16
+    fn = jax.jit(expert_ffn)
+    x, w1, w2, w3 = rand(8, d), rand(d, f), rand(f, d), rand(d, f)
+    np.testing.assert_allclose(
+        fn(x, w1, w2, w3), expert_ffn_ref(x, w1, w2, w3), rtol=2e-5, atol=2e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+    d=st.sampled_from([8, 16, 32, 64, 128, 256]),
+    f=st.sampled_from([8, 16, 48, 128, 176, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_expert_hypothesis_shapes(t, d, f, seed):
+    r = np.random.default_rng(seed)
+
+    def a(*s):
+        return jnp.asarray(r.normal(0, 0.5, size=s).astype(np.float32))
+
+    x, w1, w2, w3 = a(t, d), a(d, f), a(f, d), a(d, f)
+    np.testing.assert_allclose(
+        expert_ffn(x, w1, w2, w3), expert_ffn_ref(x, w1, w2, w3), rtol=2e-4, atol=1e-3
+    )
+
+
+def test_block_plan_divides_axes():
+    for t in [1, 2, 4, 8, 16, 32, 64, 128, 256]:
+        for f in [16, 48, 128, 176, 512]:
+            tt, ft, tn, fn = expert_ffn_block_plan(t, 256, f)
+            assert tt * tn == t and ft * fn == f
+            assert tt <= 128 and ft <= 128
+
+
+def test_vmem_footprint_under_budget():
+    # TPU v4 VMEM ~16 MiB/core; the paper-scale mixtral expert tiles must fit.
+    assert vmem_footprint_bytes(256, 4096, 14336) < 16 * 2**20
+
+
+# --- gate -------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,n", [(1, 8), (4, 16), (32, 32), (128, 128)])
+def test_gate_matches_ref(t, n):
+    d = 64
+    h, g, wg = rand(t, d), jnp.abs(rand(d)) + 0.5, rand(d, n)
+    probs, xn = gate_probs(h, g, wg)
+    probs_r, xn_r = gate_probs_ref(h, g, wg)
+    np.testing.assert_allclose(probs, probs_r, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(xn, xn_r, rtol=2e-5, atol=2e-6)
+
+
+def test_gate_rows_sum_to_one():
+    h, g, wg = rand(16, 32), jnp.ones(32), rand(32, 8, scale=2.0)
+    probs, _ = gate_probs(h, g, wg)
+    np.testing.assert_allclose(probs.sum(-1), np.ones(16), rtol=1e-5)
+
+
+def test_gate_softmax_stable_for_large_logits():
+    h, g = rand(4, 32, scale=50.0), jnp.ones(32)
+    wg = rand(32, 8, scale=50.0)
+    probs, _ = gate_probs(h, g, wg)
+    assert bool(jnp.isfinite(probs).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 8, 64]),
+    d=st.sampled_from([16, 64, 256]),
+    n=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_gate_hypothesis(t, d, n, seed):
+    r = np.random.default_rng(seed)
+
+    def a(*s, sc=0.5):
+        return jnp.asarray(r.normal(0, sc, size=s).astype(np.float32))
+
+    h, g, wg = a(t, d), jnp.abs(a(d)) + 0.1, a(d, n, sc=1.0)
+    probs, xn = gate_probs(h, g, wg)
+    probs_r, xn_r = gate_probs_ref(h, g, wg)
+    np.testing.assert_allclose(probs, probs_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(xn, xn_r, rtol=1e-4, atol=1e-5)

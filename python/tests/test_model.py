@@ -1,0 +1,129 @@
+"""L2 model correctness: attention semantics, decode/prefill agreement."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.presets import load_preset
+
+P = load_preset("mixtral-sim")
+RNG = np.random.default_rng(1)
+
+
+def rand(*shape, scale=0.3):
+    return jnp.asarray(RNG.normal(0, scale, size=shape).astype(np.float32))
+
+
+def attn_weights(d):
+    return dict(
+        gamma=jnp.ones(d),
+        wq=rand(d, d), wk=rand(d, d), wv=rand(d, d), wo=rand(d, d),
+    )
+
+
+def test_prefill_shapes():
+    d, s = P.hidden, 16
+    w = attn_weights(d)
+    h, k, v = M.attn_prefill(rand(s, d), w["gamma"], w["wq"], w["wk"], w["wv"], w["wo"],
+                             heads=P.heads, head_dim=P.head_dim)
+    assert h.shape == (s, d)
+    assert k.shape == (s, P.heads, P.head_dim)
+    assert v.shape == (s, P.heads, P.head_dim)
+
+
+def test_prefill_is_causal():
+    """Changing a later token must not affect earlier outputs."""
+    d, s = P.hidden, 8
+    w = attn_weights(d)
+    x = rand(s, d)
+    h1, _, _ = M.attn_prefill(x, w["gamma"], w["wq"], w["wk"], w["wv"], w["wo"],
+                              heads=P.heads, head_dim=P.head_dim)
+    x2 = x.at[-1].set(x[-1] + 1.0)
+    h2, _, _ = M.attn_prefill(x2, w["gamma"], w["wq"], w["wk"], w["wv"], w["wo"],
+                              heads=P.heads, head_dim=P.head_dim)
+    np.testing.assert_allclose(h1[:-1], h2[:-1], atol=1e-6)
+    assert not np.allclose(h1[-1], h2[-1])
+
+
+def test_decode_matches_prefill_step():
+    """attn_decode at position s must equal prefill over s+1 tokens' last row."""
+    d, s = P.hidden, 8
+    w = attn_weights(d)
+    x_full = rand(s + 1, d)
+    h_full, _, _ = M.attn_prefill(x_full, w["gamma"], w["wq"], w["wk"], w["wv"], w["wo"],
+                                  heads=P.heads, head_dim=P.head_dim)
+    # prefill the first s tokens, then decode token s
+    _, k, v = M.attn_prefill(x_full[:s], w["gamma"], w["wq"], w["wk"], w["wv"], w["wo"],
+                             heads=P.heads, head_dim=P.head_dim)
+    smax = P.max_seq
+    kc = jnp.zeros((1, smax, P.heads, P.head_dim)).at[0, :s].set(k)
+    vc = jnp.zeros((1, smax, P.heads, P.head_dim)).at[0, :s].set(v)
+    h_dec, kc2, vc2 = M.attn_decode(
+        x_full[s:s + 1], kc, vc, jnp.asarray([s], dtype=jnp.int32),
+        w["gamma"], w["wq"], w["wk"], w["wv"], w["wo"],
+        heads=P.heads, head_dim=P.head_dim)
+    np.testing.assert_allclose(h_dec[0], h_full[-1], rtol=1e-4, atol=1e-5)
+    # cache rows 0..s-1 untouched, row s written
+    np.testing.assert_allclose(kc2[0, :s], k, atol=1e-6)
+    assert not np.allclose(kc2[0, s], np.zeros((P.heads, P.head_dim)))
+
+
+def test_decode_batch_rows_independent():
+    d = P.hidden
+    w = attn_weights(d)
+    smax = P.max_seq
+    kc = rand(2, smax, P.heads, P.head_dim)
+    vc = rand(2, smax, P.heads, P.head_dim)
+    x = rand(2, d)
+    pos = jnp.asarray([3, 5], dtype=jnp.int32)
+    h, _, _ = M.attn_decode(x, kc, vc, pos, w["gamma"], w["wq"], w["wk"], w["wv"],
+                            w["wo"], heads=P.heads, head_dim=P.head_dim)
+    # row 0 must not depend on row 1's inputs
+    x2 = x.at[1].set(x[1] * 2 + 1)
+    h2, _, _ = M.attn_decode(x2, kc, vc, pos, w["gamma"], w["wq"], w["wk"], w["wv"],
+                             w["wo"], heads=P.heads, head_dim=P.head_dim)
+    np.testing.assert_allclose(h[0], h2[0], atol=1e-6)
+
+
+def test_embed_lookup():
+    table = rand(P.vocab, P.hidden)
+    pos_table = rand(P.max_seq, P.hidden)
+    toks = jnp.asarray([3, 5], dtype=jnp.int32)
+    pos = jnp.asarray([0, 1], dtype=jnp.int32)
+    x = M.embed(toks, pos, table, pos_table)
+    np.testing.assert_allclose(x[0], table[3] + pos_table[0], atol=1e-7)
+    np.testing.assert_allclose(x[1], table[5] + pos_table[1], atol=1e-7)
+
+
+def test_head_is_tied_matmul():
+    table = rand(P.vocab, P.hidden)
+    h = rand(2, P.hidden)
+    logits = M.head(h, jnp.ones(P.hidden), table)
+    assert logits.shape == (2, P.vocab)
+
+
+def test_gen_weights_deterministic_and_complete():
+    w1 = M.gen_weights(P)
+    w2 = M.gen_weights(P)
+    assert set(w1) == set(w2)
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])
+    for l in range(P.layers):
+        for e in range(P.n_routed):
+            assert f"layer.{l}.moe.expert.{e}.w1" in w1
+    assert w1["embed.table"].shape == (P.vocab, P.hidden)
+
+
+def test_full_forward_ref_runs_and_routes():
+    p = load_preset("mixtral-sim")
+    w = {k: jnp.asarray(v) for k, v in M.gen_weights(p).items()}
+    tokens = np.asarray([1, 2, 3, 4])
+    x, kv, routes = M.forward_prefill_ref(p, w, tokens)
+    assert x.shape == (4, p.hidden)
+    assert len(routes) == p.layers
+    assert routes[0].shape == (4, p.top_k)
+    assert (routes[0] >= 0).all() and (routes[0] < p.n_routed).all()
+    logits, droutes = M.forward_decode_ref(p, w, kv, 5, 4)
+    assert logits.shape == (p.vocab,)
+    assert len(droutes) == p.layers

@@ -1,0 +1,45 @@
+//! `expt` — regenerate the paper's tables and figures.
+//!
+//!     cargo run --release --bin expt -- list
+//!     cargo run --release --bin expt -- fig12 [table2 ...]
+//!     cargo run --release --bin expt -- all
+//!
+//! Each experiment prints a markdown section and writes it to
+//! `results/<id>.md`. Trace pools are generated on demand (cached under
+//! `artifacts/traces/`); run `dali prepare` first to prebuild them.
+
+use anyhow::Result;
+
+use dali::expt::{registry, run_one, ExptCtx};
+use dali::util::{results_dir, Args};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let which: Vec<String> = args.positional.clone();
+    if which.is_empty() || which[0] == "list" {
+        println!("available experiments:");
+        for (id, desc, _) in registry() {
+            println!("  {id:-8} {desc}");
+        }
+        println!("  all      run everything");
+        return Ok(());
+    }
+    let ctx = ExptCtx::new()?;
+    let ids: Vec<&str> = if which[0] == "all" {
+        registry().iter().map(|(id, _, _)| *id).collect()
+    } else {
+        which.iter().map(|s| s.as_str()).collect()
+    };
+    let t0 = std::time::Instant::now();
+    for id in ids {
+        let started = std::time::Instant::now();
+        eprintln!("[expt] running {id}...");
+        let text = run_one(&ctx, id)?;
+        println!("{text}");
+        let path = results_dir().join(format!("{id}.md"));
+        std::fs::write(&path, &text)?;
+        eprintln!("[expt] {id} done in {:.1}s → {}", started.elapsed().as_secs_f64(), path.display());
+    }
+    eprintln!("[expt] total {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,274 @@
+//! Configuration: model presets, hardware presets, shape buckets.
+//!
+//! `configs/presets.json` is the single source of truth shared with the
+//! python AOT pipeline. A preset carries two sets of dimensions:
+//!
+//! * `sim` — the scaled-down model that is actually computed via PJRT;
+//! * `paper` — the real model of the paper's Table 3, consumed only by the
+//!   [`crate::hw::CostModel`] so simulated-time ratios (PCIe vs compute)
+//!   match the paper's testbed.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+/// Scaled model dimensions — what PJRT actually computes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub n_routed: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub moe_inter: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl ModelDims {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ModelDims {
+            layers: v.get("layers")?.as_usize()?,
+            hidden: v.get("hidden")?.as_usize()?,
+            heads: v.get("heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            n_routed: v.get("n_routed")?.as_usize()?,
+            top_k: v.get("top_k")?.as_usize()?,
+            n_shared: v.get("n_shared")?.as_usize()?,
+            moe_inter: v.get("moe_inter")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            max_seq: v.get("max_seq")?.as_usize()?,
+        })
+    }
+}
+
+/// The paper's real model dimensions (Table 3) — drives the cost model only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaperDims {
+    pub layers: usize,
+    pub hidden: usize,
+    pub n_routed: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub moe_inter: usize,
+    /// Bytes per weight element (2 = fp16, what local-PC deployments use).
+    pub dtype_bytes: usize,
+}
+
+impl PaperDims {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(PaperDims {
+            layers: v.get("layers")?.as_usize()?,
+            hidden: v.get("hidden")?.as_usize()?,
+            n_routed: v.get("n_routed")?.as_usize()?,
+            top_k: v.get("top_k")?.as_usize()?,
+            n_shared: v.get("n_shared")?.as_usize()?,
+            moe_inter: v.get("moe_inter")?.as_usize()?,
+            dtype_bytes: v.get("dtype_bytes")?.as_usize()?,
+        })
+    }
+
+    /// Bytes of one expert's parameters (w1 + w2 + w3).
+    pub fn expert_bytes(&self) -> f64 {
+        (3 * self.hidden * self.moe_inter * self.dtype_bytes) as f64
+    }
+
+    /// FLOPs to run one token through one expert (3 GEMMs, 2 FLOPs/MAC).
+    pub fn expert_flops_per_token(&self) -> f64 {
+        (6 * self.hidden * self.moe_inter) as f64
+    }
+
+    /// FLOPs for one token of attention at KV length `kv_len`.
+    pub fn attn_flops_per_token(&self, kv_len: usize) -> f64 {
+        (8 * self.hidden * self.hidden + 4 * kv_len * self.hidden) as f64
+    }
+
+    /// FLOPs for the gate GEMM for one token.
+    pub fn gate_flops_per_token(&self) -> f64 {
+        (2 * self.hidden * self.n_routed) as f64
+    }
+}
+
+/// One model preset: scaled sim dims + paper dims.
+#[derive(Debug, Clone)]
+pub struct ModelPreset {
+    pub display: String,
+    pub sim: ModelDims,
+    pub paper: PaperDims,
+}
+
+/// Hardware platform parameters (paper Table 1 numbers for the default
+/// `local-pc` preset). All rates are per-second; times are seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    pub display: String,
+    pub gpu_flops: f64,
+    pub gpu_mem_bw: f64,
+    pub gpu_mem_bytes: f64,
+    pub gpu_kernel_launch_s: f64,
+    pub cpu_flops: f64,
+    pub cpu_mem_bw: f64,
+    pub cpu_dispatch_s: f64,
+    pub cpu_cores: usize,
+    pub pcie_bw: f64,
+    pub pcie_latency_s: f64,
+    pub num_gpus: usize,
+}
+
+impl HwConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(HwConfig {
+            display: v.get("display")?.as_str()?.to_string(),
+            gpu_flops: v.get("gpu_flops")?.as_f64()?,
+            gpu_mem_bw: v.get("gpu_mem_bw")?.as_f64()?,
+            gpu_mem_bytes: v.get("gpu_mem_bytes")?.as_f64()?,
+            gpu_kernel_launch_s: v.get("gpu_kernel_launch_s")?.as_f64()?,
+            cpu_flops: v.get("cpu_flops")?.as_f64()?,
+            cpu_mem_bw: v.get("cpu_mem_bw")?.as_f64()?,
+            cpu_dispatch_s: v.get("cpu_dispatch_s")?.as_f64()?,
+            cpu_cores: v.get("cpu_cores")?.as_usize()?,
+            pcie_bw: v.get("pcie_bw")?.as_f64()?,
+            pcie_latency_s: v.get("pcie_latency_s")?.as_f64()?,
+            num_gpus: v.opt("num_gpus").map(|x| x.as_usize()).transpose()?.unwrap_or(1),
+        })
+    }
+}
+
+/// Static shape buckets for the AOT artifacts.
+#[derive(Debug, Clone)]
+pub struct Buckets {
+    pub tokens: Vec<usize>,
+    pub prefill_seq: Vec<usize>,
+    pub decode_batch: Vec<usize>,
+}
+
+impl Buckets {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Buckets {
+            tokens: v.get("tokens")?.as_usize_vec()?,
+            prefill_seq: v.get("prefill_seq")?.as_usize_vec()?,
+            decode_batch: v.get("decode_batch")?.as_usize_vec()?,
+        })
+    }
+
+    /// Smallest bucket >= n, or the largest bucket if n exceeds all
+    /// (callers then split the batch).
+    pub fn pick(buckets: &[usize], n: usize) -> usize {
+        *buckets
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(buckets.last().expect("bucket list must be non-empty"))
+    }
+}
+
+/// The whole presets.json.
+#[derive(Debug, Clone)]
+pub struct Presets {
+    pub models: BTreeMap<String, ModelPreset>,
+    pub buckets: Buckets,
+    pub hardware: BTreeMap<String, HwConfig>,
+}
+
+impl Presets {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading presets from {}", path.display()))?;
+        let v = Value::parse(&text).context("parsing presets.json")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in v.get("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                ModelPreset {
+                    display: m.get("display")?.as_str()?.to_string(),
+                    sim: ModelDims::from_json(m.get("sim")?)?,
+                    paper: PaperDims::from_json(m.get("paper")?)?,
+                },
+            );
+        }
+        let mut hardware = BTreeMap::new();
+        for (name, h) in v.get("hardware")?.as_obj()? {
+            hardware.insert(name.clone(), HwConfig::from_json(h)?);
+        }
+        Ok(Presets { models, buckets: Buckets::from_json(v.get("buckets")?)?, hardware })
+    }
+
+    /// Load `<repo>/configs/presets.json`.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&crate::util::repo_root().join("configs").join("presets.json"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelPreset> {
+        self.models.get(name).with_context(|| format!("unknown model preset '{name}'"))
+    }
+
+    pub fn hw(&self, name: &str) -> Result<&HwConfig> {
+        self.hardware.get(name).with_context(|| format!("unknown hardware preset '{name}'"))
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_default_presets() {
+        let p = Presets::load_default().unwrap();
+        assert!(p.models.contains_key("mixtral-sim"));
+        assert!(p.models.contains_key("deepseek-sim"));
+        assert!(p.models.contains_key("qwen-sim"));
+        assert!(p.hardware.contains_key("local-pc"));
+    }
+
+    #[test]
+    fn paper_dims_mixtral_expert_size() {
+        let p = Presets::load_default().unwrap();
+        let m = p.model("mixtral-sim").unwrap();
+        // Mixtral-8x7B fp16 expert: 3 * 4096 * 14336 * 2 bytes ≈ 352 MB
+        let mb = m.paper.expert_bytes() / 1e6;
+        assert!((330.0..380.0).contains(&mb), "expert MB = {mb}");
+        // 8 experts/layer * 32 layers ≈ 45B params of experts
+        let total_params =
+            m.paper.expert_bytes() / 2.0 * (m.paper.n_routed * m.paper.layers) as f64;
+        assert!((40e9..50e9).contains(&total_params));
+    }
+
+    #[test]
+    fn sim_dims_consistent_with_heads() {
+        let p = Presets::load_default().unwrap();
+        for (_, m) in &p.models {
+            assert_eq!(m.sim.heads * m.sim.head_dim, m.sim.hidden);
+            assert!(m.sim.top_k <= m.sim.n_routed);
+            assert_eq!(m.sim.vocab % 16, 0, "vocab must split into 16 clusters");
+        }
+    }
+
+    #[test]
+    fn bucket_pick() {
+        let b = vec![1, 2, 4, 8];
+        assert_eq!(Buckets::pick(&b, 1), 1);
+        assert_eq!(Buckets::pick(&b, 3), 4);
+        assert_eq!(Buckets::pick(&b, 8), 8);
+        assert_eq!(Buckets::pick(&b, 9), 8); // caller splits
+    }
+
+    #[test]
+    fn hw_preset_matches_table1() {
+        let p = Presets::load_default().unwrap();
+        let hw = p.hw("local-pc").unwrap();
+        assert_eq!(hw.num_gpus, 1);
+        // PCIe 4.0 x16 ≈ 32 GB/s theoretical; effective ~25
+        assert!((20e9..32e9).contains(&hw.pcie_bw));
+        assert!(hw.gpu_mem_bytes <= 24e9 * 1.01);
+        let two = p.hw("local-pc-2gpu").unwrap();
+        assert_eq!(two.num_gpus, 2);
+    }
+}

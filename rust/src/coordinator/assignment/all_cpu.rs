@@ -1,0 +1,60 @@
+//! "Naive" baseline: every activated expert runs on the CPU (paper §6.3-1's
+//! comparison anchor — KTransformers with all experts offloaded).
+
+use super::{AssignCtx, Assigner, Assignment};
+
+pub struct AllCpuAssigner;
+
+impl Default for AllCpuAssigner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AllCpuAssigner {
+    pub fn new() -> Self {
+        AllCpuAssigner
+    }
+}
+
+impl Assigner for AllCpuAssigner {
+    fn name(&self) -> &'static str {
+        "all_cpu"
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+        let n = ctx.workloads.len();
+        let mut a = Assignment::none(n);
+        for e in 0..n {
+            if ctx.workloads[e] > 0 {
+                a.to_cpu[e] = true;
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::cost;
+    use super::*;
+
+    #[test]
+    fn everything_on_cpu() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![5, 0, 100];
+        let resident = vec![true, true, true];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 8,
+            layer: 0,
+            layers: 4,
+        };
+        let a = AllCpuAssigner::new().assign(&ctx);
+        assert_eq!(a.to_cpu, vec![true, false, true]);
+        assert!(a.to_gpu.iter().all(|&g| !g));
+        assert!(a.satisfies_constraints(&ctx));
+    }
+}

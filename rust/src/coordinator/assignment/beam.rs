@@ -1,0 +1,164 @@
+//! Beam-search assignment (paper Appendix A.2).
+//!
+//! Same expert order as greedy, but keeps the `beam_width` best partial
+//! states (scored by partial makespan) at every step. Slightly better
+//! schedules than greedy in some cases, at a materially higher solve cost —
+//! the paper's reason for rejecting it.
+
+use super::{AssignCtx, Assigner, Assignment};
+
+pub struct BeamAssigner {
+    pub beam_width: usize,
+}
+
+#[derive(Clone)]
+struct BeamState {
+    t_cpu: u64,
+    t_gpu: u64,
+    slots: usize,
+    choices: Vec<bool>, // true = GPU, indexed by visit order
+}
+
+impl BeamAssigner {
+    pub fn new(beam_width: usize) -> Self {
+        assert!(beam_width >= 1);
+        BeamAssigner { beam_width }
+    }
+}
+
+impl Assigner for BeamAssigner {
+    fn name(&self) -> &'static str {
+        "beam"
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+        let n = ctx.workloads.len();
+        let mut order: Vec<usize> = (0..n).filter(|&e| ctx.workloads[e] > 0).collect();
+        order.sort_by_key(|&e| std::cmp::Reverse(ctx.t_gpu(e).abs_diff(ctx.t_cpu(e))));
+
+        let mut beam = vec![BeamState {
+            t_cpu: 0,
+            t_gpu: 0,
+            slots: ctx.gpu_free_slots,
+            choices: Vec::with_capacity(order.len()),
+        }];
+        for &e in &order {
+            let (c, g) = (ctx.t_cpu(e), ctx.t_gpu(e));
+            let needs_slot = !ctx.resident[e];
+            let mut next = Vec::with_capacity(beam.len() * 2);
+            for st in &beam {
+                // CPU branch (always feasible)
+                let mut cpu = st.clone();
+                cpu.t_cpu += c;
+                cpu.choices.push(false);
+                next.push(cpu);
+                // GPU branch (memory permitting)
+                if !needs_slot || st.slots > 0 {
+                    let mut gpu = st.clone();
+                    gpu.t_gpu += g;
+                    if needs_slot {
+                        gpu.slots -= 1;
+                    }
+                    gpu.choices.push(true);
+                    next.push(gpu);
+                }
+            }
+            next.sort_by_key(|s| s.t_cpu.max(s.t_gpu));
+            next.truncate(self.beam_width);
+            beam = next;
+        }
+        let best = &beam[0];
+        let mut a = Assignment::none(n);
+        for (i, &e) in order.iter().enumerate() {
+            if best.choices[i] {
+                a.to_gpu[e] = true;
+            } else {
+                a.to_cpu[e] = true;
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::cost;
+    use super::super::{GreedyAssigner, OptimalAssigner};
+    use super::*;
+    use crate::util::DetRng;
+
+    fn random_ctx_makespans(seed: u64, n: usize) -> Vec<(u64, u64, u64)> {
+        let cm = cost("deepseek-sim");
+        let mut rng = DetRng::new(seed);
+        let mut out = vec![];
+        for _ in 0..25 {
+            let workloads: Vec<u32> = (0..n).map(|_| rng.usize_below(25) as u32).collect();
+            let resident: Vec<bool> = (0..n).map(|_| rng.chance(0.3)).collect();
+            let ctx = AssignCtx {
+                workloads: &workloads,
+                resident: &resident,
+                cost: &cm,
+                gpu_free_slots: n,
+                layer: 0,
+                layers: 4,
+            };
+            let b = BeamAssigner::new(2).assign(&ctx);
+            assert!(b.satisfies_constraints(&ctx));
+            out.push((
+                GreedyAssigner::new().assign(&ctx).makespan_estimate(&ctx),
+                b.makespan_estimate(&ctx),
+                OptimalAssigner::new().assign(&ctx).makespan_estimate(&ctx),
+            ));
+        }
+        out
+    }
+
+    #[test]
+    fn beam_between_greedy_and_optimal_on_average() {
+        let ms = random_ctx_makespans(11, 12);
+        let (mut sg, mut sb, mut so) = (0u64, 0u64, 0u64);
+        for (g, b, o) in ms {
+            assert!(o <= b, "beam can't beat optimal");
+            sg += g;
+            sb += b;
+            so += o;
+        }
+        assert!(sb <= sg, "beam(2) should not be worse than greedy in aggregate");
+        assert!(so <= sb);
+    }
+
+    #[test]
+    fn beam_width_one_reasonable() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![10, 20, 30];
+        let resident = vec![false; 3];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 3,
+            layer: 0,
+            layers: 4,
+        };
+        let a = BeamAssigner::new(1).assign(&ctx);
+        assert!(a.satisfies_constraints(&ctx));
+    }
+
+    #[test]
+    fn respects_memory_slots() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![50, 50, 50, 50];
+        let resident = vec![false; 4];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 2,
+            layer: 0,
+            layers: 4,
+        };
+        let a = BeamAssigner::new(3).assign(&ctx);
+        assert!(a.satisfies_constraints(&ctx));
+        assert!(a.to_gpu.iter().filter(|&&g| g).count() <= 2);
+    }
+}

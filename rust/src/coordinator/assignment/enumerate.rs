@@ -1,0 +1,157 @@
+//! "Opt_plan": precise solving of the 0-1 program by exhaustive
+//! enumeration — no heuristic seeding, no pruning beyond feasibility.
+//!
+//! This is the paper's foil: the *exact* schedule whose "runtime solving
+//! cost is prohibitively high" (§6.3-1, Fig. 15: 55 % of end-to-end time).
+//! The branch-and-bound [`super::OptimalAssigner`] finds the same optimum
+//! orders of magnitude faster and exists for verification; Opt_plan
+//! experiments use this solver so the measured (and virtually charged)
+//! solve cost reflects precise solving, as in the paper.
+//!
+//! Instances with more than `max_active` activated experts fall back to
+//! branch & bound (the paper's N=64/128 models need an ILP solver there
+//! too).
+
+use super::{AssignCtx, Assigner, Assignment, OptimalAssigner};
+
+pub struct EnumerateAssigner {
+    pub max_active: usize,
+}
+
+impl Default for EnumerateAssigner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EnumerateAssigner {
+    pub fn new() -> Self {
+        EnumerateAssigner { max_active: 20 }
+    }
+}
+
+impl Assigner for EnumerateAssigner {
+    fn name(&self) -> &'static str {
+        "opt_plan"
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+        let n = ctx.workloads.len();
+        let active: Vec<usize> = (0..n).filter(|&e| ctx.workloads[e] > 0).collect();
+        if active.len() > self.max_active {
+            return OptimalAssigner::new().assign(ctx);
+        }
+        let costs: Vec<(u64, u64, bool)> =
+            active.iter().map(|&e| (ctx.t_cpu(e), ctx.t_gpu(e), !ctx.resident[e])).collect();
+        let mut best_mask = 0u32;
+        let mut best = u64::MAX;
+        for mask in 0u32..(1u32 << active.len()) {
+            let mut t_cpu = 0u64;
+            let mut t_gpu = 0u64;
+            let mut staged = 0usize;
+            for (i, &(c, g, needs_slot)) in costs.iter().enumerate() {
+                if mask & (1 << i) != 0 {
+                    t_gpu += g;
+                    if needs_slot {
+                        staged += 1;
+                    }
+                } else {
+                    t_cpu += c;
+                }
+            }
+            if staged > ctx.gpu_free_slots {
+                continue;
+            }
+            let m = t_cpu.max(t_gpu);
+            if m < best {
+                best = m;
+                best_mask = mask;
+            }
+        }
+        let mut a = Assignment::none(n);
+        for (i, &e) in active.iter().enumerate() {
+            if best_mask & (1 << i) != 0 {
+                a.to_gpu[e] = true;
+            } else {
+                a.to_cpu[e] = true;
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::cost;
+    use super::super::GreedyAssigner;
+    use super::*;
+    use crate::util::DetRng;
+
+    #[test]
+    fn matches_branch_and_bound_optimum() {
+        let cm = cost("deepseek-sim");
+        let mut rng = DetRng::new(21);
+        for _ in 0..25 {
+            let n = 12;
+            let workloads: Vec<u32> =
+                (0..n).map(|_| if rng.chance(0.3) { 0 } else { rng.usize_below(40) as u32 }).collect();
+            let resident: Vec<bool> = (0..n).map(|_| rng.chance(0.4)).collect();
+            let ctx = AssignCtx {
+                workloads: &workloads,
+                resident: &resident,
+                cost: &cm,
+                gpu_free_slots: n,
+                layer: 0,
+                layers: 4,
+            };
+            let enumed = EnumerateAssigner::new().assign(&ctx);
+            let bnb = OptimalAssigner::new().assign(&ctx);
+            assert!(enumed.satisfies_constraints(&ctx));
+            assert_eq!(enumed.makespan_estimate(&ctx), bnb.makespan_estimate(&ctx));
+        }
+    }
+
+    #[test]
+    fn enumeration_is_much_slower_than_greedy() {
+        // The whole point of Opt_plan: precise solving costs real time.
+        let cm = cost("deepseek-sim");
+        let workloads: Vec<u32> = (0..16).map(|i| (i % 7 + 1) as u32).collect();
+        let resident = vec![false; 16];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 16,
+            layer: 0,
+            layers: 4,
+        };
+        let t0 = std::time::Instant::now();
+        for _ in 0..10 {
+            EnumerateAssigner::new().assign(&ctx);
+        }
+        let slow = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        for _ in 0..10 {
+            GreedyAssigner::new().assign(&ctx);
+        }
+        let fast = t0.elapsed();
+        assert!(slow > fast * 20, "enumeration {slow:?} vs greedy {fast:?}");
+    }
+
+    #[test]
+    fn large_instances_fall_back() {
+        let cm = cost("qwen-sim");
+        let workloads: Vec<u32> = (0..32).map(|_| 3).collect();
+        let resident = vec![false; 32];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 32,
+            layer: 0,
+            layers: 4,
+        };
+        let a = EnumerateAssigner::new().assign(&ctx);
+        assert!(a.satisfies_constraints(&ctx));
+    }
+}

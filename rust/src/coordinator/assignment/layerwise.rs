@@ -1,0 +1,68 @@
+//! Layer-wise split (llama.cpp / KTransformers, paper Fig. 1a & Fig. 3a):
+//! the first `cpu_layers` MoE layers execute every expert on the CPU, the
+//! remaining layers execute every expert on the GPU (their weights are
+//! resident there — the GPU memory budget decides `cpu_layers`, computed in
+//! `frameworks.rs`). No CPU/GPU parallelism is possible because whole
+//! layers serialize.
+
+use super::{AssignCtx, Assigner, Assignment};
+
+pub struct LayerWiseAssigner {
+    /// MoE layers `0..cpu_layers` run on CPU; the rest on GPU.
+    pub cpu_layers: usize,
+}
+
+impl LayerWiseAssigner {
+    pub fn new(cpu_layers: usize) -> Self {
+        LayerWiseAssigner { cpu_layers }
+    }
+}
+
+impl Assigner for LayerWiseAssigner {
+    fn name(&self) -> &'static str {
+        "layerwise"
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+        let n = ctx.workloads.len();
+        let mut a = Assignment::none(n);
+        let on_gpu = ctx.layer >= self.cpu_layers;
+        for e in 0..n {
+            if ctx.workloads[e] == 0 {
+                continue;
+            }
+            if on_gpu {
+                a.to_gpu[e] = true;
+            } else {
+                a.to_cpu[e] = true;
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::cost;
+    use super::*;
+
+    #[test]
+    fn splits_by_layer_index() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![3, 4];
+        let resident = vec![true, true];
+        let mk = |layer| AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 8,
+            layer,
+            layers: 4,
+        };
+        let mut a = LayerWiseAssigner::new(2);
+        assert!(a.assign(&mk(0)).to_cpu.iter().all(|&c| c));
+        assert!(a.assign(&mk(1)).to_cpu.iter().all(|&c| c));
+        assert!(a.assign(&mk(2)).to_gpu.iter().all(|&g| g));
+        assert!(a.assign(&mk(3)).to_gpu.iter().all(|&g| g));
+    }
+}

@@ -1,0 +1,157 @@
+//! Expert assignment: who runs where (paper §4.1).
+//!
+//! The optimization problem (Eqs. 3–9): minimize `max(T_gpu, T_cpu)` where
+//! `T_cpu = Σ t_cpu(w_i)·C_i`, `T_gpu = Σ t_gpu(w_i)·G_i`, subject to every
+//! activated expert being assigned exactly once and the GPU memory budget.
+//!
+//! Implementations:
+//! * [`GreedyAssigner`] — the paper's Alg. 1 (DALI's contribution);
+//! * [`OptimalAssigner`] — exact branch & bound ("Opt_plan");
+//! * [`BeamAssigner`] — beam-search approximation (Appendix A.2);
+//! * [`StaticThresholdAssigner`] — Fiddler/HybriMoE per-expert rule;
+//! * [`AllCpuAssigner`] — the "Naive" baseline;
+//! * [`ResidentOnlyAssigner`] — MoE-Lightning-style fixed placement;
+//! * [`LayerWiseAssigner`] — llama.cpp/KTransformers layer split.
+
+mod all_cpu;
+mod beam;
+mod enumerate;
+mod greedy;
+mod layerwise;
+mod optimal;
+mod resident_only;
+mod static_threshold;
+
+pub use all_cpu::AllCpuAssigner;
+pub use beam::BeamAssigner;
+pub use enumerate::EnumerateAssigner;
+pub use greedy::GreedyAssigner;
+pub use layerwise::LayerWiseAssigner;
+pub use optimal::OptimalAssigner;
+pub use resident_only::ResidentOnlyAssigner;
+pub use static_threshold::StaticThresholdAssigner;
+
+use crate::hw::{CostModel, Ns};
+
+/// Everything an assigner may look at for one MoE layer step.
+pub struct AssignCtx<'a> {
+    /// True workload (routed tokens) per routed expert.
+    pub workloads: &'a [u32],
+    /// Whether each expert's weights are already on the GPU (cache hit or
+    /// arrived prefetch) — resident experts transfer for free (§4.3).
+    pub resident: &'a [bool],
+    pub cost: &'a CostModel,
+    /// Eq. 9: how many *non-resident* experts may be staged on the GPU this
+    /// layer (free VRAM / expert size).
+    pub gpu_free_slots: usize,
+    /// MoE layer index (used by layer-wise baselines).
+    pub layer: usize,
+    /// Total MoE layers.
+    pub layers: usize,
+}
+
+impl AssignCtx<'_> {
+    /// Eq. 5 estimate used by all solvers: `t_gpu(w)` with residency.
+    pub fn t_gpu(&self, e: usize) -> Ns {
+        self.cost.t_gpu(self.workloads[e] as usize, self.resident[e])
+    }
+
+    pub fn t_cpu(&self, e: usize) -> Ns {
+        self.cost.t_cpu(self.workloads[e] as usize)
+    }
+}
+
+/// Result: the C/G indicator vectors of the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub to_gpu: Vec<bool>,
+    pub to_cpu: Vec<bool>,
+}
+
+impl Assignment {
+    pub fn none(n: usize) -> Self {
+        Assignment { to_gpu: vec![false; n], to_cpu: vec![false; n] }
+    }
+
+    /// Eq. 4/5 objective value of this assignment under `ctx`'s estimates.
+    pub fn makespan_estimate(&self, ctx: &AssignCtx) -> Ns {
+        let mut t_cpu = 0;
+        let mut t_gpu = 0;
+        for e in 0..self.to_gpu.len() {
+            if self.to_gpu[e] {
+                t_gpu += ctx.t_gpu(e);
+            } else if self.to_cpu[e] {
+                t_cpu += ctx.t_cpu(e);
+            }
+        }
+        t_cpu.max(t_gpu)
+    }
+
+    /// Check Eqs. 7–9 (activation, mutual exclusion, memory).
+    pub fn satisfies_constraints(&self, ctx: &AssignCtx) -> bool {
+        let mut staged = 0;
+        for e in 0..self.to_gpu.len() {
+            let active = ctx.workloads[e] > 0;
+            if active != (self.to_gpu[e] ^ self.to_cpu[e]) {
+                // activated ⇔ exactly one device; inactive ⇔ neither
+                if active || self.to_gpu[e] || self.to_cpu[e] {
+                    return false;
+                }
+            }
+            if self.to_gpu[e] && self.to_cpu[e] {
+                return false;
+            }
+            if self.to_gpu[e] && !ctx.resident[e] {
+                staged += 1;
+            }
+        }
+        staged <= ctx.gpu_free_slots
+    }
+}
+
+/// Trait implemented by every assignment policy.
+pub trait Assigner: Send {
+    fn name(&self) -> &'static str;
+    fn assign(&mut self, ctx: &AssignCtx) -> Assignment;
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::*;
+    use crate::config::Presets;
+
+    pub fn cost(model: &str) -> CostModel {
+        let p = Presets::load_default().unwrap();
+        CostModel::new(p.model(model).unwrap(), p.hw("local-pc").unwrap())
+    }
+
+    /// Exhaustive optimum for small instances (test oracle).
+    pub fn brute_force(ctx: &AssignCtx) -> (Ns, Assignment) {
+        let n = ctx.workloads.len();
+        let active: Vec<usize> = (0..n).filter(|&e| ctx.workloads[e] > 0).collect();
+        assert!(active.len() <= 20, "brute force only for small instances");
+        let mut best = (Ns::MAX, Assignment::none(n));
+        for mask in 0u32..(1 << active.len()) {
+            let mut a = Assignment::none(n);
+            let mut staged = 0;
+            for (i, &e) in active.iter().enumerate() {
+                if mask & (1 << i) != 0 {
+                    a.to_gpu[e] = true;
+                    if !ctx.resident[e] {
+                        staged += 1;
+                    }
+                } else {
+                    a.to_cpu[e] = true;
+                }
+            }
+            if staged > ctx.gpu_free_slots {
+                continue;
+            }
+            let m = a.makespan_estimate(ctx);
+            if m < best.0 {
+                best = (m, a);
+            }
+        }
+        best
+    }
+}

@@ -1,0 +1,72 @@
+//! MoE-Lightning-style fixed placement: experts pinned on the GPU by an
+//! offline search run there; everything else runs on the CPU. No dynamic
+//! decisions at runtime — the paper's critique is precisely that this
+//! "fixed CPU/GPU placement before inference makes it poorly suited to
+//! MoE's dynamic workload patterns" (§6.2).
+//!
+//! The offline search itself lives in `frameworks.rs` (it pins the experts
+//! with the highest calibration-set activation frequency that fit in the
+//! memory budget, per MoE-Lightning's performance-model-driven planning).
+
+use super::{AssignCtx, Assigner, Assignment};
+
+pub struct ResidentOnlyAssigner;
+
+impl Default for ResidentOnlyAssigner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ResidentOnlyAssigner {
+    pub fn new() -> Self {
+        ResidentOnlyAssigner
+    }
+}
+
+impl Assigner for ResidentOnlyAssigner {
+    fn name(&self) -> &'static str {
+        "resident_only"
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+        let n = ctx.workloads.len();
+        let mut a = Assignment::none(n);
+        for e in 0..n {
+            if ctx.workloads[e] == 0 {
+                continue;
+            }
+            if ctx.resident[e] {
+                a.to_gpu[e] = true;
+            } else {
+                a.to_cpu[e] = true;
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::cost;
+    use super::*;
+
+    #[test]
+    fn only_pinned_experts_use_gpu() {
+        let cm = cost("qwen-sim");
+        let workloads = vec![10, 10, 0, 10];
+        let resident = vec![true, false, true, false];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 0,
+            layer: 0,
+            layers: 4,
+        };
+        let a = ResidentOnlyAssigner::new().assign(&ctx);
+        assert_eq!(a.to_gpu, vec![true, false, false, false]);
+        assert_eq!(a.to_cpu, vec![false, true, false, true]);
+        assert!(a.satisfies_constraints(&ctx));
+    }
+}

@@ -1,0 +1,162 @@
+//! Static per-expert placement (Fiddler / HybriMoE, paper §3.1 & Fig. 1b).
+//!
+//! "Experts exceeding a predefined workload threshold (high-workload
+//! experts) are executed on the GPU, while the rest (low-workload experts)
+//! are handled by the CPU in parallel." The threshold is a *workload count*
+//! (we use the mean active workload), not a cost comparison — the policy
+//! neither accounts for transfer cost nor for the cumulative load on either
+//! device. That produces both failure modes the paper measures: severe
+//! CPU/GPU imbalance (Fig. 4) and PCIe-transfer-bound execution (Fig. 5).
+//!
+//! Cache-resident experts additionally run on the GPU whenever that is
+//! individually cheaper (the cache-exploitation rule every expert-wise
+//! framework implements).
+
+use super::{AssignCtx, Assigner, Assignment};
+
+pub struct StaticThresholdAssigner;
+
+impl Default for StaticThresholdAssigner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StaticThresholdAssigner {
+    pub fn new() -> Self {
+        StaticThresholdAssigner
+    }
+
+    /// The "predefined workload threshold": the mean workload over active
+    /// experts this step.
+    pub fn threshold(workloads: &[u32]) -> u32 {
+        let active: Vec<u32> = workloads.iter().copied().filter(|&w| w > 0).collect();
+        if active.is_empty() {
+            return u32::MAX;
+        }
+        let sum: u64 = active.iter().map(|&w| w as u64).sum();
+        (sum / active.len() as u64) as u32
+    }
+}
+
+impl Assigner for StaticThresholdAssigner {
+    fn name(&self) -> &'static str {
+        "static_threshold"
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+        let n = ctx.workloads.len();
+        let mut a = Assignment::none(n);
+        let mut slots = ctx.gpu_free_slots;
+        let thresh = Self::threshold(ctx.workloads);
+        // Visit high-workload experts first so the memory budget goes to
+        // the experts the policy most wants on the GPU.
+        let mut order: Vec<usize> = (0..n).filter(|&e| ctx.workloads[e] > 0).collect();
+        order.sort_by_key(|&e| std::cmp::Reverse(ctx.workloads[e]));
+        for e in order {
+            let resident_win = ctx.resident[e] && ctx.t_gpu(e) < ctx.t_cpu(e);
+            let high_workload = ctx.workloads[e] > thresh;
+            let needs_slot = !ctx.resident[e];
+            if (resident_win || high_workload) && (!needs_slot || slots > 0) {
+                a.to_gpu[e] = true;
+                if needs_slot {
+                    slots -= 1;
+                }
+            } else {
+                a.to_cpu[e] = true;
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::cost;
+    use super::*;
+
+    #[test]
+    fn threshold_is_mean_of_active() {
+        assert_eq!(StaticThresholdAssigner::threshold(&[0, 2, 4, 0, 6]), 4);
+        assert_eq!(StaticThresholdAssigner::threshold(&[0, 0]), u32::MAX);
+    }
+
+    #[test]
+    fn high_workload_experts_forced_to_gpu_despite_transfer_cost() {
+        // The paper's critique: a high-workload uncached Mixtral expert is
+        // sent to the GPU even though its PCIe transfer (~14 ms) exceeds
+        // its CPU time — static placement ignores transfer economics.
+        let cm = cost("mixtral-sim");
+        let workloads = vec![12, 1, 1, 1];
+        let resident = vec![false; 4];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 4,
+            layer: 0,
+            layers: 4,
+        };
+        let a = StaticThresholdAssigner::new().assign(&ctx);
+        assert!(a.to_gpu[0], "above-threshold expert goes to GPU");
+        assert!(a.to_cpu[1] && a.to_cpu[2] && a.to_cpu[3]);
+    }
+
+    #[test]
+    fn ignores_load_balance() {
+        // Skewed workloads: static dumps every above-mean expert on the
+        // GPU; greedy balances and achieves a lower makespan.
+        let cm = cost("mixtral-sim");
+        let workloads = vec![30, 28, 26, 24, 2, 2, 2, 2];
+        let resident = vec![false; 8];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 8,
+            layer: 0,
+            layers: 4,
+        };
+        let a = StaticThresholdAssigner::new().assign(&ctx);
+        assert!(a.to_gpu[0] && a.to_gpu[1] && a.to_gpu[2] && a.to_gpu[3]);
+        // The true optimum is never worse than the static split (greedy is
+        // a heuristic and can occasionally lose on adversarial instances —
+        // the paper's own Table 4 concedes ~92% of optimal).
+        let o = super::super::OptimalAssigner::new().assign(&ctx);
+        assert!(o.makespan_estimate(&ctx) <= a.makespan_estimate(&ctx));
+    }
+
+    #[test]
+    fn uniform_low_workloads_stay_on_cpu() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![2, 2];
+        let resident = vec![false, false];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 8,
+            layer: 0,
+            layers: 4,
+        };
+        let a = StaticThresholdAssigner::new().assign(&ctx);
+        assert!(a.to_cpu[0] && a.to_cpu[1]);
+    }
+
+    #[test]
+    fn cached_expert_prefers_gpu() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![2];
+        let resident = vec![true];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: 8,
+            layer: 0,
+            layers: 4,
+        };
+        let a = StaticThresholdAssigner::new().assign(&ctx);
+        assert!(a.to_gpu[0]);
+    }
+}

@@ -1,0 +1,104 @@
+//! LRU expert cache (FastMoE-style, the paper's Fig. 7 baseline).
+//!
+//! On every GPU execution of an expert, it is touched; a demand-fetched
+//! expert is admitted, evicting the least-recently-used resident. Workload
+//! magnitudes are ignored entirely — the deficiency Fig. 7 measures.
+
+use super::{ExpertCache, ResidentSets, Swap};
+
+pub struct LruCache {
+    res: ResidentSets,
+    /// Monotone use counter per layer per expert (0 = never used).
+    stamp: Vec<Vec<u64>>,
+    clock: u64,
+    n_experts: usize,
+}
+
+impl LruCache {
+    pub fn new(layers: usize, n_experts: usize, capacity: usize, seed: u64) -> Self {
+        LruCache {
+            res: ResidentSets::new(layers, n_experts, capacity, seed),
+            stamp: vec![vec![0; n_experts]; layers],
+            clock: 0,
+            n_experts,
+        }
+    }
+}
+
+impl ExpertCache for LruCache {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn capacity(&self) -> usize {
+        self.res.capacity
+    }
+
+    fn is_resident(&self, layer: usize, expert: usize) -> bool {
+        self.res.contains(layer, expert)
+    }
+
+    fn resident_mask(&self, layer: usize) -> Vec<bool> {
+        self.res.mask(layer, self.n_experts)
+    }
+
+    fn observe(&mut self, _layer: usize, _workloads: &[u32], _gate_scores: &[f32]) {}
+
+    fn on_gpu_use(&mut self, layer: usize, expert: usize, fetched: bool) -> Option<usize> {
+        self.clock += 1;
+        self.stamp[layer][expert] = self.clock;
+        if !fetched || self.res.contains(layer, expert) {
+            return None;
+        }
+        // admit, evicting the LRU resident
+        let victim = *self.res.sets[layer]
+            .iter()
+            .min_by_key(|&&e| self.stamp[layer][e])?;
+        self.res.replace(layer, victim, expert);
+        Some(victim)
+    }
+
+    fn window_tick(&mut self, _layer: usize, _step: usize) -> Vec<Swap> {
+        vec![] // LRU replaces on use, not on windows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fetched_expert_admitted_evicting_lru() {
+        let mut c = LruCache::new(1, 8, 2, 1);
+        let residents: Vec<usize> = (0..8).filter(|&e| c.is_resident(0, e)).collect();
+        // touch residents in order; residents[0] becomes LRU
+        c.on_gpu_use(0, residents[0], false);
+        c.on_gpu_use(0, residents[1], false);
+        let newcomer = (0..8).find(|&e| !c.is_resident(0, e)).unwrap();
+        let evicted = c.on_gpu_use(0, newcomer, true);
+        assert_eq!(evicted, Some(residents[0]));
+        assert!(c.is_resident(0, newcomer));
+        assert!(!c.is_resident(0, residents[0]));
+    }
+
+    #[test]
+    fn resident_use_does_not_evict() {
+        let mut c = LruCache::new(1, 8, 2, 2);
+        let r = (0..8).find(|&e| c.is_resident(0, e)).unwrap();
+        assert_eq!(c.on_gpu_use(0, r, false), None);
+        assert_eq!(c.on_gpu_use(0, r, true), None); // already resident
+    }
+
+    #[test]
+    fn capacity_stable_under_churn() {
+        let mut c = LruCache::new(2, 16, 4, 3);
+        let mut rng = crate::util::DetRng::new(1);
+        for _ in 0..200 {
+            let e = rng.usize_below(16);
+            let l = rng.usize_below(2);
+            let fetched = !c.is_resident(l, e);
+            c.on_gpu_use(l, e, fetched);
+            assert_eq!(c.resident_mask(l).iter().filter(|&&b| b).count(), 4);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! GPU expert cache (paper §4.3).
+//!
+//! Each MoE layer owns `cache_size` GPU slots for expert weights; a resident
+//! expert's PCIe transfer cost is zero during assignment (the cooperation
+//! rule at the end of §4.3). Replacement policies:
+//!
+//! * [`WorkloadAwareCache`] — DALI's Alg. 2: sliding token window of
+//!   `w_size`, accumulate per-expert workload scores, every window swap the
+//!   `u_size` highest-scored CPU experts against the `u_size` lowest-scored
+//!   GPU experts.
+//! * [`LruCache`] — FastMoE-style least-recently-used.
+//! * [`ScoreCache`] — HybriMoE-style activation-score replacement.
+//! * [`PinnedCache`] — fixed resident set (layer-wise frameworks,
+//!   MoE-Lightning); never replaces.
+//! * [`NoCache`] — no expert cache at all (Fiddler).
+
+mod lru;
+mod pinned;
+mod score;
+mod workload_aware;
+
+pub use lru::LruCache;
+pub use pinned::{NoCache, PinnedCache};
+pub use score::ScoreCache;
+pub use workload_aware::WorkloadAwareCache;
+
+/// One replacement decision: evict `out`, load `in_` (PCIe traffic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Swap {
+    pub evict: usize,
+    pub load: usize,
+}
+
+/// Trait implemented by every cache policy. All methods take the MoE layer
+/// index; policies keep independent per-layer state (the paper replaces
+/// per-layer independently).
+pub trait ExpertCache: Send {
+    fn name(&self) -> &'static str;
+
+    /// Cache capacity per layer (experts).
+    fn capacity(&self) -> usize;
+
+    fn is_resident(&self, layer: usize, expert: usize) -> bool;
+
+    /// Residency bitmap for assignment.
+    fn resident_mask(&self, layer: usize) -> Vec<bool>;
+
+    /// Observe a batch step's true workloads + routed gate scores at a layer
+    /// (called once per layer per step, before replacement decisions).
+    fn observe(&mut self, layer: usize, workloads: &[u32], gate_scores: &[f32]);
+
+    /// An expert was executed on the GPU; `fetched` = it was demand-fetched
+    /// this step (i.e. it is now physically on the GPU and the policy may
+    /// choose to admit it). Returns an eviction if the policy admits it.
+    fn on_gpu_use(&mut self, layer: usize, expert: usize, fetched: bool) -> Option<usize>;
+
+    /// Token-window boundary at a layer: returns swaps to perform (each
+    /// costs one expert upload over PCIe). Called once per decode step per
+    /// layer with the current step index.
+    fn window_tick(&mut self, layer: usize, step: usize) -> Vec<Swap>;
+}
+
+/// Shared helper: fixed-capacity per-layer resident sets.
+#[derive(Debug, Clone)]
+pub(crate) struct ResidentSets {
+    pub sets: Vec<Vec<usize>>, // per layer, sorted small vecs
+    pub capacity: usize,
+}
+
+impl ResidentSets {
+    pub fn new(layers: usize, n_experts: usize, capacity: usize, seed: u64) -> Self {
+        // Paper §4: "for each MoE layer, we randomly select a fixed number of
+        // experts to be cached in GPU memory" initially.
+        let mut rng = crate::util::DetRng::new(seed ^ 0x5ca1ab1e);
+        let sets = (0..layers)
+            .map(|_| {
+                let mut ids: Vec<usize> = (0..n_experts).collect();
+                rng.shuffle(&mut ids);
+                let mut s: Vec<usize> = ids.into_iter().take(capacity.min(n_experts)).collect();
+                s.sort_unstable();
+                s
+            })
+            .collect();
+        ResidentSets { sets, capacity }
+    }
+
+    pub fn contains(&self, layer: usize, e: usize) -> bool {
+        self.sets[layer].binary_search(&e).is_ok()
+    }
+
+    pub fn mask(&self, layer: usize, n: usize) -> Vec<bool> {
+        let mut m = vec![false; n];
+        for &e in &self.sets[layer] {
+            m[e] = true;
+        }
+        m
+    }
+
+    pub fn replace(&mut self, layer: usize, evict: usize, load: usize) {
+        let set = &mut self.sets[layer];
+        if let Ok(i) = set.binary_search(&evict) {
+            set.remove(i);
+        }
+        if let Err(i) = set.binary_search(&load) {
+            set.insert(i, load);
+        }
+        debug_assert!(set.len() <= self.capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resident_sets_respect_capacity() {
+        let r = ResidentSets::new(4, 16, 3, 1);
+        for l in 0..4 {
+            assert_eq!(r.sets[l].len(), 3);
+            for &e in &r.sets[l] {
+                assert!(e < 16);
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_clamped_to_expert_count() {
+        let r = ResidentSets::new(2, 4, 10, 1);
+        assert_eq!(r.sets[0].len(), 4);
+    }
+
+    #[test]
+    fn replace_swaps_membership() {
+        let mut r = ResidentSets::new(1, 8, 2, 2);
+        let evict = r.sets[0][0];
+        let load = (0..8).find(|e| !r.contains(0, *e)).unwrap();
+        r.replace(0, evict, load);
+        assert!(!r.contains(0, evict));
+        assert!(r.contains(0, load));
+        assert_eq!(r.sets[0].len(), 2);
+    }
+
+    #[test]
+    fn initial_sets_differ_across_layers() {
+        let r = ResidentSets::new(8, 64, 8, 3);
+        let all_same = (1..8).all(|l| r.sets[l] == r.sets[0]);
+        assert!(!all_same);
+    }
+}

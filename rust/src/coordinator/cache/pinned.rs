@@ -1,0 +1,155 @@
+//! Fixed-residency caches: [`PinnedCache`] (a chosen set, never replaced —
+//! layer-wise frameworks and MoE-Lightning's offline placement) and
+//! [`NoCache`] (nothing resident — Fiddler).
+
+use super::{ExpertCache, Swap};
+
+/// Fixed resident sets decided before inference.
+pub struct PinnedCache {
+    mask: Vec<Vec<bool>>, // per layer
+    capacity: usize,
+}
+
+impl PinnedCache {
+    /// Pin an explicit per-layer set.
+    pub fn new(mask: Vec<Vec<bool>>) -> Self {
+        let capacity = mask.iter().map(|m| m.iter().filter(|&&b| b).count()).max().unwrap_or(0);
+        PinnedCache { mask, capacity }
+    }
+
+    /// Pin every expert of layers `cpu_layers..layers` (layer-wise split).
+    pub fn whole_layers(layers: usize, n_experts: usize, cpu_layers: usize) -> Self {
+        let mask = (0..layers)
+            .map(|l| vec![l >= cpu_layers; n_experts])
+            .collect();
+        Self::new(mask)
+    }
+
+    /// Pin the top-`per_layer` experts per layer ranked by calibration
+    /// activation frequency (MoE-Lightning's offline placement search).
+    pub fn by_frequency(freq: &[Vec<f64>], per_layer: usize) -> Self {
+        let mask = freq
+            .iter()
+            .map(|f| {
+                let mut idx: Vec<usize> = (0..f.len()).collect();
+                idx.sort_by(|&a, &b| f[b].total_cmp(&f[a]));
+                let mut m = vec![false; f.len()];
+                for &e in idx.iter().take(per_layer) {
+                    m[e] = true;
+                }
+                m
+            })
+            .collect();
+        Self::new(mask)
+    }
+}
+
+impl ExpertCache for PinnedCache {
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn is_resident(&self, layer: usize, expert: usize) -> bool {
+        self.mask[layer][expert]
+    }
+
+    fn resident_mask(&self, layer: usize) -> Vec<bool> {
+        self.mask[layer].clone()
+    }
+
+    fn observe(&mut self, _layer: usize, _workloads: &[u32], _gate_scores: &[f32]) {}
+
+    fn on_gpu_use(&mut self, _layer: usize, _expert: usize, _fetched: bool) -> Option<usize> {
+        None
+    }
+
+    fn window_tick(&mut self, _layer: usize, _step: usize) -> Vec<Swap> {
+        vec![]
+    }
+}
+
+/// No expert cache at all.
+pub struct NoCache {
+    layers: usize,
+    n_experts: usize,
+}
+
+impl NoCache {
+    pub fn new(layers: usize, n_experts: usize) -> Self {
+        NoCache { layers, n_experts }
+    }
+}
+
+impl ExpertCache for NoCache {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn capacity(&self) -> usize {
+        0
+    }
+
+    fn is_resident(&self, layer: usize, _expert: usize) -> bool {
+        debug_assert!(layer < self.layers);
+        false
+    }
+
+    fn resident_mask(&self, _layer: usize) -> Vec<bool> {
+        vec![false; self.n_experts]
+    }
+
+    fn observe(&mut self, _layer: usize, _workloads: &[u32], _gate_scores: &[f32]) {}
+
+    fn on_gpu_use(&mut self, _layer: usize, _expert: usize, _fetched: bool) -> Option<usize> {
+        None
+    }
+
+    fn window_tick(&mut self, _layer: usize, _step: usize) -> Vec<Swap> {
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_layers_split() {
+        let c = PinnedCache::whole_layers(4, 8, 2);
+        assert!(!c.is_resident(0, 3));
+        assert!(!c.is_resident(1, 3));
+        assert!(c.is_resident(2, 3));
+        assert!(c.is_resident(3, 0));
+    }
+
+    #[test]
+    fn by_frequency_picks_top() {
+        let freq = vec![vec![0.1, 0.9, 0.5, 0.2]];
+        let c = PinnedCache::by_frequency(&freq, 2);
+        assert!(c.is_resident(0, 1));
+        assert!(c.is_resident(0, 2));
+        assert!(!c.is_resident(0, 0));
+        assert!(!c.is_resident(0, 3));
+    }
+
+    #[test]
+    fn pinned_never_replaces() {
+        let mut c = PinnedCache::by_frequency(&vec![vec![1.0, 0.0]], 1);
+        assert_eq!(c.on_gpu_use(0, 1, true), None);
+        assert!(c.window_tick(0, 10).is_empty());
+        assert!(!c.is_resident(0, 1));
+    }
+
+    #[test]
+    fn no_cache_is_empty() {
+        let mut c = NoCache::new(2, 4);
+        assert_eq!(c.capacity(), 0);
+        assert!(!c.is_resident(0, 0));
+        assert_eq!(c.on_gpu_use(0, 0, true), None);
+        assert_eq!(c.resident_mask(1), vec![false; 4]);
+    }
+}

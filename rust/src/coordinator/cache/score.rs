@@ -1,0 +1,117 @@
+//! HybriMoE-style activation-score cache.
+//!
+//! Maintains an exponentially-decayed per-expert *gate score* (the router's
+//! softmax probability mass routed to each expert) and keeps the
+//! highest-scored experts resident. Replacement happens on use: a fetched
+//! expert is admitted iff its score exceeds the lowest resident score.
+//! Workload (token counts) is not consulted — the gap the paper's Fig. 7
+//! exploits, since score mass and token workload diverge under top-k
+//! routing.
+
+use super::{ExpertCache, ResidentSets, Swap};
+
+pub struct ScoreCache {
+    res: ResidentSets,
+    score: Vec<Vec<f64>>,
+    pub decay: f64,
+    n_experts: usize,
+}
+
+impl ScoreCache {
+    pub fn new(layers: usize, n_experts: usize, capacity: usize, seed: u64) -> Self {
+        ScoreCache {
+            res: ResidentSets::new(layers, n_experts, capacity, seed),
+            score: vec![vec![0.0; n_experts]; layers],
+            decay: 0.8,
+            n_experts,
+        }
+    }
+}
+
+impl ExpertCache for ScoreCache {
+    fn name(&self) -> &'static str {
+        "score"
+    }
+
+    fn capacity(&self) -> usize {
+        self.res.capacity
+    }
+
+    fn is_resident(&self, layer: usize, expert: usize) -> bool {
+        self.res.contains(layer, expert)
+    }
+
+    fn resident_mask(&self, layer: usize) -> Vec<bool> {
+        self.res.mask(layer, self.n_experts)
+    }
+
+    fn observe(&mut self, layer: usize, _workloads: &[u32], gate_scores: &[f32]) {
+        for (e, &g) in gate_scores.iter().enumerate() {
+            let s = &mut self.score[layer][e];
+            *s = *s * self.decay + g as f64;
+        }
+    }
+
+    fn on_gpu_use(&mut self, layer: usize, expert: usize, fetched: bool) -> Option<usize> {
+        if !fetched || self.res.contains(layer, expert) {
+            return None;
+        }
+        let victim = *self.res.sets[layer]
+            .iter()
+            .min_by(|&&a, &&b| self.score[layer][a].total_cmp(&self.score[layer][b]))?;
+        if self.score[layer][expert] > self.score[layer][victim] {
+            self.res.replace(layer, victim, expert);
+            Some(victim)
+        } else {
+            None
+        }
+    }
+
+    fn window_tick(&mut self, _layer: usize, _step: usize) -> Vec<Swap> {
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn high_score_expert_displaces_low() {
+        let mut c = ScoreCache::new(1, 8, 2, 4);
+        let hot = (0..8).find(|&e| !c.is_resident(0, e)).unwrap();
+        let mut g = vec![0.0f32; 8];
+        g[hot] = 5.0;
+        c.observe(0, &[0; 8], &g);
+        let evicted = c.on_gpu_use(0, hot, true);
+        assert!(evicted.is_some());
+        assert!(c.is_resident(0, hot));
+    }
+
+    #[test]
+    fn low_score_expert_not_admitted() {
+        let mut c = ScoreCache::new(1, 8, 2, 4);
+        // give residents solid scores
+        let mut g = vec![0.0f32; 8];
+        for e in 0..8 {
+            if c.is_resident(0, e) {
+                g[e] = 3.0;
+            }
+        }
+        c.observe(0, &[0; 8], &g);
+        let cold = (0..8).find(|&e| !c.is_resident(0, e)).unwrap();
+        assert_eq!(c.on_gpu_use(0, cold, true), None);
+        assert!(!c.is_resident(0, cold));
+    }
+
+    #[test]
+    fn scores_decay() {
+        let mut c = ScoreCache::new(1, 4, 1, 1);
+        let mut g = vec![0.0f32; 4];
+        g[0] = 1.0;
+        c.observe(0, &[0; 4], &g);
+        let s0 = c.score[0][0];
+        c.observe(0, &[0; 4], &[0.0; 4]);
+        assert!(c.score[0][0] < s0);
+    }
+}

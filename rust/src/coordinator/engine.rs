@@ -1,0 +1,451 @@
+//! Live inference engine: real PJRT numerics + virtual-time scheduling.
+//!
+//! Composes the AOT artifacts into full prefill/decode inference exactly as
+//! `python/compile/model.py`'s reference does (verified against
+//! `golden.json`), while feeding routing data to a [`StepSimulator`] so
+//! every run also yields the paper's virtual-time metrics. Also produces
+//! the calibration data (residual vectors, Eq. 11; activation frequencies)
+//! and the routing [`Trace`]s that the policy-sweep experiments replay.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelDims;
+use crate::runtime::PjrtEngine;
+use crate::workload::calib::{CalibAccum, CalibData};
+use crate::workload::trace::{
+    BatchStep, LayerStepRecord, PrefillLayerRecord, SeqTrace, Trace,
+};
+
+/// Per-token top-k selection matching `jax.lax.top_k` (ties → lower index).
+pub fn top_k(probs: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]).then(a.cmp(&b)));
+    idx.into_iter().take(k).map(|e| (e, probs[e])).collect()
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        (dot / (na * nb)) as f32
+    }
+}
+
+/// Routing + outputs of one live run (golden-test and trace material).
+#[derive(Debug, Default)]
+pub struct LiveRunOutput {
+    /// Greedy-argmax generated tokens per sequence.
+    pub generated: Vec<Vec<i32>>,
+    /// Per sequence, per decode step: full logits row.
+    pub decode_logits: Vec<Vec<Vec<f32>>>,
+    /// Per sequence, per decode step, per layer: routed expert ids.
+    pub decode_routes: Vec<Vec<Vec<Vec<usize>>>>,
+    /// Per sequence, per prompt token, per layer: routed expert ids.
+    pub prefill_routes: Vec<Vec<Vec<Vec<usize>>>>,
+    /// Last prompt token logits per sequence.
+    pub prefill_last_logits: Vec<Vec<f32>>,
+    /// Recorded trace (when requested).
+    pub trace: Option<Trace>,
+}
+
+/// The live engine for one preset.
+pub struct InferenceEngine {
+    pub rt: PjrtEngine,
+    pub dims: ModelDims,
+    /// Calibration data; required for residual predictions in traces.
+    pub calib: Option<CalibData>,
+}
+
+struct SeqState {
+    /// Per layer: (max_seq, H, hd) row-major K/V cache for this sequence.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    pos: usize,
+    last_hidden: Vec<f32>,
+    tokens: Vec<i32>,
+}
+
+impl InferenceEngine {
+    pub fn new(preset: &str) -> Result<Self> {
+        let rt = PjrtEngine::load(preset)?;
+        let dims = rt.manifest().dims.clone();
+        let calib = CalibData::load(&CalibData::path_for(preset)).ok();
+        Ok(InferenceEngine { rt, dims, calib })
+    }
+
+    fn cache_row(&self) -> usize {
+        self.dims.max_seq * self.dims.heads * self.dims.head_dim
+    }
+
+    /// Split `probs` (t × N) into per-token top-k routings.
+    fn route(&self, probs: &[f32], t: usize) -> Vec<Vec<(usize, f32)>> {
+        let n = self.dims.n_routed;
+        (0..t).map(|i| top_k(&probs[i * n..(i + 1) * n], self.dims.top_k)).collect()
+    }
+
+    /// One full MoE layer on `t` rows: returns `h + Σ G_i·E_i(xn) + shared`.
+    fn moe_combine(
+        &self,
+        layer: usize,
+        h: &[f32],
+        xn: &[f32],
+        routes: &[Vec<(usize, f32)>],
+        t: usize,
+    ) -> Result<Vec<f32>> {
+        let d = self.dims.hidden;
+        let mut out = h.to_vec();
+        // group rows by expert
+        for e in 0..self.dims.n_routed {
+            let rows: Vec<(usize, f32)> = routes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, r)| r.iter().find(|(ex, _)| *ex == e).map(|(_, s)| (i, *s)))
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let mut gathered = Vec::with_capacity(rows.len() * d);
+            for &(i, _) in &rows {
+                gathered.extend_from_slice(&xn[i * d..(i + 1) * d]);
+            }
+            let y = self.rt.expert_routed(layer, e, &gathered, rows.len())?;
+            for (j, &(i, score)) in rows.iter().enumerate() {
+                for c in 0..d {
+                    out[i * d + c] += score * y[j * d + c];
+                }
+            }
+        }
+        for s in 0..self.dims.n_shared {
+            let y = self.rt.expert_shared(layer, s, xn, t)?;
+            for i in 0..t * d {
+                out[i] += y[i];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Predicted next-layer routings from features `h` (t rows): runs the
+    /// *next* layer's gate artifact on `h` (HybriMoE) and on `h + res_vec`
+    /// (DALI Eq. 10). Returns (pred_raw routes, pred_res routes, h_res).
+    fn predict_next(
+        &self,
+        layer: usize,
+        h: &[f32],
+        t: usize,
+    ) -> Result<(Vec<Vec<(usize, f32)>>, Vec<Vec<(usize, f32)>>, Vec<f32>)> {
+        let d = self.dims.hidden;
+        let (praw, _) = self.rt.gate(layer + 1, h, t)?;
+        let raw = self.route(&praw, t);
+        let mut h_res = h.to_vec();
+        if let Some(calib) = &self.calib {
+            let rv = &calib.res_vec[layer];
+            for i in 0..t {
+                for c in 0..d {
+                    h_res[i * d + c] += rv[c];
+                }
+            }
+        }
+        let (pres, _) = self.rt.gate(layer + 1, &h_res, t)?;
+        let res = self.route(&pres, t);
+        Ok((raw, res, h_res))
+    }
+
+    /// Run prefill for one sequence; fills `st` and returns per-layer
+    /// records + routing log + final hidden rows.
+    fn prefill_seq(
+        &self,
+        st: &mut SeqState,
+        record: bool,
+    ) -> Result<(Vec<PrefillLayerRecord>, Vec<Vec<Vec<usize>>>, Vec<f32>)> {
+        let d = self.dims.hidden;
+        let n = self.dims.n_routed;
+        let s = st.tokens.len();
+        let pos: Vec<i32> = (0..s as i32).collect();
+        let mut x = self.rt.embed(&st.tokens, &pos)?;
+        let mut prefill_recs = Vec::new();
+        let mut route_log: Vec<Vec<Vec<usize>>> = vec![vec![]; s];
+        for l in 0..self.dims.layers {
+            let (h, k, v) = self.rt.attn_prefill(l, &x, s)?;
+            // seed the per-seq cache
+            let hw = self.dims.heads * self.dims.head_dim;
+            st.k[l][..s * hw].copy_from_slice(&k);
+            st.v[l][..s * hw].copy_from_slice(&v);
+            let (probs, xn) = self.rt.gate(l, &h, s)?;
+            let routes = self.route(&probs, s);
+            for (i, r) in routes.iter().enumerate() {
+                route_log[i].push(r.iter().map(|(e, _)| *e).collect());
+            }
+            if record {
+                let mut counts = vec![0u32; n];
+                let mut scores = vec![0f32; n];
+                for r in &routes {
+                    for &(e, sc) in r {
+                        counts[e] += 1;
+                        scores[e] += sc;
+                    }
+                }
+                let (mut praw, mut pres) = (vec![0u32; n], vec![0u32; n]);
+                if l + 1 < self.dims.layers {
+                    let (raw, res, _) = self.predict_next(l, &h, s)?;
+                    for r in &raw {
+                        for &(e, _) in r {
+                            praw[e] += 1;
+                        }
+                    }
+                    for r in &res {
+                        for &(e, _) in r {
+                            pres[e] += 1;
+                        }
+                    }
+                }
+                prefill_recs.push(PrefillLayerRecord {
+                    counts,
+                    gate_scores: scores,
+                    pred_raw: praw,
+                    pred_res: pres,
+                });
+            }
+            x = self.moe_combine(l, &h, &xn, &routes, s)?;
+        }
+        st.pos = s;
+        st.last_hidden = x[(s - 1) * d..s * d].to_vec();
+        Ok((prefill_recs, route_log, x))
+    }
+
+    /// Run a live batch: prefill all prompts (equal lengths), then
+    /// `decode_steps` greedy decode steps. Optionally records a [`Trace`]
+    /// (requires calibration data for residual predictions).
+    pub fn run_batch(
+        &self,
+        prompts: &[Vec<i32>],
+        decode_steps: usize,
+        record_trace: bool,
+    ) -> Result<LiveRunOutput> {
+        if prompts.is_empty() {
+            bail!("empty batch");
+        }
+        let s0 = prompts[0].len();
+        if prompts.iter().any(|p| p.len() != s0) {
+            bail!("live batches require equal prompt lengths (serve layer buckets by length)");
+        }
+        if record_trace && self.calib.is_none() {
+            bail!("trace recording requires calibration data — run calibrate() first");
+        }
+        let d = self.dims.hidden;
+        let nb = prompts.len();
+        let cache_row = self.cache_row();
+        let mut states: Vec<SeqState> = prompts
+            .iter()
+            .map(|p| SeqState {
+                k: vec![vec![0f32; cache_row]; self.dims.layers],
+                v: vec![vec![0f32; cache_row]; self.dims.layers],
+                pos: 0,
+                last_hidden: vec![],
+                tokens: p.clone(),
+            })
+            .collect();
+
+        let mut out = LiveRunOutput::default();
+        let mut seq_traces: Vec<SeqTrace> = Vec::new();
+        // --- prefill (per sequence: the prefill artifacts are per-seq) ------
+        let mut next_tokens = Vec::with_capacity(nb);
+        for st in states.iter_mut() {
+            let (recs, route_log, x) = self.prefill_seq(st, record_trace)?;
+            let logits = self.rt.head(&st.last_hidden, 1)?;
+            let am = argmax(&logits);
+            next_tokens.push(am as i32);
+            out.prefill_routes.push(route_log);
+            out.prefill_last_logits.push(logits);
+            if record_trace {
+                seq_traces.push(SeqTrace { prompt_len: st.tokens.len(), prefill: recs, steps: vec![] });
+            }
+            let _ = x;
+        }
+
+        out.generated = vec![vec![]; nb];
+        out.decode_logits = vec![vec![]; nb];
+        out.decode_routes = vec![vec![]; nb];
+
+        // --- decode (batched) -------------------------------------------------
+        for _step in 0..decode_steps {
+            let pos: Vec<i32> = states.iter().map(|s| s.pos as i32).collect();
+            if states.iter().any(|s| s.pos + 1 > self.dims.max_seq) {
+                bail!("sequence exceeds max_seq {}", self.dims.max_seq);
+            }
+            let mut x = self.rt.embed(&next_tokens, &pos)?;
+            let mut step_recs: Vec<Vec<LayerStepRecord>> = vec![vec![]; nb];
+            let mut step_routes: Vec<Vec<Vec<usize>>> = vec![vec![]; nb];
+            for l in 0..self.dims.layers {
+                // batched caches
+                let mut kc = vec![0f32; nb * cache_row];
+                let mut vc = vec![0f32; nb * cache_row];
+                for (i, st) in states.iter().enumerate() {
+                    kc[i * cache_row..(i + 1) * cache_row].copy_from_slice(&st.k[l]);
+                    vc[i * cache_row..(i + 1) * cache_row].copy_from_slice(&st.v[l]);
+                }
+                let (h, kc2, vc2) = self.rt.attn_decode(l, &x, &kc, &vc, &pos, nb)?;
+                for (i, st) in states.iter_mut().enumerate() {
+                    st.k[l].copy_from_slice(&kc2[i * cache_row..(i + 1) * cache_row]);
+                    st.v[l].copy_from_slice(&vc2[i * cache_row..(i + 1) * cache_row]);
+                }
+                let (probs, xn) = self.rt.gate(l, &h, nb)?;
+                let routes = self.route(&probs, nb);
+                for (i, r) in routes.iter().enumerate() {
+                    step_routes[i].push(r.iter().map(|(e, _)| *e).collect());
+                }
+                // predictions (for traces): per-token predicted next routes
+                let pred = if record_trace && l + 1 < self.dims.layers {
+                    Some(self.predict_next(l, &h, nb)?)
+                } else {
+                    None
+                };
+                let x_next = self.moe_combine(l, &h, &xn, &routes, nb)?;
+                if record_trace {
+                    // cosine similarity vs true next gate input = x_next
+                    for i in 0..nb {
+                        let hi = &h[i * d..(i + 1) * d];
+                        let ti = &x_next[i * d..(i + 1) * d];
+                        let (praw, pres, cr, cs) = match &pred {
+                            Some((raw, res, h_res)) => (
+                                raw[i].iter().map(|(e, _)| *e as u16).collect(),
+                                res[i].iter().map(|(e, _)| *e as u16).collect(),
+                                cosine(hi, ti),
+                                cosine(&h_res[i * d..(i + 1) * d], ti),
+                            ),
+                            None => (vec![], vec![], 0.0, 0.0),
+                        };
+                        step_recs[i].push(LayerStepRecord {
+                            topk: routes[i].iter().map(|(e, _)| *e as u16).collect(),
+                            topk_scores: routes[i].iter().map(|(_, s)| *s).collect(),
+                            pred_raw: praw,
+                            pred_res: pres,
+                            cos_raw: cr,
+                            cos_res: cs,
+                        });
+                    }
+                }
+                x = x_next;
+            }
+            let logits = self.rt.head(&x, nb)?;
+            let v = self.dims.vocab;
+            for (i, st) in states.iter_mut().enumerate() {
+                let row = logits[i * v..(i + 1) * v].to_vec();
+                let am = argmax(&row) as i32;
+                out.generated[i].push(am);
+                out.decode_logits[i].push(row);
+                out.decode_routes[i].push(step_routes[i].clone());
+                st.pos += 1;
+                next_tokens[i] = am;
+                if record_trace {
+                    seq_traces[i].steps.push(step_recs[i].clone());
+                }
+            }
+        }
+        if record_trace {
+            out.trace = Some(Trace {
+                preset: self.rt.manifest().preset.clone(),
+                task: String::new(),
+                n_routed: self.dims.n_routed,
+                top_k: self.dims.top_k,
+                layers: self.dims.layers,
+                seqs: seq_traces,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Offline calibration (paper §4.2 Eq. 11 + EdgeMoE statistics): run
+    /// prefill over calibration sequences, averaging adjacent-layer gate
+    /// input differences and counting activations. Saves to
+    /// `artifacts/calib/<preset>.json` and installs on `self`.
+    pub fn calibrate(&mut self, seqs: &[Vec<i32>]) -> Result<CalibData> {
+        let d = self.dims.hidden;
+        let mut acc = CalibAccum::new(self.dims.layers, d, self.dims.n_routed);
+        for tokens in seqs {
+            let s = tokens.len();
+            let pos: Vec<i32> = (0..s as i32).collect();
+            let mut x = self.rt.embed(tokens, &pos)?;
+            let mut prev_gate_input: Option<Vec<f32>> = None;
+            for l in 0..self.dims.layers {
+                let (h, _k, _v) = self.rt.attn_prefill(l, &x, s)?;
+                if let Some(prev) = &prev_gate_input {
+                    for i in 0..s {
+                        acc.observe_pair(l - 1, &prev[i * d..(i + 1) * d], &h[i * d..(i + 1) * d]);
+                    }
+                }
+                let (probs, xn) = self.rt.gate(l, &h, s)?;
+                let routes = self.route(&probs, s);
+                for r in &routes {
+                    let ids: Vec<usize> = r.iter().map(|(e, _)| *e).collect();
+                    acc.observe_routing(l, &ids);
+                }
+                prev_gate_input = Some(h.clone());
+                x = self.moe_combine(l, &h, &xn, &routes, s)?;
+            }
+            acc.add_tokens(s);
+        }
+        let preset = self.rt.manifest().preset.clone();
+        let calib = acc.finish(&preset);
+        calib.save(&CalibData::path_for(&preset)).context("saving calibration")?;
+        self.calib = Some(calib.clone());
+        Ok(calib)
+    }
+}
+
+/// Index of the maximum element (ties → lower index, matching numpy argmax).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Convert a recorded live batch step into the simulator's [`BatchStep`]s —
+/// used when running live inference with timing (the engine records the
+/// trace, then the caller replays it through a `StepSimulator`, which is
+/// bit-identical to having timed it inline).
+pub fn trace_to_batch_steps(trace: &Trace, seq_ids: &[usize]) -> (BatchStep, Vec<BatchStep>) {
+    let prefill = trace.compose_prefill(seq_ids);
+    let steps = (0..trace.min_steps()).map(|s| trace.compose_decode(seq_ids, s)).collect();
+    (prefill, steps)
+}
+
+/// Mean of a slice of f32 (helper for experiments).
+pub fn mean_f32(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_matches_jax_semantics() {
+        let probs = [0.1, 0.5, 0.5, 0.3];
+        let r = top_k(&probs, 2);
+        assert_eq!(r[0].0, 1, "tie broken by lower index");
+        assert_eq!(r[1].0, 2);
+    }
+
+    #[test]
+    fn argmax_ties_low_index() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn cosine_basic() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`assignment`] — CPU/GPU expert placement (§4.1): the 0-1 program, the
+//!   Greedy Assignment heuristic (Alg. 1), exact branch-and-bound, beam
+//!   search, and the baselines' static policies.
+//! * [`prefetch`] — next-layer high-workload expert prediction (§4.2):
+//!   residual-based plus the compared feature/statistical/random predictors.
+//! * [`cache`] — GPU expert cache replacement (§4.3): Workload-Aware
+//!   (Alg. 2), LRU, score-based, pinned.
+//! * [`simrun`] — the per-layer orchestration loop over the simulated
+//!   platform (assign → parallel CPU/GPU execution → prefetch stream →
+//!   cache update), shared by live inference and trace replay.
+//! * [`engine`] — the live inference engine: real PJRT numerics + the same
+//!   orchestration for timing; also produces traces and calibration data.
+//! * [`frameworks`] — the six compared systems as policy bundles.
+
+pub mod assignment;
+pub mod cache;
+pub mod engine;
+pub mod frameworks;
+pub mod prefetch;
+pub mod simrun;
+
+pub use assignment::{AssignCtx, Assigner, Assignment};
+pub use cache::ExpertCache;
+pub use frameworks::Framework;
+pub use prefetch::Prefetcher;
+pub use simrun::{PolicyBundle, StepSimulator};

@@ -1,0 +1,72 @@
+//! Next-layer high-workload expert prediction (paper §4.2).
+//!
+//! A predictor ranks the next layer's experts by *predicted workload*; the
+//! top `prefetch_size` non-resident experts are transferred on the copy
+//! stream, overlapping the current layer's compute. Implementations:
+//!
+//! * [`ResidualPrefetcher`] — DALI: gate_{l+1}(h_l + res_vec_l) (Eq. 10),
+//!   counting predicted top-k hits per token;
+//! * [`FeaturePrefetcher`] — HybriMoE: gate_{l+1}(h_l) on raw features;
+//! * [`StatisticalPrefetcher`] — EdgeMoE: calibration-set activation
+//!   frequency (input-independent);
+//! * [`RandomPrefetcher`] and [`NoPrefetcher`].
+//!
+//! The expensive part (the extra gate execution) happens in the engine /
+//! trace: `pred_raw` and `pred_res` arrive as per-token predicted top-k
+//! counts. Predictors that need a gating pass report it via
+//! [`Prefetcher::needs_gate_pass`] so the simulator charges the GPU time
+//! and stream-switch overhead the paper measures (§6.3-4).
+
+mod simple;
+
+pub use simple::{
+    FeaturePrefetcher, NoPrefetcher, OraclePrefetcher, RandomPrefetcher, ResidualPrefetcher,
+    StatisticalPrefetcher,
+};
+
+use crate::util::DetRng;
+
+/// Everything a predictor may look at when layer `layer` finishes.
+pub struct PrefetchCtx<'a> {
+    /// Predicted next-layer workload counts from raw features (HybriMoE).
+    pub pred_raw: &'a [u32],
+    /// Predicted next-layer workload counts from residual-corrected features.
+    pub pred_res: &'a [u32],
+    /// This layer's true workloads (some heuristics reuse them).
+    pub cur_workloads: &'a [u32],
+    /// True next-layer workloads — for the oracle upper bound only.
+    pub true_next: Option<&'a [u32]>,
+    /// Calibration activation frequency of the *next* layer (EdgeMoE).
+    pub calib_freq_next: &'a [f64],
+    pub rng: &'a mut DetRng,
+}
+
+/// Ranks next-layer experts by predicted workload (higher = fetch first).
+pub trait Prefetcher: Send {
+    fn name(&self) -> &'static str;
+    /// Whether prediction requires an extra gating pass on the GPU.
+    fn needs_gate_pass(&self) -> bool;
+    /// Predicted workload score per next-layer expert.
+    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64>;
+}
+
+/// Top-`n` experts by predicted score (ties broken by lower index).
+pub fn top_n(scores: &[f64], n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    idx.truncate(n);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_n_orders_and_truncates() {
+        let s = vec![0.1, 0.9, 0.5, 0.9];
+        assert_eq!(top_n(&s, 2), vec![1, 3]);
+        assert_eq!(top_n(&s, 10), vec![1, 3, 2, 0]);
+        assert_eq!(top_n(&s, 0), Vec::<usize>::new());
+    }
+}

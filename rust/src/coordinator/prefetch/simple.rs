@@ -1,0 +1,186 @@
+//! The five compared predictors.
+
+use super::{PrefetchCtx, Prefetcher};
+
+/// DALI §4.2: residual-corrected feature prediction. The heavy lifting
+/// (gate_{l+1}(h_l + res_vec_l), Eq. 10) was done by the engine with the
+/// real gate artifact; `pred_res` carries per-token predicted top-k counts.
+pub struct ResidualPrefetcher;
+
+impl Prefetcher for ResidualPrefetcher {
+    fn name(&self) -> &'static str {
+        "residual"
+    }
+
+    fn needs_gate_pass(&self) -> bool {
+        true
+    }
+
+    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
+        ctx.pred_res.iter().map(|&c| c as f64).collect()
+    }
+}
+
+/// HybriMoE-style raw-feature prediction: gate_{l+1}(h_l).
+pub struct FeaturePrefetcher;
+
+impl Prefetcher for FeaturePrefetcher {
+    fn name(&self) -> &'static str {
+        "feature"
+    }
+
+    fn needs_gate_pass(&self) -> bool {
+        true
+    }
+
+    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
+        ctx.pred_raw.iter().map(|&c| c as f64).collect()
+    }
+}
+
+/// EdgeMoE-style statistics: input-independent calibration frequency.
+pub struct StatisticalPrefetcher;
+
+impl Prefetcher for StatisticalPrefetcher {
+    fn name(&self) -> &'static str {
+        "statistical"
+    }
+
+    fn needs_gate_pass(&self) -> bool {
+        false
+    }
+
+    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
+        ctx.calib_freq_next.to_vec()
+    }
+}
+
+/// Uniform random ranking (paper Fig. 16a's "Random").
+pub struct RandomPrefetcher;
+
+impl Prefetcher for RandomPrefetcher {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn needs_gate_pass(&self) -> bool {
+        false
+    }
+
+    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
+        (0..ctx.pred_raw.len()).map(|_| ctx.rng.f64()).collect()
+    }
+}
+
+/// Perfect prediction — upper bound for ablations (not in the paper's
+/// comparison set, used by our sensitivity analyses).
+pub struct OraclePrefetcher;
+
+impl Prefetcher for OraclePrefetcher {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn needs_gate_pass(&self) -> bool {
+        false
+    }
+
+    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
+        match ctx.true_next {
+            Some(t) => t.iter().map(|&c| c as f64).collect(),
+            None => vec![0.0; ctx.pred_raw.len()],
+        }
+    }
+}
+
+/// No prefetching.
+pub struct NoPrefetcher;
+
+impl Prefetcher for NoPrefetcher {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn needs_gate_pass(&self) -> bool {
+        false
+    }
+
+    fn predict(&mut self, _ctx: &mut PrefetchCtx) -> Vec<f64> {
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::top_n;
+    use super::*;
+    use crate::util::DetRng;
+
+    fn ctx<'a>(
+        pred_raw: &'a [u32],
+        pred_res: &'a [u32],
+        true_next: Option<&'a [u32]>,
+        freq: &'a [f64],
+        rng: &'a mut DetRng,
+    ) -> PrefetchCtx<'a> {
+        PrefetchCtx {
+            pred_raw,
+            pred_res,
+            cur_workloads: pred_raw,
+            true_next,
+            calib_freq_next: freq,
+            rng,
+        }
+    }
+
+    #[test]
+    fn residual_uses_res_counts() {
+        let mut rng = DetRng::new(0);
+        let raw = [5, 0, 0, 0];
+        let res = [0, 0, 7, 0];
+        let freq = [0.0; 4];
+        let mut c = ctx(&raw, &res, None, &freq, &mut rng);
+        assert_eq!(top_n(&ResidualPrefetcher.predict(&mut c), 1), vec![2]);
+        assert_eq!(top_n(&FeaturePrefetcher.predict(&mut c), 1), vec![0]);
+    }
+
+    #[test]
+    fn statistical_ignores_input() {
+        let mut rng = DetRng::new(0);
+        let raw = [9, 9, 9, 9];
+        let freq = [0.1, 0.2, 0.9, 0.3];
+        let mut c = ctx(&raw, &raw, None, &freq, &mut rng);
+        assert_eq!(top_n(&StatisticalPrefetcher.predict(&mut c), 1), vec![2]);
+        assert!(!StatisticalPrefetcher.needs_gate_pass());
+    }
+
+    #[test]
+    fn oracle_matches_truth() {
+        let mut rng = DetRng::new(0);
+        let raw = [1, 0, 0, 0];
+        let truth = [0, 0, 0, 8];
+        let freq = [0.0; 4];
+        let mut c = ctx(&raw, &raw, Some(&truth), &freq, &mut rng);
+        assert_eq!(top_n(&OraclePrefetcher.predict(&mut c), 1), vec![3]);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let raw = [0u32; 8];
+        let freq = [0.0; 8];
+        let mut r1 = DetRng::new(4);
+        let mut r2 = DetRng::new(4);
+        let a = RandomPrefetcher.predict(&mut ctx(&raw, &raw, None, &freq, &mut r1));
+        let b = RandomPrefetcher.predict(&mut ctx(&raw, &raw, None, &freq, &mut r2));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn none_predicts_nothing() {
+        let mut rng = DetRng::new(0);
+        let raw = [1u32; 4];
+        let freq = [0.0; 4];
+        let mut c = ctx(&raw, &raw, None, &freq, &mut rng);
+        assert!(NoPrefetcher.predict(&mut c).is_empty());
+    }
+}

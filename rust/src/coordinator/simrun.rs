@@ -1,0 +1,615 @@
+//! Per-layer orchestration over the simulated heterogeneous platform —
+//! the paper's Fig. 9 runtime loop:
+//!
+//! 1. gate → true expert workloads;
+//! 2. **assignment** (Greedy/optimal/static/...) with solve wall-time
+//!    charged into virtual time;
+//! 3. parallel execution: CPU side `Σ t_cpu(w_i)`, GPU side on the
+//!    copy/compute pipeline (demand fetches for non-resident experts);
+//! 4. **prefetch** stream for layer l+1 (prediction gate pass + transfers);
+//! 5. **cache** observation + window replacement.
+//!
+//! The same loop serves live inference (the engine computes real
+//! activations alongside) and trace replay (policy sweeps without PJRT) —
+//! both produce identical virtual-time metrics for identical routing.
+
+use std::collections::HashMap;
+
+use crate::coordinator::assignment::{AssignCtx, Assigner, Assignment};
+use crate::coordinator::cache::ExpertCache;
+use crate::coordinator::prefetch::{top_n, PrefetchCtx, Prefetcher};
+use crate::hw::{CostModel, GpuPipeline, Ns, TransferKind};
+use crate::metrics::RunMetrics;
+use crate::util::DetRng;
+use crate::workload::trace::BatchStep;
+use crate::workload::Trace;
+
+/// A framework's policy bundle: assignment × prefetch × cache + execution
+/// quirks. The six compared systems are bundles of these (frameworks.rs).
+pub struct PolicyBundle {
+    pub assigner: Box<dyn Assigner>,
+    pub prefetcher: Box<dyn Prefetcher>,
+    pub cache: Box<dyn ExpertCache>,
+    /// Experts to prefetch per layer (paper's "prefetch size"; 0 = off).
+    pub prefetch_size: usize,
+    /// CPU GEMM efficiency multiplier (llama.cpp's slower CPU kernels < 1).
+    pub cpu_eff: f64,
+    /// Extra per-layer overhead (MoE-Lightning's stream-switch cost etc.).
+    pub layer_overhead_ns: Ns,
+    /// Eq. 9: staging slots for non-resident experts per layer.
+    pub gpu_free_slots: usize,
+}
+
+/// Which inference phase a step belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// The virtual-time step simulator.
+pub struct StepSimulator<'a> {
+    cost: &'a CostModel,
+    pub policy: PolicyBundle,
+    /// Calibration activation frequencies per layer (EdgeMoE predictor).
+    calib_freq: Vec<Vec<f64>>,
+    gpu: GpuPipeline,
+    now: Ns,
+    pub metrics: RunMetrics,
+    rng: DetRng,
+    /// In-flight / arrived prefetches: (layer, expert) → copy-arrival time.
+    prefetched: HashMap<(usize, usize), Ns>,
+    decode_steps_done: usize,
+    layers: usize,
+    n_routed: usize,
+    n_shared: usize,
+    /// Last assignment per layer (exposed for breakdown experiments).
+    pub last_assignments: Vec<Option<Assignment>>,
+}
+
+impl<'a> StepSimulator<'a> {
+    pub fn new(
+        cost: &'a CostModel,
+        policy: PolicyBundle,
+        calib_freq: Vec<Vec<f64>>,
+        layers: usize,
+        n_routed: usize,
+        n_shared: usize,
+        seed: u64,
+    ) -> Self {
+        StepSimulator {
+            cost,
+            policy,
+            calib_freq,
+            gpu: GpuPipeline::new(),
+            now: 0,
+            metrics: RunMetrics::default(),
+            rng: DetRng::new(seed ^ 0xda11),
+            prefetched: HashMap::new(),
+            decode_steps_done: 0,
+            layers,
+            n_routed,
+            n_shared,
+            last_assignments: vec![None; layers],
+        }
+    }
+
+    pub fn now(&self) -> Ns {
+        self.now
+    }
+
+    /// Reset metrics but keep cache/prefetch state — used to measure the
+    /// decode phase separately after a warm-up prefill, as the paper does.
+    pub fn reset_metrics(&mut self) {
+        let base = self.now;
+        self.now = 0;
+        self.gpu = GpuPipeline::new();
+        // re-base in-flight prefetch arrivals
+        for v in self.prefetched.values_mut() {
+            *v = v.saturating_sub(base);
+        }
+        self.metrics = RunMetrics::default();
+    }
+
+    /// Advance one batch step (all MoE layers + attention + head).
+    ///
+    /// `kv_len` — average KV length during this step (attention cost).
+    pub fn run_step(&mut self, step: &BatchStep, kv_len: usize, phase: Phase) {
+        debug_assert_eq!(step.layers.len(), self.layers);
+        if step.tokens == 0 {
+            return;
+        }
+        let trans = self.cost.trans_time();
+        let bytes = self.cost.expert_bytes() as u64;
+        for l in 0..self.layers {
+            let data = &step.layers[l];
+            // --- attention + fixed overheads -------------------------------
+            let attn = self.cost.attn_time(step.tokens, kv_len)
+                + self.cost.layer_fixed()
+                + self.policy.layer_overhead_ns;
+            self.now += attn;
+            self.metrics.attn_ns += attn;
+            // --- gate -------------------------------------------------------
+            let gate = self.cost.gate_time(step.tokens);
+            self.now += gate;
+            self.metrics.gate_ns += gate;
+
+            // --- residency: cache ∪ prefetched ------------------------------
+            // A prefetched expert counts as resident for assignment even if
+            // its transfer is still in flight — the copy is already paid for
+            // and overlapped; execution below waits for the actual arrival.
+            let cache_resident = self.policy.cache.resident_mask(l);
+            let mut resident = cache_resident.clone();
+            let mut prefetch_arrival: Vec<Option<Ns>> = vec![None; self.n_routed];
+            for e in 0..self.n_routed {
+                if let Some(&arr) = self.prefetched.get(&(l, e)) {
+                    resident[e] = true;
+                    prefetch_arrival[e] = Some(arr);
+                }
+            }
+
+            // Wrong prefetches are not free: their weights occupy GPU
+            // staging buffers until the layer retires, shrinking the Eq. 9
+            // budget for demand fetches (the paper's "costly inaccurate
+            // prefetches").
+            let wasted_staging = (0..self.n_routed)
+                .filter(|&e| prefetch_arrival[e].is_some() && data.workloads[e] == 0)
+                .count();
+
+            // --- assignment (solve wall time charged 1:1) -------------------
+            let ctx = AssignCtx {
+                workloads: &data.workloads,
+                resident: &resident,
+                cost: self.cost,
+                gpu_free_slots: self.policy.gpu_free_slots.saturating_sub(wasted_staging),
+                layer: l,
+                layers: self.layers,
+            };
+            let wall = std::time::Instant::now();
+            let assignment = self.policy.assigner.assign(&ctx);
+            let solve = wall.elapsed().as_nanos() as Ns;
+            self.now += solve;
+            self.metrics.sched_ns += solve;
+
+            // --- cache observation ------------------------------------------
+            self.policy.cache.observe(l, &data.workloads, &data.gate_scores);
+
+            // --- CPU side: Eq. 4 --------------------------------------------
+            let mut cpu_total: Ns = 0;
+            for e in 0..self.n_routed {
+                if assignment.to_cpu[e] {
+                    let t = self.cost.t_cpu(data.workloads[e] as usize);
+                    cpu_total += (t as f64 / self.policy.cpu_eff) as Ns;
+                }
+            }
+            let cpu_end = self.now + cpu_total;
+            self.metrics.moe_cpu_busy_ns += cpu_total;
+
+            // --- GPU side: copy/compute pipeline ----------------------------
+            let gpu_busy0 = self.gpu.compute_busy;
+            let pcie_busy0 = self.gpu.copy_busy;
+            // resident experts first (no copy), then by descending workload
+            let mut gpu_experts: Vec<usize> =
+                (0..self.n_routed).filter(|&e| assignment.to_gpu[e]).collect();
+            gpu_experts.sort_by_key(|&e| {
+                (if resident[e] { 0 } else { 1 }, std::cmp::Reverse(data.workloads[e]))
+            });
+            for &e in &gpu_experts {
+                let w = data.workloads[e] as usize;
+                let compute = self.cost.t_gpu_compute(w);
+                self.metrics.cache_lookups += 1;
+                if cache_resident[e] {
+                    self.metrics.cache_hits += 1;
+                    self.gpu.schedule_expert(self.now, 0, 0, compute);
+                    self.policy.cache.on_gpu_use(l, e, false);
+                } else if let Some(arr) = prefetch_arrival[e] {
+                    // prefetched: wait for arrival if still in flight,
+                    // no new transfer
+                    self.gpu.schedule_expert(arr.max(self.now), 0, 0, compute);
+                } else {
+                    self.gpu.schedule_expert(self.now, trans, bytes, compute);
+                    self.policy.cache.on_gpu_use(l, e, true);
+                }
+            }
+            // shared experts always run on GPU on the full token batch
+            for _s in 0..self.n_shared {
+                let compute = self.cost.t_gpu_compute(step.tokens);
+                self.gpu.schedule_expert(self.now, 0, 0, compute);
+            }
+
+            // --- prefetch accounting for this layer's arrivals --------------
+            let keys: Vec<(usize, usize)> =
+                self.prefetched.keys().filter(|k| k.0 == l).copied().collect();
+            for k in keys {
+                self.prefetched.remove(&k);
+                if assignment.to_gpu[k.1] && data.workloads[k.1] > 0 {
+                    self.metrics.prefetch_useful += 1;
+                }
+            }
+
+            // The layer barrier waits only for this layer's expert kernels;
+            // the prefetch work below runs on a separate CUDA work stream
+            // (paper Fig. 9) and overlaps the *next* layer.
+            let gpu_end_experts = self.gpu.compute_free_at().max(self.now);
+
+            // --- issue prefetches for layer l+1 ------------------------------
+            if l + 1 < self.layers && self.policy.prefetch_size > 0 {
+                let mut ready = self.now;
+                if self.policy.prefetcher.needs_gate_pass() {
+                    // prediction gating runs on the GPU work stream: costs a
+                    // gate pass + a stream switch (paper §6.3-4). It contends
+                    // for SMs (scheduled on the compute stream, delaying the
+                    // *next* layer's kernels) but is not part of this layer's
+                    // barrier.
+                    let pred_cost = self.cost.gate_time(step.tokens) + self.cost.layer_fixed();
+                    let out = self.gpu.schedule_expert(self.now, 0, 0, pred_cost);
+                    self.metrics.prefetch_gate_ns += pred_cost;
+                    ready = out.compute_end;
+                }
+                let true_next = step.layers.get(l + 1).map(|d| d.workloads.as_slice());
+                let scores = self.policy.prefetcher.predict(&mut PrefetchCtx {
+                    pred_raw: &data.pred_raw,
+                    pred_res: &data.pred_res,
+                    cur_workloads: &data.workloads,
+                    true_next,
+                    calib_freq_next: &self.calib_freq[l + 1],
+                    rng: &mut self.rng,
+                });
+                let mut issued = 0;
+                for e in top_n(&scores, self.n_routed) {
+                    if issued == self.policy.prefetch_size {
+                        break;
+                    }
+                    if scores[e] <= 0.0 {
+                        break; // nothing predicted there
+                    }
+                    // Speculative transfers are issued only while they can
+                    // still plausibly arrive in time to matter: cap the
+                    // low-priority lane's backlog at a few transfers.
+                    if self.gpu.spec_free_at() > ready + 4 * trans {
+                        break;
+                    }
+                    if self.policy.cache.is_resident(l + 1, e)
+                        || self.prefetched.contains_key(&(l + 1, e))
+                    {
+                        continue;
+                    }
+                    let arr =
+                        self.gpu.schedule_transfer(ready, trans, bytes, TransferKind::Prefetch);
+                    self.prefetched.insert((l + 1, e), arr);
+                    self.metrics.prefetch_issued += 1;
+                    issued += 1;
+                }
+            }
+
+            // --- layer barrier: CPU and GPU compute must finish --------------
+            let gpu_end = gpu_end_experts;
+            let end = cpu_end.max(gpu_end);
+            self.metrics.moe_ns += end - self.now;
+            self.metrics.moe_gpu_busy_ns += self.gpu.compute_busy - gpu_busy0;
+            self.now = end;
+
+            // --- cache window replacement (decode only) ----------------------
+            if phase == Phase::Decode {
+                for swap in self.policy.cache.window_tick(l, self.decode_steps_done + 1) {
+                    let _ = swap;
+                    self.gpu.schedule_transfer(self.now, trans, bytes, TransferKind::CacheUpdate);
+                }
+            }
+            let _ = pcie_busy0;
+            self.last_assignments[l] = Some(assignment);
+        }
+        // --- LM head ----------------------------------------------------------
+        let head = self.cost.head_time(step.tokens);
+        self.now += head;
+        self.metrics.attn_ns += head;
+
+        match phase {
+            Phase::Prefill => self.metrics.tokens_in += step.tokens as u64,
+            Phase::Decode => {
+                self.metrics.tokens_out += step.tokens as u64;
+                self.decode_steps_done += 1;
+            }
+        }
+        self.metrics.layer_steps += self.layers as u64;
+    }
+
+    /// Fold pipeline counters and close out.
+    pub fn finish(mut self) -> RunMetrics {
+        self.fold_pipeline();
+        self.metrics
+    }
+
+    /// Fold pipeline counters without consuming (for phase-split metrics).
+    pub fn fold_pipeline(&mut self) {
+        self.metrics.total_ns = self.now;
+        self.metrics.stall_ns = self.gpu.stall;
+        // Fig. 5 metric: transfer time on the demand (critical) path.
+        self.metrics.pcie_busy_ns = self.gpu.copy_busy_demand;
+        self.metrics.pcie_demand_bytes = self.gpu.bytes_demand;
+        self.metrics.pcie_prefetch_bytes = self.gpu.bytes_prefetch;
+        self.metrics.pcie_cache_bytes = self.gpu.bytes_cache;
+    }
+}
+
+/// Replay a composed decode run over a trace: warm-up prefill (state only),
+/// then `steps` decode steps with metrics. Returns the decode-phase metrics.
+pub fn replay_decode(
+    trace: &Trace,
+    seq_ids: &[usize],
+    steps: usize,
+    cost: &CostModel,
+    policy: PolicyBundle,
+    calib_freq: Vec<Vec<f64>>,
+    n_shared: usize,
+    seed: u64,
+) -> RunMetrics {
+    let mut sim = StepSimulator::new(
+        cost,
+        policy,
+        calib_freq,
+        trace.layers,
+        trace.n_routed,
+        n_shared,
+        seed,
+    );
+    let prompt_len = trace.seqs[seq_ids[0] % trace.seqs.len()].prompt_len;
+    let prefill = trace.compose_prefill(seq_ids);
+    sim.run_step(&prefill, prompt_len / 2, Phase::Prefill);
+    sim.reset_metrics();
+    let max_steps = steps.min(trace.min_steps());
+    for s in 0..max_steps {
+        let step = trace.compose_decode(seq_ids, s);
+        sim.run_step(&step, prompt_len + s, Phase::Decode);
+    }
+    sim.finish()
+}
+
+/// Replay the prefill phase only.
+pub fn replay_prefill(
+    trace: &Trace,
+    seq_ids: &[usize],
+    cost: &CostModel,
+    policy: PolicyBundle,
+    calib_freq: Vec<Vec<f64>>,
+    n_shared: usize,
+    seed: u64,
+) -> RunMetrics {
+    let mut sim = StepSimulator::new(
+        cost,
+        policy,
+        calib_freq,
+        trace.layers,
+        trace.n_routed,
+        n_shared,
+        seed,
+    );
+    let prompt_len = trace.seqs[seq_ids[0] % trace.seqs.len()].prompt_len;
+    let prefill = trace.compose_prefill(seq_ids);
+    sim.run_step(&prefill, prompt_len / 2, Phase::Prefill);
+    let mut m = sim.finish();
+    // prefill "speed" counts prompt tokens processed
+    m.tokens_out = m.tokens_in;
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Presets;
+    use crate::coordinator::assignment::{AllCpuAssigner, GreedyAssigner};
+    use crate::coordinator::cache::{NoCache, WorkloadAwareCache};
+    use crate::coordinator::prefetch::{NoPrefetcher, ResidualPrefetcher};
+    use crate::workload::trace::{LayerStepData, Trace};
+
+    fn cost() -> CostModel {
+        let p = Presets::load_default().unwrap();
+        CostModel::new(p.model("mixtral-sim").unwrap(), p.hw("local-pc").unwrap())
+    }
+
+    fn mk_step(layers: usize, n: usize, w: &[u32]) -> BatchStep {
+        BatchStep {
+            tokens: w.iter().sum::<u32>() as usize / 2,
+            layers: (0..layers)
+                .map(|_| LayerStepData {
+                    workloads: w.to_vec(),
+                    gate_scores: w.iter().map(|&x| x as f32 * 0.4).collect(),
+                    pred_raw: w.to_vec(),
+                    pred_res: w.to_vec(),
+                })
+                .collect(),
+        }
+        .tap(|s| debug_assert_eq!(s.layers[0].workloads.len(), n))
+    }
+
+    trait Tap: Sized {
+        fn tap(self, f: impl FnOnce(&Self)) -> Self {
+            f(&self);
+            self
+        }
+    }
+    impl<T> Tap for T {}
+
+    fn bundle(prefetch: bool, cache: bool) -> PolicyBundle {
+        PolicyBundle {
+            assigner: Box::new(GreedyAssigner::new()),
+            prefetcher: if prefetch {
+                Box::new(ResidualPrefetcher)
+            } else {
+                Box::new(NoPrefetcher)
+            },
+            cache: if cache {
+                Box::new(WorkloadAwareCache::new(4, 8, 2, 4, 1, 1))
+            } else {
+                Box::new(NoCache::new(4, 8))
+            },
+            prefetch_size: if prefetch { 1 } else { 0 },
+            cpu_eff: 1.0,
+            layer_overhead_ns: 0,
+            gpu_free_slots: 8,
+        }
+    }
+
+    #[test]
+    fn time_advances_and_tokens_counted() {
+        let c = cost();
+        let mut sim = StepSimulator::new(&c, bundle(false, false), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+        let step = mk_step(4, 8, &[2, 0, 1, 3, 0, 0, 1, 1]);
+        sim.run_step(&step, 16, Phase::Decode);
+        let m = sim.finish();
+        assert!(m.total_ns > 0);
+        assert_eq!(m.tokens_out, 4);
+        assert_eq!(m.layer_steps, 4);
+        assert!(m.moe_ns > 0);
+        assert!(m.sched_ns > 0);
+    }
+
+    #[test]
+    fn empty_step_is_noop() {
+        let c = cost();
+        let mut sim = StepSimulator::new(&c, bundle(false, false), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+        sim.run_step(&BatchStep { tokens: 0, layers: vec![] }, 4, Phase::Decode);
+        assert_eq!(sim.finish().total_ns, 0);
+    }
+
+    #[test]
+    fn cache_reduces_demand_traffic() {
+        let c = cost();
+        let w = [8u32, 8, 8, 8, 0, 0, 0, 0];
+        let run = |cache| {
+            let mut sim =
+                StepSimulator::new(&c, bundle(false, cache), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+            for _ in 0..16 {
+                sim.run_step(&mk_step(4, 8, &w), 16, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let without = run(false);
+        let with = run(true);
+        assert!(with.cache_hits > 0, "stable hot set must produce hits");
+        assert!(
+            with.pcie_demand_bytes < without.pcie_demand_bytes,
+            "cache must cut demand transfers: {} vs {}",
+            with.pcie_demand_bytes,
+            without.pcie_demand_bytes
+        );
+        assert!(with.total_ns < without.total_ns);
+    }
+
+    #[test]
+    fn perfect_prefetch_counts_useful() {
+        let c = cost();
+        // workloads identical across layers, so pred == truth → useful
+        let mut sim = StepSimulator::new(&c, bundle(true, false), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+        for _ in 0..8 {
+            sim.run_step(&mk_step(4, 8, &[16, 0, 0, 0, 0, 0, 0, 0]), 16, Phase::Decode);
+        }
+        let m = sim.finish();
+        assert!(m.prefetch_issued > 0);
+        assert!(m.prefetch_useful > 0);
+        assert!(m.prefetch_gate_ns > 0, "residual prediction costs gate passes");
+        assert!(m.pcie_prefetch_bytes > 0);
+    }
+
+    #[test]
+    fn all_cpu_never_touches_pcie() {
+        let c = cost();
+        let policy = PolicyBundle {
+            assigner: Box::new(AllCpuAssigner::new()),
+            prefetcher: Box::new(NoPrefetcher),
+            cache: Box::new(NoCache::new(4, 8)),
+            prefetch_size: 0,
+            cpu_eff: 1.0,
+            layer_overhead_ns: 0,
+            gpu_free_slots: 8,
+        };
+        let mut sim = StepSimulator::new(&c, policy, vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+        for _ in 0..4 {
+            sim.run_step(&mk_step(4, 8, &[4, 4, 4, 4, 0, 0, 0, 0]), 8, Phase::Decode);
+        }
+        let m = sim.finish();
+        assert_eq!(m.pcie_demand_bytes, 0);
+        assert_eq!(m.cache_lookups, 0);
+        assert!(m.moe_cpu_busy_ns > 0);
+        assert_eq!(m.moe_gpu_busy_ns, 0);
+    }
+
+    #[test]
+    fn greedy_beats_all_cpu_on_heavy_workloads() {
+        let c = cost();
+        let w = [32u32, 32, 32, 32, 32, 32, 32, 32];
+        let run = |all_cpu: bool| {
+            let policy = PolicyBundle {
+                assigner: if all_cpu {
+                    Box::new(AllCpuAssigner::new()) as Box<dyn Assigner>
+                } else {
+                    Box::new(GreedyAssigner::new())
+                },
+                prefetcher: Box::new(NoPrefetcher),
+                cache: Box::new(NoCache::new(4, 8)),
+                prefetch_size: 0,
+                cpu_eff: 1.0,
+                layer_overhead_ns: 0,
+                gpu_free_slots: 8,
+            };
+            let mut sim = StepSimulator::new(&c, policy, vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+            for _ in 0..4 {
+                sim.run_step(&mk_step(4, 8, &w), 32, Phase::Decode);
+            }
+            sim.finish().total_ns
+        };
+        assert!(run(false) < run(true), "hybrid must beat CPU-only at heavy load");
+    }
+
+    fn tiny_trace(layers: usize, n: usize, steps: usize) -> Trace {
+        use crate::workload::trace::{LayerStepRecord, PrefillLayerRecord, SeqTrace};
+        let rec = LayerStepRecord {
+            topk: vec![0, 1],
+            topk_scores: vec![0.6, 0.3],
+            pred_raw: vec![0, 1],
+            pred_res: vec![0, 1],
+            cos_raw: 0.8,
+            cos_res: 0.9,
+        };
+        let pre = PrefillLayerRecord {
+            counts: {
+                let mut v = vec![0; n];
+                v[0] = 4;
+                v[1] = 4;
+                v
+            },
+            gate_scores: vec![0.5; n],
+            pred_raw: vec![1; n],
+            pred_res: vec![1; n],
+        };
+        Trace {
+            preset: "t".into(),
+            task: "t".into(),
+            n_routed: n,
+            top_k: 2,
+            layers,
+            seqs: vec![SeqTrace {
+                prompt_len: 8,
+                prefill: vec![pre; layers],
+                steps: vec![vec![rec; layers]; steps],
+            }],
+        }
+    }
+
+    #[test]
+    fn replay_decode_produces_speed() {
+        let c = cost();
+        let t = tiny_trace(4, 8, 16);
+        let m = replay_decode(&t, &[0, 0, 0, 0], 16, &c, bundle(false, true), vec![vec![0.0; 8]; 4], 0, 1);
+        assert_eq!(m.tokens_out, 64);
+        assert!(m.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn replay_prefill_counts_prompt_tokens() {
+        let c = cost();
+        let t = tiny_trace(4, 8, 2);
+        let m = replay_prefill(&t, &[0, 0], &c, bundle(false, false), vec![vec![0.0; 8]; 4], 0, 1);
+        assert_eq!(m.tokens_out, 16);
+    }
+}

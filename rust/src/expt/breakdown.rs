@@ -1,0 +1,345 @@
+//! Breakdown analyses (paper §6.3): Figs. 14-17, 19 and Table 4.
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::coordinator::assignment::{
+    AllCpuAssigner, EnumerateAssigner, GreedyAssigner, StaticThresholdAssigner,
+};
+use crate::coordinator::cache::{LruCache, NoCache, ScoreCache, WorkloadAwareCache};
+use crate::coordinator::prefetch::{
+    FeaturePrefetcher, NoPrefetcher, RandomPrefetcher, ResidualPrefetcher,
+};
+use crate::util::Table;
+
+/// Fig. 14: assignment strategies in isolation (no prefetch, no cache).
+pub fn fig14(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from(
+        "## Fig. 14 — assignment-only comparison (no prefetch / no cache)\n\n",
+    );
+    let mut hybri_speedups = vec![];
+    let mut dali_speedups = vec![];
+    for preset in ["deepseek-sim", "mixtral-sim"] {
+        let dims = ctx.model(preset)?.sim.clone();
+        let trace = ctx.trace_c4(preset)?;
+        let mut t = Table::new(vec!["batch", "naive (all-CPU)", "HybriMoE static", "DALI greedy"]);
+        for &b in &BATCHES {
+            let mk = |which: &str| {
+                let assigner: Box<dyn crate::coordinator::assignment::Assigner> = match which {
+                    "naive" => Box::new(AllCpuAssigner::new()),
+                    "static" => Box::new(StaticThresholdAssigner::new()),
+                    _ => Box::new(GreedyAssigner::new()),
+                };
+                ctx.bundle_parts(
+                    &dims,
+                    assigner,
+                    Box::new(NoPrefetcher),
+                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
+                    0,
+                )
+            };
+            let naive = ctx.decode_with(preset, mk("naive"), &trace, b, 32)?.tokens_per_s();
+            let stat = ctx.decode_with(preset, mk("static"), &trace, b, 32)?.tokens_per_s();
+            let greedy = ctx.decode_with(preset, mk("greedy"), &trace, b, 32)?.tokens_per_s();
+            hybri_speedups.push(stat / naive.max(1e-9));
+            dali_speedups.push(greedy / naive.max(1e-9));
+            t.row(vec![
+                format!("BS{b}"),
+                format!("{naive:.2}"),
+                format!("{stat:.2} ({})", times(stat / naive)),
+                format!("{greedy:.2} ({})", times(greedy / naive)),
+            ]);
+        }
+        out.push_str(&format!("**{preset}**\n\n{}\n", t.render()));
+    }
+    let avg = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+    out.push_str(&format!(
+        "average speedup vs naive: HybriMoE static {} (paper 3.58x), DALI greedy {} (paper 4.42x); greedy vs static = {}\n",
+        times(avg(&hybri_speedups)),
+        times(avg(&dali_speedups)),
+        times(avg(&dali_speedups) / avg(&hybri_speedups)),
+    ));
+    Ok(out)
+}
+
+fn dali_like_bundle(
+    ctx: &ExptCtx,
+    preset: &str,
+    assigner: Box<dyn crate::coordinator::assignment::Assigner>,
+) -> Result<crate::coordinator::simrun::PolicyBundle> {
+    let dims = ctx.model(preset)?.sim.clone();
+    let cfg = ctx.fwcfg(preset)?;
+    Ok(ctx.bundle_parts(
+        &dims,
+        assigner,
+        Box::new(ResidualPrefetcher),
+        Box::new(WorkloadAwareCache::new(
+            dims.layers,
+            dims.n_routed,
+            cfg.cache_size,
+            cfg.w_size,
+            cfg.u_size,
+            cfg.seed,
+        )),
+        cfg.prefetch_size,
+    ))
+}
+
+/// Fig. 15: end-to-end decode speed, greedy vs exact solver (solve cost
+/// charged into virtual time, as at runtime).
+pub fn fig15(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Fig. 15 — greedy vs Opt_plan decode speed (incl. solving)\n\n");
+    let mut t = Table::new(vec!["model", "batch", "Opt_plan tok/s", "greedy tok/s", "speedup", "opt sched%", "greedy sched%"]);
+    let mut ratios = vec![];
+    for preset in ["deepseek-sim", "mixtral-sim"] {
+        for &b in &[16usize, 32] {
+            let trace = ctx.trace_c4(preset)?;
+            let g = ctx.decode_with(
+                preset,
+                dali_like_bundle(ctx, preset, Box::new(GreedyAssigner::new()))?,
+                &trace,
+                b,
+                32,
+            )?;
+            let o = ctx.decode_with(
+                preset,
+                dali_like_bundle(ctx, preset, Box::new(EnumerateAssigner::new()))?,
+                &trace,
+                b,
+                32,
+            )?;
+            let speed = g.tokens_per_s() / o.tokens_per_s().max(1e-9);
+            ratios.push(speed);
+            t.row(vec![
+                preset.to_string(),
+                format!("BS{b}"),
+                format!("{:.2}", o.tokens_per_s()),
+                format!("{:.2}", g.tokens_per_s()),
+                times(speed),
+                pct(o.sched_share()),
+                pct(g.sched_share()),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\naverage greedy speedup over Opt_plan: {} (paper: 1.70x; solve overhead 4.5% vs 55%)\n",
+        times(ratios.iter().sum::<f64>() / ratios.len() as f64)
+    ));
+    Ok(out)
+}
+
+/// Table 4: MoE execution time only (solve cost excluded).
+///
+/// Cache and prefetch are disabled so the executed-schedule gap reflects
+/// only the assignment decision (with them on, divergent cache evolution
+/// dominates the comparison).
+pub fn table4(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Table 4 — MoE time (s), greedy vs optimal schedule (excl. solve)\n\n");
+    let mut t = Table::new(vec!["model", "batch", "Opt_plan", "greedy", "gap"]);
+    for preset in ["deepseek-sim", "mixtral-sim"] {
+        let dims = ctx.model(preset)?.sim.clone();
+        for &b in &[16usize, 32] {
+            let trace = ctx.trace_c4(preset)?;
+            let mk = |assigner: Box<dyn crate::coordinator::assignment::Assigner>| {
+                ctx.bundle_parts(
+                    &dims,
+                    assigner,
+                    Box::new(NoPrefetcher),
+                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
+                    0,
+                )
+            };
+            let g = ctx.decode_with(preset, mk(Box::new(GreedyAssigner::new())), &trace, b, 32)?;
+            let o =
+                ctx.decode_with(preset, mk(Box::new(EnumerateAssigner::new())), &trace, b, 32)?;
+            // exclude scheduling by comparing the MoE makespans only
+            let gm = g.moe_ns as f64 / 1e9;
+            let om = o.moe_ns as f64 / 1e9;
+            t.row(vec![
+                preset.to_string(),
+                format!("BS{b}"),
+                format!("{om:.3}"),
+                format!("{gm:.3}"),
+                format!("{:+.1}%", 100.0 * (gm - om) / om.max(1e-9)),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str("\nPaper Table 4 gaps: 7.8-15% (greedy attains ≥ ~85-92% of optimal).\n");
+    Ok(out)
+}
+
+/// Fig. 16: (a) speedup of prefetch strategies on Mixtral; (b) accuracy.
+pub fn fig16(ctx: &ExptCtx) -> Result<String> {
+    let preset = "mixtral-sim";
+    let dims = ctx.model(preset)?.sim.clone();
+    let trace = ctx.trace_c4(preset)?;
+    let calib = ctx.calib(preset)?;
+    let mut out = String::from("## Fig. 16 — prefetch strategies on Mixtral\n\n### (a) decode speedup vs no prefetching (each prefetches 2 experts)\n\n");
+    let mut t = Table::new(vec!["strategy", "BS8 tok/s", "BS32 tok/s", "avg speedup"]);
+    let mk = |which: &str| -> crate::coordinator::simrun::PolicyBundle {
+        let prefetcher: Box<dyn crate::coordinator::prefetch::Prefetcher> = match which {
+            "random" => Box::new(RandomPrefetcher),
+            "hybrimoe" => Box::new(FeaturePrefetcher),
+            "dali" => Box::new(ResidualPrefetcher),
+            _ => Box::new(NoPrefetcher),
+        };
+        let ps = if which == "naive" { 0 } else { 2 };
+        ctx.bundle_parts(
+            &dims,
+            Box::new(GreedyAssigner::new()),
+            prefetcher,
+            Box::new(NoCache::new(dims.layers, dims.n_routed)),
+            ps,
+        )
+    };
+    let mut base = (0.0, 0.0);
+    for which in ["naive", "random", "hybrimoe", "dali"] {
+        let a = ctx.decode_with(preset, mk(which), &trace, 8, 32)?.tokens_per_s();
+        let b = ctx.decode_with(preset, mk(which), &trace, 32, 32)?.tokens_per_s();
+        if which == "naive" {
+            base = (a, b);
+        }
+        let avg = (a / base.0 + b / base.1) / 2.0;
+        t.row(vec![which.to_string(), format!("{a:.2}"), format!("{b:.2}"), times(avg)]);
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\n### (b) prefetch accuracy (top-k highest-workload experts, batch 8)\n\n");
+    let mut t2 = Table::new(vec!["method", "Top-1", "Top-2", "Top-3"]);
+    let ids: Vec<usize> = (0..8).collect();
+    for (name, kind) in [
+        ("EdgeMoE", PredKind::Statistical),
+        ("HybriMoE", PredKind::Feature),
+        ("DALI", PredKind::Residual),
+    ] {
+        let mut row = vec![name.to_string()];
+        for j in [1usize, 2, 3] {
+            row.push(pct(prefetch_accuracy(&trace, &calib, &ids, 48, kind, j)));
+        }
+        t2.row(row);
+    }
+    out.push_str(&t2.render());
+    Ok(out)
+}
+
+/// Fig. 17: cache replacement strategies — decode speed + hit rate.
+pub fn fig17(ctx: &ExptCtx) -> Result<String> {
+    let preset = "mixtral-sim";
+    let dims = ctx.model(preset)?.sim.clone();
+    let trace = ctx.trace_c4(preset)?;
+    let cfg = ctx.fwcfg(preset)?;
+    let mut out = String::from("## Fig. 17 — cache replacement strategies (mixtral-sim, batch 4)\n\n");
+    let mut t = Table::new(vec!["cache ratio", "LRU hit", "HybriMoE hit", "DALI hit", "HybriMoE tok/s", "DALI tok/s", "speedup"]);
+    for frac in [8usize, 4, 2] {
+        let cs = (dims.n_routed / frac).max(1);
+        let mk = |which: &str| -> crate::coordinator::simrun::PolicyBundle {
+            let cache: Box<dyn crate::coordinator::cache::ExpertCache> = match which {
+                "lru" => Box::new(LruCache::new(dims.layers, dims.n_routed, cs, 13)),
+                "score" => Box::new(ScoreCache::new(dims.layers, dims.n_routed, cs, 13)),
+                _ => Box::new(WorkloadAwareCache::new(
+                    dims.layers, dims.n_routed, cs, cfg.w_size, cfg.u_size, 13,
+                )),
+            };
+            ctx.bundle_parts(
+                &dims,
+                Box::new(GreedyAssigner::new()),
+                Box::new(NoPrefetcher),
+                cache,
+                0,
+            )
+        };
+        let lru = ctx.decode_with(preset, mk("lru"), &trace, 4, STEPS)?;
+        let sc = ctx.decode_with(preset, mk("score"), &trace, 4, STEPS)?;
+        let wa = ctx.decode_with(preset, mk("wa"), &trace, 4, STEPS)?;
+        t.row(vec![
+            format!("{}/{}", cs, dims.n_routed),
+            pct(lru.cache_hit_rate()),
+            pct(sc.cache_hit_rate()),
+            pct(wa.cache_hit_rate()),
+            format!("{:.2}", sc.tokens_per_s()),
+            format!("{:.2}", wa.tokens_per_s()),
+            times(wa.tokens_per_s() / sc.tokens_per_s().max(1e-9)),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("\nPaper: workload-aware replacement beats score-based by ~1.23x with consistently higher hit rates.\n");
+    Ok(out)
+}
+
+/// Fig. 19: cumulative contribution of each technique.
+pub fn fig19(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Fig. 19 — breakdown waterfall (cache ratio 25%)\n\n");
+    for preset in ["mixtral-sim", "qwen-sim"] {
+        let dims = ctx.model(preset)?.sim.clone();
+        let trace = ctx.trace_c4(preset)?;
+        let cfg = ctx.fwcfg(preset)?;
+        let cs = (dims.n_routed / 4).max(1); // 25% cache ratio
+        let ps = if dims.n_routed <= 8 { 1 } else { 8 };
+        let stages: Vec<(&str, crate::coordinator::simrun::PolicyBundle)> = vec![
+            (
+                "naive (all CPU)",
+                ctx.bundle_parts(
+                    &dims,
+                    Box::new(AllCpuAssigner::new()),
+                    Box::new(NoPrefetcher),
+                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
+                    0,
+                ),
+            ),
+            (
+                "+ greedy assignment",
+                ctx.bundle_parts(
+                    &dims,
+                    Box::new(GreedyAssigner::new()),
+                    Box::new(NoPrefetcher),
+                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
+                    0,
+                ),
+            ),
+            (
+                "+ residual prefetch",
+                ctx.bundle_parts(
+                    &dims,
+                    Box::new(GreedyAssigner::new()),
+                    Box::new(ResidualPrefetcher),
+                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
+                    ps,
+                ),
+            ),
+            (
+                "+ workload-aware cache",
+                ctx.bundle_parts(
+                    &dims,
+                    Box::new(GreedyAssigner::new()),
+                    Box::new(ResidualPrefetcher),
+                    Box::new(WorkloadAwareCache::new(
+                        dims.layers, dims.n_routed, cs, cfg.w_size, cfg.u_size, cfg.seed,
+                    )),
+                    ps,
+                ),
+            ),
+        ];
+        let mut t = Table::new(vec!["configuration", "tokens/s", "vs naive", "vs previous"]);
+        let mut naive = 0.0;
+        let mut prev = 0.0;
+        for (name, bundle) in stages {
+            let tps = ctx.decode_with(preset, bundle, &trace, 8, 32)?.tokens_per_s();
+            if naive == 0.0 {
+                naive = tps;
+                prev = tps;
+            }
+            t.row(vec![
+                name.to_string(),
+                format!("{tps:.2}"),
+                times(tps / naive),
+                times(tps / prev),
+            ]);
+            prev = tps;
+        }
+        out.push_str(&format!("**{preset}** (batch 8)\n\n{}\n", t.render()));
+    }
+    out.push_str("Paper: greedy 4.1x (largest), prefetch ~+9%, cache ~+38%.\n");
+    Ok(out)
+}

@@ -1,0 +1,285 @@
+//! Shared experiment plumbing: preset/cost/trace access, policy builders,
+//! prefetch-accuracy computation, and the standard replay configurations.
+
+use anyhow::Result;
+
+use crate::config::{ModelDims, ModelPreset, Presets};
+use crate::coordinator::assignment::*;
+use crate::coordinator::cache::*;
+use crate::coordinator::frameworks::{Framework, FrameworkCfg};
+use crate::coordinator::prefetch::*;
+use crate::coordinator::simrun::PolicyBundle;
+use crate::hw::CostModel;
+use crate::metrics::RunMetrics;
+use crate::workload::{prep, CalibData, Trace};
+
+/// The three evaluated models, in the paper's order.
+pub const MODELS: [&str; 3] = ["deepseek-sim", "qwen-sim", "mixtral-sim"];
+
+/// Batch sizes used by the sweeps (paper Figs. 4-7, 12-13).
+pub const BATCHES: [usize; 4] = [8, 16, 32, 64];
+
+/// Default decode steps for speed benchmarks.
+pub const STEPS: usize = 48;
+
+pub struct ExptCtx {
+    pub presets: Presets,
+}
+
+impl ExptCtx {
+    pub fn new() -> Result<Self> {
+        Ok(ExptCtx { presets: Presets::load_default()? })
+    }
+
+    pub fn model(&self, preset: &str) -> Result<&ModelPreset> {
+        self.presets.model(preset)
+    }
+
+    pub fn cost(&self, preset: &str) -> Result<CostModel> {
+        Ok(CostModel::new(self.presets.model(preset)?, self.presets.hw("local-pc")?))
+    }
+
+    pub fn calib(&self, preset: &str) -> Result<CalibData> {
+        prep::ensure_calib(preset)
+    }
+
+    /// The standard C4 speed-benchmark trace pool.
+    pub fn trace_c4(&self, preset: &str) -> Result<Trace> {
+        prep::ensure_trace(preset, "c4-sim", 32, 16, 64)
+    }
+
+    /// The Wikitext locality pool.
+    pub fn trace_wikitext(&self, preset: &str) -> Result<Trace> {
+        prep::ensure_trace(preset, "wikitext-sim", 16, 16, 48)
+    }
+
+    pub fn fwcfg(&self, preset: &str) -> Result<FrameworkCfg> {
+        Ok(FrameworkCfg::paper_default(&self.presets.model(preset)?.sim))
+    }
+
+    /// Replay decode for a framework with the paper-default config.
+    pub fn decode(
+        &self,
+        preset: &str,
+        fw: Framework,
+        batch: usize,
+        steps: usize,
+    ) -> Result<RunMetrics> {
+        let model = self.model(preset)?;
+        let cost = self.cost(preset)?;
+        let calib = self.calib(preset)?;
+        let trace = self.trace_c4(preset)?;
+        let cfg = self.fwcfg(preset)?;
+        let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
+        Ok(self.decode_with(preset, bundle, &trace, batch, steps)?)
+    }
+
+    /// Replay decode with an explicit policy bundle.
+    pub fn decode_with(
+        &self,
+        preset: &str,
+        bundle: PolicyBundle,
+        trace: &Trace,
+        batch: usize,
+        steps: usize,
+    ) -> Result<RunMetrics> {
+        let model = self.model(preset)?;
+        let calib = self.calib(preset)?;
+        let cost = self.cost(preset)?;
+        let seq_ids: Vec<usize> = (0..batch).collect();
+        Ok(crate::coordinator::simrun::replay_decode(
+            trace,
+            &seq_ids,
+            steps,
+            &cost,
+            bundle,
+            calib.freq.clone(),
+            model.sim.n_shared,
+            7,
+        ))
+    }
+
+    /// Replay prefill with an explicit framework.
+    pub fn prefill(&self, preset: &str, fw: Framework, batch: usize) -> Result<RunMetrics> {
+        let model = self.model(preset)?;
+        let cost = self.cost(preset)?;
+        let calib = self.calib(preset)?;
+        let trace = self.trace_c4(preset)?;
+        let cfg = self.fwcfg(preset)?;
+        let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
+        let seq_ids: Vec<usize> = (0..batch).collect();
+        Ok(crate::coordinator::simrun::replay_prefill(
+            &trace,
+            &seq_ids,
+            &cost,
+            bundle,
+            calib.freq.clone(),
+            model.sim.n_shared,
+            7,
+        ))
+    }
+
+    /// A custom-component bundle for ablations (greedy base).
+    pub fn bundle_parts(
+        &self,
+        dims: &ModelDims,
+        assigner: Box<dyn Assigner>,
+        prefetcher: Box<dyn Prefetcher>,
+        cache: Box<dyn ExpertCache>,
+        prefetch_size: usize,
+    ) -> PolicyBundle {
+        PolicyBundle {
+            assigner,
+            prefetcher,
+            cache,
+            prefetch_size,
+            cpu_eff: 1.0,
+            layer_overhead_ns: 0,
+            gpu_free_slots: dims.n_routed,
+        }
+    }
+}
+
+/// Which prediction signal to score for accuracy experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredKind {
+    /// EdgeMoE: calibration activation frequency (static ranking).
+    Statistical,
+    /// HybriMoE: raw-feature gate of the next layer.
+    Feature,
+    /// DALI: residual-corrected features.
+    Residual,
+}
+
+/// Top-`j` prefetch accuracy over a composed batch replay (paper Table 2 /
+/// Fig. 16b metric): at every (step, layer<L-1), compare the predictor's
+/// top-j experts against the true top-j *highest-workload* experts of the
+/// next layer; accuracy = |intersection| / j, averaged.
+pub fn prefetch_accuracy(
+    trace: &Trace,
+    calib: &CalibData,
+    seq_ids: &[usize],
+    steps: usize,
+    kind: PredKind,
+    top_j: usize,
+) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let max_steps = steps.min(trace.min_steps());
+    for s in 0..max_steps {
+        let step = trace.compose_decode(seq_ids, s);
+        if step.tokens == 0 {
+            continue;
+        }
+        for l in 0..trace.layers.saturating_sub(1) {
+            let truth = &step.layers[l + 1].workloads;
+            if truth.iter().all(|&w| w == 0) {
+                continue;
+            }
+            let pred_scores: Vec<f64> = match kind {
+                PredKind::Statistical => calib.freq[l + 1].clone(),
+                PredKind::Feature => step.layers[l].pred_raw.iter().map(|&c| c as f64).collect(),
+                PredKind::Residual => step.layers[l].pred_res.iter().map(|&c| c as f64).collect(),
+            };
+            let pred = top_n(&pred_scores, top_j);
+            let truth_scores: Vec<f64> = truth.iter().map(|&w| w as f64).collect();
+            let want = top_n(&truth_scores, top_j);
+            let hit = pred.iter().filter(|e| want.contains(e)).count();
+            total += hit as f64 / top_j as f64;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+/// Format a ratio as `x.xx×`.
+pub fn times(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format a fraction as a percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+/// Geometric-mean speedup of `a` over `b` element-wise.
+pub fn avg_speedup(dali: &[f64], base: &[f64]) -> f64 {
+    let ratios: Vec<f64> =
+        dali.iter().zip(base).filter(|(_, &b)| b > 0.0).map(|(&d, &b)| d / b).collect();
+    if ratios.is_empty() {
+        return 0.0;
+    }
+    ratios.iter().sum::<f64>() / ratios.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::{LayerStepRecord, PrefillLayerRecord, SeqTrace};
+
+    fn mk_trace() -> Trace {
+        // layer 0 predicts layer 1; truth at layer 1 = expert 2 heavy.
+        let rec_l0 = LayerStepRecord {
+            topk: vec![0],
+            topk_scores: vec![1.0],
+            pred_raw: vec![1], // wrong prediction
+            pred_res: vec![2], // right prediction
+            cos_raw: 0.5,
+            cos_res: 0.9,
+        };
+        let rec_l1 = LayerStepRecord {
+            topk: vec![2],
+            topk_scores: vec![1.0],
+            pred_raw: vec![],
+            pred_res: vec![],
+            cos_raw: 0.0,
+            cos_res: 0.0,
+        };
+        let pre = PrefillLayerRecord {
+            counts: vec![0; 4],
+            gate_scores: vec![0.0; 4],
+            pred_raw: vec![0; 4],
+            pred_res: vec![0; 4],
+        };
+        Trace {
+            preset: "t".into(),
+            task: "t".into(),
+            n_routed: 4,
+            top_k: 1,
+            layers: 2,
+            seqs: vec![SeqTrace {
+                prompt_len: 1,
+                prefill: vec![pre.clone(), pre],
+                steps: vec![vec![rec_l0, rec_l1]],
+            }],
+        }
+    }
+
+    #[test]
+    fn accuracy_distinguishes_predictors() {
+        let t = mk_trace();
+        let calib = CalibData {
+            preset: "t".into(),
+            tokens: 1,
+            res_vec: vec![],
+            freq: vec![vec![0.0; 4], vec![0.9, 0.0, 0.0, 0.0]],
+        };
+        let res = prefetch_accuracy(&t, &calib, &[0], 1, PredKind::Residual, 1);
+        let raw = prefetch_accuracy(&t, &calib, &[0], 1, PredKind::Feature, 1);
+        let stat = prefetch_accuracy(&t, &calib, &[0], 1, PredKind::Statistical, 1);
+        assert!((res - 1.0).abs() < 1e-9);
+        assert!(raw.abs() < 1e-9);
+        assert!(stat.abs() < 1e-9, "freq ranks expert 0, truth is 2");
+    }
+
+    #[test]
+    fn helpers_format() {
+        assert_eq!(times(1.5), "1.50x");
+        assert_eq!(pct(0.253), "25.3%");
+        assert!((avg_speedup(&[2.0, 4.0], &[1.0, 2.0]) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,62 @@
+//! Experiment harness: one generator per table/figure of the paper's
+//! evaluation (§6 + appendix). See DESIGN.md §4 for the full index.
+//!
+//! Every experiment renders a markdown section (printed and written to
+//! `results/<id>.md` by the `expt` binary); EXPERIMENTS.md embeds these
+//! verbatim. All numbers are simulated local-PC virtual time over real
+//! routing traces — deterministic run-to-run.
+
+pub mod appendix;
+pub mod breakdown;
+pub mod common;
+pub mod motivation;
+pub mod overall;
+pub mod sensitivity;
+
+use anyhow::{bail, Result};
+
+pub use common::ExptCtx;
+
+/// (id, paper reference, runner).
+pub type Runner = fn(&ExptCtx) -> Result<String>;
+
+pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
+    vec![
+        ("fig4", "Fig. 4 — CPU/GPU time under static assignment", motivation::fig4),
+        ("fig5", "Fig. 5 — PCIe share of inference time", motivation::fig5),
+        ("table2", "Table 2 — prefetch accuracy (EdgeMoE/HybriMoE/DALI)", motivation::table2),
+        ("fig6", "Fig. 6 — HybriMoE prefetch speedup vs none", motivation::fig6),
+        ("fig7", "Fig. 7 — LRU vs score cache hit rates", motivation::fig7),
+        ("fig8", "Fig. 8 — adjacent-token high-workload correlation", motivation::fig8),
+        ("fig12", "Fig. 12 — decode speed across frameworks", overall::fig12),
+        ("fig13", "Fig. 13 — prefill speed on DeepSeek", overall::fig13),
+        ("fig14", "Fig. 14 — assignment-only comparison", breakdown::fig14),
+        ("fig15", "Fig. 15 — greedy vs optimal incl. solve cost", breakdown::fig15),
+        ("table4", "Table 4 — MoE time greedy vs optimal (excl. solve)", breakdown::table4),
+        ("fig16", "Fig. 16 — prefetch strategies: speedup + accuracy", breakdown::fig16),
+        ("fig17", "Fig. 17 — cache strategies: speed + hit rate", breakdown::fig17),
+        ("fig19", "Fig. 19 — cumulative breakdown waterfall", breakdown::fig19),
+        (
+            "fig18",
+            "Fig. 18 — sensitivity: prefetch size, cache size, (w,u), adaptation",
+            sensitivity::fig18,
+        ),
+        ("table9", "Table 9 — (w_size, u_size) sweep", sensitivity::table9),
+        ("fig20", "Fig. 20 (A.1) — CPU/GPU balance HybriMoE vs DALI", appendix::fig20),
+        ("fig21", "Fig. 21 (A.2) — beam search vs greedy vs optimal", appendix::fig21),
+        ("fig22", "Fig. 22 (A.7) — decode-length sweep", appendix::fig22),
+        ("table5", "Table 5 (A.3) — prefetch accuracy on downstream tasks", appendix::table5),
+        ("table6", "Table 6 (A.4) — scheduling overhead vs sequence length", appendix::table6),
+        ("table7", "Table 7 (A.4) — GPU memory usage", appendix::table7),
+        ("table8", "Table 8 (A.5) — gate-input cosine similarity", appendix::table8),
+    ]
+}
+
+pub fn run_one(ctx: &ExptCtx, id: &str) -> Result<String> {
+    for (name, _, f) in registry() {
+        if name == id {
+            return f(ctx);
+        }
+    }
+    bail!("unknown experiment '{id}' — see `expt list`")
+}

@@ -1,0 +1,224 @@
+//! Motivation experiments (paper §3): Figs. 4-8 and Table 2.
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::coordinator::assignment::StaticThresholdAssigner;
+use crate::coordinator::cache::{LruCache, NoCache, ScoreCache};
+use crate::coordinator::frameworks::Framework;
+use crate::coordinator::prefetch::{FeaturePrefetcher, NoPrefetcher};
+use crate::util::Table;
+
+/// Fig. 4: execution time of CPU- vs GPU-assigned experts under the static
+/// expert-wise policy (Fiddler) — the load-imbalance motivation.
+pub fn fig4(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Fig. 4 — CPU vs GPU execution time, static assignment\n\n");
+    out.push_str("Static per-expert placement (Fiddler policy, no cache/prefetch); decode, 32 steps.\nImbalance = max(CPU,GPU) / min(CPU,GPU) busy time — the paper's motivation for dynamic assignment.\n\n");
+    for preset in ["deepseek-sim", "qwen-sim"] {
+        let model = ctx.model(preset)?;
+        let dims = model.sim.clone();
+        let trace = ctx.trace_c4(preset)?;
+        let mut t = Table::new(vec!["batch", "CPU busy (s)", "GPU busy (s)", "imbalance"]);
+        for &b in &BATCHES {
+            let bundle = ctx.bundle_parts(
+                &dims,
+                Box::new(StaticThresholdAssigner::new()),
+                Box::new(NoPrefetcher),
+                Box::new(NoCache::new(dims.layers, dims.n_routed)),
+                0,
+            );
+            let m = ctx.decode_with(preset, bundle, &trace, b, 32)?;
+            let cpu = m.moe_cpu_busy_ns as f64 / 1e9;
+            let gpu = m.moe_gpu_busy_ns as f64 / 1e9;
+            let imb = cpu.max(gpu) / cpu.min(gpu).max(1e-9);
+            let imb_s = if imb > 1000.0 { ">1000x".to_string() } else { format!("{imb:.1}x") };
+            t.row(vec![b.to_string(), format!("{cpu:.3}"), format!("{gpu:.3}"), imb_s]);
+        }
+        out.push_str(&format!("**{preset}**\n\n{}\n", t.render()));
+    }
+    Ok(out)
+}
+
+/// Fig. 5: PCIe transfer time as a share of total inference time,
+/// HybriMoE vs DALI, across batch sizes.
+pub fn fig5(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Fig. 5 — PCIe share of inference time\n\n");
+    let mut t = Table::new(vec!["model", "batch", "HybriMoE", "DALI"]);
+    let (mut h_sum, mut d_sum, mut n) = (0.0, 0.0, 0);
+    for preset in MODELS {
+        for &b in &BATCHES {
+            let h = ctx.decode(preset, Framework::HybriMoE, b, 32)?;
+            let d = ctx.decode(preset, Framework::Dali, b, 32)?;
+            h_sum += h.pcie_time_share();
+            d_sum += d.pcie_time_share();
+            n += 1;
+            t.row(vec![
+                preset.to_string(),
+                format!("BS{b}"),
+                pct(h.pcie_time_share()),
+                pct(d.pcie_time_share()),
+            ]);
+        }
+    }
+    t.row(vec![
+        "**average**".into(),
+        "".into(),
+        pct(h_sum / n as f64),
+        pct(d_sum / n as f64),
+    ]);
+    out.push_str(&t.render());
+    out.push_str(
+        "\nPaper reports PCIe up to 78.1% of hybrid execution (HybriMoE), reduced by DALI.\n\
+         Deviation note: in our calibrated regime (t_cpu ≈ trans_time on Mixtral), DALI's\n\
+         greedy assignment deliberately *spends* PCIe bandwidth to offload the CPU —\n\
+         transfers overlap compute per Eq. 5 — so its demand-transfer share of (much\n\
+         shorter) total time is higher even though end-to-end latency is lower (Fig. 12).\n\
+         The paper's direction holds for the motivation case: hybrid execution without\n\
+         DALI's cache/prefetch is transfer-bound at large batch.\n",
+    );
+    Ok(out)
+}
+
+/// Table 2: accuracy of predicting the top-k *highest-workload* experts.
+pub fn table2(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Table 2 — prefetch accuracy for high-workload experts\n\n");
+    for preset in ["deepseek-sim", "mixtral-sim"] {
+        let trace = ctx.trace_c4(preset)?;
+        let calib = ctx.calib(preset)?;
+        let mut t = Table::new(vec!["topk", "method", "BS8", "BS16", "BS32", "BS64"]);
+        for top_j in [1usize, 2] {
+            for (name, kind) in [
+                ("EdgeMoE", PredKind::Statistical),
+                ("HybriMoE", PredKind::Feature),
+                ("DALI", PredKind::Residual),
+            ] {
+                let mut row = vec![format!("Topk={top_j}"), name.to_string()];
+                for &b in &BATCHES {
+                    let ids: Vec<usize> = (0..b).collect();
+                    let acc = prefetch_accuracy(&trace, &calib, &ids, 48, kind, top_j);
+                    row.push(pct(acc));
+                }
+                t.row(row);
+            }
+        }
+        out.push_str(&format!("**{preset}**\n\n{}\n", t.render()));
+    }
+    out.push_str("Expected shape: statistical < raw-feature < residual-corrected (paper adds DALI in Fig. 16b).\n");
+    Ok(out)
+}
+
+/// Fig. 6: speedup delivered by HybriMoE's own (feature-based) prefetching
+/// over no prefetching, inside the HybriMoE framework.
+pub fn fig6(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Fig. 6 — HybriMoE prefetching speedup vs no prefetching\n\n");
+    let mut t = Table::new(vec!["model", "BS8", "BS16", "BS32", "BS64"]);
+    for preset in ["deepseek-sim", "mixtral-sim"] {
+        let model = ctx.model(preset)?;
+        let dims = model.sim.clone();
+        let trace = ctx.trace_c4(preset)?;
+        let cfg = ctx.fwcfg(preset)?;
+        let mut row = vec![preset.to_string()];
+        for &b in &BATCHES {
+            let mk = |prefetch: bool| {
+                ctx.bundle_parts(
+                    &dims,
+                    Box::new(StaticThresholdAssigner::new()),
+                    if prefetch { Box::new(FeaturePrefetcher) } else { Box::new(NoPrefetcher) },
+                    Box::new(ScoreCache::new(dims.layers, dims.n_routed, cfg.cache_size, cfg.seed)),
+                    if prefetch { cfg.prefetch_size } else { 0 },
+                )
+            };
+            let with = ctx.decode_with(preset, mk(true), &trace, b, 32)?.tokens_per_s();
+            let without = ctx.decode_with(preset, mk(false), &trace, b, 32)?.tokens_per_s();
+            row.push(times(with / without.max(1e-9)));
+        }
+        t.row(row);
+    }
+    out.push_str(&t.render());
+    out.push_str("\nPaper finds these gains marginal (low accuracy + prediction overhead) — expect ~1.0-1.1x.\n");
+    Ok(out)
+}
+
+/// Fig. 7: cache hit rates of LRU vs score-based replacement vs cache size.
+pub fn fig7(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Fig. 7 — LRU / score-cache hit rates vs cache size\n\n");
+    for preset in ["deepseek-sim", "mixtral-sim"] {
+        let model = ctx.model(preset)?;
+        let dims = model.sim.clone();
+        let trace = ctx.trace_c4(preset)?;
+        let sizes: Vec<usize> = [8usize, 4, 2]
+            .iter()
+            .map(|f| (dims.n_routed / f).max(1))
+            .collect();
+        let mut t = Table::new(vec!["cache size", "LRU", "HybriMoE (score)"]);
+        for &cs in &sizes {
+            let lru = ctx.bundle_parts(
+                &dims,
+                Box::new(StaticThresholdAssigner::new()),
+                Box::new(NoPrefetcher),
+                Box::new(LruCache::new(dims.layers, dims.n_routed, cs, 11)),
+                0,
+            );
+            let score = ctx.bundle_parts(
+                &dims,
+                Box::new(StaticThresholdAssigner::new()),
+                Box::new(NoPrefetcher),
+                Box::new(ScoreCache::new(dims.layers, dims.n_routed, cs, 11)),
+                0,
+            );
+            let ml = ctx.decode_with(preset, lru, &trace, 4, STEPS)?;
+            let ms = ctx.decode_with(preset, score, &trace, 4, STEPS)?;
+            t.row(vec![
+                format!("{cs}/{}", dims.n_routed),
+                pct(ml.cache_hit_rate()),
+                pct(ms.cache_hit_rate()),
+            ]);
+        }
+        out.push_str(&format!("**{preset}** (batch 4)\n\n{}\n", t.render()));
+    }
+    out.push_str("Both ignore workload; paper reports e.g. 25.3% for HybriMoE on Mixtral.\n");
+    Ok(out)
+}
+
+/// Fig. 8: correlation of high-workload experts between adjacent tokens.
+pub fn fig8(ctx: &ExptCtx) -> Result<String> {
+    let preset = "mixtral-sim";
+    let trace = ctx.trace_wikitext(preset)?;
+    let n = trace.n_routed;
+    let high = 3usize; // top-3 by workload, as in the paper
+    let ids: Vec<usize> = (0..8).collect();
+    let mut out = String::from(
+        "## Fig. 8 — adjacent-token high-workload correlation (mixtral-sim)\n\nCell (m, n) = count of (expert m high-workload at token i) ∧ (expert n high at i+1).\nA strong diagonal = temporal locality, the basis of Workload-Aware caching.\n\n",
+    );
+    for layer in 0..trace.layers {
+        let mut mat = vec![vec![0u32; n]; n];
+        let steps = trace.min_steps();
+        let mut prev_high: Option<Vec<usize>> = None;
+        for s in 0..steps {
+            let step = trace.compose_decode(&ids, s);
+            let w: Vec<f64> = step.layers[layer].workloads.iter().map(|&x| x as f64).collect();
+            let cur = crate::coordinator::prefetch::top_n(&w, high);
+            if let Some(prev) = prev_high {
+                for &m in &prev {
+                    for &nn in &cur {
+                        mat[m][nn] += 1;
+                    }
+                }
+            }
+            prev_high = Some(cur);
+        }
+        let total: u32 = mat.iter().flatten().sum();
+        let diag: u32 = (0..n).map(|i| mat[i][i]).sum();
+        out.push_str(&format!(
+            "layer {layer}: diagonal mass = {} (uniform baseline would be {})\n\n```\n",
+            pct(diag as f64 / total.max(1) as f64),
+            pct(1.0 / n as f64)
+        ));
+        for m in 0..n {
+            let row: Vec<String> = (0..n).map(|c| format!("{:3}", mat[m][c])).collect();
+            out.push_str(&format!("  {}\n", row.join(" ")));
+        }
+        out.push_str("```\n\n");
+    }
+    Ok(out)
+}

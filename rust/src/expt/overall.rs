@@ -1,0 +1,79 @@
+//! Overall results (paper §6.2): Fig. 12 (decode) and Fig. 13 (prefill).
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::coordinator::frameworks::Framework;
+use crate::util::Table;
+
+/// Fig. 12: decoding speed across frameworks, models, batch sizes.
+pub fn fig12(ctx: &ExptCtx) -> Result<String> {
+    let mut out = String::from("## Fig. 12 — decoding speed (simulated tokens/s)\n\n");
+    let frameworks = Framework::comparison_set();
+    let mut speedups: Vec<(Framework, Vec<f64>)> =
+        frameworks.iter().map(|&f| (f, vec![])).collect();
+    for preset in MODELS {
+        let mut t = Table::new(vec!["batch", "llama.cpp", "ktransformers", "moe-lightning", "hybrimoe", "dali"]);
+        for &b in &BATCHES {
+            let mut row = vec![format!("BS{b}")];
+            let mut tps = vec![];
+            for &fw in &frameworks {
+                let m = ctx.decode(preset, fw, b, STEPS)?;
+                tps.push(m.tokens_per_s());
+                row.push(format!("{:.2}", m.tokens_per_s()));
+            }
+            let dali = *tps.last().unwrap();
+            for (i, (_, v)) in speedups.iter_mut().enumerate() {
+                v.push(dali / tps[i].max(1e-9));
+            }
+            t.row(row);
+        }
+        out.push_str(&format!("**{preset}**\n\n{}\n", t.render()));
+    }
+    let mut t = Table::new(vec!["DALI speedup over", "average", "paper"]);
+    let paper = [("llama.cpp", "3.97x"), ("ktransformers", "2.16x"), ("moe-lightning", "1.48x"), ("hybrimoe", "1.32x")];
+    for (i, (fw, v)) in speedups.iter().enumerate() {
+        if *fw == Framework::Dali {
+            continue;
+        }
+        let avg = v.iter().sum::<f64>() / v.len() as f64;
+        t.row(vec![fw.name().to_string(), times(avg), paper[i].1.to_string()]);
+    }
+    out.push_str(&format!("**average DALI speedups**\n\n{}\n", t.render()));
+    Ok(out)
+}
+
+/// Fig. 13: prefill speed on DeepSeek across batch sizes.
+pub fn fig13(ctx: &ExptCtx) -> Result<String> {
+    let preset = "deepseek-sim";
+    let mut out = String::from("## Fig. 13 — prefill speed on DeepSeek (simulated tokens/s)\n\n");
+    let frameworks = Framework::comparison_set();
+    let mut t = Table::new(vec!["batch", "llama.cpp", "ktransformers", "moe-lightning", "hybrimoe", "dali"]);
+    let mut speedups: Vec<Vec<f64>> = vec![vec![]; frameworks.len()];
+    for &b in &[1usize, 8, 16, 32, 64] {
+        let mut row = vec![format!("BS{b}")];
+        let mut tps = vec![];
+        for &fw in &frameworks {
+            let m = ctx.prefill(preset, fw, b)?;
+            tps.push(m.tokens_per_s());
+            row.push(format!("{:.1}", m.tokens_per_s()));
+        }
+        let dali = *tps.last().unwrap();
+        for (i, v) in speedups.iter_mut().enumerate() {
+            v.push(dali / tps[i].max(1e-9));
+        }
+        t.row(row);
+    }
+    out.push_str(&t.render());
+    let mut s = Table::new(vec!["DALI speedup over", "average", "paper"]);
+    let paper = [("llama.cpp", "7.62x"), ("ktransformers", "3.80x"), ("moe-lightning", "2.45x"), ("hybrimoe", "2.00x")];
+    for (i, &fw) in frameworks.iter().enumerate() {
+        if fw == Framework::Dali {
+            continue;
+        }
+        let avg = speedups[i].iter().sum::<f64>() / speedups[i].len() as f64;
+        s.row(vec![fw.name().to_string(), times(avg), paper[i].1.to_string()]);
+    }
+    out.push_str(&format!("\n**average DALI speedups (prefill)**\n\n{}\n", s.render()));
+    Ok(out)
+}

@@ -1,0 +1,92 @@
+//! Warm-up profiling: fit `t(w) = a + b·w` from measured (workload, time)
+//! points, the way the paper builds its `t_cpu` / `t_gpu` tables before
+//! inference ("All hardware-specific timing values can be obtained through
+//! warm-up profiling before execution", §4.1).
+//!
+//! Used by `InferenceEngine::calibrate_local` (and the `calibrate` CLI
+//! subcommand) to derive a machine-local [`super::CostModel`] from real PJRT
+//! kernel timings — demonstrating the full warm-up-profiling path even
+//! though the paper-preset analytic model drives the headline experiments.
+
+/// Least-squares linear fit `y = a + b·x`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinFit {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl LinFit {
+    /// Fit from points; requires ≥ 2 distinct x values (else b = 0).
+    pub fn fit(points: &[(f64, f64)]) -> LinFit {
+        let n = points.len() as f64;
+        if points.is_empty() {
+            return LinFit { a: 0.0, b: 0.0 };
+        }
+        let sx: f64 = points.iter().map(|p| p.0).sum();
+        let sy: f64 = points.iter().map(|p| p.1).sum();
+        let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        if denom.abs() < 1e-12 {
+            return LinFit { a: sy / n, b: 0.0 };
+        }
+        let b = (n * sxy - sx * sy) / denom;
+        let a = (sy - b * sx) / n;
+        LinFit { a, b }
+    }
+
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a + self.b * x
+    }
+
+    /// Coefficient of determination on the fitting data.
+    pub fn r2(&self, points: &[(f64, f64)]) -> f64 {
+        let n = points.len() as f64;
+        if points.is_empty() {
+            return 1.0;
+        }
+        let mean = points.iter().map(|p| p.1).sum::<f64>() / n;
+        let ss_tot: f64 = points.iter().map(|p| (p.1 - mean).powi(2)).sum();
+        let ss_res: f64 = points.iter().map(|p| (p.1 - self.eval(p.0)).powi(2)).sum();
+        if ss_tot < 1e-12 {
+            1.0
+        } else {
+            1.0 - ss_res / ss_tot
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 + 2.0 * i as f64)).collect();
+        let f = LinFit::fit(&pts);
+        assert!((f.a - 3.0).abs() < 1e-9);
+        assert!((f.b - 2.0).abs() < 1e-9);
+        assert!(f.r2(&pts) > 0.999999);
+    }
+
+    #[test]
+    fn noisy_line_close() {
+        let pts: Vec<(f64, f64)> = (0..50)
+            .map(|i| {
+                let x = i as f64;
+                (x, 10.0 + 0.5 * x + if i % 2 == 0 { 0.3 } else { -0.3 })
+            })
+            .collect();
+        let f = LinFit::fit(&pts);
+        assert!((f.b - 0.5).abs() < 0.01);
+        assert!((f.a - 10.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(LinFit::fit(&[]), LinFit { a: 0.0, b: 0.0 });
+        let f = LinFit::fit(&[(2.0, 5.0), (2.0, 7.0)]);
+        assert_eq!(f.b, 0.0);
+        assert!((f.a - 6.0).abs() < 1e-9);
+    }
+}

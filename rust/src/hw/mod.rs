@@ -1,0 +1,21 @@
+//! Heterogeneous-platform simulator: the stand-in for the paper's
+//! RTX 3090 + EPYC 7532 + PCIe 4.0 testbed (DESIGN.md §1).
+//!
+//! Design: **virtual time, real numerics**. The inference engine computes
+//! every activation for real via PJRT, but all reported latencies come from
+//! the analytic cost models here, evaluated on the *paper-scale* model
+//! dimensions (`config::PaperDims`). Policy code (assignment solve, cache
+//! update) additionally has its *measured wall-clock* charged into virtual
+//! time 1:1, because on the paper's testbed that code would run on the same
+//! CPU it runs on here — that is how the paper's "greedy = 4.5 % vs optimal
+//! = 55 % overhead" comparison is reproduced honestly.
+
+pub mod calibrate;
+pub mod cost;
+pub mod gpu_mem;
+pub mod pipeline;
+
+pub use calibrate::LinFit;
+pub use cost::{ns, CostModel, Ns};
+pub use gpu_mem::GpuMemModel;
+pub use pipeline::{GpuPipeline, PipelineOutcome, TransferKind};

@@ -1,0 +1,32 @@
+//! # DALI — workload-aware MoE offloading for local PCs (paper reproduction)
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **Layer 3 (this crate)** — the coordinator: expert assignment
+//!   ([`coordinator::assignment`], paper §4.1), residual-based prefetching
+//!   ([`coordinator::prefetch`], §4.2), workload-aware expert caching
+//!   ([`coordinator::cache`], §4.3), the inference engine, baseline
+//!   frameworks, a serving front-end, and the heterogeneous-platform
+//!   simulator ([`hw`]) standing in for the paper's RTX 3090 + EPYC testbed.
+//! * **Layer 2** — the JAX MoE model (`python/compile/model.py`), AOT-lowered
+//!   to HLO text artifacts.
+//! * **Layer 1** — Pallas kernels for the expert FFN and fused gate
+//!   (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: [`runtime::PjrtEngine`] loads the
+//! HLO artifacts once and executes them via the PJRT CPU client. All *timing*
+//! is virtual (from [`hw::CostModel`]); all *numerics* are real.
+
+pub mod config;
+pub mod coordinator;
+pub mod expt;
+pub mod hw;
+pub mod metrics;
+pub mod moe;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+pub mod workload;
+
+pub use config::Presets;
+pub use hw::CostModel;

@@ -1,0 +1,132 @@
+//! `dali` — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   info                          show presets + artifact status
+//!   calibrate --preset P          compute residual vectors + activation stats
+//!   prepare [--preset P]          calibrate + generate all standard trace pools
+//!   run --preset P [--framework dali] [--batch 8] [--steps 32]
+//!                                 replay a decode benchmark and print metrics
+//!   serve --preset P [--port 8743] [--framework dali]
+//!                                 start the HTTP serving front-end
+//!
+//! Experiments (paper tables/figures) live in the separate `expt` binary.
+
+use anyhow::{bail, Result};
+
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::replay_decode;
+use dali::hw::CostModel;
+use dali::util::{fmt_ns, Args};
+use dali::workload::prep;
+
+fn parse_framework(name: &str) -> Result<Framework> {
+    Ok(match name {
+        "naive" => Framework::Naive,
+        "llama.cpp" | "llamacpp" => Framework::LlamaCpp,
+        "ktransformers" | "kt" => Framework::KTransformers,
+        "fiddler" => Framework::Fiddler,
+        "moe-lightning" | "lightning" => Framework::MoELightning,
+        "hybrimoe" => Framework::HybriMoE,
+        "dali" => Framework::Dali,
+        "dali-opt" => Framework::DaliOpt,
+        "dali-beam" => Framework::DaliBeam,
+        other => bail!("unknown framework '{other}'"),
+    })
+}
+
+fn cmd_info() -> Result<()> {
+    let p = Presets::load_default()?;
+    println!("model presets:");
+    for (name, m) in &p.models {
+        let have = dali::moe::Manifest::load_preset(name).is_ok();
+        println!(
+            "  {name:-14} {} — sim {}L/{}E/top{}, paper expert {:.0} MB, artifacts: {}",
+            m.display,
+            m.sim.layers,
+            m.sim.n_routed,
+            m.sim.top_k,
+            m.paper.expert_bytes() / 1e6,
+            if have { "ok" } else { "MISSING (make artifacts)" }
+        );
+    }
+    println!("hardware presets:");
+    for (name, h) in &p.hardware {
+        println!("  {name:-14} {}", h.display);
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "mixtral-sim");
+    let c = prep::ensure_calib(&preset)?;
+    println!("calibrated {preset}: {} tokens, {} residual vectors", c.tokens, c.res_vec.len());
+    Ok(())
+}
+
+fn cmd_prepare(args: &Args) -> Result<()> {
+    let presets: Vec<String> = match args.get("preset") {
+        Some(p) => vec![p.to_string()],
+        None => Presets::load_default()?.model_names().iter().map(|s| s.to_string()).collect(),
+    };
+    prep::prepare_all(&presets)?;
+    println!("prepared: {presets:?}");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "mixtral-sim");
+    let fw = parse_framework(&args.str_or("framework", "dali"))?;
+    let batch = args.usize_or("batch", 8);
+    let steps = args.usize_or("steps", 32);
+    let presets = Presets::load_default()?;
+    let model = presets.model(&preset)?;
+    let hw = presets.hw(&args.str_or("hw", "local-pc"))?;
+    let cost = CostModel::new(model, hw);
+    let calib = prep::ensure_calib(&preset)?;
+    let trace = prep::ensure_trace(&preset, "c4-sim", 32, 16, 64)?;
+    let cfg = FrameworkCfg::paper_default(&model.sim);
+    let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
+    let seq_ids: Vec<usize> = (0..batch).collect();
+    let m = replay_decode(
+        &trace, &seq_ids, steps, &cost, bundle, calib.freq.clone(), model.sim.n_shared, 7,
+    );
+    println!("preset={preset} framework={} batch={batch} steps={steps}", fw.name());
+    println!("  decode speed      : {:.2} tokens/s (simulated)", m.tokens_per_s());
+    println!("  virtual time      : {}", fmt_ns(m.total_ns));
+    println!("  MoE time          : {}", fmt_ns(m.moe_ns));
+    println!(
+        "  PCIe busy         : {} ({:.1}% of total)",
+        fmt_ns(m.pcie_busy_ns),
+        100.0 * m.pcie_time_share()
+    );
+    println!(
+        "  PCIe traffic      : {:.2} GB demand / {:.2} GB prefetch / {:.2} GB cache",
+        m.pcie_demand_bytes as f64 / 1e9,
+        m.pcie_prefetch_bytes as f64 / 1e9,
+        m.pcie_cache_bytes as f64 / 1e9
+    );
+    println!("  cache hit rate    : {:.1}%", 100.0 * m.cache_hit_rate());
+    println!("  prefetch accuracy : {:.1}%", 100.0 * m.prefetch_accuracy());
+    println!("  sched overhead    : {:.2}%", 100.0 * m.sched_share());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "mixtral-sim");
+    let port = args.usize_or("port", 8743) as u16;
+    let fw = parse_framework(&args.str_or("framework", "dali"))?;
+    dali::serve::server::serve_blocking(&preset, port, fw)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") | None => cmd_info(),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("prepare") => cmd_prepare(&args),
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (info|calibrate|prepare|run|serve)"),
+    }
+}

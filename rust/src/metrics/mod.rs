@@ -1,0 +1,144 @@
+//! Run metrics: virtual-time breakdowns, PCIe traffic, cache/prefetch
+//! effectiveness. Every experiment in `expt/` reports through this.
+
+/// Metrics for one inference run (prefill and/or decode).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    // --- virtual time (ns) ---------------------------------------------------
+    /// Total virtual time of the run.
+    pub total_ns: u64,
+    /// Attention (+ embed/head) time.
+    pub attn_ns: u64,
+    /// Gate (router) time, excluding prediction gating.
+    pub gate_ns: u64,
+    /// Extra gating passes executed for prefetch prediction (§6.3-4).
+    pub prefetch_gate_ns: u64,
+    /// MoE layer makespans (max of CPU side, GPU side per layer).
+    pub moe_ns: u64,
+    /// Of which: total CPU expert execution time (Eq. 4 sums).
+    pub moe_cpu_busy_ns: u64,
+    /// Of which: total GPU compute-stream busy time.
+    pub moe_gpu_busy_ns: u64,
+    /// GPU compute stalls waiting on PCIe transfers.
+    pub stall_ns: u64,
+    /// Assignment-solve time charged to virtual time (measured wall clock).
+    pub sched_ns: u64,
+    /// PCIe copy-stream busy time.
+    pub pcie_busy_ns: u64,
+
+    // --- PCIe traffic (paper-scale bytes) ------------------------------------
+    pub pcie_demand_bytes: u64,
+    pub pcie_prefetch_bytes: u64,
+    pub pcie_cache_bytes: u64,
+
+    // --- cache / prefetch counters -------------------------------------------
+    /// GPU-assigned expert executions that found weights resident.
+    pub cache_hits: u64,
+    /// GPU-assigned expert executions total.
+    pub cache_lookups: u64,
+    /// Prefetches issued / that turned out to be used by the next layer.
+    pub prefetch_issued: u64,
+    pub prefetch_useful: u64,
+
+    // --- work accounting ------------------------------------------------------
+    pub tokens_in: u64,
+    pub tokens_out: u64,
+    pub layer_steps: u64,
+}
+
+impl RunMetrics {
+    /// Decoding/prefill speed in tokens per simulated second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_ns == 0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / (self.total_ns as f64 / 1e9)
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.cache_lookups as f64
+    }
+
+    pub fn prefetch_accuracy(&self) -> f64 {
+        if self.prefetch_issued == 0 {
+            return 0.0;
+        }
+        self.prefetch_useful as f64 / self.prefetch_issued as f64
+    }
+
+    pub fn pcie_total_bytes(&self) -> u64 {
+        self.pcie_demand_bytes + self.pcie_prefetch_bytes + self.pcie_cache_bytes
+    }
+
+    /// Share of total time the PCIe link is busy (paper Fig. 5 metric).
+    pub fn pcie_time_share(&self) -> f64 {
+        if self.total_ns == 0 {
+            return 0.0;
+        }
+        self.pcie_busy_ns as f64 / self.total_ns as f64
+    }
+
+    /// Scheduling overhead relative to end-to-end time (paper Table 6).
+    pub fn sched_share(&self) -> f64 {
+        if self.total_ns == 0 {
+            return 0.0;
+        }
+        self.sched_ns as f64 / self.total_ns as f64
+    }
+
+    /// Accumulate another run's counters (for averaging across batches).
+    pub fn merge(&mut self, o: &RunMetrics) {
+        self.total_ns += o.total_ns;
+        self.attn_ns += o.attn_ns;
+        self.gate_ns += o.gate_ns;
+        self.prefetch_gate_ns += o.prefetch_gate_ns;
+        self.moe_ns += o.moe_ns;
+        self.moe_cpu_busy_ns += o.moe_cpu_busy_ns;
+        self.moe_gpu_busy_ns += o.moe_gpu_busy_ns;
+        self.stall_ns += o.stall_ns;
+        self.sched_ns += o.sched_ns;
+        self.pcie_busy_ns += o.pcie_busy_ns;
+        self.pcie_demand_bytes += o.pcie_demand_bytes;
+        self.pcie_prefetch_bytes += o.pcie_prefetch_bytes;
+        self.pcie_cache_bytes += o.pcie_cache_bytes;
+        self.cache_hits += o.cache_hits;
+        self.cache_lookups += o.cache_lookups;
+        self.prefetch_issued += o.prefetch_issued;
+        self.prefetch_useful += o.prefetch_useful;
+        self.tokens_in += o.tokens_in;
+        self.tokens_out += o.tokens_out;
+        self.layer_steps += o.layer_steps;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_handle_zero_denominators() {
+        let m = RunMetrics::default();
+        assert_eq!(m.tokens_per_s(), 0.0);
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        assert_eq!(m.prefetch_accuracy(), 0.0);
+        assert_eq!(m.pcie_time_share(), 0.0);
+    }
+
+    #[test]
+    fn tokens_per_s_math() {
+        let m = RunMetrics { total_ns: 2_000_000_000, tokens_out: 10, ..Default::default() };
+        assert!((m.tokens_per_s() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RunMetrics { total_ns: 10, cache_hits: 1, cache_lookups: 2, ..Default::default() };
+        let b = RunMetrics { total_ns: 5, cache_hits: 1, cache_lookups: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.total_ns, 15);
+        assert!((a.cache_hit_rate() - 0.5).abs() < 1e-9);
+    }
+}

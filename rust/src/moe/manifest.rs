@@ -1,0 +1,120 @@
+//! `artifacts/<preset>/manifest.json` loader.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{Buckets, ModelDims};
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed manifest plus the directory it came from.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub dims: ModelDims,
+    pub buckets: Buckets,
+    pub artifacts: BTreeMap<String, String>,
+    pub weights: BTreeMap<String, WeightEntry>,
+    pub golden: String,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(preset_dir: &Path) -> Result<Self> {
+        let path = preset_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for (k, a) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), a.as_str()?.to_string());
+        }
+        let mut weights = BTreeMap::new();
+        for (k, w) in v.get("weights")?.as_obj()? {
+            weights.insert(
+                k.clone(),
+                WeightEntry {
+                    file: w.get("file")?.as_str()?.to_string(),
+                    shape: w.get("shape")?.as_usize_vec()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            preset: v.get("preset")?.as_str()?.to_string(),
+            dims: ModelDims::from_json(v.get("dims")?)?,
+            buckets: Buckets::from_json(v.get("buckets")?)?,
+            artifacts,
+            weights,
+            golden: v.get("golden")?.as_str()?.to_string(),
+            dir: preset_dir.to_path_buf(),
+        })
+    }
+
+    /// Load `artifacts/<preset>` under the repo root.
+    pub fn load_preset(preset: &str) -> Result<Self> {
+        Self::load(&crate::util::artifacts_dir().join(preset))
+    }
+
+    /// Absolute path of a named HLO artifact (e.g. `expert_t8`).
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest (preset {})", self.preset))?;
+        Ok(self.dir.join(f))
+    }
+
+    pub fn golden_path(&self) -> PathBuf {
+        self.dir.join(&self.golden)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_all_presets() {
+        for preset in ["mixtral-sim", "deepseek-sim", "qwen-sim"] {
+            let m = Manifest::load_preset(preset).unwrap();
+            assert_eq!(m.preset, preset);
+            assert!(!m.artifacts.is_empty());
+            assert!(!m.weights.is_empty());
+            // every token bucket has its four artifacts
+            for t in &m.buckets.tokens {
+                for kind in ["embed", "gate", "expert", "head"] {
+                    let name = format!("{kind}_t{t}");
+                    assert!(m.artifact_path(&name).unwrap().exists(), "{name} missing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expert_weights_complete() {
+        let m = Manifest::load_preset("mixtral-sim").unwrap();
+        for l in 0..m.dims.layers {
+            for e in 0..m.dims.n_routed {
+                for w in ["w1", "w2", "w3"] {
+                    let key = format!("layer.{l}.moe.expert.{e}.{w}");
+                    let entry = m.weights.get(&key).expect(&key);
+                    assert!(m.dir.join(&entry.file).exists());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::load_preset("mixtral-sim").unwrap();
+        assert!(m.artifact_path("nope_t1").is_err());
+    }
+}

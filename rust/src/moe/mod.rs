@@ -1,0 +1,13 @@
+//! Model-side substrate: artifact manifests and the host weight store.
+//!
+//! Mirrors what `python/compile/aot.py` wrote into `artifacts/<preset>/`:
+//! the manifest (dims + bucket lists + file index), the flat-f32 weight
+//! binaries (all experts live in host DRAM, exactly like the paper's
+//! deployment where CPU memory holds every expert), and the golden
+//! reference activations used by integration tests.
+
+pub mod manifest;
+pub mod weights;
+
+pub use manifest::Manifest;
+pub use weights::WeightStore;

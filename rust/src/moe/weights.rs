@@ -1,0 +1,136 @@
+//! Host (CPU DRAM) weight store — "during deployment, all expert weights are
+//! stored in CPU DRAM" (paper §4). Loads the flat-f32 binaries once and hands
+//! out slices; the runtime wraps them in PJRT literals on demand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// One named tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All model weights, keyed by the manifest's flat names.
+pub struct WeightStore {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn load(m: &Manifest) -> Result<Self> {
+        let mut tensors = BTreeMap::new();
+        for (name, entry) in &m.weights {
+            let path = m.dir.join(&entry.file);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading weight {}", path.display()))?;
+            let numel: usize = entry.shape.iter().product();
+            if bytes.len() != numel * 4 {
+                bail!(
+                    "weight {name}: file has {} bytes, shape {:?} needs {}",
+                    bytes.len(),
+                    entry.shape,
+                    numel * 4
+                );
+            }
+            let mut data = vec![0f32; numel];
+            for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            tensors.insert(name.clone(), Tensor { shape: entry.shape.clone(), data });
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("weight '{name}' not loaded"))
+    }
+
+    /// (w1, w2, w3) of a routed expert.
+    pub fn expert(&self, layer: usize, expert: usize) -> Result<[&Tensor; 3]> {
+        Ok([
+            self.get(&format!("layer.{layer}.moe.expert.{expert}.w1"))?,
+            self.get(&format!("layer.{layer}.moe.expert.{expert}.w2"))?,
+            self.get(&format!("layer.{layer}.moe.expert.{expert}.w3"))?,
+        ])
+    }
+
+    /// (w1, w2, w3) of a shared expert.
+    pub fn shared_expert(&self, layer: usize, idx: usize) -> Result<[&Tensor; 3]> {
+        Ok([
+            self.get(&format!("layer.{layer}.moe.shared.{idx}.w1"))?,
+            self.get(&format!("layer.{layer}.moe.shared.{idx}.w2"))?,
+            self.get(&format!("layer.{layer}.moe.shared.{idx}.w3"))?,
+        ])
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    /// Total resident bytes (f32 host copies).
+    pub fn host_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.numel() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_mixtral_weights() {
+        let m = Manifest::load_preset("mixtral-sim").unwrap();
+        let w = WeightStore::load(&m).unwrap();
+        let emb = w.get("embed.table").unwrap();
+        assert_eq!(emb.shape, vec![m.dims.vocab, m.dims.hidden]);
+        assert_eq!(emb.numel(), m.dims.vocab * m.dims.hidden);
+        let [w1, w2, w3] = w.expert(0, 0).unwrap();
+        assert_eq!(w1.shape, vec![m.dims.hidden, m.dims.moe_inter]);
+        assert_eq!(w2.shape, vec![m.dims.moe_inter, m.dims.hidden]);
+        assert_eq!(w3.shape, vec![m.dims.hidden, m.dims.moe_inter]);
+        assert!(w.host_bytes() > 1_000_000);
+    }
+
+    #[test]
+    fn clustered_embeddings_have_intra_cluster_similarity() {
+        // The corpus generator relies on vocab clusters (DESIGN.md §1);
+        // verify the python-side structure actually landed in the weights.
+        let m = Manifest::load_preset("mixtral-sim").unwrap();
+        let w = WeightStore::load(&m).unwrap();
+        let emb = w.get("embed.table").unwrap();
+        let d = m.dims.hidden;
+        let block = m.dims.vocab / 16;
+        let cos = |a: &[f32], b: &[f32]| {
+            let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+            dot / (na * nb)
+        };
+        // same cluster: tokens 0 and 1; different clusters: 0 and block*8
+        let t0 = &emb.data[0..d];
+        let t1 = &emb.data[d..2 * d];
+        let tf = &emb.data[8 * block * d..8 * block * d + d];
+        assert!(cos(t0, t1) > 0.5, "intra-cluster cos = {}", cos(t0, t1));
+        assert!(cos(t0, tf) < 0.5, "inter-cluster cos = {}", cos(t0, tf));
+    }
+
+    #[test]
+    fn missing_weight_errors() {
+        let m = Manifest::load_preset("mixtral-sim").unwrap();
+        let w = WeightStore::load(&m).unwrap();
+        assert!(w.get("layer.99.moe.expert.0.w1").is_err());
+        assert!(w.expert(0, 999).is_err());
+    }
+}

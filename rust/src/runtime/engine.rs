@@ -1,0 +1,377 @@
+//! The PJRT execution engine.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute_b`, with
+//!
+//! * lazy per-artifact compilation (compile once, cached),
+//! * shape **bucketing + zero padding** (PJRT shapes are static; the engine
+//!   picks the smallest bucket ≥ the live token count and slices the
+//!   result),
+//! * **device-resident weight buffers**: weights are uploaded once on first
+//!   use and passed as `PjRtBuffer`s thereafter; only transient activations
+//!   cross host↔device per call (EXPERIMENTS.md §Perf documents the win
+//!   over per-call literal uploads).
+//!
+//! All artifacts were lowered with `return_tuple=True`, so every execution
+//! returns a tuple literal that is decomposed here.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::config::Buckets;
+use crate::moe::{Manifest, WeightStore};
+
+/// An executable argument: transient host data (uploaded per call) or a
+/// named weight (uploaded once, cached on device).
+enum Arg {
+    Host(Literal),
+    Weight(String),
+}
+
+/// Lazily-compiling PJRT engine for one model preset.
+pub struct PjrtEngine {
+    client: PjRtClient,
+    manifest: Manifest,
+    store: WeightStore,
+    exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// Device-resident weight buffers, uploaded once on first use. The
+    /// source literal is kept alive alongside: PJRT's BufferFromHostLiteral
+    /// may alias or transfer asynchronously, so the host memory must
+    /// outlive the buffer.
+    wbufs: RefCell<HashMap<String, (Rc<Literal>, Rc<PjRtBuffer>)>>,
+    /// Wall-clock + call-count profiling (perf pass instrumentation).
+    pub exec_calls: Cell<u64>,
+    pub exec_wall_ns: Cell<u64>,
+}
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if data.len() != n {
+        bail!("literal shape {:?} needs {} elems, got {}", dims, n, data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+impl PjrtEngine {
+    /// Load `artifacts/<preset>` and start a CPU PJRT client.
+    pub fn load(preset: &str) -> Result<Self> {
+        let manifest = Manifest::load_preset(preset)?;
+        let store = WeightStore::load(&manifest)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            store,
+            exes: RefCell::new(HashMap::new()),
+            wbufs: RefCell::new(HashMap::new()),
+            exec_calls: Cell::new(0),
+            exec_wall_ns: Cell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn store(&self) -> &WeightStore {
+        &self.store
+    }
+
+    /// Compile (or fetch cached) the named artifact.
+    fn exe(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))?,
+        );
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Device buffer for a named weight (uploaded once).
+    fn weight_buf(&self, name: &str) -> Result<Rc<PjRtBuffer>> {
+        if let Some((_, b)) = self.wbufs.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let t = self.store.get(name)?;
+        let lit = Rc::new(lit_f32(&t.data, &t.shape)?);
+        let buf = Rc::new(
+            self.client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("uploading weight {name}: {e}"))?,
+        );
+        self.wbufs.borrow_mut().insert(name.to_string(), (lit, buf.clone()));
+        Ok(buf)
+    }
+
+    /// Execute an artifact (host args uploaded, weights device-cached) and
+    /// decompose the result tuple.
+    fn run(&self, name: &str, args: Vec<Arg>) -> Result<Vec<Literal>> {
+        let exe = self.exe(name)?;
+        let t0 = std::time::Instant::now();
+        let mut bufs: Vec<Rc<PjRtBuffer>> = Vec::with_capacity(args.len());
+        // Host literals must stay alive until execution completes
+        // (BufferFromHostLiteral may alias / transfer asynchronously).
+        let mut held: Vec<Literal> = Vec::new();
+        for a in args {
+            match a {
+                Arg::Host(lit) => {
+                    bufs.push(Rc::new(
+                        self.client
+                            .buffer_from_host_literal(None, &lit)
+                            .map_err(|e| anyhow!("uploading arg for {name}: {e}"))?,
+                    ));
+                    held.push(lit);
+                }
+                Arg::Weight(w) => bufs.push(self.weight_buf(&w)?),
+            }
+        }
+        let refs: Vec<&PjRtBuffer> = bufs.iter().map(|b| b.as_ref()).collect();
+        let result =
+            exe.execute_b::<&PjRtBuffer>(&refs).map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        drop(held); // safe: to_literal_sync forces completion
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        self.exec_wall_ns.set(self.exec_wall_ns.get() + t0.elapsed().as_nanos() as u64);
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))
+    }
+
+    fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+    }
+
+    fn bucket_tokens(&self, t: usize) -> Result<usize> {
+        let b = Buckets::pick(&self.manifest.buckets.tokens, t);
+        if b < t {
+            bail!("token count {t} exceeds largest bucket {b}; split the batch");
+        }
+        Ok(b)
+    }
+
+    // --- typed wrappers -----------------------------------------------------
+
+    /// Token + position embedding. `tokens.len() == pos.len() == t`.
+    /// Returns `(t, hidden)` row-major.
+    pub fn embed(&self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let d = self.manifest.dims.hidden;
+        let t = tokens.len();
+        let b = self.bucket_tokens(t)?;
+        let mut tk = tokens.to_vec();
+        let mut ps = pos.to_vec();
+        tk.resize(b, 0);
+        ps.resize(b, 0);
+        let out = self.run(
+            &format!("embed_t{b}"),
+            vec![
+                Arg::Host(lit_i32(&tk, &[b])?),
+                Arg::Host(lit_i32(&ps, &[b])?),
+                Arg::Weight("embed.table".into()),
+                Arg::Weight("embed.pos".into()),
+            ],
+        )?;
+        let mut x = Self::to_vec_f32(&out[0])?;
+        x.truncate(t * d);
+        Ok(x)
+    }
+
+    /// Fused RMSNorm + gate + softmax for MoE layer `layer` on `t` rows of
+    /// `h`. Returns `(probs (t,N), xn (t,d))`.
+    pub fn gate(&self, layer: usize, h: &[f32], t: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = self.manifest.dims.hidden;
+        let n = self.manifest.dims.n_routed;
+        let b = self.bucket_tokens(t)?;
+        let mut hp = h.to_vec();
+        hp.resize(b * d, 0.0);
+        let out = self.run(
+            &format!("gate_t{b}"),
+            vec![
+                Arg::Host(lit_f32(&hp, &[b, d])?),
+                Arg::Weight(format!("layer.{layer}.moe.norm")),
+                Arg::Weight(format!("layer.{layer}.moe.gate")),
+            ],
+        )?;
+        let mut probs = Self::to_vec_f32(&out[0])?;
+        let mut xn = Self::to_vec_f32(&out[1])?;
+        probs.truncate(t * n);
+        xn.truncate(t * d);
+        Ok((probs, xn))
+    }
+
+    fn expert_inner(&self, w: [String; 3], xn_rows: &[f32], t: usize) -> Result<Vec<f32>> {
+        let d = self.manifest.dims.hidden;
+        let b = self.bucket_tokens(t)?;
+        let mut xp = xn_rows.to_vec();
+        xp.resize(b * d, 0.0);
+        let [w1, w2, w3] = w;
+        let out = self.run(
+            &format!("expert_t{b}"),
+            vec![
+                Arg::Host(lit_f32(&xp, &[b, d])?),
+                Arg::Weight(w1),
+                Arg::Weight(w2),
+                Arg::Weight(w3),
+            ],
+        )?;
+        let mut y = Self::to_vec_f32(&out[0])?;
+        y.truncate(t * d);
+        Ok(y)
+    }
+
+    /// Run routed expert `expert` of `layer` on `t` gathered rows.
+    pub fn expert_routed(
+        &self,
+        layer: usize,
+        expert: usize,
+        xn_rows: &[f32],
+        t: usize,
+    ) -> Result<Vec<f32>> {
+        self.expert_inner(
+            [
+                format!("layer.{layer}.moe.expert.{expert}.w1"),
+                format!("layer.{layer}.moe.expert.{expert}.w2"),
+                format!("layer.{layer}.moe.expert.{expert}.w3"),
+            ],
+            xn_rows,
+            t,
+        )
+    }
+
+    /// Run shared expert `idx` of `layer` on all `t` rows.
+    pub fn expert_shared(
+        &self,
+        layer: usize,
+        idx: usize,
+        xn_rows: &[f32],
+        t: usize,
+    ) -> Result<Vec<f32>> {
+        self.expert_inner(
+            [
+                format!("layer.{layer}.moe.shared.{idx}.w1"),
+                format!("layer.{layer}.moe.shared.{idx}.w2"),
+                format!("layer.{layer}.moe.shared.{idx}.w3"),
+            ],
+            xn_rows,
+            t,
+        )
+    }
+
+    fn attn_weight_args(&self, layer: usize) -> Vec<Arg> {
+        ["norm", "wq", "wk", "wv", "wo"]
+            .into_iter()
+            .map(|nm| Arg::Weight(format!("layer.{layer}.attn.{nm}")))
+            .collect()
+    }
+
+    /// Causal prefill attention for one sequence of `s` tokens.
+    /// Returns `(h (s,d), k (s,H,hd), v (s,H,hd))`.
+    pub fn attn_prefill(
+        &self,
+        layer: usize,
+        x: &[f32],
+        s: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let d = self.manifest.dims.hidden;
+        let b = Buckets::pick(&self.manifest.buckets.prefill_seq, s);
+        if b < s {
+            bail!("prefill length {s} exceeds largest bucket {b}");
+        }
+        let mut xp = x.to_vec();
+        xp.resize(b * d, 0.0);
+        let mut args = vec![Arg::Host(lit_f32(&xp, &[b, d])?)];
+        args.extend(self.attn_weight_args(layer));
+        let out = self.run(&format!("attn_prefill_s{b}"), args)?;
+        let heads = self.manifest.dims.heads;
+        let hd = self.manifest.dims.head_dim;
+        let mut h = Self::to_vec_f32(&out[0])?;
+        let mut k = Self::to_vec_f32(&out[1])?;
+        let mut v = Self::to_vec_f32(&out[2])?;
+        h.truncate(s * d);
+        k.truncate(s * heads * hd);
+        v.truncate(s * heads * hd);
+        Ok((h, k, v))
+    }
+
+    /// One decode attention step for `nb` sequences.
+    ///
+    /// `k_cache`/`v_cache` are `(nb, max_seq, H, hd)` row-major and are
+    /// returned updated (new K/V written at each sequence's `pos`).
+    pub fn attn_decode(
+        &self,
+        layer: usize,
+        x: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        pos: &[i32],
+        nb: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let dm = &self.manifest.dims;
+        let d = dm.hidden;
+        let cache_row = dm.max_seq * dm.heads * dm.head_dim;
+        let b = Buckets::pick(&self.manifest.buckets.decode_batch, nb);
+        if b < nb {
+            bail!("decode batch {nb} exceeds largest bucket {b}; split the batch");
+        }
+        let mut xp = x.to_vec();
+        xp.resize(b * d, 0.0);
+        let mut kc = k_cache.to_vec();
+        let mut vc = v_cache.to_vec();
+        kc.resize(b * cache_row, 0.0);
+        vc.resize(b * cache_row, 0.0);
+        let mut ps = pos.to_vec();
+        ps.resize(b, 0);
+        let mut args = vec![
+            Arg::Host(lit_f32(&xp, &[b, d])?),
+            Arg::Host(lit_f32(&kc, &[b, dm.max_seq, dm.heads, dm.head_dim])?),
+            Arg::Host(lit_f32(&vc, &[b, dm.max_seq, dm.heads, dm.head_dim])?),
+            Arg::Host(lit_i32(&ps, &[b])?),
+        ];
+        args.extend(self.attn_weight_args(layer));
+        let out = self.run(&format!("attn_decode_b{b}"), args)?;
+        let mut h = Self::to_vec_f32(&out[0])?;
+        let mut kco = Self::to_vec_f32(&out[1])?;
+        let mut vco = Self::to_vec_f32(&out[2])?;
+        h.truncate(nb * d);
+        kco.truncate(nb * cache_row);
+        vco.truncate(nb * cache_row);
+        Ok((h, kco, vco))
+    }
+
+    /// Final norm + tied LM head on `t` rows. Returns `(t, vocab)` logits.
+    pub fn head(&self, h: &[f32], t: usize) -> Result<Vec<f32>> {
+        let d = self.manifest.dims.hidden;
+        let v = self.manifest.dims.vocab;
+        let b = self.bucket_tokens(t)?;
+        let mut hp = h.to_vec();
+        hp.resize(b * d, 0.0);
+        let out = self.run(
+            &format!("head_t{b}"),
+            vec![
+                Arg::Host(lit_f32(&hp, &[b, d])?),
+                Arg::Weight("final.norm".into()),
+                Arg::Weight("embed.table".into()),
+            ],
+        )?;
+        let mut logits = Self::to_vec_f32(&out[0])?;
+        logits.truncate(t * v);
+        Ok(logits)
+    }
+}

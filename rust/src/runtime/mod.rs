@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client. This is the only place real (wall-clock) compute
+//! happens on the request path; everything it returns is *numerics* —
+//! timing comes from [`crate::hw`].
+
+pub mod engine;
+
+pub use engine::PjrtEngine;

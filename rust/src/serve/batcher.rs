@@ -1,0 +1,236 @@
+//! Dynamic request batcher + engine worker.
+//!
+//! Requests are grouped by (prompt length, max_tokens); a group is
+//! dispatched when it reaches `max_batch` or its oldest request has waited
+//! `max_wait`. The worker thread owns the live engine and a fresh
+//! [`StepSimulator`] per batch, so each response carries the simulated
+//! local-PC latency alongside the wall-clock numbers.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::Presets;
+use crate::coordinator::engine::InferenceEngine;
+use crate::coordinator::frameworks::{Framework, FrameworkCfg};
+use crate::coordinator::simrun::{Phase, StepSimulator};
+use crate::hw::CostModel;
+use crate::workload::prep;
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub tokens: Vec<i32>,
+    /// Wall-clock time this request spent queued + executing.
+    pub wall_ms: f64,
+    /// Simulated local-PC time for the batch that served this request.
+    pub sim_ms: f64,
+    /// Simulated decode throughput of that batch.
+    pub sim_tokens_per_s: f64,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherCfg {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub framework: Framework,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(50), framework: Framework::Dali }
+    }
+}
+
+struct Pending {
+    req: GenRequest,
+    resp_tx: Sender<Result<GenResponse, String>>,
+    enqueued: Instant,
+}
+
+/// Aggregate serving metrics (exposed at `/metrics`).
+#[derive(Debug, Default, Clone)]
+pub struct ServeMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens_out: u64,
+    pub wall_ms_sum: f64,
+    pub sim_ms_sum: f64,
+    pub errors: u64,
+}
+
+/// The batching router. Handles enqueue from any thread; a single worker
+/// thread drains groups into the engine.
+pub struct Batcher {
+    queue: Arc<Mutex<BTreeMap<(usize, usize), Vec<Pending>>>>,
+    pub metrics: Arc<Mutex<ServeMetrics>>,
+    cfg: BatcherCfg,
+    stop: Arc<Mutex<bool>>,
+}
+
+impl Batcher {
+    /// Start the worker thread for `preset`. Blocks until the engine has
+    /// loaded (so the server only accepts once ready).
+    pub fn start(preset: &str, cfg: BatcherCfg) -> Result<Arc<Batcher>> {
+        let presets = Presets::load_default()?;
+        let model = presets.model(preset)?;
+        let hw = presets.hw("local-pc")?;
+        let cost = CostModel::new(model, hw);
+        let calib = prep::ensure_calib(preset)?;
+        let dims = model.sim.clone();
+        let b = Arc::new(Batcher {
+            queue: Arc::new(Mutex::new(BTreeMap::new())),
+            metrics: Arc::new(Mutex::new(ServeMetrics::default())),
+            cfg: cfg.clone(),
+            stop: Arc::new(Mutex::new(false)),
+        });
+        let bw = b.clone();
+        let preset = preset.to_string();
+        // The engine holds PJRT handles (Rc, not Send): it is created and
+        // owned entirely inside the worker thread; readiness is signalled
+        // back so start() fails fast on load errors.
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        std::thread::spawn(move || {
+            let engine = match InferenceEngine::new(&preset) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            let fwcfg = FrameworkCfg::paper_default(&dims);
+            loop {
+                if *bw.stop.lock().unwrap() {
+                    break;
+                }
+                let batch = bw.take_ready_batch();
+                match batch {
+                    None => std::thread::sleep(Duration::from_millis(2)),
+                    Some(group) => {
+                        bw.run_group(&engine, &cost, &calib.freq, &fwcfg, &dims, group);
+                    }
+                }
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(b),
+            Ok(Err(e)) => anyhow::bail!("engine load failed: {e}"),
+            Err(_) => anyhow::bail!("engine worker died during startup"),
+        }
+    }
+
+    pub fn shutdown(&self) {
+        *self.stop.lock().unwrap() = true;
+    }
+
+    /// Enqueue a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenRequest) -> Receiver<Result<GenResponse, String>> {
+        let (tx, rx) = channel();
+        let key = (req.prompt.len(), req.max_tokens);
+        self.queue
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_default()
+            .push(Pending { req, resp_tx: tx, enqueued: Instant::now() });
+        rx
+    }
+
+    fn take_ready_batch(&self) -> Option<Vec<Pending>> {
+        let mut q = self.queue.lock().unwrap();
+        let key = q
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .find(|(_, v)| {
+                v.len() >= self.cfg.max_batch
+                    || v.iter().any(|p| p.enqueued.elapsed() >= self.cfg.max_wait)
+            })
+            .map(|(k, _)| *k)?;
+        let v = q.get_mut(&key).unwrap();
+        let n = v.len().min(self.cfg.max_batch);
+        let group: Vec<Pending> = v.drain(..n).collect();
+        if v.is_empty() {
+            q.remove(&key);
+        }
+        Some(group)
+    }
+
+    fn run_group(
+        &self,
+        engine: &InferenceEngine,
+        cost: &CostModel,
+        calib_freq: &[Vec<f64>],
+        fwcfg: &FrameworkCfg,
+        dims: &crate::config::ModelDims,
+        group: Vec<Pending>,
+    ) {
+        let t0 = Instant::now();
+        let prompts: Vec<Vec<i32>> = group.iter().map(|p| p.req.prompt.clone()).collect();
+        let steps = group[0].req.max_tokens;
+        let nb = group.len();
+        // live numerics (record a trace so the simulator can time it)
+        let result = engine.run_batch(&prompts, steps, true);
+        match result {
+            Err(e) => {
+                let mut m = self.metrics.lock().unwrap();
+                m.errors += group.len() as u64;
+                drop(m);
+                for p in group {
+                    let _ = p.resp_tx.send(Err(format!("engine error: {e:#}")));
+                }
+            }
+            Ok(out) => {
+                // virtual-time pass over the recorded routing
+                let trace = out.trace.as_ref().expect("trace requested");
+                let bundle = self.cfg.framework.bundle(dims, cost, calib_freq, fwcfg);
+                let mut sim = StepSimulator::new(
+                    cost,
+                    bundle,
+                    calib_freq.to_vec(),
+                    dims.layers,
+                    dims.n_routed,
+                    dims.n_shared,
+                    42,
+                );
+                let ids: Vec<usize> = (0..nb).collect();
+                sim.run_step(&trace.compose_prefill(&ids), prompts[0].len() / 2, Phase::Prefill);
+                for s in 0..trace.min_steps() {
+                    sim.run_step(&trace.compose_decode(&ids, s), prompts[0].len() + s, Phase::Decode);
+                }
+                let metrics = sim.finish();
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let sim_ms = metrics.total_ns as f64 / 1e6;
+                let tps = metrics.tokens_per_s();
+                {
+                    let mut m = self.metrics.lock().unwrap();
+                    m.requests += nb as u64;
+                    m.batches += 1;
+                    m.tokens_out += (steps * nb) as u64;
+                    m.wall_ms_sum += wall_ms;
+                    m.sim_ms_sum += sim_ms;
+                }
+                for (i, p) in group.into_iter().enumerate() {
+                    let _ = p.resp_tx.send(Ok(GenResponse {
+                        tokens: out.generated[i].clone(),
+                        wall_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
+                        sim_ms,
+                        sim_tokens_per_s: tps,
+                        batch_size: nb,
+                    }));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Minimal HTTP/1.1 request/response handling over std::net.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Read one HTTP request from a stream (supports Content-Length bodies).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line: {line:?}");
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body).context("reading body")?;
+    }
+    Ok(Request { method, path, body })
+}
+
+/// Write an HTTP response with a JSON (or plain) body.
+pub fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Tiny blocking HTTP client for tests/examples: POST or GET, returns body.
+pub fn http_call(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<String> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let b = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{b}",
+        b.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let idx = buf.find("\r\n\r\n").context("no header/body separator")?;
+    Ok(buf[idx + 4..].to_string())
+}

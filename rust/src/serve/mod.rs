@@ -1,0 +1,18 @@
+//! Serving front-end: request router + dynamic batcher + HTTP server.
+//!
+//! The paper's system is an inference *server* for local PCs; this module
+//! is the deployment wrapper around the engine: requests arrive over HTTP,
+//! are bucketed by prompt length and dynamically batched (vLLM-router
+//! style), executed by a dedicated engine worker thread (real PJRT
+//! numerics + DALI-scheduled virtual timing), and answered with generated
+//! tokens plus both wall-clock and simulated-platform latencies.
+//!
+//! The offline build has no tokio; the server is a small, dependency-free
+//! threaded HTTP/1.1 implementation (`http.rs`) — connection-per-thread is
+//! entirely adequate for a local-PC serving frontend.
+
+pub mod batcher;
+pub mod http;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherCfg, GenRequest, GenResponse};

@@ -1,0 +1,131 @@
+//! HTTP server: routes requests into the [`Batcher`].
+//!
+//! Endpoints:
+//! * `GET /health` — liveness + preset info;
+//! * `GET /metrics` — aggregate serving counters (JSON);
+//! * `POST /generate` — `{"prompt": [int token ids], "max_tokens": n}` →
+//!   `{"tokens": [...], "wall_ms": ..., "sim_ms": ..., "sim_tokens_per_s":
+//!   ..., "batch_size": ...}`.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::batcher::{Batcher, BatcherCfg, GenRequest};
+use super::http::{read_request, write_response};
+use crate::coordinator::frameworks::Framework;
+use crate::util::json::Value;
+
+fn handle(batcher: &Arc<Batcher>, preset: &str, stream: &mut TcpStream) -> Result<()> {
+    let req = read_request(stream)?;
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let body = Value::obj(vec![
+                ("status", Value::str("ok")),
+                ("preset", Value::str(preset)),
+            ]);
+            write_response(stream, 200, "application/json", &body.to_json())
+        }
+        ("GET", "/metrics") => {
+            let m = batcher.metrics.lock().unwrap().clone();
+            let body = Value::obj(vec![
+                ("requests", Value::num(m.requests as f64)),
+                ("batches", Value::num(m.batches as f64)),
+                ("tokens_out", Value::num(m.tokens_out as f64)),
+                ("errors", Value::num(m.errors as f64)),
+                ("wall_ms_sum", Value::num(m.wall_ms_sum)),
+                ("sim_ms_sum", Value::num(m.sim_ms_sum)),
+                (
+                    "avg_batch",
+                    Value::num(if m.batches > 0 {
+                        m.requests as f64 / m.batches as f64
+                    } else {
+                        0.0
+                    }),
+                ),
+            ]);
+            write_response(stream, 200, "application/json", &body.to_json())
+        }
+        ("POST", "/generate") => {
+            let text = String::from_utf8(req.body).context("body not utf-8")?;
+            let v = match Value::parse(&text) {
+                Ok(v) => v,
+                Err(e) => {
+                    return write_response(stream, 400, "application/json",
+                        &Value::obj(vec![("error", Value::str(format!("bad json: {e}")))]).to_json());
+                }
+            };
+            let prompt: Vec<i32> = match v.get("prompt").and_then(|p| p.as_usize_vec()) {
+                Ok(p) => p.into_iter().map(|t| t as i32).collect(),
+                Err(e) => {
+                    return write_response(stream, 400, "application/json",
+                        &Value::obj(vec![("error", Value::str(format!("{e}")))]).to_json());
+                }
+            };
+            let max_tokens = v.opt("max_tokens").and_then(|x| x.as_usize().ok()).unwrap_or(16);
+            let rx = batcher.submit(GenRequest { prompt, max_tokens });
+            match rx.recv() {
+                Ok(Ok(resp)) => {
+                    let body = Value::obj(vec![
+                        (
+                            "tokens",
+                            Value::arr(resp.tokens.iter().map(|&t| Value::num(t as f64)).collect()),
+                        ),
+                        ("wall_ms", Value::num(resp.wall_ms)),
+                        ("sim_ms", Value::num(resp.sim_ms)),
+                        ("sim_tokens_per_s", Value::num(resp.sim_tokens_per_s)),
+                        ("batch_size", Value::num(resp.batch_size as f64)),
+                    ]);
+                    write_response(stream, 200, "application/json", &body.to_json())
+                }
+                Ok(Err(e)) => write_response(stream, 500, "application/json",
+                    &Value::obj(vec![("error", Value::str(e))]).to_json()),
+                Err(_) => write_response(stream, 500, "application/json",
+                    &Value::obj(vec![("error", Value::str("worker gone"))]).to_json()),
+            }
+        }
+        _ => write_response(stream, 404, "application/json",
+            &Value::obj(vec![("error", Value::str("not found"))]).to_json()),
+    }
+}
+
+/// Start serving and never return (unless bind/engine setup fails).
+pub fn serve_blocking(preset: &str, port: u16, framework: Framework) -> Result<()> {
+    let batcher = Batcher::start(preset, BatcherCfg { framework, ..Default::default() })?;
+    let listener =
+        TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding port {port}"))?;
+    eprintln!("[serve] {preset} via {} on http://127.0.0.1:{port}", framework.name());
+    accept_loop(listener, batcher, preset)
+}
+
+/// Bind to an ephemeral port and return (port, join-handle). Used by tests
+/// and the serve_batch example.
+pub fn serve_background(preset: &str, framework: Framework, cfg: BatcherCfg) -> Result<u16> {
+    let batcher = Batcher::start(preset, BatcherCfg { framework, ..cfg })?;
+    let listener = TcpListener::bind(("127.0.0.1", 0)).context("binding ephemeral port")?;
+    let port = listener.local_addr()?.port();
+    let preset = preset.to_string();
+    std::thread::spawn(move || {
+        let _ = accept_loop(listener, batcher, &preset);
+    });
+    Ok(port)
+}
+
+fn accept_loop(listener: TcpListener, batcher: Arc<Batcher>, preset: &str) -> Result<()> {
+    for stream in listener.incoming() {
+        match stream {
+            Ok(mut s) => {
+                let b = batcher.clone();
+                let p = preset.to_string();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle(&b, &p, &mut s) {
+                        eprintln!("[serve] connection error: {e:#}");
+                    }
+                });
+            }
+            Err(e) => eprintln!("[serve] accept error: {e}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Tiny CLI argument parser (the offline build has no clap).
+//!
+//! Grammar: positionals + `--flag value` + `--flag=value` + bare `--flag`
+//! (boolean true).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // NB: a bare flag consumes the next token as its value unless that
+        // token is another flag — so bare booleans go last or before flags.
+        let a = parse("run fig12 --preset mixtral-sim --batch 8 --verbose");
+        assert_eq!(a.positional, vec!["run", "fig12"]);
+        assert_eq!(a.get("preset"), Some("mixtral-sim"));
+        assert_eq!(a.usize_or("batch", 1), 8);
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn bare_flag_before_flag() {
+        let a = parse("--verbose --preset x");
+        assert!(a.bool("verbose"));
+        assert_eq!(a.get("preset"), Some("x"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--steps=64 --rate=1.5");
+        assert_eq!(a.usize_or("steps", 0), 64);
+        assert!((a.f64_or("rate", 0.0) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = parse("cmd");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert!(a.require("missing").is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! Small shared utilities: repo-relative paths, deterministic RNG, tables.
+
+use std::path::{Path, PathBuf};
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+pub use cli::Args;
+pub use json::Value;
+pub use rng::DetRng;
+pub use table::Table;
+
+/// A unique temp directory for tests (no tempfile crate offline).
+pub fn test_temp_dir(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "dali-test-{tag}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Locate the repository root (the directory containing `configs/presets.json`).
+///
+/// Resolution order: `$DALI_ROOT`, then the current directory and its
+/// ancestors, then the compile-time crate root. Experiments, tests, benches
+/// and examples all resolve artifact paths through this.
+pub fn repo_root() -> PathBuf {
+    if let Ok(root) = std::env::var("DALI_ROOT") {
+        return PathBuf::from(root);
+    }
+    let probe = |p: &Path| p.join("configs").join("presets.json").exists();
+    if let Ok(mut cur) = std::env::current_dir() {
+        loop {
+            if probe(&cur) {
+                return cur;
+            }
+            if !cur.pop() {
+                break;
+            }
+        }
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// `<repo>/artifacts`
+pub fn artifacts_dir() -> PathBuf {
+    repo_root().join("artifacts")
+}
+
+/// `<repo>/results` (experiment outputs)
+pub fn results_dir() -> PathBuf {
+    let d = repo_root().join("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Format a nanosecond count as a human-readable duration.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else {
+        format!("{}ns", ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_root_has_configs() {
+        assert!(repo_root().join("configs/presets.json").exists());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(5), "5ns");
+        assert_eq!(fmt_ns(1500), "1.5us");
+        assert_eq!(fmt_ns(2_500_000), "2.500ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000s");
+    }
+}

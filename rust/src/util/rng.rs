@@ -1,0 +1,190 @@
+//! Deterministic RNG used everywhere randomness is needed (the offline
+//! build has no `rand` crate; this is a self-contained PCG-XSH-RR).
+//!
+//! Every experiment seeds its own [`DetRng`] so tables/figures are exactly
+//! reproducible run-to-run; wall-clock nondeterminism never feeds results.
+
+/// Deterministic PCG32 (PCG-XSH-RR 64/32) with convenience helpers.
+#[derive(Debug, Clone)]
+pub struct DetRng {
+    state: u64,
+    inc: u64,
+}
+
+impl DetRng {
+    pub fn new(seed: u64) -> Self {
+        let mut r = DetRng { state: 0, inc: (seed << 1) | 1 };
+        r.next_u32();
+        r.state = r.state.wrapping_add(seed ^ 0x853c_49e6_748f_ea9b);
+        r.next_u32();
+        r
+    }
+
+    /// Derive a child RNG from a string tag (stable across runs).
+    pub fn derive(&self, tag: &str) -> Self {
+        let mut acc: u64 = 0xcbf2_9ce4_8422_2325 ^ self.inc;
+        for b in tag.bytes() {
+            acc = (acc ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+        }
+        DetRng::new(acc)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style unbiased bounded sampling.
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.usize_below(weights.len());
+        }
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = DetRng::new(42);
+        let mut b = DetRng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.usize_below(1000), b.usize_below(1000));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = DetRng::new(1);
+        let mut b = DetRng::new(2);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn derive_differs_by_tag() {
+        let root = DetRng::new(7);
+        let mut a = root.derive("alpha");
+        let mut b = root.derive("beta");
+        let va: Vec<usize> = (0..8).map(|_| a.usize_below(100)).collect();
+        let vb: Vec<usize> = (0..8).map(|_| b.usize_below(100)).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn bounded_sampling_in_range_and_covers() {
+        let mut r = DetRng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            let x = r.usize_below(7);
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues reachable");
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniformish() {
+        let mut r = DetRng::new(11);
+        let xs: Vec<f64> = (0..2000).map(|_| r.f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.03, "mean = {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = DetRng::new(13);
+        let xs: Vec<f64> = (0..4000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.06, "mean = {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var = {var}");
+    }
+
+    #[test]
+    fn weighted_respects_mass() {
+        let mut r = DetRng::new(1);
+        let w = [0.0, 0.0, 1.0];
+        for _ in 0..50 {
+            assert_eq!(r.weighted(&w), 2);
+        }
+    }
+
+    #[test]
+    fn chance_extremes() {
+        let mut r = DetRng::new(3);
+        assert!(!r.chance(0.0));
+        assert!(r.chance(1.0));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = DetRng::new(9);
+        let mut v: Vec<usize> = (0..32).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,164 @@
+//! Offline calibration data (paper §4.2 Eq. 11 + EdgeMoE's statistics).
+//!
+//! Produced once per preset by `InferenceEngine::calibrate` running prefill
+//! over the Wikitext-like calibration corpus:
+//!
+//! * `res_vec[l]` — the layer-l residual vector, the *token-averaged*
+//!   difference between adjacent layers' gate inputs (Eq. 11). Used by
+//!   Residual-Based Prefetching; reused across downstream tasks (Table 5).
+//! * `freq[l][e]` — expert activation frequency, the statistical predictor
+//!   EdgeMoE uses.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct CalibData {
+    pub preset: String,
+    /// Calibration tokens observed.
+    pub tokens: usize,
+    /// `res_vec[l]` for l in 0..layers-1 (last layer needs no prediction).
+    pub res_vec: Vec<Vec<f32>>,
+    /// Activation frequency per layer per routed expert.
+    pub freq: Vec<Vec<f64>>,
+}
+
+impl CalibData {
+    pub fn path_for(preset: &str) -> std::path::PathBuf {
+        crate::util::artifacts_dir().join("calib").join(format!("{preset}.json"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let v = Value::obj(vec![
+            ("preset", Value::str(self.preset.clone())),
+            ("tokens", Value::num(self.tokens as f64)),
+            (
+                "res_vec",
+                Value::arr(self.res_vec.iter().map(|r| Value::from_f32s(r)).collect()),
+            ),
+            ("freq", Value::arr(self.freq.iter().map(|f| Value::from_f64s(f)).collect())),
+        ]);
+        std::fs::write(path, v.to_json()).context("writing calib data")
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("opening calib {} — run `dali calibrate`", path.display()))?;
+        let v = Value::parse(&text).context("parsing calib data")?;
+        Ok(CalibData {
+            preset: v.get("preset")?.as_str()?.to_string(),
+            tokens: v.get("tokens")?.as_usize()?,
+            res_vec: v
+                .get("res_vec")?
+                .as_arr()?
+                .iter()
+                .map(|r| r.as_f32_vec())
+                .collect::<Result<_>>()?,
+            freq: v.get("freq")?.as_arr()?.iter().map(|f| f.as_f64_vec()).collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Accumulator used by the engine while streaming calibration tokens.
+#[derive(Debug, Clone)]
+pub struct CalibAccum {
+    layers: usize,
+    hidden: usize,
+    n_routed: usize,
+    pub tokens: usize,
+    diff_sum: Vec<Vec<f64>>,
+    act_count: Vec<Vec<u64>>,
+}
+
+impl CalibAccum {
+    pub fn new(layers: usize, hidden: usize, n_routed: usize) -> Self {
+        CalibAccum {
+            layers,
+            hidden,
+            n_routed,
+            tokens: 0,
+            diff_sum: vec![vec![0.0; hidden]; layers.saturating_sub(1)],
+            act_count: vec![vec![0; n_routed]; layers],
+        }
+    }
+
+    /// Observe one token's gate inputs at layers l and l+1.
+    pub fn observe_pair(&mut self, layer: usize, h_l: &[f32], h_next: &[f32]) {
+        debug_assert_eq!(h_l.len(), self.hidden);
+        let dst = &mut self.diff_sum[layer];
+        for i in 0..self.hidden {
+            dst[i] += (h_next[i] - h_l[i]) as f64;
+        }
+    }
+
+    /// Observe one token's routed experts at a layer.
+    pub fn observe_routing(&mut self, layer: usize, topk: &[usize]) {
+        for &e in topk {
+            self.act_count[layer][e] += 1;
+        }
+    }
+
+    pub fn add_tokens(&mut self, n: usize) {
+        self.tokens += n;
+    }
+
+    pub fn finish(self, preset: &str) -> CalibData {
+        let n = self.tokens.max(1) as f64;
+        CalibData {
+            preset: preset.to_string(),
+            tokens: self.tokens,
+            res_vec: self
+                .diff_sum
+                .into_iter()
+                .map(|v| v.into_iter().map(|x| (x / n) as f32).collect())
+                .collect(),
+            freq: self
+                .act_count
+                .into_iter()
+                .map(|v| v.into_iter().map(|c| c as f64 / n).collect())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_averages_residuals() {
+        let mut a = CalibAccum::new(2, 3, 4);
+        a.observe_pair(0, &[0.0, 0.0, 0.0], &[2.0, 4.0, 6.0]);
+        a.observe_pair(0, &[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]);
+        a.observe_routing(0, &[1, 2]);
+        a.observe_routing(1, &[0, 0]);
+        a.add_tokens(2);
+        let c = a.finish("t");
+        assert_eq!(c.res_vec.len(), 1);
+        assert!((c.res_vec[0][0] - 1.0).abs() < 1e-6);
+        assert!((c.res_vec[0][2] - 3.0).abs() < 1e-6);
+        assert!((c.freq[0][1] - 0.5).abs() < 1e-9);
+        assert!((c.freq[1][0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut a = CalibAccum::new(2, 2, 2);
+        a.observe_pair(0, &[0.0, 0.0], &[1.0, 1.0]);
+        a.add_tokens(1);
+        let c = a.finish("t");
+        let dir = crate::util::test_temp_dir("calib");
+        let p = dir.join("c.json");
+        c.save(&p).unwrap();
+        let c2 = CalibData::load(&p).unwrap();
+        assert_eq!(c2.res_vec, c.res_vec);
+        assert_eq!(c2.tokens, 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,130 @@
+//! Clustered-topic corpus generator.
+
+use crate::util::DetRng;
+
+/// Number of vocab clusters — must match `python/compile/model.py::N_CLUSTERS`.
+pub const N_CLUSTERS: usize = 16;
+
+/// A synthetic "task": which topic clusters it draws from and how strongly
+/// sequences dwell within one topic. Mirrors the paper's datasets:
+/// calibration (Wikitext) spans all topics; each downstream task (Table 5)
+/// concentrates on a disjoint topic subset with its own dwell dynamics.
+#[derive(Debug, Clone)]
+pub struct TaskProfile {
+    pub name: &'static str,
+    /// Clusters this task's sequences draw from.
+    pub clusters: Vec<usize>,
+    /// Probability of staying in the current cluster at each token.
+    pub p_stay: f64,
+}
+
+impl TaskProfile {
+    pub fn wikitext() -> Self {
+        TaskProfile { name: "wikitext-sim", clusters: (0..N_CLUSTERS).collect(), p_stay: 0.90 }
+    }
+
+    pub fn c4() -> Self {
+        TaskProfile { name: "c4-sim", clusters: (0..N_CLUSTERS).collect(), p_stay: 0.85 }
+    }
+
+    /// The four downstream tasks of paper Table 5.
+    pub fn downstream() -> Vec<Self> {
+        vec![
+            TaskProfile { name: "arc-e-sim", clusters: (0..4).collect(), p_stay: 0.92 },
+            TaskProfile { name: "arc-c-sim", clusters: (4..8).collect(), p_stay: 0.88 },
+            TaskProfile { name: "obqa-sim", clusters: (8..12).collect(), p_stay: 0.90 },
+            TaskProfile { name: "rte-sim", clusters: (12..16).collect(), p_stay: 0.84 },
+        ]
+    }
+}
+
+/// Sequence generator over a vocab of `vocab` tokens split into
+/// [`N_CLUSTERS`] contiguous blocks.
+pub struct CorpusGen {
+    vocab: usize,
+    task: TaskProfile,
+    rng: DetRng,
+}
+
+impl CorpusGen {
+    pub fn new(vocab: usize, task: TaskProfile, seed: u64) -> Self {
+        assert!(vocab % N_CLUSTERS == 0, "vocab must split into {N_CLUSTERS} clusters");
+        CorpusGen { vocab, task, rng: DetRng::new(seed) }
+    }
+
+    fn block(&self) -> usize {
+        self.vocab / N_CLUSTERS
+    }
+
+    /// Generate one sequence of `len` token ids.
+    pub fn sequence(&mut self, len: usize) -> Vec<i32> {
+        let block = self.block();
+        let mut cluster = self.task.clusters[self.rng.usize_below(self.task.clusters.len())];
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            if !self.rng.chance(self.task.p_stay) {
+                cluster = self.task.clusters[self.rng.usize_below(self.task.clusters.len())];
+            }
+            let tok = cluster * block + self.rng.usize_below(block);
+            out.push(tok as i32);
+        }
+        out
+    }
+
+    /// Generate a batch of sequences.
+    pub fn batch(&mut self, n: usize, len: usize) -> Vec<Vec<i32>> {
+        (0..n).map(|_| self.sequence(len)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_and_task_clusters() {
+        let task = TaskProfile::downstream().remove(0); // arc-e: clusters 0..4
+        let mut g = CorpusGen::new(512, task, 1);
+        let block = 512 / N_CLUSTERS;
+        for s in g.batch(8, 64) {
+            for t in s {
+                assert!((t as usize) < 512);
+                assert!((t as usize) / block < 4, "token outside task clusters");
+            }
+        }
+    }
+
+    #[test]
+    fn sequences_dwell_in_clusters() {
+        let mut g = CorpusGen::new(512, TaskProfile::wikitext(), 2);
+        let block = 512 / N_CLUSTERS;
+        let s = g.sequence(256);
+        let same_adjacent = s
+            .windows(2)
+            .filter(|w| (w[0] as usize) / block == (w[1] as usize) / block)
+            .count();
+        // p_stay = 0.9 → ~90% of adjacent pairs share a cluster (plus chance)
+        assert!(same_adjacent as f64 / 255.0 > 0.75, "locality too weak: {same_adjacent}/255");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = CorpusGen::new(512, TaskProfile::c4(), 42).sequence(32);
+        let b = CorpusGen::new(512, TaskProfile::c4(), 42).sequence(32);
+        assert_eq!(a, b);
+        let c = CorpusGen::new(512, TaskProfile::c4(), 43).sequence(32);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn downstream_tasks_are_disjoint() {
+        let tasks = TaskProfile::downstream();
+        for i in 0..tasks.len() {
+            for j in i + 1..tasks.len() {
+                for c in &tasks[i].clusters {
+                    assert!(!tasks[j].clusters.contains(c));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Synthetic workload substrate: the stand-in for the paper's C4/Wikitext
+//! corpora and lm-eval downstream tasks (DESIGN.md §1).
+//!
+//! The paper's cache/prefetch results rest on two measurable input
+//! statistics — adjacent-token routing locality (Fig. 8) and adjacent-layer
+//! gate-input similarity (Table 8). The corpus generator reproduces the
+//! *cause* (semantic clustering of adjacent tokens) rather than the
+//! statistics directly: sequences dwell on a vocab topic-cluster and drift,
+//! and the clustered embedding table (python `gen_weights`) turns that into
+//! correlated routing through the *real* gate computation.
+
+pub mod calib;
+pub mod corpus;
+pub mod prep;
+pub mod trace;
+
+pub use calib::CalibData;
+pub use corpus::{CorpusGen, TaskProfile};
+pub use trace::{BatchStep, LayerStepData, SeqTrace, Trace};

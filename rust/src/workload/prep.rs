@@ -1,0 +1,124 @@
+//! Preparation pipeline: calibration + trace-pool generation, cached on
+//! disk under `artifacts/` so experiments are instant to re-run.
+//!
+//! Mirrors the paper's workflow (§6.1): residual vectors and activation
+//! statistics come from a Wikitext-like calibration set; speed benchmarks
+//! sample from a C4-like corpus.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::engine::InferenceEngine;
+use crate::workload::corpus::{CorpusGen, TaskProfile};
+use crate::workload::{CalibData, Trace};
+
+/// Default calibration set: 24 Wikitext-like sequences of 32 tokens.
+pub const CALIB_SEQS: usize = 24;
+pub const CALIB_LEN: usize = 32;
+
+pub fn task_by_name(name: &str) -> Result<TaskProfile> {
+    if name == "wikitext-sim" {
+        return Ok(TaskProfile::wikitext());
+    }
+    if name == "c4-sim" {
+        return Ok(TaskProfile::c4());
+    }
+    TaskProfile::downstream()
+        .into_iter()
+        .find(|t| t.name == name)
+        .ok_or_else(|| anyhow!("unknown task '{name}'"))
+}
+
+/// Load cached calibration data, or compute it with the live engine.
+pub fn ensure_calib(preset: &str) -> Result<CalibData> {
+    let path = CalibData::path_for(preset);
+    if let Ok(c) = CalibData::load(&path) {
+        return Ok(c);
+    }
+    eprintln!("[prep] calibrating {preset} ({CALIB_SEQS} seqs x {CALIB_LEN} tokens)...");
+    let mut eng = InferenceEngine::new(preset)?;
+    let mut gen = CorpusGen::new(eng.dims.vocab, TaskProfile::wikitext(), 0xca11b);
+    let seqs = gen.batch(CALIB_SEQS, CALIB_LEN);
+    eng.calibrate(&seqs)
+}
+
+/// Canonical on-disk location of a trace pool.
+pub fn trace_path(preset: &str, task: &str, pool: usize, prompt: usize, steps: usize) -> PathBuf {
+    crate::util::artifacts_dir()
+        .join("traces")
+        .join(format!("{preset}-{task}-n{pool}p{prompt}s{steps}.bin"))
+}
+
+/// Load a cached trace pool, or generate it with the live engine.
+///
+/// Generation decodes in groups of the largest decode-batch bucket; routing
+/// is per-sequence so grouping does not affect the recorded trace.
+pub fn ensure_trace(
+    preset: &str,
+    task_name: &str,
+    pool: usize,
+    prompt: usize,
+    steps: usize,
+) -> Result<Trace> {
+    let path = trace_path(preset, task_name, pool, prompt, steps);
+    if let Ok(t) = Trace::load(&path) {
+        return Ok(t);
+    }
+    ensure_calib(preset)?;
+    eprintln!("[prep] tracing {preset}/{task_name}: {pool} seqs, prompt {prompt}, {steps} steps...");
+    let eng = InferenceEngine::new(preset)?; // picks up calib from disk
+    let task = task_by_name(task_name)?;
+    let mut gen = CorpusGen::new(eng.dims.vocab, task, 0x7ace ^ pool as u64);
+    let group = *eng.rt.manifest().buckets.decode_batch.iter().max().unwrap_or(&4);
+    let mut merged: Option<Trace> = None;
+    let mut done = 0;
+    while done < pool {
+        let n = group.min(pool - done);
+        let prompts = gen.batch(n, prompt);
+        let out = eng.run_batch(&prompts, steps, true)?;
+        let t = out.trace.context("trace missing")?;
+        match &mut merged {
+            None => merged = Some(t),
+            Some(m) => m.seqs.extend(t.seqs),
+        }
+        done += n;
+        eprintln!("[prep]   {done}/{pool} sequences traced");
+    }
+    let mut trace = merged.context("empty pool")?;
+    trace.task = task_name.to_string();
+    trace.save(&path)?;
+    Ok(trace)
+}
+
+/// The standard trace pools used by the experiment suite.
+pub fn standard_pools(preset: &str) -> Vec<(String, usize, usize, usize)> {
+    let mut pools = vec![
+        // (task, pool, prompt, steps) — C4 for speed benchmarks (§6.1-2)
+        ("c4-sim".to_string(), 32, 16, 64),
+        // Wikitext for locality / cache statistics
+        ("wikitext-sim".to_string(), 16, 16, 48),
+    ];
+    if preset == "mixtral-sim" {
+        // long-decode pool for the Fig. 22 decode-length sweep
+        pools.push(("c4-sim".to_string(), 8, 16, 256));
+    }
+    if preset != "mixtral-sim" {
+        // downstream tasks for Table 5 (DeepSeek + Qwen in the paper)
+        for t in crate::workload::corpus::TaskProfile::downstream() {
+            pools.push((t.name.to_string(), 8, 16, 32));
+        }
+    }
+    pools
+}
+
+/// Prepare calibration + all standard pools for the given presets.
+pub fn prepare_all(presets: &[String]) -> Result<()> {
+    for p in presets {
+        ensure_calib(p)?;
+        for (task, pool, prompt, steps) in standard_pools(p) {
+            ensure_trace(p, &task, pool, prompt, steps)?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,417 @@
+//! Routing traces: the recorded per-sequence routing + prediction stream.
+//!
+//! The live engine records one [`SeqTrace`] per sequence (real gate
+//! computations via PJRT). Policy experiments then *replay* traces: batches
+//! are composed by summing per-sequence routing, which is exact because
+//! routing depends only on sequence content, never on batch composition.
+//! This mirrors how the paper sweeps policies over shared workloads, and
+//! makes the large sweeps (Fig. 12/13 grids) tractable.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Routing + prediction data for one (sequence, step, layer).
+#[derive(Debug, Clone)]
+pub struct LayerStepRecord {
+    /// True top-k routed experts for this token.
+    pub topk: Vec<u16>,
+    /// Gate probabilities of the chosen experts (HybriMoE's score signal).
+    pub topk_scores: Vec<f32>,
+    /// Predicted top-k experts of the *next* layer from raw features
+    /// (HybriMoE-style, gate_{l+1}(h_l)).
+    pub pred_raw: Vec<u16>,
+    /// Predicted top-k experts of the next layer from residual-corrected
+    /// features (DALI §4.2, gate_{l+1}(h_l + res_vec_l)).
+    pub pred_res: Vec<u16>,
+    /// Cosine similarity of prediction input vs true next-layer gate input
+    /// (Table 8): raw and residual-corrected.
+    pub cos_raw: f32,
+    pub cos_res: f32,
+}
+
+/// Per-layer aggregates for a whole prompt (prefill is one batch step).
+#[derive(Debug, Clone)]
+pub struct PrefillLayerRecord {
+    /// True workload per routed expert (token counts).
+    pub counts: Vec<u32>,
+    /// Sum of routed gate scores per expert.
+    pub gate_scores: Vec<f32>,
+    /// Predicted next-layer workload counts (raw / residual features).
+    pub pred_raw: Vec<u32>,
+    pub pred_res: Vec<u32>,
+}
+
+/// Trace of one sequence: prefill aggregates + per-decode-step records.
+#[derive(Debug, Clone)]
+pub struct SeqTrace {
+    pub prompt_len: usize,
+    /// `prefill[layer]`
+    pub prefill: Vec<PrefillLayerRecord>,
+    /// `steps[step][layer]`
+    pub steps: Vec<Vec<LayerStepRecord>>,
+}
+
+/// A pool of sequence traces for one preset + task.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub preset: String,
+    pub task: String,
+    pub n_routed: usize,
+    pub top_k: usize,
+    pub layers: usize,
+    pub seqs: Vec<SeqTrace>,
+}
+
+/// Little-endian binary writer/reader for the trace format (no serde in
+/// the offline build; a compact binary beats JSON for multi-MB traces).
+struct W(Vec<u8>);
+
+impl W {
+    fn u32(&mut self, x: u32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u16s(&mut self, xs: &[u16]) {
+        self.u32(xs.len() as u32);
+        for x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn u32s(&mut self, xs: &[u32]) {
+        self.u32(xs.len() as u32);
+        for x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn f32(&mut self, x: f32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct R<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> R<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated trace file");
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u16s(&mut self) -> Result<Vec<u16>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))).collect()
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+}
+
+const TRACE_MAGIC: u32 = 0x4452_5443; // "DRTC"
+
+impl Trace {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = W(Vec::with_capacity(1 << 20));
+        w.u32(TRACE_MAGIC);
+        w.u32(1); // version
+        w.str(&self.preset);
+        w.str(&self.task);
+        w.u32(self.n_routed as u32);
+        w.u32(self.top_k as u32);
+        w.u32(self.layers as u32);
+        w.u32(self.seqs.len() as u32);
+        for s in &self.seqs {
+            w.u32(s.prompt_len as u32);
+            w.u32(s.prefill.len() as u32);
+            for p in &s.prefill {
+                w.u32s(&p.counts);
+                w.f32s(&p.gate_scores);
+                w.u32s(&p.pred_raw);
+                w.u32s(&p.pred_res);
+            }
+            w.u32(s.steps.len() as u32);
+            for step in &s.steps {
+                w.u32(step.len() as u32);
+                for r in step {
+                    w.u16s(&r.topk);
+                    w.f32s(&r.topk_scores);
+                    w.u16s(&r.pred_raw);
+                    w.u16s(&r.pred_res);
+                    w.f32(r.cos_raw);
+                    w.f32(r.cos_res);
+                }
+            }
+        }
+        std::fs::write(path, &w.0).with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("opening trace {}", path.display()))?;
+        let mut r = R { b: &bytes, i: 0 };
+        if r.u32()? != TRACE_MAGIC {
+            bail!("not a DALI trace file: {}", path.display());
+        }
+        if r.u32()? != 1 {
+            bail!("unsupported trace version");
+        }
+        let preset = r.str()?;
+        let task = r.str()?;
+        let n_routed = r.u32()? as usize;
+        let top_k = r.u32()? as usize;
+        let layers = r.u32()? as usize;
+        let n_seqs = r.u32()? as usize;
+        let mut seqs = Vec::with_capacity(n_seqs);
+        for _ in 0..n_seqs {
+            let prompt_len = r.u32()? as usize;
+            let n_pre = r.u32()? as usize;
+            let mut prefill = Vec::with_capacity(n_pre);
+            for _ in 0..n_pre {
+                prefill.push(PrefillLayerRecord {
+                    counts: r.u32s()?,
+                    gate_scores: r.f32s()?,
+                    pred_raw: r.u32s()?,
+                    pred_res: r.u32s()?,
+                });
+            }
+            let n_steps = r.u32()? as usize;
+            let mut steps = Vec::with_capacity(n_steps);
+            for _ in 0..n_steps {
+                let nl = r.u32()? as usize;
+                let mut recs = Vec::with_capacity(nl);
+                for _ in 0..nl {
+                    recs.push(LayerStepRecord {
+                        topk: r.u16s()?,
+                        topk_scores: r.f32s()?,
+                        pred_raw: r.u16s()?,
+                        pred_res: r.u16s()?,
+                        cos_raw: r.f32()?,
+                        cos_res: r.f32()?,
+                    });
+                }
+                steps.push(recs);
+            }
+            seqs.push(SeqTrace { prompt_len, prefill, steps });
+        }
+        Ok(Trace { preset, task, n_routed, top_k, layers, seqs })
+    }
+
+    /// Max decode steps available across the pool.
+    pub fn min_steps(&self) -> usize {
+        self.seqs.iter().map(|s| s.steps.len()).min().unwrap_or(0)
+    }
+}
+
+/// One composed batch step fed to the policy simulator: per-layer data.
+#[derive(Debug, Clone)]
+pub struct LayerStepData {
+    /// True workload per routed expert (tokens routed there this step).
+    pub workloads: Vec<u32>,
+    /// Sum of routed gate scores per expert.
+    pub gate_scores: Vec<f32>,
+    /// Predicted *next-layer* workload counts from raw features.
+    pub pred_raw: Vec<u32>,
+    /// Predicted next-layer workload counts from residual features.
+    pub pred_res: Vec<u32>,
+}
+
+/// One batch step across all layers.
+#[derive(Debug, Clone)]
+pub struct BatchStep {
+    /// Tokens processed this step (batch size during decode).
+    pub tokens: usize,
+    /// `layers[l]` — data observed at MoE layer l.
+    pub layers: Vec<LayerStepData>,
+}
+
+impl Trace {
+    fn empty_layer(&self) -> LayerStepData {
+        LayerStepData {
+            workloads: vec![0; self.n_routed],
+            gate_scores: vec![0.0; self.n_routed],
+            pred_raw: vec![0; self.n_routed],
+            pred_res: vec![0; self.n_routed],
+        }
+    }
+
+    /// Compose decode step `step` for the batch given by `seq_ids`.
+    pub fn compose_decode(&self, seq_ids: &[usize], step: usize) -> BatchStep {
+        let mut layers: Vec<LayerStepData> = (0..self.layers).map(|_| self.empty_layer()).collect();
+        let mut tokens = 0;
+        for &sid in seq_ids {
+            let seq = &self.seqs[sid % self.seqs.len()];
+            if step >= seq.steps.len() {
+                continue;
+            }
+            tokens += 1;
+            for (l, rec) in seq.steps[step].iter().enumerate() {
+                let dst = &mut layers[l];
+                for (i, &e) in rec.topk.iter().enumerate() {
+                    dst.workloads[e as usize] += 1;
+                    dst.gate_scores[e as usize] += rec.topk_scores[i];
+                }
+                for &e in &rec.pred_raw {
+                    dst.pred_raw[e as usize] += 1;
+                }
+                for &e in &rec.pred_res {
+                    dst.pred_res[e as usize] += 1;
+                }
+            }
+        }
+        BatchStep { tokens, layers }
+    }
+
+    /// Compose the prefill batch step for `seq_ids`.
+    pub fn compose_prefill(&self, seq_ids: &[usize]) -> BatchStep {
+        let mut layers: Vec<LayerStepData> = (0..self.layers).map(|_| self.empty_layer()).collect();
+        let mut tokens = 0;
+        for &sid in seq_ids {
+            let seq = &self.seqs[sid % self.seqs.len()];
+            tokens += seq.prompt_len;
+            for (l, rec) in seq.prefill.iter().enumerate() {
+                let dst = &mut layers[l];
+                for e in 0..self.n_routed {
+                    dst.workloads[e] += rec.counts[e];
+                    dst.gate_scores[e] += rec.gate_scores[e];
+                    dst.pred_raw[e] += rec.pred_raw[e];
+                    dst.pred_res[e] += rec.pred_res[e];
+                }
+            }
+        }
+        BatchStep { tokens, layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> Trace {
+        // 2 seqs, 1 layer, 4 experts, k=2, 2 decode steps
+        let rec = |topk: Vec<u16>, pr: Vec<u16>, ps: Vec<u16>| LayerStepRecord {
+            topk: topk.clone(),
+            topk_scores: topk.iter().map(|_| 0.5).collect(),
+            pred_raw: pr,
+            pred_res: ps,
+            cos_raw: 0.8,
+            cos_res: 0.9,
+        };
+        let prefill = |counts: Vec<u32>| PrefillLayerRecord {
+            gate_scores: counts.iter().map(|&c| c as f32 * 0.5).collect(),
+            pred_raw: counts.clone(),
+            pred_res: counts.clone(),
+            counts,
+        };
+        Trace {
+            preset: "t".into(),
+            task: "t".into(),
+            n_routed: 4,
+            top_k: 2,
+            layers: 1,
+            seqs: vec![
+                SeqTrace {
+                    prompt_len: 3,
+                    prefill: vec![prefill(vec![2, 1, 0, 0])],
+                    steps: vec![
+                        vec![rec(vec![0, 1], vec![0, 2], vec![0, 1])],
+                        vec![rec(vec![1, 2], vec![1], vec![2])],
+                    ],
+                },
+                SeqTrace {
+                    prompt_len: 3,
+                    prefill: vec![prefill(vec![0, 0, 2, 1])],
+                    steps: vec![vec![rec(vec![0, 3], vec![3], vec![3])]],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn compose_decode_sums_workloads() {
+        let t = tiny_trace();
+        let step = t.compose_decode(&[0, 1], 0);
+        assert_eq!(step.tokens, 2);
+        assert_eq!(step.layers[0].workloads, vec![2, 1, 0, 1]);
+        assert_eq!(step.layers[0].pred_raw, vec![1, 0, 1, 1]);
+        assert!((step.layers[0].gate_scores[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compose_decode_skips_finished_seqs() {
+        let t = tiny_trace();
+        let step = t.compose_decode(&[0, 1], 1); // seq 1 has only 1 step
+        assert_eq!(step.tokens, 1);
+        assert_eq!(step.layers[0].workloads, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn compose_prefill_sums_counts() {
+        let t = tiny_trace();
+        let step = t.compose_prefill(&[0, 1]);
+        assert_eq!(step.tokens, 6);
+        assert_eq!(step.layers[0].workloads, vec![2, 1, 2, 1]);
+    }
+
+    #[test]
+    fn seq_ids_wrap_around_pool() {
+        let t = tiny_trace();
+        let step = t.compose_decode(&[0, 2], 0); // 2 % 2 == 0 → seq 0 twice
+        assert_eq!(step.layers[0].workloads, vec![2, 2, 0, 0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = tiny_trace();
+        let dir = crate::util::test_temp_dir("trace");
+        let p = dir.join("trace.bin");
+        t.save(&p).unwrap();
+        let t2 = Trace::load(&p).unwrap();
+        assert_eq!(t2.seqs.len(), 2);
+        assert_eq!(t2.preset, t.preset);
+        assert_eq!(t2.seqs[0].steps[0][0].topk, vec![0, 1]);
+        assert_eq!(t2.seqs[0].prefill[0].counts, t.seqs[0].prefill[0].counts);
+        assert!((t2.seqs[0].steps[0][0].cos_res - 0.9).abs() < 1e-6);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = crate::util::test_temp_dir("trace-bad");
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"not a trace").unwrap();
+        assert!(Trace::load(&p).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

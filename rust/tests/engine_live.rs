@@ -1,0 +1,130 @@
+//! Integration: live engine behaviours beyond the golden test —
+//! calibration, trace recording, determinism, batch-size invariance.
+//! Requires `make artifacts`.
+
+use dali::coordinator::engine::InferenceEngine;
+use dali::workload::corpus::{CorpusGen, TaskProfile};
+use dali::workload::prep;
+
+#[test]
+fn routing_is_batch_invariant() {
+    // A sequence's routing must not depend on what else is in the batch —
+    // the property that makes trace composition exact.
+    let eng = InferenceEngine::new("mixtral-sim").unwrap();
+    let mut gen = CorpusGen::new(eng.dims.vocab, TaskProfile::c4(), 42);
+    let prompts = gen.batch(3, 8);
+    let solo = eng.run_batch(&prompts[..1].to_vec(), 4, false).unwrap();
+    let batched = eng.run_batch(&prompts, 4, false).unwrap();
+    assert_eq!(solo.generated[0], batched.generated[0]);
+    assert_eq!(solo.decode_routes[0], batched.decode_routes[0]);
+    assert_eq!(solo.prefill_routes[0], batched.prefill_routes[0]);
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let eng = InferenceEngine::new("mixtral-sim").unwrap();
+    let mut gen = CorpusGen::new(eng.dims.vocab, TaskProfile::c4(), 7);
+    let prompts = gen.batch(2, 8);
+    let a = eng.run_batch(&prompts, 6, false).unwrap();
+    let b = eng.run_batch(&prompts, 6, false).unwrap();
+    assert_eq!(a.generated, b.generated);
+}
+
+#[test]
+fn calibration_produces_usable_data() {
+    let calib = prep::ensure_calib("mixtral-sim").unwrap();
+    let eng = InferenceEngine::new("mixtral-sim").unwrap();
+    assert_eq!(calib.res_vec.len(), eng.dims.layers - 1);
+    assert_eq!(calib.res_vec[0].len(), eng.dims.hidden);
+    assert_eq!(calib.freq.len(), eng.dims.layers);
+    // frequencies: each token activates top_k of n_routed experts
+    for layer_freq in &calib.freq {
+        let sum: f64 = layer_freq.iter().sum();
+        assert!(
+            (sum - eng.dims.top_k as f64).abs() < 1e-6,
+            "per-layer activation mass must equal top_k, got {sum}"
+        );
+    }
+    // residual vectors must be non-trivial
+    let norm: f32 = calib.res_vec[0].iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!(norm > 1e-3, "residual vector is ~zero");
+}
+
+#[test]
+fn trace_recording_matches_live_routing() {
+    let _ = prep::ensure_calib("mixtral-sim").unwrap();
+    let eng = InferenceEngine::new("mixtral-sim").unwrap();
+    let mut gen = CorpusGen::new(eng.dims.vocab, TaskProfile::wikitext(), 99);
+    let prompts = gen.batch(2, 8);
+    let out = eng.run_batch(&prompts, 5, true).unwrap();
+    let trace = out.trace.unwrap();
+    assert_eq!(trace.seqs.len(), 2);
+    for (si, seq) in trace.seqs.iter().enumerate() {
+        assert_eq!(seq.steps.len(), 5);
+        for (di, step) in seq.steps.iter().enumerate() {
+            for (l, rec) in step.iter().enumerate() {
+                let want: Vec<u16> =
+                    out.decode_routes[si][di][l].iter().map(|&e| e as u16).collect();
+                assert_eq!(rec.topk, want, "seq {si} step {di} layer {l}");
+                assert_eq!(rec.topk_scores.len(), want.len());
+                if l + 1 < trace.layers {
+                    assert_eq!(rec.pred_raw.len(), trace.top_k);
+                    assert_eq!(rec.pred_res.len(), trace.top_k);
+                    assert!(rec.cos_raw > -1.0 && rec.cos_raw <= 1.0);
+                    assert!(rec.cos_res > -1.0 && rec.cos_res <= 1.0);
+                }
+            }
+        }
+        // prefill counts: prompt_len tokens × top_k activations per layer
+        for pre in &seq.prefill {
+            let total: u32 = pre.counts.iter().sum();
+            assert_eq!(total as usize, seq.prompt_len * trace.top_k);
+        }
+    }
+}
+
+#[test]
+fn residual_prediction_quality_vs_raw_features() {
+    // The paper's Table 8 premise, measured over the standard Wikitext
+    // trace pool. At this scale (4 layers, raw inter-layer similarity
+    // already ~0.96 vs the paper's 0.79) the mean residual vector cannot
+    // improve cosine similarity — a documented deviation (EXPERIMENTS.md).
+    // We therefore assert the properties the repo *does* guarantee:
+    // (1) the correction is not destructive (cosine stays within a small
+    // band of raw), and (2) top-1 high-workload prediction accuracy with
+    // residual correction is not worse than raw features.
+    let trace = prep::ensure_trace("mixtral-sim", "wikitext-sim", 16, 16, 48).unwrap();
+    let (mut raw, mut res, mut n) = (0.0f64, 0.0f64, 0.0f64);
+    for seq in &trace.seqs {
+        for step in &seq.steps {
+            for l in 0..trace.layers - 1 {
+                raw += step[l].cos_raw as f64;
+                res += step[l].cos_res as f64;
+                n += 1.0;
+            }
+        }
+    }
+    assert!(n > 500.0, "pool too small for a stable average");
+    let (raw, res) = (raw / n, res / n);
+    assert!(res > raw - 0.02, "residual correction must not be destructive: {res} vs {raw}");
+
+    // On deepseek-sim/C4 (the Table 2 configuration) residual correction
+    // improves top-1 high-workload prediction with a robust margin.
+    use dali::expt::common::{prefetch_accuracy, PredKind};
+    let trace_ds = prep::ensure_trace("deepseek-sim", "c4-sim", 32, 16, 64).unwrap();
+    let calib_ds = prep::ensure_calib("deepseek-sim").unwrap();
+    let ids: Vec<usize> = (0..8).collect();
+    let acc_raw = prefetch_accuracy(&trace_ds, &calib_ds, &ids, 48, PredKind::Feature, 1);
+    let acc_res = prefetch_accuracy(&trace_ds, &calib_ds, &ids, 48, PredKind::Residual, 1);
+    assert!(
+        acc_res > acc_raw,
+        "residual top-1 accuracy should beat raw features on deepseek/C4: {acc_res} vs {acc_raw}"
+    );
+}
+
+#[test]
+fn unequal_prompt_lengths_rejected() {
+    let eng = InferenceEngine::new("mixtral-sim").unwrap();
+    let r = eng.run_batch(&[vec![1, 2, 3], vec![1, 2]], 1, false);
+    assert!(r.is_err());
+}

@@ -1,0 +1,89 @@
+//! Integration: the rust engine's full forward pass must reproduce the
+//! python reference (`golden.json`, written by `compile/aot.py`) —
+//! routing decisions exactly, logits to float tolerance.
+//!
+//! Requires `make artifacts`.
+
+use dali::coordinator::engine::InferenceEngine;
+use dali::moe::Manifest;
+use dali::util::json::Value;
+
+fn load_golden(preset: &str) -> (Value, InferenceEngine) {
+    let m = Manifest::load_preset(preset).expect("run `make artifacts` first");
+    let text = std::fs::read_to_string(m.golden_path()).unwrap();
+    let golden = Value::parse(&text).unwrap();
+    let eng = InferenceEngine::new(preset).unwrap();
+    (golden, eng)
+}
+
+fn check_preset(preset: &str) {
+    let (golden, eng) = load_golden(preset);
+    let prompts: Vec<Vec<i32>> = golden
+        .get("prompts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.as_usize_vec().unwrap().into_iter().map(|t| t as i32).collect())
+        .collect();
+    let steps = golden.get("decode_steps").unwrap().as_usize().unwrap();
+    let out = eng.run_batch(&prompts, steps, false).unwrap();
+
+    let seqs = golden.get("sequences").unwrap().as_arr().unwrap();
+    for (si, seq) in seqs.iter().enumerate() {
+        // --- prefill routing must match exactly -----------------------------
+        let routes = seq.get("prefill_routes").unwrap().as_arr().unwrap();
+        for (l, layer_routes) in routes.iter().enumerate() {
+            for (t, tok_routes) in layer_routes.as_arr().unwrap().iter().enumerate() {
+                let want = tok_routes.as_usize_vec().unwrap();
+                let got = &out.prefill_routes[si][t][l];
+                assert_eq!(got, &want, "prefill route mismatch seq {si} layer {l} tok {t}");
+            }
+        }
+        // --- prefill last-token logits ---------------------------------------
+        let want8 = seq.get("prefill_last_logits8").unwrap().as_f32_vec().unwrap();
+        for (i, &w) in want8.iter().enumerate() {
+            let g = out.prefill_last_logits[si][i];
+            assert!(
+                (g - w).abs() < 3e-3,
+                "prefill logit {i} seq {si}: got {g}, want {w}"
+            );
+        }
+        // --- decode steps ------------------------------------------------------
+        let decode = seq.get("decode").unwrap().as_arr().unwrap();
+        for (di, step) in decode.iter().enumerate() {
+            let want_routes = step.get("routes").unwrap().as_arr().unwrap();
+            for (l, r) in want_routes.iter().enumerate() {
+                let want = r.as_usize_vec().unwrap();
+                let got = &out.decode_routes[si][di][l];
+                assert_eq!(got, &want, "decode route mismatch seq {si} step {di} layer {l}");
+            }
+            let want8 = step.get("logits8").unwrap().as_f32_vec().unwrap();
+            for (i, &w) in want8.iter().enumerate() {
+                let g = out.decode_logits[si][di][i];
+                assert!(
+                    (g - w).abs() < 3e-3,
+                    "decode logit seq {si} step {di} idx {i}: got {g}, want {w}"
+                );
+            }
+            let want_tok = step.get("argmax").unwrap().as_usize().unwrap() as i32;
+            assert_eq!(out.generated[si][di], want_tok, "token mismatch seq {si} step {di}");
+        }
+    }
+}
+
+#[test]
+fn golden_mixtral() {
+    check_preset("mixtral-sim");
+}
+
+#[test]
+fn golden_deepseek_shared_experts() {
+    // deepseek-sim exercises the shared-expert path (n_shared = 1)
+    check_preset("deepseek-sim");
+}
+
+#[test]
+fn golden_qwen() {
+    check_preset("qwen-sim");
+}

@@ -1,0 +1,213 @@
+//! Property-based tests (in-tree harness; the offline build has no
+//! proptest). Each property runs over hundreds of seeded random instances;
+//! on failure the seed is printed for reproduction.
+
+use dali::config::Presets;
+use dali::coordinator::assignment::*;
+use dali::coordinator::cache::*;
+use dali::hw::{CostModel, GpuPipeline};
+use dali::util::DetRng;
+
+fn cost(model: &str) -> CostModel {
+    let p = Presets::load_default().unwrap();
+    CostModel::new(p.model(model).unwrap(), p.hw("local-pc").unwrap())
+}
+
+/// Run `f` over `n` seeded cases, reporting the failing seed.
+fn for_seeds(n: u64, f: impl Fn(u64)) {
+    for seed in 0..n {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if result.is_err() {
+            panic!("property failed at seed {seed}");
+        }
+    }
+}
+
+fn random_ctx_parts(rng: &mut DetRng, n: usize) -> (Vec<u32>, Vec<bool>, usize) {
+    let workloads: Vec<u32> = (0..n)
+        .map(|_| if rng.chance(0.3) { 0 } else { rng.usize_below(64) as u32 })
+        .collect();
+    let resident: Vec<bool> = (0..n).map(|_| rng.chance(0.4)).collect();
+    let slots = rng.usize_below(n + 1);
+    (workloads, resident, slots)
+}
+
+#[test]
+fn prop_all_assigners_satisfy_constraints() {
+    let cms = [cost("mixtral-sim"), cost("deepseek-sim"), cost("qwen-sim")];
+    for_seeds(150, |seed| {
+        let mut rng = DetRng::new(seed);
+        let n = 4 + rng.usize_below(28);
+        let (workloads, resident, slots) = random_ctx_parts(&mut rng, n);
+        let cm = &cms[seed as usize % 3];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: cm,
+            gpu_free_slots: slots,
+            layer: rng.usize_below(4),
+            layers: 4,
+        };
+        let assigners: Vec<Box<dyn Assigner>> = vec![
+            Box::new(GreedyAssigner::new()),
+            Box::new(BeamAssigner::new(2)),
+            Box::new(StaticThresholdAssigner::new()),
+            Box::new(AllCpuAssigner::new()),
+            Box::new(ResidentOnlyAssigner::new()),
+        ];
+        for mut a in assigners {
+            let res = a.assign(&ctx);
+            assert!(res.satisfies_constraints(&ctx), "{} violated constraints", a.name());
+        }
+        // Layer-wise frameworks pin whole GPU layers resident by
+        // construction (PinnedCache::whole_layers); its contract assumes
+        // the resident mask reflects that.
+        let all_res = vec![true; n];
+        let ctx_lw = AssignCtx { resident: &all_res, ..ctx };
+        let res = LayerWiseAssigner::new(2).assign(&ctx_lw);
+        assert!(res.satisfies_constraints(&ctx_lw), "layerwise violated constraints");
+    });
+}
+
+#[test]
+fn prop_optimal_not_worse_than_any_heuristic() {
+    let cm = cost("deepseek-sim");
+    for_seeds(60, |seed| {
+        let mut rng = DetRng::new(1000 + seed);
+        let n = 4 + rng.usize_below(10);
+        let (workloads, resident, slots) = random_ctx_parts(&mut rng, n);
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: slots,
+            layer: 0,
+            layers: 4,
+        };
+        let opt = OptimalAssigner::new().assign(&ctx).makespan_estimate(&ctx);
+        let greedy = GreedyAssigner::new().assign(&ctx).makespan_estimate(&ctx);
+        let beam = BeamAssigner::new(2).assign(&ctx).makespan_estimate(&ctx);
+        let stat = StaticThresholdAssigner::new().assign(&ctx).makespan_estimate(&ctx);
+        assert!(opt <= greedy && opt <= beam && opt <= stat);
+    });
+}
+
+#[test]
+fn prop_greedy_within_2x_of_optimal() {
+    // List-scheduling-style bound: greedy may not match optimal but must
+    // stay within 2x on every instance.
+    let cm = cost("mixtral-sim");
+    for_seeds(80, |seed| {
+        let mut rng = DetRng::new(2000 + seed);
+        let n = 4 + rng.usize_below(8);
+        let (workloads, resident, _) = random_ctx_parts(&mut rng, n);
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: n,
+            layer: 0,
+            layers: 4,
+        };
+        let opt = OptimalAssigner::new().assign(&ctx).makespan_estimate(&ctx);
+        let greedy = GreedyAssigner::new().assign(&ctx).makespan_estimate(&ctx);
+        if opt > 0 {
+            assert!(greedy as f64 <= 2.0 * opt as f64, "greedy {greedy} opt {opt}");
+        }
+    });
+}
+
+#[test]
+fn prop_caches_hold_capacity_and_membership() {
+    for_seeds(100, |seed| {
+        let mut rng = DetRng::new(3000 + seed);
+        let layers = 1 + rng.usize_below(4);
+        let n = 4 + rng.usize_below(28);
+        let cap = 1 + rng.usize_below(n);
+        let caches: Vec<Box<dyn ExpertCache>> = vec![
+            Box::new(WorkloadAwareCache::new(layers, n, cap, 1 + rng.usize_below(8), 1 + rng.usize_below(4), seed)),
+            Box::new(LruCache::new(layers, n, cap, seed)),
+            Box::new(ScoreCache::new(layers, n, cap, seed)),
+        ];
+        for mut c in caches {
+            for step in 1..40 {
+                let l = rng.usize_below(layers);
+                let w: Vec<u32> = (0..n).map(|_| rng.usize_below(8) as u32).collect();
+                let g: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+                c.observe(l, &w, &g);
+                let e = rng.usize_below(n);
+                let fetched = !c.is_resident(l, e);
+                c.on_gpu_use(l, e, fetched);
+                c.window_tick(l, step);
+                // invariants
+                let mask = c.resident_mask(l);
+                let count = mask.iter().filter(|&&b| b).count();
+                assert!(count <= cap.max(1), "{}: {count} > cap {cap}", c.name());
+                for (i, &m) in mask.iter().enumerate() {
+                    assert_eq!(m, c.is_resident(l, i), "mask/is_resident disagree");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pipeline_times_monotone_and_conserved() {
+    for_seeds(100, |seed| {
+        let mut rng = DetRng::new(4000 + seed);
+        let mut p = GpuPipeline::new();
+        let mut last_copy = 0;
+        let mut last_compute = 0;
+        let mut total_compute = 0u64;
+        let mut now = 0u64;
+        for _ in 0..50 {
+            now += rng.usize_below(100) as u64;
+            let trans = rng.usize_below(200) as u64;
+            let compute = 1 + rng.usize_below(200) as u64;
+            let o = p.schedule_expert(now, trans, 1, compute);
+            // stream clocks never go backwards
+            assert!(o.copy_end >= last_copy || trans == 0);
+            assert!(o.compute_end >= last_compute);
+            assert!(o.compute_end >= o.copy_end.min(o.compute_end));
+            if trans > 0 {
+                last_copy = o.copy_end;
+            }
+            last_compute = o.compute_end;
+            total_compute += compute;
+        }
+        // busy time conservation: compute stream busy == sum of kernels
+        assert_eq!(p.compute_busy, total_compute);
+        // makespan >= busy time
+        assert!(p.compute_free_at() >= total_compute);
+    });
+}
+
+#[test]
+fn prop_makespan_estimate_is_max_of_sides() {
+    let cm = cost("qwen-sim");
+    for_seeds(50, |seed| {
+        let mut rng = DetRng::new(5000 + seed);
+        let n = 8 + rng.usize_below(24);
+        let (workloads, resident, _) = random_ctx_parts(&mut rng, n);
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            cost: &cm,
+            gpu_free_slots: n,
+            layer: 0,
+            layers: 4,
+        };
+        let a = GreedyAssigner::new().assign(&ctx);
+        let mut t_cpu = 0u64;
+        let mut t_gpu = 0u64;
+        for e in 0..n {
+            if a.to_cpu[e] {
+                t_cpu += ctx.t_cpu(e);
+            }
+            if a.to_gpu[e] {
+                t_gpu += ctx.t_gpu(e);
+            }
+        }
+        assert_eq!(a.makespan_estimate(&ctx), t_cpu.max(t_gpu));
+    });
+}

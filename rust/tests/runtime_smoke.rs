@@ -1,0 +1,103 @@
+//! Integration: PJRT runtime wrappers against the python-generated
+//! artifacts — shapes, bucketing/padding semantics, numerics sanity.
+//! Requires `make artifacts`.
+
+use dali::runtime::PjrtEngine;
+
+fn engine() -> PjrtEngine {
+    PjrtEngine::load("mixtral-sim").expect("run `make artifacts` first")
+}
+
+#[test]
+fn embed_shapes_and_padding() {
+    let rt = engine();
+    let d = rt.manifest().dims.hidden;
+    // t=3 pads into the t=4 bucket and slices back
+    let x = rt.embed(&[1, 2, 3], &[0, 1, 2]).unwrap();
+    assert_eq!(x.len(), 3 * d);
+    // same tokens at a bigger batch: prefix must be identical
+    let x2 = rt.embed(&[1, 2, 3, 7, 9], &[0, 1, 2, 3, 4]).unwrap();
+    assert_eq!(&x[..3 * d], &x2[..3 * d]);
+}
+
+#[test]
+fn gate_probs_sum_to_one_per_row() {
+    let rt = engine();
+    let d = rt.manifest().dims.hidden;
+    let n = rt.manifest().dims.n_routed;
+    let x = rt.embed(&[5, 6], &[0, 1]).unwrap();
+    let (probs, xn) = rt.gate(0, &x, 2).unwrap();
+    assert_eq!(probs.len(), 2 * n);
+    assert_eq!(xn.len(), 2 * d);
+    for r in 0..2 {
+        let s: f32 = probs[r * n..(r + 1) * n].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        assert!(probs[r * n..(r + 1) * n].iter().all(|&p| p >= 0.0));
+    }
+}
+
+#[test]
+fn expert_bucketing_consistent() {
+    let rt = engine();
+    let d = rt.manifest().dims.hidden;
+    let x = rt.embed(&[9, 10, 11], &[0, 1, 2]).unwrap();
+    let (_, xn) = rt.gate(0, &x, 3).unwrap();
+    // running 3 rows (bucket 4) must equal running each row alone (bucket 1)
+    let all = rt.expert_routed(0, 2, &xn, 3).unwrap();
+    for r in 0..3 {
+        let one = rt.expert_routed(0, 2, &xn[r * d..(r + 1) * d], 1).unwrap();
+        for c in 0..d {
+            assert!(
+                (all[r * d + c] - one[c]).abs() < 1e-4,
+                "row {r} col {c}: {} vs {}",
+                all[r * d + c],
+                one[c]
+            );
+        }
+    }
+}
+
+#[test]
+fn attn_decode_updates_cache_at_pos() {
+    let rt = engine();
+    let dm = rt.manifest().dims.clone();
+    let d = dm.hidden;
+    let row = dm.max_seq * dm.heads * dm.head_dim;
+    let x = rt.embed(&[3], &[4]).unwrap();
+    let kc = vec![0f32; row];
+    let vc = vec![0f32; row];
+    let (h, kc2, vc2) = rt.attn_decode(0, &x, &kc, &vc, &[4], 1).unwrap();
+    assert_eq!(h.len(), d);
+    let hw = dm.heads * dm.head_dim;
+    // rows 0..4 still zero, row 4 written
+    assert!(kc2[..4 * hw].iter().all(|&v| v == 0.0));
+    assert!(kc2[4 * hw..5 * hw].iter().any(|&v| v != 0.0));
+    assert!(vc2[4 * hw..5 * hw].iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn head_logits_shape() {
+    let rt = engine();
+    let v = rt.manifest().dims.vocab;
+    let x = rt.embed(&[1], &[0]).unwrap();
+    let logits = rt.head(&x, 1).unwrap();
+    assert_eq!(logits.len(), v);
+    assert!(logits.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn oversized_batch_errors_cleanly() {
+    let rt = engine();
+    let toks: Vec<i32> = (0..999).map(|i| i % 100).collect();
+    let pos: Vec<i32> = (0..999).collect();
+    assert!(rt.embed(&toks, &pos).is_err(), "exceeds largest token bucket");
+}
+
+#[test]
+fn exec_profiling_counters_advance() {
+    let rt = engine();
+    let before = rt.exec_calls.get();
+    let _ = rt.embed(&[1], &[0]).unwrap();
+    assert_eq!(rt.exec_calls.get(), before + 1);
+    assert!(rt.exec_wall_ns.get() > 0);
+}

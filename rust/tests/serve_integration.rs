@@ -1,0 +1,69 @@
+//! Integration: the HTTP serving stack end-to-end — server boot, health,
+//! generation, batching, metrics, error handling.
+//! Requires `make artifacts` (starts a real engine).
+
+use dali::coordinator::frameworks::Framework;
+use dali::serve::batcher::BatcherCfg;
+use dali::serve::http::http_call;
+use dali::serve::server::serve_background;
+use dali::util::json::Value;
+
+fn start() -> String {
+    let port = serve_background(
+        "mixtral-sim",
+        Framework::Dali,
+        BatcherCfg { max_batch: 4, max_wait: std::time::Duration::from_millis(30), ..Default::default() },
+    )
+    .expect("server start (needs `make artifacts`)");
+    format!("127.0.0.1:{port}")
+}
+
+#[test]
+fn serve_end_to_end() {
+    let addr = start();
+
+    // health
+    let h = http_call(&addr, "GET", "/health", None).unwrap();
+    let v = Value::parse(&h).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+
+    // one generation
+    let body = r#"{"prompt": [1, 2, 3, 4], "max_tokens": 3}"#;
+    let r = http_call(&addr, "POST", "/generate", Some(body)).unwrap();
+    let v = Value::parse(&r).unwrap();
+    assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+    assert!(v.get("sim_tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+
+    // determinism: same prompt → same tokens
+    let r2 = http_call(&addr, "POST", "/generate", Some(body)).unwrap();
+    let v2 = Value::parse(&r2).unwrap();
+    assert_eq!(
+        v.get("tokens").unwrap().to_json(),
+        v2.get("tokens").unwrap().to_json()
+    );
+
+    // concurrent clients with equal shapes get batched together
+    let mut handles = vec![];
+    for i in 0..4 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let body = format!(r#"{{"prompt": [{}, 2, 3, 9], "max_tokens": 2}}"#, i + 5);
+            let r = http_call(&addr, "POST", "/generate", Some(&body)).unwrap();
+            Value::parse(&r).unwrap().get("batch_size").unwrap().as_usize().unwrap()
+        }));
+    }
+    let sizes: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(sizes.iter().any(|&s| s > 1), "some requests should batch: {sizes:?}");
+
+    // metrics
+    let m = http_call(&addr, "GET", "/metrics", None).unwrap();
+    let v = Value::parse(&m).unwrap();
+    assert!(v.get("requests").unwrap().as_u64().unwrap() >= 6);
+    assert_eq!(v.get("errors").unwrap().as_u64().unwrap(), 0);
+
+    // bad requests
+    let r = http_call(&addr, "POST", "/generate", Some("{not json")).unwrap();
+    assert!(r.contains("error"));
+    let r = http_call(&addr, "GET", "/nope", None).unwrap();
+    assert!(r.contains("not found"));
+}
