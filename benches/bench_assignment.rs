@@ -29,6 +29,7 @@ fn main() {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cost,
             gpu_free_slots: n,
             layer: 0,

@@ -1,0 +1,117 @@
+//! Tiered-store scheduling throughput: promote/demote operations per
+//! second across tier configurations (host-slot pressure), plus the
+//! per-layer residency snapshot (`layer_tiers`) the assignment path reads
+//! every MoE layer, and an end-to-end memory-limited decode step.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, black_box};
+use dali::config::Presets;
+use dali::coordinator::assignment::GreedyAssigner;
+use dali::coordinator::cache::WorkloadAwareCache;
+use dali::coordinator::prefetch::NoPrefetcher;
+use dali::coordinator::simrun::{Phase, PolicyBundle, StepSimulator};
+use dali::hw::CostModel;
+use dali::store::{StoreCfg, TieredStore};
+use dali::util::DetRng;
+use dali::workload::trace::{BatchStep, LayerStepData};
+
+fn main() {
+    let presets = Presets::load_default().unwrap();
+    let model = presets.model("mixtral-sim").unwrap();
+    let cost = CostModel::new(model, presets.hw("local-pc-ram16").unwrap());
+    println!("# bench_store — tiered-store promote/demote scheduling throughput");
+
+    // --- raw promote/spill churn at increasing slot pressure ----------------
+    for (layers, n) in [(4usize, 8usize), (8, 16), (16, 64)] {
+        let total = layers * n;
+        for frac in [4usize, 2] {
+            let slots = (total / frac).max(1);
+            let mut st =
+                TieredStore::new(layers, n, StoreCfg { host_slots: slots, ..Default::default() });
+            let mut rng = DetRng::new(11);
+            let mut now = 0u64;
+            bench(&format!("promote_demote/L{layers}xE{n}/slots{slots}"), || {
+                for _ in 0..64 {
+                    let l = rng.usize_below(layers);
+                    let e = rng.usize_below(n);
+                    now += 1;
+                    match rng.usize_below(3) {
+                        0 => {
+                            black_box(st.ensure_host(l, e, now, &cost));
+                        }
+                        1 => {
+                            st.ensure_host(l, e, now, &cost);
+                            st.admit_to_gpu(l, e);
+                        }
+                        _ => st.demote_gpu(l, e),
+                    }
+                }
+            });
+        }
+    }
+
+    // --- the per-layer residency snapshot read on every MoE layer -----------
+    for (layers, n) in [(4usize, 8usize), (16, 64)] {
+        let st = TieredStore::new(
+            layers,
+            n,
+            StoreCfg { host_slots: (layers * n / 2).max(1), ..Default::default() },
+        );
+        bench(&format!("layer_tiers/L{layers}xE{n}"), || {
+            for l in 0..layers {
+                black_box(st.layer_tiers(l));
+            }
+        });
+    }
+
+    // --- end-to-end: one memory-limited decode step through simrun ----------
+    let dims = &model.sim;
+    let mk_step = |rng: &mut DetRng| -> BatchStep {
+        let layers = (0..dims.layers)
+            .map(|_| {
+                let mut w = vec![0u32; dims.n_routed];
+                for _ in 0..16 * dims.top_k {
+                    w[rng.usize_below(dims.n_routed)] += 1;
+                }
+                LayerStepData {
+                    gate_scores: w.iter().map(|&x| x as f32 * 0.3).collect(),
+                    pred_raw: w.clone(),
+                    pred_res: w.clone(),
+                    workloads: w,
+                }
+            })
+            .collect();
+        BatchStep { tokens: 16, layers }
+    };
+    for slots in [usize::MAX, 12, 6] {
+        let bundle = PolicyBundle {
+            assigner: Box::new(GreedyAssigner::new()),
+            prefetcher: Box::new(NoPrefetcher),
+            cache: Box::new(WorkloadAwareCache::new(dims.layers, dims.n_routed, 2, 4, 1, 3)),
+            prefetch_size: 0,
+            cpu_eff: 1.0,
+            layer_overhead_ns: 0,
+            gpu_free_slots: dims.n_routed,
+        };
+        let cfg = StoreCfg { host_slots: slots, ..Default::default() };
+        let store = TieredStore::new(dims.layers, dims.n_routed, cfg);
+        let mut sim = StepSimulator::new(
+            &cost,
+            bundle,
+            vec![vec![0.0; dims.n_routed]; dims.layers],
+            dims.layers,
+            dims.n_routed,
+            dims.n_shared,
+            7,
+        )
+        .with_store(store);
+        let mut rng = DetRng::new(23);
+        let label =
+            if slots == usize::MAX { "unlimited".to_string() } else { format!("slots{slots}") };
+        bench(&format!("simrun_decode_step/{label}"), || {
+            sim.run_step(&mk_step(&mut rng), 32, Phase::Decode);
+        });
+    }
+}

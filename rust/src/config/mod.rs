@@ -78,6 +78,14 @@ impl PaperDims {
         (3 * self.hidden * self.moe_inter * self.dtype_bytes) as f64
     }
 
+    /// Total bytes of all routed experts across all layers — what host RAM
+    /// must hold in the paper's two-tier deployment. Single source of truth
+    /// for both [`HwConfig::is_memory_limited`] and the tiered store's
+    /// slot conversion (via `CostModel::total_expert_bytes`).
+    pub fn total_expert_bytes(&self) -> f64 {
+        self.expert_bytes() * (self.n_routed * self.layers) as f64
+    }
+
     /// FLOPs to run one token through one expert (3 GEMMs, 2 FLOPs/MAC).
     pub fn expert_flops_per_token(&self) -> f64 {
         (6 * self.hidden * self.moe_inter) as f64
@@ -104,6 +112,10 @@ pub struct ModelPreset {
 
 /// Hardware platform parameters (paper Table 1 numbers for the default
 /// `local-pc` preset). All rates are per-second; times are seconds.
+///
+/// The NVMe fields parameterise the third storage tier of the
+/// [`crate::store`] subsystem; `host_ram_bytes == 0` means "host RAM holds
+/// every expert" (the paper's original two-tier assumption).
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwConfig {
     pub display: String,
@@ -118,10 +130,21 @@ pub struct HwConfig {
     pub pcie_bw: f64,
     pub pcie_latency_s: f64,
     pub num_gpus: usize,
+    /// Host RAM budget for expert weights; 0 = unlimited (two-tier mode).
+    pub host_ram_bytes: f64,
+    /// NVMe sequential read bandwidth (disk → host promotions).
+    pub nvme_read_bw: f64,
+    /// NVMe sequential write bandwidth (host → disk spills, when enabled).
+    pub nvme_write_bw: f64,
+    /// Per-transfer NVMe latency (queue + command overhead).
+    pub nvme_latency_s: f64,
 }
 
 impl HwConfig {
     pub fn from_json(v: &Value) -> Result<Self> {
+        let opt_f64 = |key: &str, default: f64| -> Result<f64> {
+            v.opt(key).map(|x| x.as_f64()).transpose().map(|x| x.unwrap_or(default))
+        };
         Ok(HwConfig {
             display: v.get("display")?.as_str()?.to_string(),
             gpu_flops: v.get("gpu_flops")?.as_f64()?,
@@ -135,8 +158,26 @@ impl HwConfig {
             pcie_bw: v.get("pcie_bw")?.as_f64()?,
             pcie_latency_s: v.get("pcie_latency_s")?.as_f64()?,
             num_gpus: v.opt("num_gpus").map(|x| x.as_usize()).transpose()?.unwrap_or(1),
+            host_ram_bytes: opt_f64("host_ram_bytes", 0.0)?,
+            nvme_read_bw: opt_f64("nvme_read_bw", 6e9)?,
+            nvme_write_bw: opt_f64("nvme_write_bw", 3e9)?,
+            nvme_latency_s: opt_f64("nvme_latency_s", 100e-6)?,
         })
     }
+
+    /// Whether host RAM cannot hold every expert of `paper` — i.e. the
+    /// tiered store must spill cold experts to NVMe.
+    pub fn is_memory_limited(&self, paper: &PaperDims) -> bool {
+        self.host_ram_bytes > 0.0 && self.host_ram_bytes < paper.total_expert_bytes()
+    }
+}
+
+/// A named (model, hardware) pairing — the memory-limited presets such as
+/// `mixtral-sim-ram16` that open the latency-vs-host-RAM sensitivity axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub model: String,
+    pub hardware: String,
 }
 
 /// Static shape buckets for the AOT artifacts.
@@ -172,6 +213,7 @@ pub struct Presets {
     pub models: BTreeMap<String, ModelPreset>,
     pub buckets: Buckets,
     pub hardware: BTreeMap<String, HwConfig>,
+    pub scenarios: BTreeMap<String, Scenario>,
 }
 
 impl Presets {
@@ -194,7 +236,24 @@ impl Presets {
         for (name, h) in v.get("hardware")?.as_obj()? {
             hardware.insert(name.clone(), HwConfig::from_json(h)?);
         }
-        Ok(Presets { models, buckets: Buckets::from_json(v.get("buckets")?)?, hardware })
+        let mut scenarios = BTreeMap::new();
+        if let Some(s) = v.opt("scenarios") {
+            for (name, sc) in s.as_obj()? {
+                scenarios.insert(
+                    name.clone(),
+                    Scenario {
+                        model: sc.get("model")?.as_str()?.to_string(),
+                        hardware: sc.get("hardware")?.as_str()?.to_string(),
+                    },
+                );
+            }
+        }
+        Ok(Presets {
+            models,
+            buckets: Buckets::from_json(v.get("buckets")?)?,
+            hardware,
+            scenarios,
+        })
     }
 
     /// Load `<repo>/configs/presets.json`.
@@ -212,6 +271,20 @@ impl Presets {
 
     pub fn model_names(&self) -> Vec<&str> {
         self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Resolve a scenario name to its (model, hardware) pair. A plain model
+    /// name is accepted too (paired with `local-pc`), so every CLI that
+    /// takes `--preset` transparently accepts `mixtral-sim-ram16`.
+    pub fn scenario(&self, name: &str) -> Result<(&ModelPreset, &HwConfig)> {
+        if let Some(sc) = self.scenarios.get(name) {
+            return Ok((self.model(&sc.model)?, self.hw(&sc.hardware)?));
+        }
+        Ok((self.model(name)?, self.hw("local-pc")?))
+    }
+
+    pub fn scenario_names(&self) -> Vec<&str> {
+        self.scenarios.keys().map(|s| s.as_str()).collect()
     }
 }
 
@@ -258,6 +331,32 @@ mod tests {
         assert_eq!(Buckets::pick(&b, 3), 4);
         assert_eq!(Buckets::pick(&b, 8), 8);
         assert_eq!(Buckets::pick(&b, 9), 8); // caller splits
+    }
+
+    #[test]
+    fn memory_limited_scenarios_resolve() {
+        let p = Presets::load_default().unwrap();
+        let (m, hw) = p.scenario("mixtral-sim-ram16").unwrap();
+        assert_eq!(m.paper.n_routed, 8);
+        assert!(hw.host_ram_bytes > 0.0);
+        // 16 GB cannot hold 256 experts x 352 MB
+        assert!(hw.is_memory_limited(&m.paper));
+        // unlimited default is not memory-limited
+        let (m2, hw2) = p.scenario("mixtral-sim").unwrap();
+        assert!(!hw2.is_memory_limited(&m2.paper));
+        assert!(p.scenario("no-such-model").is_err());
+        assert!(!p.scenario_names().is_empty());
+    }
+
+    #[test]
+    fn nvme_fields_parse_with_defaults() {
+        let p = Presets::load_default().unwrap();
+        let hw = p.hw("local-pc").unwrap();
+        assert!(hw.nvme_read_bw > 0.0 && hw.nvme_write_bw > 0.0);
+        assert!(hw.nvme_read_bw < hw.pcie_bw, "NVMe is the slower tier");
+        assert_eq!(hw.host_ram_bytes, 0.0, "default host RAM is unlimited");
+        let ram16 = p.hw("local-pc-ram16").unwrap();
+        assert!((ram16.host_ram_bytes - 16e9).abs() < 1e6);
     }
 
     #[test]

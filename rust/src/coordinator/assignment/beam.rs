@@ -97,6 +97,7 @@ mod tests {
             let ctx = AssignCtx {
                 workloads: &workloads,
                 resident: &resident,
+                tiers: None,
                 cost: &cm,
                 gpu_free_slots: n,
                 layer: 0,
@@ -135,6 +136,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 3,
             layer: 0,
@@ -152,6 +154,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 2,
             layer: 0,

@@ -99,6 +99,7 @@ mod tests {
             let ctx = AssignCtx {
                 workloads: &workloads,
                 resident: &resident,
+                tiers: None,
                 cost: &cm,
                 gpu_free_slots: n,
                 layer: 0,
@@ -120,6 +121,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 16,
             layer: 0,
@@ -146,6 +148,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 32,
             layer: 0,

@@ -71,6 +71,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 2,
             layer: 0,
@@ -91,6 +92,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,
@@ -117,6 +119,7 @@ mod tests {
             let ctx = AssignCtx {
                 workloads: &workloads,
                 resident: &resident,
+                tiers: None,
                 cost: &cm,
                 gpu_free_slots: n,
                 layer: 0,
@@ -143,6 +146,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 1,
             layer: 0,
@@ -162,6 +166,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,

@@ -54,6 +54,7 @@ mod tests {
         let mk = |layer| AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer,

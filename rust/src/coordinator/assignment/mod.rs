@@ -32,6 +32,7 @@ pub use resident_only::ResidentOnlyAssigner;
 pub use static_threshold::StaticThresholdAssigner;
 
 use crate::hw::{CostModel, Ns};
+use crate::store::Tier;
 
 /// Everything an assigner may look at for one MoE layer step.
 pub struct AssignCtx<'a> {
@@ -40,6 +41,13 @@ pub struct AssignCtx<'a> {
     /// Whether each expert's weights are already on the GPU (cache hit or
     /// arrived prefetch) — resident experts transfer for free (§4.3).
     pub resident: &'a [bool],
+    /// Storage-tier residency per expert from the tiered store. `None` =
+    /// the paper's two-tier assumption (everything host-resident); with a
+    /// memory-limited store, a disk-resident expert pays the NVMe fetch on
+    /// *either* device (the CPU cannot execute from disk any more than the
+    /// GPU can), which every solver sees through [`Self::t_gpu`] /
+    /// [`Self::t_cpu`].
+    pub tiers: Option<&'a [Tier]>,
     pub cost: &'a CostModel,
     /// Eq. 9: how many *non-resident* experts may be staged on the GPU this
     /// layer (free VRAM / expert size).
@@ -51,13 +59,41 @@ pub struct AssignCtx<'a> {
 }
 
 impl AssignCtx<'_> {
-    /// Eq. 5 estimate used by all solvers: `t_gpu(w)` with residency.
-    pub fn t_gpu(&self, e: usize) -> Ns {
-        self.cost.t_gpu(self.workloads[e] as usize, self.resident[e])
+    /// Storage tier of an expert (Host when no store is attached).
+    pub fn tier(&self, e: usize) -> Tier {
+        self.tiers.map(|t| t[e]).unwrap_or(Tier::Host)
     }
 
+    /// Eq. 5 estimate used by all solvers: `t_gpu(w)` with residency,
+    /// extended tier-aware — a disk-resident expert's transfer chains
+    /// NVMe-read → PCIe before compute can overlap it.
+    pub fn t_gpu(&self, e: usize) -> Ns {
+        let w = self.workloads[e] as usize;
+        if w == 0 {
+            return 0;
+        }
+        if self.resident[e] {
+            return self.cost.t_gpu_compute(w);
+        }
+        let mut trans = self.cost.trans_time();
+        if self.tier(e) == Tier::Disk {
+            trans += self.cost.nvme_read_time();
+        }
+        self.cost.t_gpu_compute(w).max(trans)
+    }
+
+    /// Eq. 4 estimate, tier-aware: a CPU-assigned disk-resident expert
+    /// pays the NVMe fetch into host RAM before the CPU can stream it.
     pub fn t_cpu(&self, e: usize) -> Ns {
-        self.cost.t_cpu(self.workloads[e] as usize)
+        let w = self.workloads[e] as usize;
+        if w == 0 {
+            return 0;
+        }
+        let mut t = self.cost.t_cpu(w);
+        if self.tier(e) == Tier::Disk {
+            t += self.cost.nvme_read_time();
+        }
+        t
     }
 }
 
@@ -113,6 +149,58 @@ impl Assignment {
 pub trait Assigner: Send {
     fn name(&self) -> &'static str;
     fn assign(&mut self, ctx: &AssignCtx) -> Assignment;
+}
+
+#[cfg(test)]
+mod tier_tests {
+    use super::test_util::cost;
+    use super::*;
+
+    #[test]
+    fn disk_residency_raises_both_device_costs() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![4u32, 4];
+        let resident = vec![false, false];
+        let tiers = vec![Tier::Host, Tier::Disk];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: Some(&tiers),
+            cost: &cm,
+            gpu_free_slots: 2,
+            layer: 0,
+            layers: 4,
+        };
+        // host expert matches the two-tier estimates exactly
+        assert_eq!(ctx.t_gpu(0), cm.t_gpu(4, false));
+        assert_eq!(ctx.t_cpu(0), cm.t_cpu(4));
+        // disk expert pays the NVMe fetch on either device
+        assert_eq!(ctx.t_cpu(1), cm.t_cpu(4) + cm.nvme_read_time());
+        assert!(ctx.t_gpu(1) >= cm.trans_time() + cm.nvme_read_time());
+        // GPU residency overrides the storage tier (weights already up)
+        let res2 = vec![false, true];
+        let ctx2 = AssignCtx { resident: &res2, ..ctx };
+        assert_eq!(ctx2.t_gpu(1), cm.t_gpu_compute(4));
+    }
+
+    #[test]
+    fn no_tiers_means_host() {
+        let cm = cost("deepseek-sim");
+        let workloads = vec![7u32];
+        let resident = vec![false];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: None,
+            cost: &cm,
+            gpu_free_slots: 1,
+            layer: 0,
+            layers: 1,
+        };
+        assert_eq!(ctx.tier(0), Tier::Host);
+        assert_eq!(ctx.t_gpu(0), cm.t_gpu(7, false));
+        assert_eq!(ctx.t_cpu(0), cm.t_cpu(7));
+    }
 }
 
 #[cfg(test)]

@@ -137,6 +137,7 @@ mod tests {
             let ctx = AssignCtx {
                 workloads: &workloads,
                 resident: &resident,
+                tiers: None,
                 cost: &cm,
                 gpu_free_slots: slots,
                 layer: 0,
@@ -160,6 +161,7 @@ mod tests {
             let ctx = AssignCtx {
                 workloads: &workloads,
                 resident: &resident,
+                tiers: None,
                 cost: &cm,
                 gpu_free_slots: n,
                 layer: 0,
@@ -179,6 +181,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,

@@ -59,6 +59,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 0,
             layer: 0,

@@ -92,6 +92,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 4,
             layer: 0,
@@ -112,6 +113,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,
@@ -134,6 +136,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,
@@ -151,6 +154,7 @@ mod tests {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,

@@ -17,10 +17,25 @@ use crate::workload::trace::{
 };
 
 /// Per-token top-k selection matching `jax.lax.top_k` (ties → lower index).
+///
+/// Runs per token per layer on the decode hot path, so it uses partial
+/// selection (`select_nth_unstable_by`, O(n) expected) and only sorts the
+/// k-element prefix — instead of sorting all n gate probabilities.
 pub fn top_k(probs: &[f32], k: usize) -> Vec<(usize, f32)> {
-    let mut idx: Vec<usize> = (0..probs.len()).collect();
-    idx.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]).then(a.cmp(&b)));
-    idx.into_iter().take(k).map(|e| (e, probs[e])).collect()
+    let n = probs.len();
+    let k = k.min(n);
+    if k == 0 {
+        return vec![];
+    }
+    let by_prob_desc =
+        |a: &usize, b: &usize| probs[*b].total_cmp(&probs[*a]).then(a.cmp(b));
+    let mut idx: Vec<usize> = (0..n).collect();
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, by_prob_desc);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(by_prob_desc);
+    idx.into_iter().map(|e| (e, probs[e])).collect()
 }
 
 fn cosine(a: &[f32], b: &[f32]) -> f32 {
@@ -434,6 +449,25 @@ mod tests {
         let r = top_k(&probs, 2);
         assert_eq!(r[0].0, 1, "tie broken by lower index");
         assert_eq!(r[1].0, 2);
+    }
+
+    #[test]
+    fn top_k_partial_selection_matches_full_sort() {
+        // the select_nth fast path must agree with the reference full sort
+        // on every k, including ties and the k >= n / k == 0 edges
+        let mut rng = crate::util::DetRng::new(5);
+        for _ in 0..200 {
+            let n = 1 + rng.usize_below(64);
+            let probs: Vec<f32> =
+                (0..n).map(|_| (rng.usize_below(16) as f32) / 16.0).collect();
+            for k in [0, 1, 2, n / 2, n, n + 3] {
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]).then(a.cmp(&b)));
+                let want: Vec<(usize, f32)> =
+                    idx.into_iter().take(k).map(|e| (e, probs[e])).collect();
+                assert_eq!(top_k(&probs, k), want, "n={n} k={k}");
+            }
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::coordinator::cache::ExpertCache;
 use crate::coordinator::prefetch::{top_n, PrefetchCtx, Prefetcher};
 use crate::hw::{CostModel, GpuPipeline, Ns, TransferKind};
 use crate::metrics::RunMetrics;
+use crate::store::{Tier, TieredStore};
 use crate::util::DetRng;
 use crate::workload::trace::BatchStep;
 use crate::workload::Trace;
@@ -65,6 +66,11 @@ pub struct StepSimulator<'a> {
     n_shared: usize,
     /// Last assignment per layer (exposed for breakdown experiments).
     pub last_assignments: Vec<Option<Assignment>>,
+    /// Tiered GPU/host/NVMe expert store. `None` (and equivalently an
+    /// unlimited store) reproduces the paper's two-tier behaviour exactly;
+    /// a memory-limited store makes assignment tier-aware, turns cache
+    /// evictions into demotions, and charges NVMe promotions.
+    store: Option<TieredStore>,
 }
 
 impl<'a> StepSimulator<'a> {
@@ -91,7 +97,21 @@ impl<'a> StepSimulator<'a> {
             n_routed,
             n_shared,
             last_assignments: vec![None; layers],
+            store: None,
         }
+    }
+
+    /// Attach a tiered expert store. The store's host floor is raised to
+    /// the cache's total pinned capacity (GPU-resident experts keep a host
+    /// staging copy), so the slot invariant holds for any cache policy.
+    pub fn with_store(mut self, mut store: TieredStore) -> Self {
+        store.ensure_min_slots(self.policy.cache.capacity() * self.layers + 1);
+        self.store = Some(store);
+        self
+    }
+
+    pub fn store(&self) -> Option<&TieredStore> {
+        self.store.as_ref()
     }
 
     pub fn now(&self) -> Ns {
@@ -107,6 +127,10 @@ impl<'a> StepSimulator<'a> {
         // re-base in-flight prefetch arrivals
         for v in self.prefetched.values_mut() {
             *v = v.saturating_sub(base);
+        }
+        if let Some(st) = self.store.as_mut() {
+            st.xfer.rebase_and_clear(base);
+            st.clear_op_counters();
         }
         self.metrics = RunMetrics::default();
     }
@@ -139,6 +163,13 @@ impl<'a> StepSimulator<'a> {
             // its transfer is still in flight — the copy is already paid for
             // and overlapped; execution below waits for the actual arrival.
             let cache_resident = self.policy.cache.resident_mask(l);
+            // Reconcile the store with the cache's (seeded) initial resident
+            // set once per layer — load-time placement, free of traffic.
+            if let Some(st) = self.store.as_mut() {
+                st.sync_layer(l, &cache_resident);
+            }
+            let layer_tiers: Option<Vec<Tier>> =
+                self.store.as_ref().map(|st| st.layer_tiers(l));
             let mut resident = cache_resident.clone();
             let mut prefetch_arrival: Vec<Option<Ns>> = vec![None; self.n_routed];
             for e in 0..self.n_routed {
@@ -160,6 +191,7 @@ impl<'a> StepSimulator<'a> {
             let ctx = AssignCtx {
                 workloads: &data.workloads,
                 resident: &resident,
+                tiers: layer_tiers.as_deref(),
                 cost: self.cost,
                 gpu_free_slots: self.policy.gpu_free_slots.saturating_sub(wasted_staging),
                 layer: l,
@@ -174,15 +206,39 @@ impl<'a> StepSimulator<'a> {
             // --- cache observation ------------------------------------------
             self.policy.cache.observe(l, &data.workloads, &data.gate_scores);
 
-            // --- CPU side: Eq. 4 --------------------------------------------
+            // --- CPU side: Eq. 4 (tier-aware) -------------------------------
+            // Disk-resident CPU experts stream in over the NVMe read stream
+            // first; the CPU executes sequentially in arrival order, so
+            // host-resident work overlaps in-flight promotions.
             let mut cpu_total: Ns = 0;
+            let mut cpu_timeline: Vec<(Ns, Ns)> = Vec::new(); // (arrival, dur)
             for e in 0..self.n_routed {
-                if assignment.to_cpu[e] {
-                    let t = self.cost.t_cpu(data.workloads[e] as usize);
-                    cpu_total += (t as f64 / self.policy.cpu_eff) as Ns;
+                if !assignment.to_cpu[e] {
+                    continue;
                 }
+                let t = self.cost.t_cpu(data.workloads[e] as usize);
+                let dur = (t as f64 / self.policy.cpu_eff) as Ns;
+                let tier = self.store.as_ref().map(|st| st.tier(l, e)).unwrap_or(Tier::Host);
+                let arrival = if tier == Tier::Disk {
+                    self.metrics.tier_disk_misses += 1;
+                    let now = self.now;
+                    let cost = self.cost;
+                    self.store.as_mut().map(|st| st.ensure_host(l, e, now, cost)).unwrap_or(now)
+                } else {
+                    self.metrics.tier_host_hits += 1;
+                    if let Some(st) = self.store.as_mut() {
+                        st.touch(l, e);
+                    }
+                    self.now
+                };
+                cpu_timeline.push((arrival, dur));
+                cpu_total += dur;
             }
-            let cpu_end = self.now + cpu_total;
+            cpu_timeline.sort_by_key(|&(a, _)| a);
+            let mut cpu_end = self.now;
+            for (arrival, dur) in cpu_timeline {
+                cpu_end = cpu_end.max(arrival) + dur;
+            }
             self.metrics.moe_cpu_busy_ns += cpu_total;
 
             // --- GPU side: copy/compute pipeline ----------------------------
@@ -200,15 +256,53 @@ impl<'a> StepSimulator<'a> {
                 self.metrics.cache_lookups += 1;
                 if cache_resident[e] {
                     self.metrics.cache_hits += 1;
+                    self.metrics.tier_gpu_hits += 1;
                     self.gpu.schedule_expert(self.now, 0, 0, compute);
-                    self.policy.cache.on_gpu_use(l, e, false);
+                    let evicted = self.policy.cache.on_gpu_use(l, e, false);
+                    if let Some(st) = self.store.as_mut() {
+                        st.touch(l, e);
+                        if let Some(v) = evicted {
+                            st.demote_gpu(l, v);
+                        }
+                    }
                 } else if let Some(arr) = prefetch_arrival[e] {
                     // prefetched: wait for arrival if still in flight,
                     // no new transfer
+                    self.metrics.tier_gpu_hits += 1;
                     self.gpu.schedule_expert(arr.max(self.now), 0, 0, compute);
+                    if let Some(st) = self.store.as_mut() {
+                        st.touch(l, e);
+                    }
                 } else {
-                    self.gpu.schedule_expert(self.now, trans, bytes, compute);
-                    self.policy.cache.on_gpu_use(l, e, true);
+                    // demand fetch: disk-resident experts promote over NVMe
+                    // first, then the PCIe upload starts at arrival.
+                    let tier =
+                        self.store.as_ref().map(|st| st.tier(l, e)).unwrap_or(Tier::Host);
+                    let ready = if tier == Tier::Disk {
+                        self.metrics.tier_disk_misses += 1;
+                        let now = self.now;
+                        let cost = self.cost;
+                        self.store
+                            .as_mut()
+                            .map(|st| st.ensure_host(l, e, now, cost))
+                            .unwrap_or(now)
+                    } else {
+                        self.metrics.tier_host_hits += 1;
+                        if let Some(st) = self.store.as_mut() {
+                            st.touch(l, e);
+                        }
+                        self.now
+                    };
+                    self.gpu.schedule_expert(ready, trans, bytes, compute);
+                    let evicted = self.policy.cache.on_gpu_use(l, e, true);
+                    if let Some(st) = self.store.as_mut() {
+                        if let Some(v) = evicted {
+                            // the cache admitted the fetched expert: fold the
+                            // replacement into the store (evict → demotion).
+                            st.demote_gpu(l, v);
+                            st.admit_to_gpu(l, e);
+                        }
+                    }
                 }
             }
             // shared experts always run on GPU on the full token batch
@@ -274,8 +368,17 @@ impl<'a> StepSimulator<'a> {
                     {
                         continue;
                     }
-                    let arr =
-                        self.gpu.schedule_transfer(ready, trans, bytes, TransferKind::Prefetch);
+                    // a disk-resident prefetch target chains NVMe → PCIe
+                    let mut pcie_ready = ready;
+                    if self.store.as_ref().map(|st| st.tier(l + 1, e)) == Some(Tier::Disk) {
+                        let cost = self.cost;
+                        if let Some(st) = self.store.as_mut() {
+                            pcie_ready = st.ensure_host(l + 1, e, ready, cost).max(ready);
+                        }
+                    }
+                    let arr = self
+                        .gpu
+                        .schedule_transfer(pcie_ready, trans, bytes, TransferKind::Prefetch);
                     self.prefetched.insert((l + 1, e), arr);
                     self.metrics.prefetch_issued += 1;
                     issued += 1;
@@ -290,10 +393,22 @@ impl<'a> StepSimulator<'a> {
             self.now = end;
 
             // --- cache window replacement (decode only) ----------------------
+            // With a tiered store, the eviction is a demotion into the store
+            // (not a drop), and loading a disk-resident expert chains an
+            // NVMe promotion before its PCIe upload.
             if phase == Phase::Decode {
                 for swap in self.policy.cache.window_tick(l, self.decode_steps_done + 1) {
-                    let _ = swap;
-                    self.gpu.schedule_transfer(self.now, trans, bytes, TransferKind::CacheUpdate);
+                    let mut ready = self.now;
+                    let now = self.now;
+                    let cost = self.cost;
+                    if let Some(st) = self.store.as_mut() {
+                        st.demote_gpu(l, swap.evict);
+                        if st.tier(l, swap.load) == Tier::Disk {
+                            ready = st.ensure_host(l, swap.load, now, cost);
+                        }
+                        st.admit_to_gpu(l, swap.load);
+                    }
+                    self.gpu.schedule_transfer(ready, trans, bytes, TransferKind::CacheUpdate);
                 }
             }
             let _ = pcie_busy0;
@@ -329,11 +444,21 @@ impl<'a> StepSimulator<'a> {
         self.metrics.pcie_demand_bytes = self.gpu.bytes_demand;
         self.metrics.pcie_prefetch_bytes = self.gpu.bytes_prefetch;
         self.metrics.pcie_cache_bytes = self.gpu.bytes_cache;
+        if let Some(st) = &self.store {
+            self.metrics.nvme_read_ns = st.xfer.read_busy;
+            self.metrics.nvme_write_ns = st.xfer.write_busy;
+            self.metrics.nvme_read_bytes = st.xfer.read_bytes;
+            self.metrics.nvme_write_bytes = st.xfer.write_bytes;
+            self.metrics.store_promotions = st.promotions;
+            self.metrics.store_spills = st.spills;
+            self.metrics.store_gpu_demotions = st.gpu_demotions;
+        }
     }
 }
 
 /// Replay a composed decode run over a trace: warm-up prefill (state only),
 /// then `steps` decode steps with metrics. Returns the decode-phase metrics.
+#[allow(clippy::too_many_arguments)]
 pub fn replay_decode(
     trace: &Trace,
     seq_ids: &[usize],
@@ -344,6 +469,23 @@ pub fn replay_decode(
     n_shared: usize,
     seed: u64,
 ) -> RunMetrics {
+    replay_decode_store(trace, seq_ids, steps, cost, policy, calib_freq, n_shared, seed, None)
+}
+
+/// [`replay_decode`] with an optional tiered expert store attached — the
+/// memory-limited presets route through this.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_decode_store(
+    trace: &Trace,
+    seq_ids: &[usize],
+    steps: usize,
+    cost: &CostModel,
+    policy: PolicyBundle,
+    calib_freq: Vec<Vec<f64>>,
+    n_shared: usize,
+    seed: u64,
+    store: Option<TieredStore>,
+) -> RunMetrics {
     let mut sim = StepSimulator::new(
         cost,
         policy,
@@ -353,6 +495,9 @@ pub fn replay_decode(
         n_shared,
         seed,
     );
+    if let Some(st) = store {
+        sim = sim.with_store(st);
+    }
     let prompt_len = trace.seqs[seq_ids[0] % trace.seqs.len()].prompt_len;
     let prefill = trace.compose_prefill(seq_ids);
     sim.run_step(&prefill, prompt_len / 2, Phase::Prefill);
@@ -366,6 +511,7 @@ pub fn replay_decode(
 }
 
 /// Replay the prefill phase only.
+#[allow(clippy::too_many_arguments)]
 pub fn replay_prefill(
     trace: &Trace,
     seq_ids: &[usize],
@@ -594,6 +740,66 @@ mod tests {
                 steps: vec![vec![rec; layers]; steps],
             }],
         }
+    }
+
+    #[test]
+    fn unlimited_store_reproduces_two_tier_run_exactly() {
+        // Acceptance criterion: with an unlimited host-RAM budget the
+        // tiered store must be timing-transparent — bit-identical metrics
+        // to the seed two-tier path (store bookkeeping counters aside).
+        let c = cost();
+        let w = [8u32, 8, 0, 8, 2, 0, 1, 0];
+        let run = |store: Option<crate::store::TieredStore>| {
+            let mut sim =
+                StepSimulator::new(&c, bundle(true, true), vec![vec![0.0; 8]; 4], 4, 8, 1, 1);
+            if let Some(st) = store {
+                sim = sim.with_store(st);
+            }
+            for _ in 0..12 {
+                sim.run_step(&mk_step(4, 8, &w), 16, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let two_tier = run(None);
+        let mut tiered = run(Some(crate::store::TieredStore::unlimited(4, 8)));
+        assert_eq!(tiered.nvme_read_bytes, 0, "unlimited store must never touch NVMe");
+        assert_eq!(tiered.store_promotions, 0);
+        // store bookkeeping (free demotions) is the only permitted delta
+        tiered.store_gpu_demotions = two_tier.store_gpu_demotions;
+        assert_eq!(tiered, two_tier);
+    }
+
+    #[test]
+    fn memory_limited_store_charges_nvme_and_slows_decode() {
+        let c = cost();
+        let w = [8u32, 8, 8, 8, 8, 8, 8, 8];
+        let run = |store: Option<crate::store::TieredStore>| {
+            let mut sim =
+                StepSimulator::new(&c, bundle(false, true), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+            if let Some(st) = store {
+                sim = sim.with_store(st);
+            }
+            for _ in 0..12 {
+                sim.run_step(&mk_step(4, 8, &w), 16, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let fast = run(Some(crate::store::TieredStore::unlimited(4, 8)));
+        let slow = run(Some(crate::store::TieredStore::new(
+            4,
+            8,
+            crate::store::StoreCfg { host_slots: 10, ..Default::default() },
+        )));
+        assert!(slow.tier_disk_misses > 0, "disk tier must be exercised");
+        assert!(slow.nvme_read_ns > 0 && slow.nvme_read_bytes > 0);
+        assert!(slow.store_promotions > 0);
+        assert!(
+            slow.total_ns > fast.total_ns,
+            "NVMe promotions must cost virtual time: {} vs {}",
+            slow.total_ns,
+            fast.total_ns
+        );
+        assert_eq!(fast.tier_disk_misses, 0);
     }
 
     #[test]

@@ -42,6 +42,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
             sensitivity::fig18,
         ),
         ("table9", "Table 9 — (w_size, u_size) sweep", sensitivity::table9),
+        (
+            "ram",
+            "RAM-budget sensitivity — decode speed vs host RAM (tiered store)",
+            sensitivity::ram_budget,
+        ),
         ("fig20", "Fig. 20 (A.1) — CPU/GPU balance HybriMoE vs DALI", appendix::fig20),
         ("fig21", "Fig. 21 (A.2) — beam search vs greedy vs optimal", appendix::fig21),
         ("fig22", "Fig. 22 (A.7) — decode-length sweep", appendix::fig22),

@@ -65,6 +65,24 @@ impl CostModel {
         ns(self.expert_bytes() / self.hw.pcie_bw + self.hw.pcie_latency_s)
     }
 
+    /// NVMe read time for one expert (disk → host promotion in the tiered
+    /// store). This is the third-tier analogue of [`Self::trans_time`].
+    pub fn nvme_read_time(&self) -> Ns {
+        ns(self.expert_bytes() / self.hw.nvme_read_bw + self.hw.nvme_latency_s)
+    }
+
+    /// NVMe write time for one expert (host → disk spill, when the store
+    /// runs with write-back enabled).
+    pub fn nvme_write_time(&self) -> Ns {
+        ns(self.expert_bytes() / self.hw.nvme_write_bw + self.hw.nvme_latency_s)
+    }
+
+    /// Total paper-scale bytes of all routed experts (all layers) — the
+    /// quantity host RAM must hold in the paper's two-tier deployment.
+    pub fn total_expert_bytes(&self) -> f64 {
+        self.paper.total_expert_bytes()
+    }
+
     /// GPU execution time for one expert (Eq. 5): transfer overlapped with
     /// compute via the copy/compute stream pipeline, so the cost is the max;
     /// zero transfer when the expert is already resident (cache hit or
@@ -179,6 +197,24 @@ mod tests {
     fn attn_scales_with_kv_len() {
         let c = cm("mixtral-sim");
         assert!(c.attn_time(16, 1024) > c.attn_time(16, 64));
+    }
+
+    #[test]
+    fn nvme_tier_is_slower_than_pcie() {
+        for m in ["mixtral-sim", "deepseek-sim", "qwen-sim"] {
+            let c = cm(m);
+            assert!(c.nvme_read_time() > c.trans_time(), "{m}: NVMe read must cost more");
+            assert!(c.nvme_write_time() >= c.nvme_read_time(), "{m}: writes are slower");
+        }
+    }
+
+    #[test]
+    fn total_expert_bytes_exceeds_small_ram_budgets() {
+        // The motivation for the third tier: Mixtral's 256 experts at
+        // ~352 MB each (~90 GB) cannot fit a 16 GB host-RAM budget.
+        let c = cm("mixtral-sim");
+        assert!(c.total_expert_bytes() > 80e9);
+        assert!(c.total_expert_bytes() > 16e9);
     }
 
     #[test]

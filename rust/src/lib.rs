@@ -5,9 +5,11 @@
 //! * **Layer 3 (this crate)** — the coordinator: expert assignment
 //!   ([`coordinator::assignment`], paper §4.1), residual-based prefetching
 //!   ([`coordinator::prefetch`], §4.2), workload-aware expert caching
-//!   ([`coordinator::cache`], §4.3), the inference engine, baseline
-//!   frameworks, a serving front-end, and the heterogeneous-platform
-//!   simulator ([`hw`]) standing in for the paper's RTX 3090 + EPYC testbed.
+//!   ([`coordinator::cache`], §4.3), the tiered GPU/host/NVMe expert
+//!   [`store`] (residency + async transfer scheduling beyond the paper's
+//!   two-tier assumption), the inference engine, baseline frameworks, a
+//!   serving front-end, and the heterogeneous-platform simulator ([`hw`])
+//!   standing in for the paper's RTX 3090 + EPYC testbed.
 //! * **Layer 2** — the JAX MoE model (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts.
 //! * **Layer 1** — Pallas kernels for the expert FFN and fused gate
@@ -25,8 +27,10 @@ pub mod metrics;
 pub mod moe;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod util;
 pub mod workload;
 
 pub use config::Presets;
 pub use hw::CostModel;
+pub use store::{Tier, TieredStore};

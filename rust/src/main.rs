@@ -15,8 +15,9 @@ use anyhow::{bail, Result};
 
 use dali::config::Presets;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
-use dali::coordinator::simrun::replay_decode;
+use dali::coordinator::simrun::replay_decode_store;
 use dali::hw::CostModel;
+use dali::store::TieredStore;
 use dali::util::{fmt_ns, Args};
 use dali::workload::prep;
 
@@ -54,6 +55,10 @@ fn cmd_info() -> Result<()> {
     for (name, h) in &p.hardware {
         println!("  {name:-14} {}", h.display);
     }
+    println!("scenarios (memory-limited tiered-store presets):");
+    for (name, sc) in &p.scenarios {
+        println!("  {name:-20} {} on {}", sc.model, sc.hardware);
+    }
     Ok(())
 }
 
@@ -80,16 +85,32 @@ fn cmd_run(args: &Args) -> Result<()> {
     let batch = args.usize_or("batch", 8);
     let steps = args.usize_or("steps", 32);
     let presets = Presets::load_default()?;
-    let model = presets.model(&preset)?;
-    let hw = presets.hw(&args.str_or("hw", "local-pc"))?;
+    // `--preset` accepts a model name or a scenario (e.g. mixtral-sim-ram16,
+    // which pairs the model with a memory-limited hardware preset).
+    let (model_name, hw_name) = match presets.scenarios.get(&preset) {
+        Some(sc) => (sc.model.clone(), args.str_or("hw", &sc.hardware)),
+        None => (preset.clone(), args.str_or("hw", "local-pc")),
+    };
+    let model = presets.model(&model_name)?;
+    let hw = presets.hw(&hw_name)?;
     let cost = CostModel::new(model, hw);
-    let calib = prep::ensure_calib(&preset)?;
-    let trace = prep::ensure_trace(&preset, "c4-sim", 32, 16, 64)?;
+    let calib = prep::ensure_calib(&model_name)?;
+    let trace = prep::ensure_trace(&model_name, "c4-sim", 32, 16, 64)?;
     let cfg = FrameworkCfg::paper_default(&model.sim);
     let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
     let seq_ids: Vec<usize> = (0..batch).collect();
-    let m = replay_decode(
-        &trace, &seq_ids, steps, &cost, bundle, calib.freq.clone(), model.sim.n_shared, 7,
+    let store = TieredStore::for_model(hw, &cost, model.sim.layers, model.sim.n_routed);
+    let tiered = !store.is_unlimited();
+    let m = replay_decode_store(
+        &trace,
+        &seq_ids,
+        steps,
+        &cost,
+        bundle,
+        calib.freq.clone(),
+        model.sim.n_shared,
+        7,
+        Some(store),
     );
     println!("preset={preset} framework={} batch={batch} steps={steps}", fw.name());
     println!("  decode speed      : {:.2} tokens/s (simulated)", m.tokens_per_s());
@@ -109,6 +130,22 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("  cache hit rate    : {:.1}%", 100.0 * m.cache_hit_rate());
     println!("  prefetch accuracy : {:.1}%", 100.0 * m.prefetch_accuracy());
     println!("  sched overhead    : {:.2}%", 100.0 * m.sched_share());
+    if tiered {
+        println!(
+            "  tier hits         : {} gpu / {} host / {} disk (miss rate {:.1}%)",
+            m.tier_gpu_hits,
+            m.tier_host_hits,
+            m.tier_disk_misses,
+            100.0 * m.disk_miss_rate()
+        );
+        println!(
+            "  NVMe              : {} read ({:.1}% of total), {:.2} GB in, {} promotions",
+            fmt_ns(m.nvme_read_ns),
+            100.0 * m.nvme_time_share(),
+            m.nvme_read_bytes as f64 / 1e9,
+            m.store_promotions
+        );
+    }
     Ok(())
 }
 

@@ -2,7 +2,7 @@
 //! effectiveness. Every experiment in `expt/` reports through this.
 
 /// Metrics for one inference run (prefill and/or decode).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunMetrics {
     // --- virtual time (ns) ---------------------------------------------------
     /// Total virtual time of the run.
@@ -30,6 +30,26 @@ pub struct RunMetrics {
     pub pcie_demand_bytes: u64,
     pub pcie_prefetch_bytes: u64,
     pub pcie_cache_bytes: u64,
+
+    // --- NVMe tier (tiered expert store) --------------------------------------
+    /// NVMe read-stream busy time (disk → host promotions).
+    pub nvme_read_ns: u64,
+    /// NVMe write-stream busy time (host → disk spills with write-back).
+    pub nvme_write_ns: u64,
+    pub nvme_read_bytes: u64,
+    pub nvme_write_bytes: u64,
+    /// Disk→host promotions / host→disk spills / GPU→host demotions.
+    pub store_promotions: u64,
+    pub store_spills: u64,
+    pub store_gpu_demotions: u64,
+
+    // --- tier hit counters (per executed expert, by weight source) ------------
+    /// Executions whose weights were already on the GPU (cache/prefetch).
+    pub tier_gpu_hits: u64,
+    /// Executions served from host RAM (CPU-run, or PCIe demand fetch).
+    pub tier_host_hits: u64,
+    /// Executions that had to promote from NVMe first (tier misses).
+    pub tier_disk_misses: u64,
 
     // --- cache / prefetch counters -------------------------------------------
     /// GPU-assigned expert executions that found weights resident.
@@ -89,6 +109,28 @@ impl RunMetrics {
         self.sched_ns as f64 / self.total_ns as f64
     }
 
+    /// Total expert executions attributed to a storage tier.
+    pub fn tier_lookups(&self) -> u64 {
+        self.tier_gpu_hits + self.tier_host_hits + self.tier_disk_misses
+    }
+
+    /// Fraction of expert executions that had to promote from NVMe.
+    pub fn disk_miss_rate(&self) -> f64 {
+        let n = self.tier_lookups();
+        if n == 0 {
+            return 0.0;
+        }
+        self.tier_disk_misses as f64 / n as f64
+    }
+
+    /// Share of total time the NVMe read stream is busy.
+    pub fn nvme_time_share(&self) -> f64 {
+        if self.total_ns == 0 {
+            return 0.0;
+        }
+        self.nvme_read_ns as f64 / self.total_ns as f64
+    }
+
     /// Accumulate another run's counters (for averaging across batches).
     pub fn merge(&mut self, o: &RunMetrics) {
         self.total_ns += o.total_ns;
@@ -104,6 +146,16 @@ impl RunMetrics {
         self.pcie_demand_bytes += o.pcie_demand_bytes;
         self.pcie_prefetch_bytes += o.pcie_prefetch_bytes;
         self.pcie_cache_bytes += o.pcie_cache_bytes;
+        self.nvme_read_ns += o.nvme_read_ns;
+        self.nvme_write_ns += o.nvme_write_ns;
+        self.nvme_read_bytes += o.nvme_read_bytes;
+        self.nvme_write_bytes += o.nvme_write_bytes;
+        self.store_promotions += o.store_promotions;
+        self.store_spills += o.store_spills;
+        self.store_gpu_demotions += o.store_gpu_demotions;
+        self.tier_gpu_hits += o.tier_gpu_hits;
+        self.tier_host_hits += o.tier_host_hits;
+        self.tier_disk_misses += o.tier_disk_misses;
         self.cache_hits += o.cache_hits;
         self.cache_lookups += o.cache_lookups;
         self.prefetch_issued += o.prefetch_issued;
@@ -140,5 +192,38 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.total_ns, 15);
         assert!((a.cache_hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tier_rates() {
+        let m = RunMetrics {
+            total_ns: 1_000,
+            nvme_read_ns: 250,
+            tier_gpu_hits: 2,
+            tier_host_hits: 1,
+            tier_disk_misses: 1,
+            ..Default::default()
+        };
+        assert_eq!(m.tier_lookups(), 4);
+        assert!((m.disk_miss_rate() - 0.25).abs() < 1e-9);
+        assert!((m.nvme_time_share() - 0.25).abs() < 1e-9);
+        assert_eq!(RunMetrics::default().disk_miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates_tier_counters() {
+        let mut a = RunMetrics { nvme_read_bytes: 5, store_promotions: 1, ..Default::default() };
+        let b = RunMetrics {
+            nvme_read_bytes: 7,
+            store_promotions: 2,
+            store_spills: 3,
+            tier_disk_misses: 4,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.nvme_read_bytes, 12);
+        assert_eq!(a.store_promotions, 3);
+        assert_eq!(a.store_spills, 3);
+        assert_eq!(a.tier_disk_misses, 4);
     }
 }

@@ -63,6 +63,13 @@ fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
 }
 
 impl PjrtEngine {
+    /// Whether a working PJRT CPU client can be created in this build.
+    /// False when linked against the offline `xla` stub crate — tests that
+    /// need real numerics probe this (plus artifact presence) and skip.
+    pub fn pjrt_available() -> bool {
+        PjRtClient::cpu().is_ok()
+    }
+
     /// Load `artifacts/<preset>` and start a CPU PJRT client.
     pub fn load(preset: &str) -> Result<Self> {
         let manifest = Manifest::load_preset(preset)?;

@@ -1,0 +1,37 @@
+//! Tiered expert store: GPU HBM / host RAM / NVMe residency with an async
+//! transfer scheduler.
+//!
+//! The paper assumes every expert lives in host DRAM and models a two-tier
+//! GPU↔host hierarchy. Local-PC deployments of DeepSeek-V3-class models
+//! break that assumption: cold expert storage exceeds both VRAM *and* RAM,
+//! so residency placement across three tiers — not just GPU caching —
+//! dominates latency once RAM is constrained. This subsystem adds that
+//! axis:
+//!
+//! * [`Tier`] — the residency lattice `Gpu > Host > Disk`. Every expert has
+//!   exactly one *primary* tier (the conservation invariant the property
+//!   tests assert).
+//! * [`TransferScheduler`] — distinct virtual-time NVMe read/write streams
+//!   (disk↔host). Host↔GPU traffic stays on the existing
+//!   [`crate::hw::GpuPipeline`] PCIe lanes; promotions from disk chain
+//!   NVMe-read → PCIe.
+//! * [`TieredStore`] — per-expert residency state plus a slot allocator for
+//!   the host tier. Promotions (disk→host→GPU) are charged to the streams;
+//!   GPU cache evictions *demote into the store* instead of dropping.
+//!
+//! Semantics: host↔GPU is **inclusive** (promoting an expert to the GPU
+//! cache keeps its pinned host staging copy, so eviction back to host is
+//! free bookkeeping — exactly the seed's two-tier behaviour), while
+//! disk↔host is **exclusive** (a disk-resident expert consumes no host
+//! slot). With an unlimited host budget every expert starts host-resident,
+//! no NVMe traffic ever occurs, and the simulator reproduces the two-tier
+//! virtual-time results bit-for-bit (regression-tested in
+//! `rust/tests/store_property.rs`).
+
+mod scheduler;
+mod tier;
+mod tiered;
+
+pub use scheduler::TransferScheduler;
+pub use tier::Tier;
+pub use tiered::{StoreCfg, TieredStore};

@@ -1,0 +1,119 @@
+//! Virtual-time NVMe transfer streams (disk ↔ host).
+//!
+//! Mirrors [`crate::hw::GpuPipeline`]'s stream discipline for the third
+//! tier: one read stream (disk → host promotions) and one write stream
+//! (host → disk spills), each FIFO with its own free-time pointer, so
+//! promotions and demotions overlap each other and all GPU work. A
+//! promotion that feeds a PCIe upload chains: the PCIe transfer may start
+//! only at the NVMe arrival instant.
+
+use crate::hw::Ns;
+
+/// Two independent NVMe virtual-time streams plus traffic counters.
+#[derive(Debug, Clone, Default)]
+pub struct TransferScheduler {
+    read_free: Ns,
+    write_free: Ns,
+    /// Busy-time integrals per stream.
+    pub read_busy: Ns,
+    pub write_busy: Ns,
+    /// Bytes moved per direction.
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    /// Transfer counts per direction.
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl TransferScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Next instant the read stream is free.
+    pub fn read_free_at(&self) -> Ns {
+        self.read_free
+    }
+
+    /// Next instant the write stream is free.
+    pub fn write_free_at(&self) -> Ns {
+        self.write_free
+    }
+
+    /// Schedule a disk→host read at or after `now`; returns arrival time.
+    pub fn schedule_read(&mut self, now: Ns, dur: Ns, bytes: u64) -> Ns {
+        let start = self.read_free.max(now);
+        self.read_free = start + dur;
+        self.read_busy += dur;
+        self.read_bytes += bytes;
+        self.reads += 1;
+        self.read_free
+    }
+
+    /// Schedule a host→disk write at or after `now`; returns completion.
+    pub fn schedule_write(&mut self, now: Ns, dur: Ns, bytes: u64) -> Ns {
+        let start = self.write_free.max(now);
+        self.write_free = start + dur;
+        self.write_busy += dur;
+        self.write_bytes += bytes;
+        self.writes += 1;
+        self.write_free
+    }
+
+    /// Re-base stream clocks after a metrics reset (mirrors
+    /// `StepSimulator::reset_metrics` re-basing in-flight prefetches) and
+    /// clear the counters.
+    pub fn rebase_and_clear(&mut self, base: Ns) {
+        self.read_free = self.read_free.saturating_sub(base);
+        self.write_free = self.write_free.saturating_sub(base);
+        self.read_busy = 0;
+        self.write_busy = 0;
+        self.read_bytes = 0;
+        self.write_bytes = 0;
+        self.reads = 0;
+        self.writes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_are_fifo_on_one_stream() {
+        let mut s = TransferScheduler::new();
+        assert_eq!(s.schedule_read(0, 100, 8), 100);
+        assert_eq!(s.schedule_read(0, 50, 8), 150);
+        assert_eq!(s.read_busy, 150);
+        assert_eq!(s.read_bytes, 16);
+        assert_eq!(s.reads, 2);
+    }
+
+    #[test]
+    fn read_and_write_streams_overlap() {
+        let mut s = TransferScheduler::new();
+        let r = s.schedule_read(0, 100, 1);
+        let w = s.schedule_write(0, 100, 1);
+        assert_eq!(r, 100);
+        assert_eq!(w, 100, "write stream does not queue behind reads");
+    }
+
+    #[test]
+    fn transfers_respect_now() {
+        let mut s = TransferScheduler::new();
+        assert_eq!(s.schedule_read(500, 100, 1), 600);
+        assert_eq!(s.schedule_read(0, 100, 1), 700, "FIFO after the backlog");
+    }
+
+    #[test]
+    fn rebase_shifts_clocks_and_clears_counters() {
+        let mut s = TransferScheduler::new();
+        s.schedule_read(0, 1000, 4);
+        s.schedule_write(0, 300, 4);
+        s.rebase_and_clear(400);
+        assert_eq!(s.read_free_at(), 600);
+        assert_eq!(s.write_free_at(), 0);
+        assert_eq!(s.read_busy, 0);
+        assert_eq!(s.write_bytes, 0);
+    }
+}

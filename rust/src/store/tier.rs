@@ -1,0 +1,36 @@
+//! The three-level residency lattice.
+
+/// Where an expert's weights primarily live. Ordered coldest-first so
+/// `Tier::Disk < Tier::Host < Tier::Gpu` reads as "promotion moves up".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    /// NVMe-resident: must be read into host RAM before any device can
+    /// execute it (CPU included).
+    Disk,
+    /// Host-DRAM-resident: the paper's baseline assumption for all experts.
+    Host,
+    /// GPU-cache-resident (the host keeps the pinned staging copy).
+    Gpu,
+}
+
+impl Tier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Disk => "disk",
+            Tier::Host => "host",
+            Tier::Gpu => "gpu",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lattice_orders_coldest_first() {
+        assert!(Tier::Disk < Tier::Host);
+        assert!(Tier::Host < Tier::Gpu);
+        assert_eq!(Tier::Gpu.name(), "gpu");
+    }
+}

@@ -1,0 +1,445 @@
+//! Per-expert residency state + host-tier slot allocator.
+//!
+//! Residency is tracked over the *sim-scale* expert grid (layers ×
+//! n_routed), while byte budgets are *paper-scale* (the repo's "virtual
+//! time, real numerics" doctrine): a host-RAM budget is converted into a
+//! slot count by taking the fraction of total paper-scale expert bytes it
+//! can hold and applying that fraction to the sim grid. Timing ratios
+//! (NVMe vs PCIe vs compute) therefore match the paper-scale hardware.
+
+use crate::config::HwConfig;
+use crate::hw::{CostModel, Ns};
+
+use super::scheduler::TransferScheduler;
+use super::tier::Tier;
+
+/// Store configuration.
+#[derive(Debug, Clone)]
+pub struct StoreCfg {
+    /// Host-tier capacity in experts (`usize::MAX` = unlimited, the
+    /// paper's two-tier assumption).
+    pub host_slots: usize,
+    /// Charge an NVMe write when spilling host → disk. Off by default:
+    /// expert weights are immutable and the disk master copy always
+    /// exists, so a spill of the canonical format is a free drop. Enable
+    /// for stores whose host pool holds a transcoded (e.g. dequantized)
+    /// format that must be persisted to NVMe scratch.
+    pub spill_writeback: bool,
+}
+
+impl Default for StoreCfg {
+    fn default() -> Self {
+        StoreCfg { host_slots: usize::MAX, spill_writeback: false }
+    }
+}
+
+/// Three-tier expert store: residency map, host slot allocator, and the
+/// NVMe transfer scheduler. See the module docs for the tier semantics.
+#[derive(Debug, Clone)]
+pub struct TieredStore {
+    layers: usize,
+    n_experts: usize,
+    /// Primary tier per expert, flat `layer * n_experts + e`.
+    tier: Vec<Tier>,
+    /// Experts whose primary tier is Host or Gpu (inclusive host↔GPU).
+    host_used: usize,
+    host_slots: usize,
+    spill_writeback: bool,
+    /// LRU clock for host-victim selection.
+    clock: u64,
+    last_use: Vec<u64>,
+    /// Layers whose initial GPU cache residency has been reconciled.
+    synced: Vec<bool>,
+    /// NVMe read/write virtual-time streams.
+    pub xfer: TransferScheduler,
+    /// Disk→host promotions (NVMe reads charged).
+    pub promotions: u64,
+    /// Host→disk spills.
+    pub spills: u64,
+    /// GPU→host demotions (cache evictions folded into the store).
+    pub gpu_demotions: u64,
+    /// Host promotions requested while every host slot was pinned by a
+    /// GPU-resident expert (capacity floor violations; see
+    /// `ensure_min_slots`).
+    pub overcommits: u64,
+}
+
+impl TieredStore {
+    /// Build a store with `host_slots` host-tier slots. Initial placement
+    /// fills the host tier expert-major (expert 0 of every layer, then
+    /// expert 1, ...), so every layer keeps a warm working set and cold
+    /// expert ids spill to disk — deterministic and model-agnostic.
+    pub fn new(layers: usize, n_experts: usize, cfg: StoreCfg) -> Self {
+        let total = layers * n_experts;
+        let mut tier = vec![Tier::Disk; total];
+        let mut placed = 0usize;
+        'fill: for e in 0..n_experts {
+            for l in 0..layers {
+                if placed == cfg.host_slots {
+                    break 'fill;
+                }
+                tier[l * n_experts + e] = Tier::Host;
+                placed += 1;
+            }
+        }
+        TieredStore {
+            layers,
+            n_experts,
+            tier,
+            host_used: placed,
+            host_slots: cfg.host_slots,
+            spill_writeback: cfg.spill_writeback,
+            clock: 0,
+            last_use: vec![0; total],
+            synced: vec![false; layers],
+            xfer: TransferScheduler::new(),
+            promotions: 0,
+            spills: 0,
+            gpu_demotions: 0,
+            overcommits: 0,
+        }
+    }
+
+    /// Two-tier store: host RAM holds every expert (seed behaviour).
+    pub fn unlimited(layers: usize, n_experts: usize) -> Self {
+        Self::new(layers, n_experts, StoreCfg::default())
+    }
+
+    /// Derive the store from a hardware preset: the host-RAM budget (with
+    /// 10 % headroom for activations/KV staging) is converted to a
+    /// sim-grid slot count via the paper-scale expert footprint.
+    pub fn for_model(hw: &HwConfig, cost: &CostModel, layers: usize, n_experts: usize) -> Self {
+        if hw.host_ram_bytes <= 0.0 {
+            return Self::unlimited(layers, n_experts);
+        }
+        let total = layers * n_experts;
+        let frac = (hw.host_ram_bytes * 0.9 / cost.total_expert_bytes()).clamp(0.0, 1.0);
+        let slots = ((frac * total as f64).floor() as usize).max(1);
+        let cfg = StoreCfg { host_slots: slots.min(total), ..StoreCfg::default() };
+        Self::new(layers, n_experts, cfg)
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn host_slots(&self) -> usize {
+        self.host_slots
+    }
+
+    pub fn host_used(&self) -> usize {
+        self.host_used
+    }
+
+    /// Whether this store can hold every expert in host RAM.
+    pub fn is_unlimited(&self) -> bool {
+        self.host_slots >= self.layers * self.n_experts
+    }
+
+    fn idx(&self, layer: usize, e: usize) -> usize {
+        debug_assert!(layer < self.layers && e < self.n_experts);
+        layer * self.n_experts + e
+    }
+
+    pub fn tier(&self, layer: usize, e: usize) -> Tier {
+        self.tier[self.idx(layer, e)]
+    }
+
+    /// Residency tiers of one whole layer (assignment input).
+    pub fn layer_tiers(&self, layer: usize) -> Vec<Tier> {
+        let i = layer * self.n_experts;
+        self.tier[i..i + self.n_experts].to_vec()
+    }
+
+    /// Record a use (LRU recency) without changing residency.
+    pub fn touch(&mut self, layer: usize, e: usize) {
+        self.clock += 1;
+        let i = self.idx(layer, e);
+        self.last_use[i] = self.clock;
+    }
+
+    /// Raise the host capacity floor so it can always pin the GPU cache's
+    /// staging copies (call once with the cache's total capacity).
+    pub fn ensure_min_slots(&mut self, min: usize) {
+        let total = self.layers * self.n_experts;
+        if self.host_slots < min {
+            self.host_slots = min.min(total);
+        }
+    }
+
+    /// Zero the operation counters (metrics-period boundary). Residency
+    /// state and stream clocks are untouched — pair with
+    /// `xfer.rebase_and_clear`.
+    pub fn clear_op_counters(&mut self) {
+        self.promotions = 0;
+        self.spills = 0;
+        self.gpu_demotions = 0;
+        self.overcommits = 0;
+    }
+
+    /// Make `e` of `layer` host-resident, charging an NVMe read if it was
+    /// on disk (and spilling an LRU host victim if the host tier is full).
+    /// Returns the virtual instant the weights are available in host RAM
+    /// (`now` when already host- or GPU-resident).
+    pub fn ensure_host(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> Ns {
+        let i = self.idx(layer, e);
+        self.touch(layer, e);
+        if self.tier[i] != Tier::Disk {
+            return now;
+        }
+        if self.host_used >= self.host_slots {
+            self.spill_one(now, (layer, e), cost);
+        }
+        if self.host_used >= self.host_slots {
+            // every slot is pinned by a GPU-resident staging copy: those
+            // set a hard floor below which the budget cannot shrink — grow
+            // it and record the overcommit.
+            self.host_slots = self.host_used + 1;
+            self.overcommits += 1;
+        }
+        self.tier[i] = Tier::Host;
+        self.host_used += 1;
+        self.promotions += 1;
+        let bytes = cost.expert_bytes() as u64;
+        self.xfer.schedule_read(now, cost.nvme_read_time(), bytes)
+    }
+
+    /// Spill the least-recently-used host-primary expert to disk. GPU-tier
+    /// experts are pinned (their host copy backs the GPU cache) and never
+    /// chosen. No-op if every slot is pinned — the caller then grows the
+    /// budget floor and records an overcommit.
+    fn spill_one(&mut self, now: Ns, protect: (usize, usize), cost: &CostModel) {
+        let pi = protect.0 * self.n_experts + protect.1;
+        let mut victim: Option<usize> = None;
+        for i in 0..self.tier.len() {
+            if i == pi || self.tier[i] != Tier::Host {
+                continue;
+            }
+            if victim.map(|v| self.last_use[i] < self.last_use[v]).unwrap_or(true) {
+                victim = Some(i);
+            }
+        }
+        if let Some(v) = victim {
+            self.tier[v] = Tier::Disk;
+            self.host_used -= 1;
+            self.spills += 1;
+            if self.spill_writeback {
+                let bytes = cost.expert_bytes() as u64;
+                self.xfer.schedule_write(now, cost.nvme_write_time(), bytes);
+            }
+        }
+    }
+
+    /// Mark `e` of `layer` GPU-resident (cache admission / swap load). The
+    /// caller is responsible for having made it host-resident first
+    /// (`ensure_host`) and for charging the PCIe upload; a disk-resident
+    /// expert is tolerated only for free initial placement and claims its
+    /// host slot without NVMe traffic.
+    pub fn admit_to_gpu(&mut self, layer: usize, e: usize) {
+        let i = self.idx(layer, e);
+        self.touch(layer, e);
+        if self.tier[i] == Tier::Disk {
+            // initial placement path (cache seeded before the store syncs)
+            self.host_used += 1;
+            if self.host_used > self.host_slots {
+                self.host_slots = self.host_used;
+            }
+        }
+        self.tier[i] = Tier::Gpu;
+    }
+
+    /// Fold a GPU cache eviction into the store: the expert's primary tier
+    /// drops to Host (free — the pinned host copy still exists).
+    pub fn demote_gpu(&mut self, layer: usize, e: usize) {
+        let i = self.idx(layer, e);
+        if self.tier[i] == Tier::Gpu {
+            self.tier[i] = Tier::Host;
+            self.gpu_demotions += 1;
+        }
+    }
+
+    /// One-time reconciliation of a layer's initial cache residency (the
+    /// caches seed random resident sets before the store exists). Free:
+    /// models load-time placement, not runtime traffic.
+    pub fn sync_layer(&mut self, layer: usize, gpu_mask: &[bool]) {
+        if self.synced[layer] {
+            return;
+        }
+        self.synced[layer] = true;
+        for e in 0..self.n_experts.min(gpu_mask.len()) {
+            let i = self.idx(layer, e);
+            if gpu_mask[e] && self.tier[i] != Tier::Gpu {
+                self.admit_to_gpu(layer, e);
+            }
+        }
+    }
+
+    /// (gpu, host, disk) expert counts across the whole grid.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for t in &self.tier {
+            match t {
+                Tier::Gpu => c.0 += 1,
+                Tier::Host => c.1 += 1,
+                Tier::Disk => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// GPU-primary experts of one layer (memory-model consistency checks).
+    pub fn gpu_count_layer(&self, layer: usize) -> usize {
+        let i = layer * self.n_experts;
+        self.tier[i..i + self.n_experts].iter().filter(|t| **t == Tier::Gpu).count()
+    }
+
+    /// Paper-scale bytes the host tier currently pins (slot fraction of
+    /// the total expert footprint).
+    pub fn host_bytes_paper(&self, cost: &CostModel) -> f64 {
+        let total = (self.layers * self.n_experts).max(1);
+        cost.total_expert_bytes() * self.host_used as f64 / total as f64
+    }
+
+    /// Verify the store's internal invariants; returns a description of
+    /// the first violation. Used by the property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let (gpu, host, disk) = self.counts();
+        if gpu + host + disk != self.layers * self.n_experts {
+            return Err(format!(
+                "residency not conserved: {gpu}+{host}+{disk} != {}",
+                self.layers * self.n_experts
+            ));
+        }
+        if gpu + host != self.host_used {
+            return Err(format!(
+                "host accounting drift: counted {} vs tracked {}",
+                gpu + host,
+                self.host_used
+            ));
+        }
+        if self.host_used > self.host_slots {
+            return Err(format!(
+                "host over capacity: {} used > {} slots",
+                self.host_used, self.host_slots
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Presets;
+
+    fn cost() -> CostModel {
+        let p = Presets::load_default().unwrap();
+        CostModel::new(p.model("mixtral-sim").unwrap(), p.hw("local-pc").unwrap())
+    }
+
+    #[test]
+    fn unlimited_store_is_all_host() {
+        let s = TieredStore::unlimited(4, 8);
+        assert!(s.is_unlimited());
+        let (g, h, d) = s.counts();
+        assert_eq!((g, h, d), (0, 32, 0));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn limited_store_spreads_host_slots_across_layers() {
+        let s = TieredStore::new(4, 8, StoreCfg { host_slots: 8, ..Default::default() });
+        let (_, h, d) = s.counts();
+        assert_eq!(h, 8);
+        assert_eq!(d, 24);
+        // expert-major fill → every layer holds experts 0 and 1
+        for l in 0..4 {
+            assert_eq!(s.tier(l, 0), Tier::Host);
+            assert_eq!(s.tier(l, 1), Tier::Host);
+            assert_eq!(s.tier(l, 2), Tier::Disk);
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ensure_host_charges_nvme_and_spills_lru() {
+        let c = cost();
+        let mut s = TieredStore::new(2, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        // initial host set: (0,0) and (1,0)
+        assert_eq!(s.tier(0, 0), Tier::Host);
+        assert_eq!(s.tier(1, 0), Tier::Host);
+        s.touch(0, 0); // (1,0) is now LRU
+        let arr = s.ensure_host(0, 3, 0, &c);
+        assert_eq!(arr, c.nvme_read_time());
+        assert_eq!(s.tier(0, 3), Tier::Host);
+        assert_eq!(s.tier(1, 0), Tier::Disk, "LRU host expert spilled");
+        assert_eq!(s.promotions, 1);
+        assert_eq!(s.spills, 1);
+        assert_eq!(s.xfer.write_bytes, 0, "clean spill is free by default");
+        s.check_invariants().unwrap();
+        // second promotion queues behind the first on the read stream
+        let arr2 = s.ensure_host(1, 3, 0, &c);
+        assert_eq!(arr2, 2 * c.nvme_read_time());
+    }
+
+    #[test]
+    fn writeback_spills_charge_the_write_stream() {
+        let c = cost();
+        let mut s =
+            TieredStore::new(2, 4, StoreCfg { host_slots: 1, spill_writeback: true });
+        s.ensure_host(1, 3, 0, &c);
+        assert_eq!(s.spills, 1);
+        assert!(s.xfer.write_bytes > 0);
+        assert_eq!(s.xfer.write_busy, c.nvme_write_time());
+    }
+
+    #[test]
+    fn gpu_admission_pins_and_demotion_is_free() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        s.ensure_host(0, 0, 0, &c); // already host; no-op
+        s.admit_to_gpu(0, 0);
+        assert_eq!(s.tier(0, 0), Tier::Gpu);
+        // GPU expert is pinned: promoting two more spills only expert 1
+        s.ensure_host(0, 2, 0, &c);
+        assert_eq!(s.tier(0, 1), Tier::Disk);
+        assert_eq!(s.tier(0, 0), Tier::Gpu);
+        let nvme = s.xfer.read_busy;
+        s.demote_gpu(0, 0);
+        assert_eq!(s.tier(0, 0), Tier::Host);
+        assert_eq!(s.xfer.read_busy, nvme, "demotion moves no bytes");
+        assert_eq!(s.gpu_demotions, 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sync_layer_is_free_and_idempotent() {
+        let mut s = TieredStore::new(2, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        s.sync_layer(0, &[false, false, true, true]);
+        assert_eq!(s.tier(0, 2), Tier::Gpu);
+        assert_eq!(s.tier(0, 3), Tier::Gpu);
+        assert_eq!(s.xfer.read_bytes, 0, "initial placement is free");
+        // second sync of the same layer does nothing
+        s.sync_layer(0, &[true, false, false, false]);
+        assert_eq!(s.tier(0, 0), Tier::Host);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn for_model_converts_ram_budget_to_slots() {
+        let p = Presets::load_default().unwrap();
+        let m = p.model("mixtral-sim").unwrap();
+        let c = CostModel::new(m, p.hw("local-pc-ram16").unwrap());
+        let s = TieredStore::for_model(p.hw("local-pc-ram16").unwrap(), &c, 4, 8);
+        assert!(!s.is_unlimited());
+        assert!(s.host_slots() >= 1 && s.host_slots() < 32);
+        assert!(s.host_bytes_paper(&c) <= 16e9);
+        // unlimited hardware → unlimited store
+        let c2 = CostModel::new(m, p.hw("local-pc").unwrap());
+        assert!(TieredStore::for_model(p.hw("local-pc").unwrap(), &c2, 4, 8).is_unlimited());
+    }
+}

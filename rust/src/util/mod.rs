@@ -53,6 +53,17 @@ pub fn artifacts_dir() -> PathBuf {
     repo_root().join("artifacts")
 }
 
+/// Whether `make artifacts` output exists for `preset`. Tests that read
+/// artifacts probe this and skip (with a message) when absent, instead of
+/// failing on infrastructure the offline build cannot have.
+pub fn artifacts_ready(preset: &str) -> bool {
+    let ok = artifacts_dir().join(preset).join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts for {preset} not generated (run `make artifacts`)");
+    }
+    ok
+}
+
 /// `<repo>/results` (experiment outputs)
 pub fn results_dir() -> PathBuf {
     let d = repo_root().join("results");

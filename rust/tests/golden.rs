@@ -72,18 +72,33 @@ fn check_preset(preset: &str) {
     }
 }
 
+
+/// Shared skip probe — see `dali::runtime::live_ready`.
+fn live_ready() -> bool {
+    dali::runtime::live_ready()
+}
+
 #[test]
 fn golden_mixtral() {
+    if !live_ready() {
+        return;
+    }
     check_preset("mixtral-sim");
 }
 
 #[test]
 fn golden_deepseek_shared_experts() {
+    if !live_ready() {
+        return;
+    }
     // deepseek-sim exercises the shared-expert path (n_shared = 1)
     check_preset("deepseek-sim");
 }
 
 #[test]
 fn golden_qwen() {
+    if !live_ready() {
+        return;
+    }
     check_preset("qwen-sim");
 }

@@ -43,6 +43,7 @@ fn prop_all_assigners_satisfy_constraints() {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: cm,
             gpu_free_slots: slots,
             layer: rng.usize_below(4),
@@ -79,6 +80,7 @@ fn prop_optimal_not_worse_than_any_heuristic() {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: slots,
             layer: 0,
@@ -104,6 +106,7 @@ fn prop_greedy_within_2x_of_optimal() {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: n,
             layer: 0,
@@ -192,6 +195,7 @@ fn prop_makespan_estimate_is_max_of_sides() {
         let ctx = AssignCtx {
             workloads: &workloads,
             resident: &resident,
+            tiers: None,
             cost: &cm,
             gpu_free_slots: n,
             layer: 0,

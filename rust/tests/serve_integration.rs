@@ -18,8 +18,17 @@ fn start() -> String {
     format!("127.0.0.1:{port}")
 }
 
+
+/// Shared skip probe — see `dali::runtime::live_ready`.
+fn live_ready() -> bool {
+    dali::runtime::live_ready()
+}
+
 #[test]
 fn serve_end_to_end() {
+    if !live_ready() {
+        return;
+    }
     let addr = start();
 
     // health

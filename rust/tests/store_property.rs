@@ -1,0 +1,305 @@
+//! Property + integration tests for the tiered expert store
+//! (`dali::store`): residency conservation, host slot-capacity invariants
+//! under random promote/demote sequences, GPU-memory-model consistency,
+//! the unlimited-RAM two-tier regression, and the memory-limited
+//! end-to-end run through `simrun` (ISSUE acceptance criteria).
+
+use dali::config::Presets;
+use dali::coordinator::assignment::GreedyAssigner;
+use dali::coordinator::cache::WorkloadAwareCache;
+use dali::coordinator::prefetch::{NoPrefetcher, ResidualPrefetcher};
+use dali::coordinator::simrun::{Phase, PolicyBundle, StepSimulator};
+use dali::hw::GpuMemModel;
+use dali::metrics::RunMetrics;
+use dali::store::{StoreCfg, Tier, TieredStore};
+use dali::util::DetRng;
+use dali::workload::trace::{BatchStep, LayerStepData};
+use dali::CostModel;
+
+fn cost(model: &str, hw: &str) -> CostModel {
+    let p = Presets::load_default().unwrap();
+    CostModel::new(p.model(model).unwrap(), p.hw(hw).unwrap())
+}
+
+/// Run `f` over `n` seeded cases, reporting the failing seed.
+fn for_seeds(n: u64, f: impl Fn(u64)) {
+    for seed in 0..n {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if result.is_err() {
+            panic!("property failed at seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_residency_conserved_under_random_ops() {
+    // Every expert is in exactly one tier, host accounting never drifts,
+    // and the slot capacity is never exceeded — under arbitrary interleaved
+    // promote / admit / demote / touch sequences.
+    let c = cost("mixtral-sim", "local-pc-ram16");
+    for_seeds(120, |seed| {
+        let mut rng = DetRng::new(seed);
+        let layers = 1 + rng.usize_below(6);
+        let n = 2 + rng.usize_below(14);
+        let total = layers * n;
+        let slots = 1 + rng.usize_below(total);
+        let mut st = TieredStore::new(
+            layers,
+            n,
+            StoreCfg { host_slots: slots, spill_writeback: rng.chance(0.5) },
+        );
+        let mut now = 0u64;
+        for _ in 0..200 {
+            let l = rng.usize_below(layers);
+            let e = rng.usize_below(n);
+            match rng.usize_below(4) {
+                0 => {
+                    now += 1;
+                    st.ensure_host(l, e, now, &c);
+                }
+                1 => {
+                    // admission models the cache loading a host-resident
+                    // expert; promote first as the simulator does
+                    now += 1;
+                    st.ensure_host(l, e, now, &c);
+                    st.admit_to_gpu(l, e);
+                }
+                2 => st.demote_gpu(l, e),
+                _ => st.touch(l, e),
+            }
+            st.check_invariants().unwrap();
+            let (g, h, d) = st.counts();
+            assert_eq!(g + h + d, total, "residency must be conserved");
+            assert!(g + h <= st.host_slots(), "slot capacity violated");
+        }
+        // ensure_host is what promoted everything: spills must have been
+        // forced whenever promotions exceeded the (possibly floor-raised)
+        // slot budget — host_used = initial + promotions - spills ≤ slots
+        if st.promotions as usize > st.host_slots() {
+            assert!(st.spills > 0, "over-budget promotions require spills");
+        }
+    });
+}
+
+#[test]
+fn prop_nvme_streams_account_all_promotions() {
+    // Each disk→host promotion charges exactly one expert's bytes on the
+    // read stream; write traffic appears iff write-back spilling is on.
+    let c = cost("deepseek-sim", "local-pc-ram16");
+    for_seeds(60, |seed| {
+        let mut rng = DetRng::new(seed);
+        let writeback = rng.chance(0.5);
+        let mut st =
+            TieredStore::new(2, 8, StoreCfg { host_slots: 3, spill_writeback: writeback });
+        for i in 0..50 {
+            st.ensure_host(rng.usize_below(2), rng.usize_below(8), i, &c);
+        }
+        let expert_bytes = c.expert_bytes() as u64;
+        assert_eq!(st.xfer.read_bytes, st.promotions * expert_bytes);
+        assert_eq!(st.xfer.reads, st.promotions);
+        if writeback {
+            assert_eq!(st.xfer.write_bytes, st.spills * expert_bytes);
+        } else {
+            assert_eq!(st.xfer.write_bytes, 0);
+        }
+        st.check_invariants().unwrap();
+    });
+}
+
+fn mk_step(layers: usize, n: usize, w: &[u32]) -> BatchStep {
+    assert_eq!(w.len(), n);
+    BatchStep {
+        tokens: (w.iter().sum::<u32>() as usize / 2).max(1),
+        layers: (0..layers)
+            .map(|_| LayerStepData {
+                workloads: w.to_vec(),
+                gate_scores: w.iter().map(|&x| x as f32 * 0.4).collect(),
+                pred_raw: w.to_vec(),
+                pred_res: w.to_vec(),
+            })
+            .collect(),
+    }
+}
+
+fn bundle(layers: usize, n: usize, cache_size: usize, prefetch: bool) -> PolicyBundle {
+    PolicyBundle {
+        assigner: Box::new(GreedyAssigner::new()),
+        prefetcher: if prefetch {
+            Box::new(ResidualPrefetcher)
+        } else {
+            Box::new(NoPrefetcher)
+        },
+        cache: Box::new(WorkloadAwareCache::new(layers, n, cache_size, 4, 1, 9)),
+        prefetch_size: usize::from(prefetch),
+        cpu_eff: 1.0,
+        layer_overhead_ns: 0,
+        gpu_free_slots: n,
+    }
+}
+
+fn run_sim(
+    c: &CostModel,
+    layers: usize,
+    n: usize,
+    store: Option<TieredStore>,
+    steps: usize,
+    workloads: &[u32],
+) -> (RunMetrics, Option<(usize, usize, usize)>, Option<usize>) {
+    let mut sim = StepSimulator::new(
+        c,
+        bundle(layers, n, 2, true),
+        vec![vec![0.0; n]; layers],
+        layers,
+        n,
+        0,
+        7,
+    );
+    if let Some(st) = store {
+        sim = sim.with_store(st);
+    }
+    for _ in 0..steps {
+        sim.run_step(&mk_step(layers, n, workloads), 16, Phase::Decode);
+    }
+    let counts = sim.store().map(|s| s.counts());
+    let gpu_layer0 = sim.store().map(|s| s.gpu_count_layer(0));
+    if let Some(st) = sim.store() {
+        st.check_invariants().unwrap();
+    }
+    (sim.finish(), counts, gpu_layer0)
+}
+
+#[test]
+fn unlimited_store_regression_matches_two_tier_exactly() {
+    // ISSUE acceptance: with an unlimited host-RAM budget the store must
+    // reproduce the seed's two-tier virtual-time results exactly.
+    for model in ["mixtral-sim", "deepseek-sim", "qwen-sim"] {
+        let c = cost(model, "local-pc");
+        let n = if model == "mixtral-sim" { 8 } else { 16 };
+        let w: Vec<u32> = (0..n).map(|e| ((e * 5) % 9) as u32).collect();
+        let (two_tier, _, _) = run_sim(&c, 4, n, None, 24, &w);
+        let (mut tiered, counts, _) =
+            run_sim(&c, 4, n, Some(TieredStore::unlimited(4, n)), 24, &w);
+        assert_eq!(tiered.nvme_read_bytes, 0);
+        assert_eq!(tiered.nvme_write_bytes, 0);
+        assert_eq!(tiered.store_promotions, 0);
+        assert_eq!(tiered.tier_disk_misses, 0);
+        let (_, _, d) = counts.unwrap();
+        assert_eq!(d, 0, "nothing may spill to disk with unlimited RAM");
+        // free GPU↔host bookkeeping is the only permitted metrics delta
+        tiered.store_gpu_demotions = two_tier.store_gpu_demotions;
+        assert_eq!(tiered, two_tier, "{model}: tiered store must be timing-transparent");
+    }
+}
+
+#[test]
+fn memory_limited_preset_end_to_end_reports_tier_metrics() {
+    // ISSUE acceptance: a memory-limited preset (host RAM < total expert
+    // bytes) runs end-to-end through simrun and reports per-tier hit/miss
+    // counters and NVMe transfer time in its metrics.
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
+    assert!(hw.is_memory_limited(&model.paper));
+    let c = CostModel::new(model, hw);
+    let layers = model.sim.layers;
+    let n = model.sim.n_routed;
+    let store = TieredStore::for_model(hw, &c, layers, n);
+    assert!(!store.is_unlimited());
+    let w: Vec<u32> = (0..n).map(|e| 2 + ((e * 3) % 7) as u32).collect();
+    let (m, counts, _) = run_sim(&c, layers, n, Some(store), 24, &w);
+    // per-tier counters present and coherent
+    assert!(m.tier_disk_misses > 0, "disk tier must be exercised");
+    assert!(m.tier_gpu_hits > 0 || m.tier_host_hits > 0);
+    assert_eq!(m.tier_lookups(), m.tier_gpu_hits + m.tier_host_hits + m.tier_disk_misses);
+    assert!(m.disk_miss_rate() > 0.0 && m.disk_miss_rate() <= 1.0);
+    // NVMe transfer time reported
+    assert!(m.nvme_read_ns > 0 && m.nvme_read_bytes > 0);
+    assert!(m.store_promotions > 0);
+    assert!(m.nvme_time_share() > 0.0);
+    // something is still on disk at steady state (16 GB < 90 GB)
+    let (_, _, d) = counts.unwrap();
+    assert!(d > 0);
+    // and the RAM limit costs real virtual time vs the unlimited run
+    let (fast, _, _) = run_sim(&c, layers, n, Some(TieredStore::unlimited(layers, n)), 24, &w);
+    assert!(m.total_ns > fast.total_ns);
+    assert!(m.tokens_per_s() < fast.tokens_per_s());
+}
+
+#[test]
+fn store_accounting_consistent_with_gpu_mem_model() {
+    // The store's GPU-primary census must stay within what GpuMemModel
+    // budgets for the cache: per-layer GPU-resident experts never exceed
+    // the cache capacity, and the paper-scale byte footprint of the
+    // store's GPU tier never exceeds the modelled cache bytes.
+    let p = Presets::load_default().unwrap();
+    let model = p.model("mixtral-sim").unwrap();
+    let c = CostModel::new(model, p.hw("local-pc-ram16").unwrap());
+    let mem = GpuMemModel::new(&model.paper);
+    let layers = 4;
+    let n = 8;
+    let cache_size = 2;
+    let mut sim = StepSimulator::new(
+        &c,
+        bundle(layers, n, cache_size, false),
+        vec![vec![0.0; n]; layers],
+        layers,
+        n,
+        0,
+        3,
+    )
+    .with_store(TieredStore::new(
+        layers,
+        n,
+        StoreCfg { host_slots: 12, ..Default::default() },
+    ));
+    let w: Vec<u32> = (0..n).map(|e| ((e * 7) % 11) as u32).collect();
+    for _ in 0..24 {
+        sim.run_step(&mk_step(layers, n, &w), 8, Phase::Decode);
+    }
+    let st = sim.store().unwrap();
+    st.check_invariants().unwrap();
+    let (gpu_total, _, _) = st.counts();
+    let mut per_layer_max = 0;
+    for l in 0..layers {
+        per_layer_max = per_layer_max.max(st.gpu_count_layer(l));
+        assert!(
+            st.gpu_count_layer(l) <= cache_size,
+            "layer {l}: {} GPU-primary experts exceed cache capacity {cache_size}",
+            st.gpu_count_layer(l)
+        );
+    }
+    // paper-scale bytes: store census vs memory-model budget. The store
+    // tracks the sim grid; scale each sim expert to its paper footprint
+    // (paper layers / sim layers experts per sim slot).
+    let paper_per_sim = (model.paper.layers as f64 / layers as f64).ceil();
+    let store_gpu_bytes = gpu_total as f64 * paper_per_sim * c.expert_bytes();
+    assert!(
+        store_gpu_bytes <= mem.cache_bytes(per_layer_max) * 1.001,
+        "store GPU bytes {store_gpu_bytes:.2e} exceed memory model {:.2e}",
+        mem.cache_bytes(per_layer_max)
+    );
+}
+
+#[test]
+fn tier_aware_assignment_prefers_host_experts() {
+    // Two identical workloads, one host- one disk-resident: the greedy
+    // assigner must see the NVMe fetch in the disk expert's cost on both
+    // devices (AssignCtx::t_cpu / t_gpu tier-awareness).
+    use dali::coordinator::assignment::{AssignCtx, Assigner};
+    let c = cost("mixtral-sim", "local-pc-ram16");
+    let workloads = vec![6u32, 6];
+    let resident = vec![false, false];
+    let tiers = vec![Tier::Host, Tier::Disk];
+    let ctx = AssignCtx {
+        workloads: &workloads,
+        resident: &resident,
+        tiers: Some(&tiers),
+        cost: &c,
+        gpu_free_slots: 2,
+        layer: 0,
+        layers: 4,
+    };
+    assert!(ctx.t_cpu(1) > ctx.t_cpu(0));
+    assert!(ctx.t_gpu(1) > ctx.t_gpu(0));
+    let a = GreedyAssigner::new().assign(&ctx);
+    assert!(a.satisfies_constraints(&ctx));
+}

@@ -1,0 +1,132 @@
+//! Minimal, dependency-free subset of the `anyhow` API (the offline build
+//! vendors this instead of fetching the real crate). Covers what this
+//! repository uses: `Result`, `Error`, `anyhow!`, `bail!`, `ensure!`, and
+//! the `Context` extension trait on `Result` and `Option`.
+//!
+//! Context is flattened into the message chain (outermost first), so
+//! `{e}` and `{e:#}` both render `outer: inner`.
+
+use std::fmt;
+
+/// A string-chained error value. Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: Error>` below stays
+/// coherent — same trick the real `anyhow` uses.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context message (outermost-first chain).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) { $crate::bail!($($arg)*); }
+    };
+}
+
+/// `anyhow::Context` — attach context to `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Result};
+
+    fn fails() -> Result<()> {
+        crate::bail!("inner {}", 7)
+    }
+
+    #[test]
+    fn chain_renders_outer_first() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 7");
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here/xyz")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x > 2, "too small: {x}");
+            Ok(x)
+        }
+        assert!(f(1).is_err());
+        assert_eq!(f(3).unwrap(), 3);
+    }
+}

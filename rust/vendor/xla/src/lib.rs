@@ -1,0 +1,144 @@
+//! Compile-time stub of the `xla` (xla-rs) PJRT bindings used by the
+//! offline build. The container image does not carry the XLA C library, so
+//! every entry point that would touch PJRT returns a descriptive runtime
+//! error instead; pure-host helpers (`Literal::vec1`, `reshape`) work.
+//!
+//! Callers that need real numerics (golden tests, the live engine, the
+//! serving stack) probe availability first — see
+//! `dali::runtime::PjrtEngine::pjrt_available` — and skip gracefully.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: built against the offline xla stub crate (install the real xla-rs \
+     bindings and point Cargo at them to run live numerics)";
+
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types a literal can hold (subset of xla-rs's sealed trait).
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u8 {}
+
+/// Host literal. The stub keeps only the element count for shape checks;
+/// data never reaches a device.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    numel: usize,
+}
+
+impl Literal {
+    pub fn vec1<T: ArrayElement>(data: &[T]) -> Literal {
+        Literal { numel: data.len() }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.numel {
+            return Err(Error(format!(
+                "reshape: literal has {} elements, shape {:?} needs {}",
+                self.numel, dims, n
+            )));
+        }
+        Ok(self.clone())
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_checks_numel() {
+        let l = Literal::vec1(&[1f32, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
