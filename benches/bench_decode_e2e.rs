@@ -43,14 +43,14 @@ fn main() {
         let m = replay_decode(
             &trace, &ids, 32, &cost,
             fw.bundle(&model.sim, &cost, &calib.freq, &cfg),
-            calib.freq.clone(), model.sim.n_shared, 7,
+            &calib.freq, model.sim.n_shared, 7,
         );
         println!("  {:<14} simulated {:.2} tokens/s", fw.name(), m.tokens_per_s());
         bench(&format!("replay_decode/{}", fw.name()), || {
             black_box(replay_decode(
                 &trace, &ids, 32, &cost,
                 fw.bundle(&model.sim, &cost, &calib.freq, &cfg),
-                calib.freq.clone(), model.sim.n_shared, 7,
+                &calib.freq, model.sim.n_shared, 7,
             ));
         });
     }

@@ -43,7 +43,7 @@ fn main() {
         for fw in [Framework::Dali, Framework::HybriMoE, Framework::KTransformers, Framework::DaliOpt] {
             let bundle = fw.bundle(dims, &cost, &freq, &cfg);
             let mut sim = StepSimulator::new(
-                &cost, bundle, freq.clone(), dims.layers, dims.n_routed, dims.n_shared, 1,
+                &cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 1,
             );
             let mut rng = DetRng::new(11);
             let mut kv = 16usize;

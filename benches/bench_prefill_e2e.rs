@@ -35,14 +35,14 @@ fn main() {
         let m = replay_prefill(
             &trace, &ids, &cost,
             fw.bundle(&model.sim, &cost, &calib.freq, &cfg),
-            calib.freq.clone(), model.sim.n_shared, 7,
+            &calib.freq, model.sim.n_shared, 7,
         );
         println!("  {:<14} simulated {:.1} tokens/s", fw.name(), m.tokens_per_s());
         bench(&format!("replay_prefill/{}", fw.name()), || {
             black_box(replay_prefill(
                 &trace, &ids, &cost,
                 fw.bundle(&model.sim, &cost, &calib.freq, &cfg),
-                calib.freq.clone(), model.sim.n_shared, 7,
+                &calib.freq, model.sim.n_shared, 7,
             ));
         });
     }

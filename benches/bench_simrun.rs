@@ -1,0 +1,66 @@
+//! Simulator hot-path throughput: replay decode steps/sec per model and
+//! policy bundle over a synthetic locality trace (no PJRT / artifacts
+//! needed — CI smoke-runs this). This is the perf-trajectory bench for the
+//! zero-allocation `run_step` refactor: the flat prefetch-arrival table,
+//! `StepScratch` reuse, `compose_decode_into`, and borrowed calibration
+//! frequencies all land on this path.
+//!
+//! `dali bench` reports the same workload machine-readably
+//! (`BENCH_simrun.json`) plus the allocation audit.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, black_box};
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::{replay_decode, Phase, StepSimulator};
+use dali::hw::CostModel;
+use dali::workload::trace::{synthetic_locality_trace, BatchStep};
+
+const STEPS: usize = 64;
+const BATCH: usize = 8;
+
+fn main() {
+    let presets = Presets::load_default().unwrap();
+    println!("# bench_simrun — replay throughput (synthetic locality trace, batch {BATCH})");
+    let ids: Vec<usize> = (0..BATCH).collect();
+    for preset in ["deepseek-sim", "qwen-sim", "mixtral-sim"] {
+        let model = presets.model(preset).unwrap();
+        let dims = &model.sim;
+        let cost = CostModel::new(model, presets.hw("local-pc").unwrap());
+        let trace =
+            synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, STEPS, 0xbe7c);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        for fw in [Framework::Dali, Framework::HybriMoE] {
+            // full replay: prefill warm-up + STEPS decode steps
+            bench(&format!("replay_decode/{preset}/{}", fw.name()), || {
+                let bundle = fw.bundle(dims, &cost, &freq, &cfg);
+                black_box(replay_decode(
+                    &trace,
+                    &ids,
+                    STEPS,
+                    &cost,
+                    bundle,
+                    &freq,
+                    dims.n_shared,
+                    7,
+                ));
+            });
+        }
+        // single steady-state step (scratch warm, zero-allocation path)
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+        let mut sim =
+            StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7);
+        let mut stepbuf = BatchStep::default();
+        trace.compose_prefill_into(&ids, &mut stepbuf);
+        sim.run_step(&stepbuf, 8, Phase::Prefill);
+        let mut s = 0usize;
+        bench(&format!("steady_step/{preset}/dali"), || {
+            trace.compose_decode_into(&ids, s % trace.min_steps(), &mut stepbuf);
+            sim.run_step(&stepbuf, 16 + s, Phase::Decode);
+            s += 1;
+        });
+    }
+}

@@ -94,13 +94,15 @@ fn main() {
             cpu_eff: 1.0,
             layer_overhead_ns: 0,
             gpu_free_slots: dims.n_routed,
+            solve_cost: Default::default(),
         };
         let cfg = StoreCfg { host_slots: slots, ..Default::default() };
         let store = TieredStore::new(dims.layers, dims.n_routed, cfg);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
         let mut sim = StepSimulator::new(
             &cost,
             bundle,
-            vec![vec![0.0; dims.n_routed]; dims.layers],
+            &freq,
             dims.layers,
             dims.n_routed,
             dims.n_shared,

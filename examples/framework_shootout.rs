@@ -37,7 +37,7 @@ fn main() -> Result<()> {
     for fw in frameworks {
         let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
         let m = replay_decode(
-            &trace, &seq_ids, steps, &cost, bundle, calib.freq.clone(), model.sim.n_shared, 7,
+            &trace, &seq_ids, steps, &cost, bundle, &calib.freq, model.sim.n_shared, 7,
         );
         let tps = m.tokens_per_s();
         if fw == Framework::Naive {

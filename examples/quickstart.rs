@@ -50,7 +50,7 @@ fn main() -> Result<()> {
     let cfg = FrameworkCfg::paper_default(&model.sim);
     let bundle = Framework::Dali.bundle(&model.sim, &cost, &calib.freq, &cfg);
     let mut sim = StepSimulator::new(
-        &cost, bundle, calib.freq.clone(),
+        &cost, bundle, &calib.freq,
         model.sim.layers, model.sim.n_routed, model.sim.n_shared, 7,
     );
     let ids: Vec<usize> = (0..batch).collect();

@@ -38,9 +38,10 @@ fn main() -> Result<()> {
         cpu_eff: 1.0,
         layer_overhead_ns: 0,
         gpu_free_slots: dims.n_routed,
+        solve_cost: Default::default(),
     };
     let mut sim = StepSimulator::new(
-        &cost, bundle, calib.freq.clone(), dims.layers, dims.n_routed, dims.n_shared, 5,
+        &cost, bundle, &calib.freq, dims.layers, dims.n_routed, dims.n_shared, 5,
     );
     sim.run_step(&trace.compose_prefill(&seq_ids), 8, Phase::Prefill);
     sim.reset_metrics();
@@ -75,9 +76,10 @@ fn main() -> Result<()> {
             cpu_eff: 1.0,
             layer_overhead_ns: 0,
             gpu_free_slots: dims.n_routed,
+            solve_cost: Default::default(),
         };
         let m = dali::coordinator::simrun::replay_decode(
-            &trace, &seq_ids, 48, &cost, bundle, calib.freq.clone(), dims.n_shared, 5,
+            &trace, &seq_ids, 48, &cost, bundle, &calib.freq, dims.n_shared, 5,
         );
         table.row(vec![
             which.to_string(),

@@ -2,16 +2,20 @@
 //!
 //!     cargo run --release --bin expt -- list
 //!     cargo run --release --bin expt -- fig12 [table2 ...]
-//!     cargo run --release --bin expt -- all
+//!     cargo run --release --bin expt -- all --jobs 8
 //!
 //! Each experiment prints a markdown section and writes it to
 //! `results/<id>.md`. Trace pools are generated on demand (cached under
 //! `artifacts/traces/`); run `dali prepare` first to prebuild them.
+//!
+//! `--jobs N` runs sweep cells on N scoped worker threads (`--jobs 0` /
+//! default = one per core). Replays are deterministic, so the parallelism
+//! never changes a reported number — only the wall time.
 
 use anyhow::Result;
 
 use dali::expt::{registry, run_one, ExptCtx};
-use dali::util::{results_dir, Args};
+use dali::util::{pool, results_dir, Args};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -22,9 +26,12 @@ fn main() -> Result<()> {
             println!("  {id:-8} {desc}");
         }
         println!("  all      run everything");
+        println!("flags: --jobs N   parallel sweep workers (0 = one per core, default)");
         return Ok(());
     }
-    let ctx = ExptCtx::new()?;
+    let jobs = pool::resolve_jobs(args.usize_or("jobs", 0));
+    eprintln!("[expt] sweeps run with {jobs} parallel jobs (--jobs N to override)");
+    let ctx = ExptCtx::new()?.with_jobs(jobs);
     let ids: Vec<&str> = if which[0] == "all" {
         registry().iter().map(|(id, _, _)| *id).collect()
     } else {

@@ -22,15 +22,14 @@ impl Assigner for AllCpuAssigner {
         "all_cpu"
     }
 
-    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+    fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         let n = ctx.workloads.len();
-        let mut a = Assignment::none(n);
+        out.reset(n);
         for e in 0..n {
             if ctx.workloads[e] > 0 {
-                a.to_cpu[e] = true;
+                out.to_cpu[e] = true;
             }
         }
-        a
     }
 }
 

@@ -5,7 +5,8 @@
 //! schedules than greedy in some cases, at a materially higher solve cost —
 //! the paper's reason for rejecting it.
 
-use super::{AssignCtx, Assigner, Assignment};
+use super::{solve_model, AssignCtx, Assigner, Assignment};
+use crate::hw::Ns;
 
 pub struct BeamAssigner {
     pub beam_width: usize,
@@ -31,7 +32,7 @@ impl Assigner for BeamAssigner {
         "beam"
     }
 
-    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+    fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         let n = ctx.workloads.len();
         let mut order: Vec<usize> = (0..n).filter(|&e| ctx.workloads[e] > 0).collect();
         order.sort_by_key(|&e| std::cmp::Reverse(ctx.t_gpu(e).abs_diff(ctx.t_cpu(e))));
@@ -68,15 +69,21 @@ impl Assigner for BeamAssigner {
             beam = next;
         }
         let best = &beam[0];
-        let mut a = Assignment::none(n);
+        out.reset(n);
         for (i, &e) in order.iter().enumerate() {
             if best.choices[i] {
-                a.to_gpu[e] = true;
+                out.to_gpu[e] = true;
             } else {
-                a.to_cpu[e] = true;
+                out.to_cpu[e] = true;
             }
         }
-        a
+    }
+
+    fn modeled_solve_ns(&self, ctx: &AssignCtx) -> Ns {
+        // per expert: expand + sort + truncate 2·width states, each carrying
+        // an O(n) choice vector clone.
+        let a = ctx.active_count();
+        solve_model::nlogn(a, 90).saturating_mul(self.beam_width as u64)
     }
 }
 

@@ -12,7 +12,8 @@
 //! branch & bound (the paper's N=64/128 models need an ILP solver there
 //! too).
 
-use super::{AssignCtx, Assigner, Assignment, OptimalAssigner};
+use super::{solve_model, AssignCtx, Assigner, Assignment, OptimalAssigner};
+use crate::hw::Ns;
 
 pub struct EnumerateAssigner {
     pub max_active: usize,
@@ -35,11 +36,11 @@ impl Assigner for EnumerateAssigner {
         "opt_plan"
     }
 
-    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+    fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         let n = ctx.workloads.len();
         let active: Vec<usize> = (0..n).filter(|&e| ctx.workloads[e] > 0).collect();
         if active.len() > self.max_active {
-            return OptimalAssigner::new().assign(ctx);
+            return OptimalAssigner::new().assign_into(ctx, out);
         }
         let costs: Vec<(u64, u64, bool)> =
             active.iter().map(|&e| (ctx.t_cpu(e), ctx.t_gpu(e), !ctx.resident[e])).collect();
@@ -68,15 +69,24 @@ impl Assigner for EnumerateAssigner {
                 best_mask = mask;
             }
         }
-        let mut a = Assignment::none(n);
+        out.reset(n);
         for (i, &e) in active.iter().enumerate() {
             if best_mask & (1 << i) != 0 {
-                a.to_gpu[e] = true;
+                out.to_gpu[e] = true;
             } else {
-                a.to_cpu[e] = true;
+                out.to_cpu[e] = true;
             }
         }
-        a
+    }
+
+    fn modeled_solve_ns(&self, ctx: &AssignCtx) -> Ns {
+        // 2^n masks, each scanning n experts (~1.5ns/op after optimisation);
+        // past max_active the branch & bound fallback kicks in.
+        let a = ctx.active_count();
+        if a > self.max_active {
+            return OptimalAssigner::new().modeled_solve_ns(ctx);
+        }
+        solve_model::exponential(a, 2, 20)
     }
 }
 

@@ -5,14 +5,21 @@
 //! whichever device yields the lower cumulative finish time. Near-optimal
 //! (≥ ~92 % of Opt_plan in the paper's Table 4) at a tiny solve cost.
 
-use super::{AssignCtx, Assigner, Assignment};
+use super::{solve_model, AssignCtx, Assigner, Assignment};
+use crate::hw::Ns;
 
+/// The scratch vectors make repeated solves allocation-free — this is the
+/// solver on the simulator's per-layer hot path.
 #[derive(Debug, Default, Clone)]
-pub struct GreedyAssigner;
+pub struct GreedyAssigner {
+    t_gpu: Vec<u64>,
+    t_cpu: Vec<u64>,
+    order: Vec<usize>,
+}
 
 impl GreedyAssigner {
     pub fn new() -> Self {
-        GreedyAssigner
+        GreedyAssigner::default()
     }
 }
 
@@ -21,19 +28,24 @@ impl Assigner for GreedyAssigner {
         "greedy"
     }
 
-    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+    fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         let n = ctx.workloads.len();
-        let mut a = Assignment::none(n);
+        out.reset(n);
+        let GreedyAssigner { t_gpu, t_cpu, order } = self;
         // Alg. 1 lines 1-4: per-expert device costs.
-        let t_gpu: Vec<u64> = (0..n).map(|e| ctx.t_gpu(e)).collect();
-        let t_cpu: Vec<u64> = (0..n).map(|e| ctx.t_cpu(e)).collect();
-        // line 5: sort by |t_gpu - t_cpu| descending.
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by_key(|&e| std::cmp::Reverse(t_gpu[e].abs_diff(t_cpu[e])));
+        t_gpu.clear();
+        t_gpu.extend((0..n).map(|e| ctx.t_gpu(e)));
+        t_cpu.clear();
+        t_cpu.extend((0..n).map(|e| ctx.t_cpu(e)));
+        // line 5: sort by |t_gpu - t_cpu| descending (index tiebreak keeps
+        // the order — and hence the metrics — fully deterministic).
+        order.clear();
+        order.extend(0..n);
+        order.sort_unstable_by_key(|&e| (std::cmp::Reverse(t_gpu[e].abs_diff(t_cpu[e])), e));
         let mut total_gpu: u64 = 0;
         let mut total_cpu: u64 = 0;
         let mut free_slots = ctx.gpu_free_slots;
-        for e in order {
+        for &e in order.iter() {
             // lines 9-10: skip inactive experts.
             if ctx.workloads[e] == 0 {
                 continue;
@@ -43,17 +55,21 @@ impl Assigner for GreedyAssigner {
             let gpu_ok = !needs_slot || free_slots > 0;
             // lines 12-17: lower cumulative finish time wins.
             if gpu_ok && total_gpu + t_gpu[e] <= total_cpu + t_cpu[e] {
-                a.to_gpu[e] = true;
+                out.to_gpu[e] = true;
                 total_gpu += t_gpu[e];
                 if needs_slot {
                     free_slots -= 1;
                 }
             } else {
-                a.to_cpu[e] = true;
+                out.to_cpu[e] = true;
                 total_cpu += t_cpu[e];
             }
         }
-        a
+    }
+
+    fn modeled_solve_ns(&self, ctx: &AssignCtx) -> Ns {
+        // cost tables + one sort + one linear placement pass
+        solve_model::nlogn(ctx.active_count(), 28)
     }
 }
 

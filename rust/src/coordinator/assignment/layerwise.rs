@@ -23,21 +23,20 @@ impl Assigner for LayerWiseAssigner {
         "layerwise"
     }
 
-    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+    fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         let n = ctx.workloads.len();
-        let mut a = Assignment::none(n);
+        out.reset(n);
         let on_gpu = ctx.layer >= self.cpu_layers;
         for e in 0..n {
             if ctx.workloads[e] == 0 {
                 continue;
             }
             if on_gpu {
-                a.to_gpu[e] = true;
+                out.to_gpu[e] = true;
             } else {
-                a.to_cpu[e] = true;
+                out.to_cpu[e] = true;
             }
         }
-        a
     }
 }
 

@@ -12,7 +12,8 @@
 //! that comparison. A node cap keeps worst cases bounded; on cap the best
 //! incumbent is returned.
 
-use super::{greedy::GreedyAssigner, AssignCtx, Assigner, Assignment};
+use super::{greedy::GreedyAssigner, solve_model, AssignCtx, Assigner, Assignment};
+use crate::hw::Ns;
 
 pub struct OptimalAssigner {
     /// Safety valve for exponential worst cases.
@@ -81,7 +82,7 @@ impl Assigner for OptimalAssigner {
         "opt_plan"
     }
 
-    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+    fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         self.nodes = 0;
         let n = ctx.workloads.len();
         let order: Vec<usize> = {
@@ -106,15 +107,21 @@ impl Assigner for OptimalAssigner {
         let mut choice = vec![false; order.len()];
         self.dfs(&order, 0, 0, 0, ctx.gpu_free_slots, &costs, &suffix_min, &mut choice, &mut best);
 
-        let mut a = Assignment::none(n);
+        out.reset(n);
         for (i, &e) in order.iter().enumerate() {
             if best.1[i] {
-                a.to_gpu[e] = true;
+                out.to_gpu[e] = true;
             } else {
-                a.to_cpu[e] = true;
+                out.to_cpu[e] = true;
             }
         }
-        a
+    }
+
+    fn modeled_solve_ns(&self, ctx: &AssignCtx) -> Ns {
+        // branch & bound with a greedy incumbent prunes aggressively:
+        // effective branching ~ 2^(n/2) nodes at ~2ns each.
+        let a = ctx.active_count();
+        solve_model::exponential(a.div_ceil(2), 4, 24)
     }
 }
 

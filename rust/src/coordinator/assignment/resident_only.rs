@@ -29,20 +29,19 @@ impl Assigner for ResidentOnlyAssigner {
         "resident_only"
     }
 
-    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+    fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         let n = ctx.workloads.len();
-        let mut a = Assignment::none(n);
+        out.reset(n);
         for e in 0..n {
             if ctx.workloads[e] == 0 {
                 continue;
             }
             if ctx.resident[e] {
-                a.to_gpu[e] = true;
+                out.to_gpu[e] = true;
             } else {
-                a.to_cpu[e] = true;
+                out.to_cpu[e] = true;
             }
         }
-        a
     }
 }
 

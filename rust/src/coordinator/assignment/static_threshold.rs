@@ -12,30 +12,35 @@
 //! individually cheaper (the cache-exploitation rule every expert-wise
 //! framework implements).
 
-use super::{AssignCtx, Assigner, Assignment};
+use super::{solve_model, AssignCtx, Assigner, Assignment};
+use crate::hw::Ns;
 
-pub struct StaticThresholdAssigner;
-
-impl Default for StaticThresholdAssigner {
-    fn default() -> Self {
-        Self::new()
-    }
+/// The visit-order scratch makes repeated solves allocation-free — this is
+/// HybriMoE's / Fiddler's assigner on the measured replay paths.
+#[derive(Debug, Default)]
+pub struct StaticThresholdAssigner {
+    order: Vec<usize>,
 }
 
 impl StaticThresholdAssigner {
     pub fn new() -> Self {
-        StaticThresholdAssigner
+        StaticThresholdAssigner::default()
     }
 
     /// The "predefined workload threshold": the mean workload over active
     /// experts this step.
     pub fn threshold(workloads: &[u32]) -> u32 {
-        let active: Vec<u32> = workloads.iter().copied().filter(|&w| w > 0).collect();
-        if active.is_empty() {
+        let (mut sum, mut count) = (0u64, 0u64);
+        for &w in workloads {
+            if w > 0 {
+                sum += w as u64;
+                count += 1;
+            }
+        }
+        if count == 0 {
             return u32::MAX;
         }
-        let sum: u64 = active.iter().map(|&w| w as u64).sum();
-        (sum / active.len() as u64) as u32
+        (sum / count) as u32
     }
 }
 
@@ -44,29 +49,36 @@ impl Assigner for StaticThresholdAssigner {
         "static_threshold"
     }
 
-    fn assign(&mut self, ctx: &AssignCtx) -> Assignment {
+    fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         let n = ctx.workloads.len();
-        let mut a = Assignment::none(n);
+        out.reset(n);
         let mut slots = ctx.gpu_free_slots;
         let thresh = Self::threshold(ctx.workloads);
         // Visit high-workload experts first so the memory budget goes to
-        // the experts the policy most wants on the GPU.
-        let mut order: Vec<usize> = (0..n).filter(|&e| ctx.workloads[e] > 0).collect();
-        order.sort_by_key(|&e| std::cmp::Reverse(ctx.workloads[e]));
-        for e in order {
+        // the experts the policy most wants on the GPU (index tiebreak
+        // reproduces the old stable-sort order).
+        let order = &mut self.order;
+        order.clear();
+        order.extend((0..n).filter(|&e| ctx.workloads[e] > 0));
+        order.sort_unstable_by_key(|&e| (std::cmp::Reverse(ctx.workloads[e]), e));
+        for &e in order.iter() {
             let resident_win = ctx.resident[e] && ctx.t_gpu(e) < ctx.t_cpu(e);
             let high_workload = ctx.workloads[e] > thresh;
             let needs_slot = !ctx.resident[e];
             if (resident_win || high_workload) && (!needs_slot || slots > 0) {
-                a.to_gpu[e] = true;
+                out.to_gpu[e] = true;
                 if needs_slot {
                     slots -= 1;
                 }
             } else {
-                a.to_cpu[e] = true;
+                out.to_cpu[e] = true;
             }
         }
-        a
+    }
+
+    fn modeled_solve_ns(&self, ctx: &AssignCtx) -> Ns {
+        // threshold pass + workload sort
+        solve_model::nlogn(ctx.active_count(), 16)
     }
 }
 

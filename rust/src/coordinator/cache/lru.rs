@@ -38,8 +38,8 @@ impl ExpertCache for LruCache {
         self.res.contains(layer, expert)
     }
 
-    fn resident_mask(&self, layer: usize) -> Vec<bool> {
-        self.res.mask(layer, self.n_experts)
+    fn resident_mask_into(&self, layer: usize, out: &mut Vec<bool>) {
+        self.res.mask_into(layer, self.n_experts, out)
     }
 
     fn observe(&mut self, _layer: usize, _workloads: &[u32], _gate_scores: &[f32]) {}
@@ -58,8 +58,8 @@ impl ExpertCache for LruCache {
         Some(victim)
     }
 
-    fn window_tick(&mut self, _layer: usize, _step: usize) -> Vec<Swap> {
-        vec![] // LRU replaces on use, not on windows
+    fn window_tick_into(&mut self, _layer: usize, _step: usize, _out: &mut Vec<Swap>) {
+        // LRU replaces on use, not on windows
     }
 }
 

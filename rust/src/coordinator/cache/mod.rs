@@ -42,8 +42,16 @@ pub trait ExpertCache: Send {
 
     fn is_resident(&self, layer: usize, expert: usize) -> bool;
 
-    /// Residency bitmap for assignment.
-    fn resident_mask(&self, layer: usize) -> Vec<bool>;
+    /// Write the residency bitmap for assignment into `out` (resized and
+    /// overwritten). Hot-path entry point: no steady-state allocation.
+    fn resident_mask_into(&self, layer: usize, out: &mut Vec<bool>);
+
+    /// Allocating convenience wrapper around [`Self::resident_mask_into`].
+    fn resident_mask(&self, layer: usize) -> Vec<bool> {
+        let mut out = Vec::new();
+        self.resident_mask_into(layer, &mut out);
+        out
+    }
 
     /// Observe a batch step's true workloads + routed gate scores at a layer
     /// (called once per layer per step, before replacement decisions).
@@ -54,10 +62,18 @@ pub trait ExpertCache: Send {
     /// choose to admit it). Returns an eviction if the policy admits it.
     fn on_gpu_use(&mut self, layer: usize, expert: usize, fetched: bool) -> Option<usize>;
 
-    /// Token-window boundary at a layer: returns swaps to perform (each
-    /// costs one expert upload over PCIe). Called once per decode step per
-    /// layer with the current step index.
-    fn window_tick(&mut self, layer: usize, step: usize) -> Vec<Swap>;
+    /// Token-window boundary at a layer: appends swaps to perform to `out`
+    /// (each costs one expert upload over PCIe). Called once per decode
+    /// step per layer with the current step index. Hot-path entry point:
+    /// no steady-state allocation.
+    fn window_tick_into(&mut self, layer: usize, step: usize, out: &mut Vec<Swap>);
+
+    /// Allocating convenience wrapper around [`Self::window_tick_into`].
+    fn window_tick(&mut self, layer: usize, step: usize) -> Vec<Swap> {
+        let mut out = Vec::new();
+        self.window_tick_into(layer, step, &mut out);
+        out
+    }
 }
 
 /// Shared helper: fixed-capacity per-layer resident sets.
@@ -89,11 +105,18 @@ impl ResidentSets {
     }
 
     pub fn mask(&self, layer: usize, n: usize) -> Vec<bool> {
-        let mut m = vec![false; n];
-        for &e in &self.sets[layer] {
-            m[e] = true;
-        }
+        let mut m = Vec::with_capacity(n);
+        self.mask_into(layer, n, &mut m);
         m
+    }
+
+    /// Buffer-reusing form of [`Self::mask`].
+    pub fn mask_into(&self, layer: usize, n: usize, out: &mut Vec<bool>) {
+        out.clear();
+        out.resize(n, false);
+        for &e in &self.sets[layer] {
+            out[e] = true;
+        }
     }
 
     pub fn replace(&mut self, layer: usize, evict: usize, load: usize) {

@@ -57,8 +57,9 @@ impl ExpertCache for PinnedCache {
         self.mask[layer][expert]
     }
 
-    fn resident_mask(&self, layer: usize) -> Vec<bool> {
-        self.mask[layer].clone()
+    fn resident_mask_into(&self, layer: usize, out: &mut Vec<bool>) {
+        out.clear();
+        out.extend_from_slice(&self.mask[layer]);
     }
 
     fn observe(&mut self, _layer: usize, _workloads: &[u32], _gate_scores: &[f32]) {}
@@ -67,9 +68,7 @@ impl ExpertCache for PinnedCache {
         None
     }
 
-    fn window_tick(&mut self, _layer: usize, _step: usize) -> Vec<Swap> {
-        vec![]
-    }
+    fn window_tick_into(&mut self, _layer: usize, _step: usize, _out: &mut Vec<Swap>) {}
 }
 
 /// No expert cache at all.
@@ -98,8 +97,9 @@ impl ExpertCache for NoCache {
         false
     }
 
-    fn resident_mask(&self, _layer: usize) -> Vec<bool> {
-        vec![false; self.n_experts]
+    fn resident_mask_into(&self, _layer: usize, out: &mut Vec<bool>) {
+        out.clear();
+        out.resize(self.n_experts, false);
     }
 
     fn observe(&mut self, _layer: usize, _workloads: &[u32], _gate_scores: &[f32]) {}
@@ -108,9 +108,7 @@ impl ExpertCache for NoCache {
         None
     }
 
-    fn window_tick(&mut self, _layer: usize, _step: usize) -> Vec<Swap> {
-        vec![]
-    }
+    fn window_tick_into(&mut self, _layer: usize, _step: usize, _out: &mut Vec<Swap>) {}
 }
 
 #[cfg(test)]

@@ -41,8 +41,8 @@ impl ExpertCache for ScoreCache {
         self.res.contains(layer, expert)
     }
 
-    fn resident_mask(&self, layer: usize) -> Vec<bool> {
-        self.res.mask(layer, self.n_experts)
+    fn resident_mask_into(&self, layer: usize, out: &mut Vec<bool>) {
+        self.res.mask_into(layer, self.n_experts, out)
     }
 
     fn observe(&mut self, layer: usize, _workloads: &[u32], gate_scores: &[f32]) {
@@ -67,9 +67,7 @@ impl ExpertCache for ScoreCache {
         }
     }
 
-    fn window_tick(&mut self, _layer: usize, _step: usize) -> Vec<Swap> {
-        vec![]
-    }
+    fn window_tick_into(&mut self, _layer: usize, _step: usize, _out: &mut Vec<Swap>) {}
 }
 
 #[cfg(test)]

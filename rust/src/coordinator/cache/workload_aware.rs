@@ -21,6 +21,9 @@ pub struct WorkloadAwareCache {
     pub w_size: usize,
     pub u_size: usize,
     n_experts: usize,
+    /// Reused window-boundary ranking buffers (allocation-free hot path).
+    cpu_buf: Vec<usize>,
+    gpu_buf: Vec<usize>,
 }
 
 impl WorkloadAwareCache {
@@ -39,6 +42,8 @@ impl WorkloadAwareCache {
             w_size,
             u_size,
             n_experts,
+            cpu_buf: Vec::with_capacity(n_experts),
+            gpu_buf: Vec::with_capacity(n_experts),
         }
     }
 }
@@ -56,8 +61,8 @@ impl ExpertCache for WorkloadAwareCache {
         self.res.contains(layer, expert)
     }
 
-    fn resident_mask(&self, layer: usize) -> Vec<bool> {
-        self.res.mask(layer, self.n_experts)
+    fn resident_mask_into(&self, layer: usize, out: &mut Vec<bool>) {
+        self.res.mask_into(layer, self.n_experts, out)
     }
 
     fn observe(&mut self, layer: usize, workloads: &[u32], _gate_scores: &[f32]) {
@@ -73,35 +78,38 @@ impl ExpertCache for WorkloadAwareCache {
         None
     }
 
-    fn window_tick(&mut self, layer: usize, step: usize) -> Vec<Swap> {
+    fn window_tick_into(&mut self, layer: usize, step: usize, out: &mut Vec<Swap>) {
         // Alg. 2 line 9: i mod w_size == 0
         if step == 0 || step % self.w_size != 0 {
-            return vec![];
+            return;
         }
         let scores = &self.scores[layer];
-        // top-u CPU-side experts by score (Alg. 2 line 10)
-        let mut cpu_side: Vec<usize> =
-            (0..self.n_experts).filter(|&e| !self.res.contains(layer, e)).collect();
-        cpu_side.sort_by_key(|&e| std::cmp::Reverse(scores[e]));
+        // top-u CPU-side experts by score (Alg. 2 line 10); the index
+        // tiebreaks reproduce the old stable-sort ordering exactly.
+        let cpu_side = &mut self.cpu_buf;
+        cpu_side.clear();
+        cpu_side.extend((0..self.n_experts).filter(|&e| !self.res.contains(layer, e)));
+        cpu_side.sort_unstable_by_key(|&e| (std::cmp::Reverse(scores[e]), e));
         // bottom-u GPU-side experts by score (line 11)
-        let mut gpu_side: Vec<usize> = self.res.sets[layer].clone();
-        gpu_side.sort_by_key(|&e| scores[e]);
+        let gpu_side = &mut self.gpu_buf;
+        gpu_side.clear();
+        gpu_side.extend_from_slice(&self.res.sets[layer]);
+        gpu_side.sort_unstable_by_key(|&e| (scores[e], e));
 
-        let mut swaps = vec![];
+        let start = out.len();
         for i in 0..self.u_size.min(cpu_side.len()).min(gpu_side.len()) {
             let load = cpu_side[i];
             let evict = gpu_side[i];
             // utility guard: only swap strictly-better experts in
             if scores[load] > scores[evict] {
-                swaps.push(Swap { evict, load });
+                out.push(Swap { evict, load });
             }
         }
-        for s in &swaps {
+        for s in &out[start..] {
             self.res.replace(layer, s.evict, s.load);
         }
         // line 15: reset scores for the next window
         self.scores[layer].iter_mut().for_each(|s| *s = 0);
-        swaps
     }
 }
 

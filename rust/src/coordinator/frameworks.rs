@@ -121,6 +121,7 @@ impl Framework {
             cpu_eff: 1.0,
             layer_overhead_ns: 0,
             gpu_free_slots: cfg.gpu_free_slots,
+            solve_cost: SolveCost::default(),
         };
         let _ = cost;
         match self {

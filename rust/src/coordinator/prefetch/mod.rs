@@ -46,15 +46,31 @@ pub trait Prefetcher: Send {
     fn name(&self) -> &'static str;
     /// Whether prediction requires an extra gating pass on the GPU.
     fn needs_gate_pass(&self) -> bool;
-    /// Predicted workload score per next-layer expert.
-    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64>;
+    /// Write the predicted workload score per next-layer expert into `out`
+    /// (cleared first; left empty = no prediction). Hot-path entry point:
+    /// implementations must not allocate in steady state.
+    fn predict_into(&mut self, ctx: &mut PrefetchCtx, out: &mut Vec<f64>);
+    /// Allocating convenience wrapper (tests, one-off callers).
+    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.predict_into(ctx, &mut out);
+        out
+    }
+}
+
+/// Write the indices of the top-`n` experts by score into `idx` (ties
+/// broken by lower index) — the reusable-buffer core of [`top_n`].
+pub fn top_n_into(scores: &[f64], n: usize, idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..scores.len());
+    idx.sort_unstable_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    idx.truncate(n);
 }
 
 /// Top-`n` experts by predicted score (ties broken by lower index).
 pub fn top_n(scores: &[f64], n: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
-    idx.truncate(n);
+    let mut idx = Vec::with_capacity(scores.len());
+    top_n_into(scores, n, &mut idx);
     idx
 }
 

@@ -16,8 +16,9 @@ impl Prefetcher for ResidualPrefetcher {
         true
     }
 
-    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
-        ctx.pred_res.iter().map(|&c| c as f64).collect()
+    fn predict_into(&mut self, ctx: &mut PrefetchCtx, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(ctx.pred_res.iter().map(|&c| c as f64));
     }
 }
 
@@ -33,8 +34,9 @@ impl Prefetcher for FeaturePrefetcher {
         true
     }
 
-    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
-        ctx.pred_raw.iter().map(|&c| c as f64).collect()
+    fn predict_into(&mut self, ctx: &mut PrefetchCtx, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(ctx.pred_raw.iter().map(|&c| c as f64));
     }
 }
 
@@ -50,8 +52,9 @@ impl Prefetcher for StatisticalPrefetcher {
         false
     }
 
-    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
-        ctx.calib_freq_next.to_vec()
+    fn predict_into(&mut self, ctx: &mut PrefetchCtx, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(ctx.calib_freq_next);
     }
 }
 
@@ -67,8 +70,11 @@ impl Prefetcher for RandomPrefetcher {
         false
     }
 
-    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
-        (0..ctx.pred_raw.len()).map(|_| ctx.rng.f64()).collect()
+    fn predict_into(&mut self, ctx: &mut PrefetchCtx, out: &mut Vec<f64>) {
+        out.clear();
+        for _ in 0..ctx.pred_raw.len() {
+            out.push(ctx.rng.f64());
+        }
     }
 }
 
@@ -85,10 +91,11 @@ impl Prefetcher for OraclePrefetcher {
         false
     }
 
-    fn predict(&mut self, ctx: &mut PrefetchCtx) -> Vec<f64> {
+    fn predict_into(&mut self, ctx: &mut PrefetchCtx, out: &mut Vec<f64>) {
+        out.clear();
         match ctx.true_next {
-            Some(t) => t.iter().map(|&c| c as f64).collect(),
-            None => vec![0.0; ctx.pred_raw.len()],
+            Some(t) => out.extend(t.iter().map(|&c| c as f64)),
+            None => out.resize(ctx.pred_raw.len(), 0.0),
         }
     }
 }
@@ -105,8 +112,8 @@ impl Prefetcher for NoPrefetcher {
         false
     }
 
-    fn predict(&mut self, _ctx: &mut PrefetchCtx) -> Vec<f64> {
-        vec![]
+    fn predict_into(&mut self, _ctx: &mut PrefetchCtx, out: &mut Vec<f64>) {
+        out.clear();
     }
 }
 

@@ -2,8 +2,9 @@
 //! the paper's Fig. 9 runtime loop:
 //!
 //! 1. gate → true expert workloads;
-//! 2. **assignment** (Greedy/optimal/static/...) with solve wall-time
-//!    charged into virtual time;
+//! 2. **assignment** (Greedy/optimal/static/...) with a deterministic
+//!    modeled solve cost charged into virtual time (wall-clock measurement
+//!    kept behind [`SolveCost::Measured`]);
 //! 3. parallel execution: CPU side `Σ t_cpu(w_i)`, GPU side on the
 //!    copy/compute pipeline (demand fetches for non-resident experts);
 //! 4. **prefetch** stream for layer l+1 (prediction gate pass + transfers);
@@ -12,12 +13,17 @@
 //! The same loop serves live inference (the engine computes real
 //! activations alongside) and trace replay (policy sweeps without PJRT) —
 //! both produce identical virtual-time metrics for identical routing.
+//!
+//! **Hot-path discipline:** `run_step` performs no heap allocation in
+//! steady state. All per-step temporaries live in a reusable
+//! [`StepScratch`]; in-flight prefetches are tracked in a flat
+//! `layer × expert` arrival table instead of a `HashMap`; policies write
+//! into caller buffers via the `*_into` APIs. `tests/alloc_audit.rs`
+//! enforces this with a counting global allocator.
 
-use std::collections::HashMap;
-
-use crate::coordinator::assignment::{AssignCtx, Assigner, Assignment};
-use crate::coordinator::cache::ExpertCache;
-use crate::coordinator::prefetch::{top_n, PrefetchCtx, Prefetcher};
+use crate::coordinator::assignment::{AssignCtx, Assigner, Assignment, SolveCost};
+use crate::coordinator::cache::{ExpertCache, Swap};
+use crate::coordinator::prefetch::{top_n_into, PrefetchCtx, Prefetcher};
 use crate::hw::{CostModel, GpuPipeline, Ns, TransferKind};
 use crate::metrics::RunMetrics;
 use crate::store::{Tier, TieredStore};
@@ -39,6 +45,10 @@ pub struct PolicyBundle {
     pub layer_overhead_ns: Ns,
     /// Eq. 9: staging slots for non-resident experts per layer.
     pub gpu_free_slots: usize,
+    /// How assignment-solve time is charged into virtual time. The default
+    /// [`SolveCost::Modeled`] makes identical seeds produce bit-identical
+    /// [`RunMetrics`] across runs and machines.
+    pub solve_cost: SolveCost,
 }
 
 /// Which inference phase a step belongs to.
@@ -48,18 +58,67 @@ pub enum Phase {
     Decode,
 }
 
+/// Sentinel in the flat prefetch-arrival table: no transfer in flight.
+const NO_ARRIVAL: Ns = Ns::MAX;
+
+/// Reusable per-step buffers — the reason `run_step` allocates nothing in
+/// steady state. Taken out of the simulator at the top of each step
+/// (`mem::take`) so field borrows never fight the rest of `self`.
+#[derive(Default)]
+struct StepScratch {
+    /// Cache residency bitmap of the current layer.
+    cache_resident: Vec<bool>,
+    /// cache ∪ arrived-or-in-flight prefetches (assignment input).
+    resident: Vec<bool>,
+    /// Storage-tier snapshot of the current layer (tiered store only).
+    tiers: Vec<Tier>,
+    /// The solver's output for the current layer.
+    assignment: Assignment,
+    /// CPU-side (arrival, duration) pairs, sorted by arrival.
+    cpu_timeline: Vec<(Ns, Ns)>,
+    /// GPU-assigned experts in execution order.
+    gpu_experts: Vec<usize>,
+    /// Prefetcher score output.
+    scores: Vec<f64>,
+    /// Expert indices ranked by prefetch score.
+    ranked: Vec<usize>,
+    /// Cache window-tick swap list.
+    swaps: Vec<Swap>,
+}
+
+impl StepScratch {
+    /// Pre-size every buffer for `n_routed`-expert layers so the hot loop
+    /// never reallocates, regardless of which branches early steps hit.
+    fn with_dims(n_routed: usize) -> Self {
+        StepScratch {
+            cache_resident: Vec::with_capacity(n_routed),
+            resident: Vec::with_capacity(n_routed),
+            tiers: Vec::with_capacity(n_routed),
+            assignment: Assignment::none(n_routed),
+            cpu_timeline: Vec::with_capacity(n_routed),
+            gpu_experts: Vec::with_capacity(n_routed),
+            scores: Vec::with_capacity(n_routed),
+            ranked: Vec::with_capacity(n_routed),
+            swaps: Vec::with_capacity(n_routed),
+        }
+    }
+}
+
 /// The virtual-time step simulator.
 pub struct StepSimulator<'a> {
     cost: &'a CostModel,
     pub policy: PolicyBundle,
-    /// Calibration activation frequencies per layer (EdgeMoE predictor).
-    calib_freq: Vec<Vec<f64>>,
+    /// Calibration activation frequencies per layer (EdgeMoE predictor) —
+    /// borrowed, so sweeps replay thousands of times without cloning it.
+    calib_freq: &'a [Vec<f64>],
     gpu: GpuPipeline,
     now: Ns,
     pub metrics: RunMetrics,
     rng: DetRng,
-    /// In-flight / arrived prefetches: (layer, expert) → copy-arrival time.
-    prefetched: HashMap<(usize, usize), Ns>,
+    /// In-flight / arrived prefetch arrival times, flat `layer * n_routed
+    /// + e` ([`NO_ARRIVAL`] = none) — replaces the seed's per-step
+    /// `HashMap<(usize, usize), Ns>` churn.
+    prefetch_arrival: Vec<Ns>,
     decode_steps_done: usize,
     layers: usize,
     n_routed: usize,
@@ -71,13 +130,14 @@ pub struct StepSimulator<'a> {
     /// a memory-limited store makes assignment tier-aware, turns cache
     /// evictions into demotions, and charges NVMe promotions.
     store: Option<TieredStore>,
+    scratch: StepScratch,
 }
 
 impl<'a> StepSimulator<'a> {
     pub fn new(
         cost: &'a CostModel,
         policy: PolicyBundle,
-        calib_freq: Vec<Vec<f64>>,
+        calib_freq: &'a [Vec<f64>],
         layers: usize,
         n_routed: usize,
         n_shared: usize,
@@ -91,13 +151,14 @@ impl<'a> StepSimulator<'a> {
             now: 0,
             metrics: RunMetrics::default(),
             rng: DetRng::new(seed ^ 0xda11),
-            prefetched: HashMap::new(),
+            prefetch_arrival: vec![NO_ARRIVAL; layers * n_routed],
             decode_steps_done: 0,
             layers,
             n_routed,
             n_shared,
             last_assignments: vec![None; layers],
             store: None,
+            scratch: StepScratch::with_dims(n_routed),
         }
     }
 
@@ -125,8 +186,10 @@ impl<'a> StepSimulator<'a> {
         self.now = 0;
         self.gpu = GpuPipeline::new();
         // re-base in-flight prefetch arrivals
-        for v in self.prefetched.values_mut() {
-            *v = v.saturating_sub(base);
+        for v in self.prefetch_arrival.iter_mut() {
+            if *v != NO_ARRIVAL {
+                *v = v.saturating_sub(base);
+            }
         }
         if let Some(st) = self.store.as_mut() {
             st.xfer.rebase_and_clear(base);
@@ -139,14 +202,29 @@ impl<'a> StepSimulator<'a> {
     ///
     /// `kv_len` — average KV length during this step (attention cost).
     pub fn run_step(&mut self, step: &BatchStep, kv_len: usize, phase: Phase) {
-        debug_assert_eq!(step.layers.len(), self.layers);
         if step.tokens == 0 {
             return;
         }
+        debug_assert_eq!(step.layers.len(), self.layers);
         let trans = self.cost.trans_time();
         let bytes = self.cost.expert_bytes() as u64;
+        let n = self.n_routed;
+        let calib_freq = self.calib_freq;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let StepScratch {
+            cache_resident,
+            resident,
+            tiers,
+            assignment,
+            cpu_timeline,
+            gpu_experts,
+            scores,
+            ranked,
+            swaps,
+        } = &mut scratch;
         for l in 0..self.layers {
             let data = &step.layers[l];
+            let layer_base = l * n;
             // --- attention + fixed overheads -------------------------------
             let attn = self.cost.attn_time(step.tokens, kv_len)
                 + self.cost.layer_fixed()
@@ -162,20 +240,16 @@ impl<'a> StepSimulator<'a> {
             // A prefetched expert counts as resident for assignment even if
             // its transfer is still in flight — the copy is already paid for
             // and overlapped; execution below waits for the actual arrival.
-            let cache_resident = self.policy.cache.resident_mask(l);
+            self.policy.cache.resident_mask_into(l, cache_resident);
             // Reconcile the store with the cache's (seeded) initial resident
             // set once per layer — load-time placement, free of traffic.
             if let Some(st) = self.store.as_mut() {
-                st.sync_layer(l, &cache_resident);
+                st.sync_layer(l, cache_resident);
             }
-            let layer_tiers: Option<Vec<Tier>> =
-                self.store.as_ref().map(|st| st.layer_tiers(l));
-            let mut resident = cache_resident.clone();
-            let mut prefetch_arrival: Vec<Option<Ns>> = vec![None; self.n_routed];
-            for e in 0..self.n_routed {
-                if let Some(&arr) = self.prefetched.get(&(l, e)) {
+            resident.clone_from(cache_resident);
+            for e in 0..n {
+                if self.prefetch_arrival[layer_base + e] != NO_ARRIVAL {
                     resident[e] = true;
-                    prefetch_arrival[e] = Some(arr);
                 }
             }
 
@@ -183,23 +257,41 @@ impl<'a> StepSimulator<'a> {
             // staging buffers until the layer retires, shrinking the Eq. 9
             // budget for demand fetches (the paper's "costly inaccurate
             // prefetches").
-            let wasted_staging = (0..self.n_routed)
-                .filter(|&e| prefetch_arrival[e].is_some() && data.workloads[e] == 0)
+            let wasted_staging = (0..n)
+                .filter(|&e| {
+                    self.prefetch_arrival[layer_base + e] != NO_ARRIVAL
+                        && data.workloads[e] == 0
+                })
                 .count();
 
-            // --- assignment (solve wall time charged 1:1) -------------------
+            // --- assignment (modeled solve cost charged 1:1) ----------------
+            let tiers_snapshot: Option<&[Tier]> = match self.store.as_ref() {
+                Some(st) => {
+                    st.layer_tiers_into(l, tiers);
+                    Some(tiers.as_slice())
+                }
+                None => None,
+            };
             let ctx = AssignCtx {
                 workloads: &data.workloads,
-                resident: &resident,
-                tiers: layer_tiers.as_deref(),
+                resident,
+                tiers: tiers_snapshot,
                 cost: self.cost,
                 gpu_free_slots: self.policy.gpu_free_slots.saturating_sub(wasted_staging),
                 layer: l,
                 layers: self.layers,
             };
-            let wall = std::time::Instant::now();
-            let assignment = self.policy.assigner.assign(&ctx);
-            let solve = wall.elapsed().as_nanos() as Ns;
+            let solve = match self.policy.solve_cost {
+                SolveCost::Modeled => {
+                    self.policy.assigner.assign_into(&ctx, assignment);
+                    self.policy.assigner.modeled_solve_ns(&ctx)
+                }
+                SolveCost::Measured => {
+                    let wall = std::time::Instant::now();
+                    self.policy.assigner.assign_into(&ctx, assignment);
+                    wall.elapsed().as_nanos() as Ns
+                }
+            };
             self.now += solve;
             self.metrics.sched_ns += solve;
 
@@ -211,8 +303,8 @@ impl<'a> StepSimulator<'a> {
             // first; the CPU executes sequentially in arrival order, so
             // host-resident work overlaps in-flight promotions.
             let mut cpu_total: Ns = 0;
-            let mut cpu_timeline: Vec<(Ns, Ns)> = Vec::new(); // (arrival, dur)
-            for e in 0..self.n_routed {
+            cpu_timeline.clear();
+            for e in 0..n {
                 if !assignment.to_cpu[e] {
                     continue;
                 }
@@ -234,26 +326,29 @@ impl<'a> StepSimulator<'a> {
                 cpu_timeline.push((arrival, dur));
                 cpu_total += dur;
             }
-            cpu_timeline.sort_by_key(|&(a, _)| a);
+            // equal-arrival order cannot change the fold below, so the
+            // unstable sort stays deterministic
+            cpu_timeline.sort_unstable_by_key(|&(a, _)| a);
             let mut cpu_end = self.now;
-            for (arrival, dur) in cpu_timeline {
+            for &(arrival, dur) in cpu_timeline.iter() {
                 cpu_end = cpu_end.max(arrival) + dur;
             }
             self.metrics.moe_cpu_busy_ns += cpu_total;
 
             // --- GPU side: copy/compute pipeline ----------------------------
             let gpu_busy0 = self.gpu.compute_busy;
-            let pcie_busy0 = self.gpu.copy_busy;
             // resident experts first (no copy), then by descending workload
-            let mut gpu_experts: Vec<usize> =
-                (0..self.n_routed).filter(|&e| assignment.to_gpu[e]).collect();
-            gpu_experts.sort_by_key(|&e| {
-                (if resident[e] { 0 } else { 1 }, std::cmp::Reverse(data.workloads[e]))
+            // (index tiebreak keeps the order deterministic)
+            gpu_experts.clear();
+            gpu_experts.extend((0..n).filter(|&e| assignment.to_gpu[e]));
+            gpu_experts.sort_unstable_by_key(|&e| {
+                (if resident[e] { 0 } else { 1 }, std::cmp::Reverse(data.workloads[e]), e)
             });
-            for &e in &gpu_experts {
+            for &e in gpu_experts.iter() {
                 let w = data.workloads[e] as usize;
                 let compute = self.cost.t_gpu_compute(w);
                 self.metrics.cache_lookups += 1;
+                let arr = self.prefetch_arrival[layer_base + e];
                 if cache_resident[e] {
                     self.metrics.cache_hits += 1;
                     self.metrics.tier_gpu_hits += 1;
@@ -265,7 +360,7 @@ impl<'a> StepSimulator<'a> {
                             st.demote_gpu(l, v);
                         }
                     }
-                } else if let Some(arr) = prefetch_arrival[e] {
+                } else if arr != NO_ARRIVAL {
                     // prefetched: wait for arrival if still in flight,
                     // no new transfer
                     self.metrics.tier_gpu_hits += 1;
@@ -312,12 +407,13 @@ impl<'a> StepSimulator<'a> {
             }
 
             // --- prefetch accounting for this layer's arrivals --------------
-            let keys: Vec<(usize, usize)> =
-                self.prefetched.keys().filter(|k| k.0 == l).copied().collect();
-            for k in keys {
-                self.prefetched.remove(&k);
-                if assignment.to_gpu[k.1] && data.workloads[k.1] > 0 {
-                    self.metrics.prefetch_useful += 1;
+            for e in 0..n {
+                let slot = &mut self.prefetch_arrival[layer_base + e];
+                if *slot != NO_ARRIVAL {
+                    *slot = NO_ARRIVAL;
+                    if assignment.to_gpu[e] && data.workloads[e] > 0 {
+                        self.metrics.prefetch_useful += 1;
+                    }
                 }
             }
 
@@ -341,16 +437,21 @@ impl<'a> StepSimulator<'a> {
                     ready = out.compute_end;
                 }
                 let true_next = step.layers.get(l + 1).map(|d| d.workloads.as_slice());
-                let scores = self.policy.prefetcher.predict(&mut PrefetchCtx {
-                    pred_raw: &data.pred_raw,
-                    pred_res: &data.pred_res,
-                    cur_workloads: &data.workloads,
-                    true_next,
-                    calib_freq_next: &self.calib_freq[l + 1],
-                    rng: &mut self.rng,
-                });
+                self.policy.prefetcher.predict_into(
+                    &mut PrefetchCtx {
+                        pred_raw: &data.pred_raw,
+                        pred_res: &data.pred_res,
+                        cur_workloads: &data.workloads,
+                        true_next,
+                        calib_freq_next: &calib_freq[l + 1],
+                        rng: &mut self.rng,
+                    },
+                    scores,
+                );
+                top_n_into(scores, n, ranked);
+                let next_base = (l + 1) * n;
                 let mut issued = 0;
-                for e in top_n(&scores, self.n_routed) {
+                for &e in ranked.iter() {
                     if issued == self.policy.prefetch_size {
                         break;
                     }
@@ -364,7 +465,7 @@ impl<'a> StepSimulator<'a> {
                         break;
                     }
                     if self.policy.cache.is_resident(l + 1, e)
-                        || self.prefetched.contains_key(&(l + 1, e))
+                        || self.prefetch_arrival[next_base + e] != NO_ARRIVAL
                     {
                         continue;
                     }
@@ -379,7 +480,7 @@ impl<'a> StepSimulator<'a> {
                     let arr = self
                         .gpu
                         .schedule_transfer(pcie_ready, trans, bytes, TransferKind::Prefetch);
-                    self.prefetched.insert((l + 1, e), arr);
+                    self.prefetch_arrival[next_base + e] = arr;
                     self.metrics.prefetch_issued += 1;
                     issued += 1;
                 }
@@ -397,7 +498,9 @@ impl<'a> StepSimulator<'a> {
             // (not a drop), and loading a disk-resident expert chains an
             // NVMe promotion before its PCIe upload.
             if phase == Phase::Decode {
-                for swap in self.policy.cache.window_tick(l, self.decode_steps_done + 1) {
+                swaps.clear();
+                self.policy.cache.window_tick_into(l, self.decode_steps_done + 1, swaps);
+                for swap in swaps.iter() {
                     let mut ready = self.now;
                     let now = self.now;
                     let cost = self.cost;
@@ -411,9 +514,12 @@ impl<'a> StepSimulator<'a> {
                     self.gpu.schedule_transfer(ready, trans, bytes, TransferKind::CacheUpdate);
                 }
             }
-            let _ = pcie_busy0;
-            self.last_assignments[l] = Some(assignment);
+            match &mut self.last_assignments[l] {
+                Some(a) => a.copy_from(assignment),
+                slot => *slot = Some(assignment.clone()),
+            }
         }
+        self.scratch = scratch;
         // --- LM head ----------------------------------------------------------
         let head = self.cost.head_time(step.tokens);
         self.now += head;
@@ -465,7 +571,7 @@ pub fn replay_decode(
     steps: usize,
     cost: &CostModel,
     policy: PolicyBundle,
-    calib_freq: Vec<Vec<f64>>,
+    calib_freq: &[Vec<f64>],
     n_shared: usize,
     seed: u64,
 ) -> RunMetrics {
@@ -481,7 +587,7 @@ pub fn replay_decode_store(
     steps: usize,
     cost: &CostModel,
     policy: PolicyBundle,
-    calib_freq: Vec<Vec<f64>>,
+    calib_freq: &[Vec<f64>],
     n_shared: usize,
     seed: u64,
     store: Option<TieredStore>,
@@ -499,12 +605,13 @@ pub fn replay_decode_store(
         sim = sim.with_store(st);
     }
     let prompt_len = trace.seqs[seq_ids[0] % trace.seqs.len()].prompt_len;
-    let prefill = trace.compose_prefill(seq_ids);
-    sim.run_step(&prefill, prompt_len / 2, Phase::Prefill);
+    let mut step = BatchStep::default();
+    trace.compose_prefill_into(seq_ids, &mut step);
+    sim.run_step(&step, prompt_len / 2, Phase::Prefill);
     sim.reset_metrics();
     let max_steps = steps.min(trace.min_steps());
     for s in 0..max_steps {
-        let step = trace.compose_decode(seq_ids, s);
+        trace.compose_decode_into(seq_ids, s, &mut step);
         sim.run_step(&step, prompt_len + s, Phase::Decode);
     }
     sim.finish()
@@ -517,7 +624,7 @@ pub fn replay_prefill(
     seq_ids: &[usize],
     cost: &CostModel,
     policy: PolicyBundle,
-    calib_freq: Vec<Vec<f64>>,
+    calib_freq: &[Vec<f64>],
     n_shared: usize,
     seed: u64,
 ) -> RunMetrics {
@@ -551,6 +658,10 @@ mod tests {
     fn cost() -> CostModel {
         let p = Presets::load_default().unwrap();
         CostModel::new(p.model("mixtral-sim").unwrap(), p.hw("local-pc").unwrap())
+    }
+
+    fn freq(layers: usize, n: usize) -> Vec<Vec<f64>> {
+        vec![vec![0.0; n]; layers]
     }
 
     fn mk_step(layers: usize, n: usize, w: &[u32]) -> BatchStep {
@@ -593,13 +704,15 @@ mod tests {
             cpu_eff: 1.0,
             layer_overhead_ns: 0,
             gpu_free_slots: 8,
+            solve_cost: SolveCost::Modeled,
         }
     }
 
     #[test]
     fn time_advances_and_tokens_counted() {
         let c = cost();
-        let mut sim = StepSimulator::new(&c, bundle(false, false), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+        let f = freq(4, 8);
+        let mut sim = StepSimulator::new(&c, bundle(false, false), &f, 4, 8, 0, 1);
         let step = mk_step(4, 8, &[2, 0, 1, 3, 0, 0, 1, 1]);
         sim.run_step(&step, 16, Phase::Decode);
         let m = sim.finish();
@@ -613,18 +726,50 @@ mod tests {
     #[test]
     fn empty_step_is_noop() {
         let c = cost();
-        let mut sim = StepSimulator::new(&c, bundle(false, false), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+        let f = freq(4, 8);
+        let mut sim = StepSimulator::new(&c, bundle(false, false), &f, 4, 8, 0, 1);
         sim.run_step(&BatchStep { tokens: 0, layers: vec![] }, 4, Phase::Decode);
         assert_eq!(sim.finish().total_ns, 0);
     }
 
     #[test]
+    fn modeled_solve_cost_is_bit_deterministic() {
+        // The acceptance criterion: identical seeds → bit-identical
+        // RunMetrics, which the seed's wall-clock `Instant` charging broke.
+        let c = cost();
+        let f = freq(4, 8);
+        let run = || {
+            let mut sim = StepSimulator::new(&c, bundle(true, true), &f, 4, 8, 1, 9);
+            for i in 0..24 {
+                let w = [8u32, (i % 3) as u32, 8, 0, 2, 0, 1, i as u32 % 5];
+                sim.run_step(&mk_step(4, 8, &w), 16 + i, Phase::Decode);
+            }
+            sim.finish()
+        };
+        assert_eq!(run(), run(), "identical seeds must give identical metrics");
+    }
+
+    #[test]
+    fn measured_solve_cost_still_charges_time() {
+        let c = cost();
+        let f = freq(4, 8);
+        let mut policy = bundle(false, false);
+        policy.solve_cost = SolveCost::Measured;
+        let mut sim = StepSimulator::new(&c, policy, &f, 4, 8, 0, 1);
+        for _ in 0..8 {
+            sim.run_step(&mk_step(4, 8, &[4, 4, 4, 4, 0, 0, 0, 0]), 8, Phase::Decode);
+        }
+        let m = sim.finish();
+        assert!(m.sched_ns > 0, "wall-clock mode must charge some solve time");
+    }
+
+    #[test]
     fn cache_reduces_demand_traffic() {
         let c = cost();
+        let f = freq(4, 8);
         let w = [8u32, 8, 8, 8, 0, 0, 0, 0];
         let run = |cache| {
-            let mut sim =
-                StepSimulator::new(&c, bundle(false, cache), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+            let mut sim = StepSimulator::new(&c, bundle(false, cache), &f, 4, 8, 0, 1);
             for _ in 0..16 {
                 sim.run_step(&mk_step(4, 8, &w), 16, Phase::Decode);
             }
@@ -645,8 +790,9 @@ mod tests {
     #[test]
     fn perfect_prefetch_counts_useful() {
         let c = cost();
+        let f = freq(4, 8);
         // workloads identical across layers, so pred == truth → useful
-        let mut sim = StepSimulator::new(&c, bundle(true, false), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+        let mut sim = StepSimulator::new(&c, bundle(true, false), &f, 4, 8, 0, 1);
         for _ in 0..8 {
             sim.run_step(&mk_step(4, 8, &[16, 0, 0, 0, 0, 0, 0, 0]), 16, Phase::Decode);
         }
@@ -660,6 +806,7 @@ mod tests {
     #[test]
     fn all_cpu_never_touches_pcie() {
         let c = cost();
+        let f = freq(4, 8);
         let policy = PolicyBundle {
             assigner: Box::new(AllCpuAssigner::new()),
             prefetcher: Box::new(NoPrefetcher),
@@ -668,8 +815,9 @@ mod tests {
             cpu_eff: 1.0,
             layer_overhead_ns: 0,
             gpu_free_slots: 8,
+            solve_cost: SolveCost::Modeled,
         };
-        let mut sim = StepSimulator::new(&c, policy, vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+        let mut sim = StepSimulator::new(&c, policy, &f, 4, 8, 0, 1);
         for _ in 0..4 {
             sim.run_step(&mk_step(4, 8, &[4, 4, 4, 4, 0, 0, 0, 0]), 8, Phase::Decode);
         }
@@ -683,6 +831,7 @@ mod tests {
     #[test]
     fn greedy_beats_all_cpu_on_heavy_workloads() {
         let c = cost();
+        let f = freq(4, 8);
         let w = [32u32, 32, 32, 32, 32, 32, 32, 32];
         let run = |all_cpu: bool| {
             let policy = PolicyBundle {
@@ -697,8 +846,9 @@ mod tests {
                 cpu_eff: 1.0,
                 layer_overhead_ns: 0,
                 gpu_free_slots: 8,
+                solve_cost: SolveCost::Modeled,
             };
-            let mut sim = StepSimulator::new(&c, policy, vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+            let mut sim = StepSimulator::new(&c, policy, &f, 4, 8, 0, 1);
             for _ in 0..4 {
                 sim.run_step(&mk_step(4, 8, &w), 32, Phase::Decode);
             }
@@ -748,10 +898,10 @@ mod tests {
         // tiered store must be timing-transparent — bit-identical metrics
         // to the seed two-tier path (store bookkeeping counters aside).
         let c = cost();
+        let f = freq(4, 8);
         let w = [8u32, 8, 0, 8, 2, 0, 1, 0];
         let run = |store: Option<crate::store::TieredStore>| {
-            let mut sim =
-                StepSimulator::new(&c, bundle(true, true), vec![vec![0.0; 8]; 4], 4, 8, 1, 1);
+            let mut sim = StepSimulator::new(&c, bundle(true, true), &f, 4, 8, 1, 1);
             if let Some(st) = store {
                 sim = sim.with_store(st);
             }
@@ -772,10 +922,10 @@ mod tests {
     #[test]
     fn memory_limited_store_charges_nvme_and_slows_decode() {
         let c = cost();
+        let f = freq(4, 8);
         let w = [8u32, 8, 8, 8, 8, 8, 8, 8];
         let run = |store: Option<crate::store::TieredStore>| {
-            let mut sim =
-                StepSimulator::new(&c, bundle(false, true), vec![vec![0.0; 8]; 4], 4, 8, 0, 1);
+            let mut sim = StepSimulator::new(&c, bundle(false, true), &f, 4, 8, 0, 1);
             if let Some(st) = store {
                 sim = sim.with_store(st);
             }
@@ -805,8 +955,9 @@ mod tests {
     #[test]
     fn replay_decode_produces_speed() {
         let c = cost();
+        let f = freq(4, 8);
         let t = tiny_trace(4, 8, 16);
-        let m = replay_decode(&t, &[0, 0, 0, 0], 16, &c, bundle(false, true), vec![vec![0.0; 8]; 4], 0, 1);
+        let m = replay_decode(&t, &[0, 0, 0, 0], 16, &c, bundle(false, true), &f, 0, 1);
         assert_eq!(m.tokens_out, 64);
         assert!(m.tokens_per_s() > 0.0);
     }
@@ -814,8 +965,9 @@ mod tests {
     #[test]
     fn replay_prefill_counts_prompt_tokens() {
         let c = cost();
+        let f = freq(4, 8);
         let t = tiny_trace(4, 8, 2);
-        let m = replay_prefill(&t, &[0, 0], &c, bundle(false, false), vec![vec![0.0; 8]; 4], 0, 1);
+        let m = replay_prefill(&t, &[0, 0], &c, bundle(false, false), &f, 0, 1);
         assert_eq!(m.tokens_out, 16);
     }
 }

@@ -97,7 +97,7 @@ pub fn fig22(ctx: &ExptCtx) -> Result<String> {
             let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
             let ids: Vec<usize> = (0..16).collect();
             let m = crate::coordinator::simrun::replay_decode(
-                &trace, &ids, len, &cost, bundle, calib.freq.clone(), model.sim.n_shared, 7,
+                &trace, &ids, len, &cost, bundle, &calib.freq, model.sim.n_shared, 7,
             );
             tps.push(m.tokens_per_s());
             row.push(format!("{:.2}", m.tokens_per_s()));

@@ -19,28 +19,49 @@ pub fn fig14(ctx: &ExptCtx) -> Result<String> {
     );
     let mut hybri_speedups = vec![];
     let mut dali_speedups = vec![];
-    for preset in ["deepseek-sim", "mixtral-sim"] {
+    let presets = ["deepseek-sim", "mixtral-sim"];
+    ctx.prewarm(&presets)?;
+    // load each preset's trace once and share it across all of its cells
+    let traces = presets
+        .iter()
+        .map(|p| ctx.trace_c4(p))
+        .collect::<Result<Vec<_>>>()?;
+    let mut cells = Vec::new();
+    for (pi, preset) in presets.iter().enumerate() {
+        for &b in &BATCHES {
+            for which in ["naive", "static", "greedy"] {
+                cells.push((pi, *preset, b, which));
+            }
+        }
+    }
+    // results come back paired with their cells (see parallel_cells)
+    let mut metrics = ctx.parallel_cells(cells, |(pi, preset, b, which)| -> Result<f64> {
         let dims = ctx.model(preset)?.sim.clone();
-        let trace = ctx.trace_c4(preset)?;
+        let assigner: Box<dyn crate::coordinator::assignment::Assigner> = match which {
+            "naive" => Box::new(AllCpuAssigner::new()),
+            "static" => Box::new(StaticThresholdAssigner::new()),
+            _ => Box::new(GreedyAssigner::new()),
+        };
+        let bundle = ctx.bundle_parts(
+            &dims,
+            assigner,
+            Box::new(NoPrefetcher),
+            Box::new(NoCache::new(dims.layers, dims.n_routed)),
+            0,
+        );
+        Ok(ctx.decode_with(preset, bundle, &traces[pi], b, 32)?.tokens_per_s())
+    });
+    let mut next_cell = |preset: &str, b: usize, which: &str| -> Result<f64> {
+        let ((pi, p, bb, w), r) = metrics.next().expect("one result per cell");
+        assert_eq!((presets[pi], p, bb, w), (preset, preset, b, which), "cell order diverged");
+        r
+    };
+    for preset in presets {
         let mut t = Table::new(vec!["batch", "naive (all-CPU)", "HybriMoE static", "DALI greedy"]);
         for &b in &BATCHES {
-            let mk = |which: &str| {
-                let assigner: Box<dyn crate::coordinator::assignment::Assigner> = match which {
-                    "naive" => Box::new(AllCpuAssigner::new()),
-                    "static" => Box::new(StaticThresholdAssigner::new()),
-                    _ => Box::new(GreedyAssigner::new()),
-                };
-                ctx.bundle_parts(
-                    &dims,
-                    assigner,
-                    Box::new(NoPrefetcher),
-                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
-                    0,
-                )
-            };
-            let naive = ctx.decode_with(preset, mk("naive"), &trace, b, 32)?.tokens_per_s();
-            let stat = ctx.decode_with(preset, mk("static"), &trace, b, 32)?.tokens_per_s();
-            let greedy = ctx.decode_with(preset, mk("greedy"), &trace, b, 32)?.tokens_per_s();
+            let naive = next_cell(preset, b, "naive")?;
+            let stat = next_cell(preset, b, "static")?;
+            let greedy = next_cell(preset, b, "greedy")?;
             hybri_speedups.push(stat / naive.max(1e-9));
             dali_speedups.push(greedy / naive.max(1e-9));
             t.row(vec![

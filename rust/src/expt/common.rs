@@ -24,11 +24,58 @@ pub const STEPS: usize = 48;
 
 pub struct ExptCtx {
     pub presets: Presets,
+    /// Worker threads for sweep cells (see [`Self::parallel`]); 1 = serial.
+    pub jobs: usize,
 }
 
 impl ExptCtx {
     pub fn new() -> Result<Self> {
-        Ok(ExptCtx { presets: Presets::load_default()? })
+        Ok(ExptCtx { presets: Presets::load_default()?, jobs: 1 })
+    }
+
+    /// Set the sweep parallelism (the `expt` binary's `--jobs N`).
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// Run independent sweep cells on the scoped-thread pool, preserving
+    /// input order. Every replay is deterministic (fixed seeds, modeled
+    /// solve cost), so `--jobs N` never changes any reported number.
+    pub fn parallel<T: Send, R: Send>(
+        &self,
+        items: Vec<T>,
+        f: impl Fn(T) -> R + Sync,
+    ) -> Vec<R> {
+        crate::util::pool::parallel_map(self.jobs, items, f)
+    }
+
+    /// [`Self::parallel`] that hands each result back *paired with its
+    /// cell*: sweeps consume the pairs in generation order and assert the
+    /// cell matches the table slot, so a drifted loop nest panics instead
+    /// of silently misattributing replays.
+    pub fn parallel_cells<T, R>(
+        &self,
+        cells: Vec<T>,
+        f: impl Fn(T) -> R + Sync,
+    ) -> impl Iterator<Item = (T, R)>
+    where
+        T: Send + Clone,
+        R: Send,
+    {
+        let results = self.parallel(cells.clone(), f);
+        cells.into_iter().zip(results)
+    }
+
+    /// Ensure calibration + the C4 trace pool exist on disk for `presets`
+    /// before a parallel sweep starts — cell workers then only ever *read*
+    /// the artifact cache, so there is no generation race.
+    pub fn prewarm(&self, presets: &[&str]) -> Result<()> {
+        for p in presets {
+            self.calib(p)?;
+            self.trace_c4(p)?;
+        }
+        Ok(())
     }
 
     pub fn model(&self, preset: &str) -> Result<&ModelPreset> {
@@ -65,13 +112,63 @@ impl ExptCtx {
         batch: usize,
         steps: usize,
     ) -> Result<RunMetrics> {
+        let trace = self.trace_c4(preset)?;
+        self.decode_traced(preset, fw, &trace, batch, steps)
+    }
+
+    /// [`Self::decode`] against a pre-loaded trace: parallel sweeps load
+    /// each preset's pool from disk once and share it across cells instead
+    /// of re-deserializing it per cell.
+    pub fn decode_traced(
+        &self,
+        preset: &str,
+        fw: Framework,
+        trace: &Trace,
+        batch: usize,
+        steps: usize,
+    ) -> Result<RunMetrics> {
         let model = self.model(preset)?;
         let cost = self.cost(preset)?;
         let calib = self.calib(preset)?;
-        let trace = self.trace_c4(preset)?;
         let cfg = self.fwcfg(preset)?;
         let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
-        Ok(self.decode_with(preset, bundle, &trace, batch, steps)?)
+        let seq_ids: Vec<usize> = (0..batch).collect();
+        Ok(crate::coordinator::simrun::replay_decode(
+            trace,
+            &seq_ids,
+            steps,
+            &cost,
+            bundle,
+            &calib.freq,
+            model.sim.n_shared,
+            7,
+        ))
+    }
+
+    /// [`Self::prefill`] against a pre-loaded trace (see
+    /// [`Self::decode_traced`]).
+    pub fn prefill_traced(
+        &self,
+        preset: &str,
+        fw: Framework,
+        trace: &Trace,
+        batch: usize,
+    ) -> Result<RunMetrics> {
+        let model = self.model(preset)?;
+        let cost = self.cost(preset)?;
+        let calib = self.calib(preset)?;
+        let cfg = self.fwcfg(preset)?;
+        let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
+        let seq_ids: Vec<usize> = (0..batch).collect();
+        Ok(crate::coordinator::simrun::replay_prefill(
+            trace,
+            &seq_ids,
+            &cost,
+            bundle,
+            &calib.freq,
+            model.sim.n_shared,
+            7,
+        ))
     }
 
     /// Replay decode with an explicit policy bundle.
@@ -93,7 +190,7 @@ impl ExptCtx {
             steps,
             &cost,
             bundle,
-            calib.freq.clone(),
+            &calib.freq,
             model.sim.n_shared,
             7,
         ))
@@ -101,22 +198,8 @@ impl ExptCtx {
 
     /// Replay prefill with an explicit framework.
     pub fn prefill(&self, preset: &str, fw: Framework, batch: usize) -> Result<RunMetrics> {
-        let model = self.model(preset)?;
-        let cost = self.cost(preset)?;
-        let calib = self.calib(preset)?;
         let trace = self.trace_c4(preset)?;
-        let cfg = self.fwcfg(preset)?;
-        let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
-        let seq_ids: Vec<usize> = (0..batch).collect();
-        Ok(crate::coordinator::simrun::replay_prefill(
-            &trace,
-            &seq_ids,
-            &cost,
-            bundle,
-            calib.freq.clone(),
-            model.sim.n_shared,
-            7,
-        ))
+        self.prefill_traced(preset, fw, &trace, batch)
     }
 
     /// A custom-component bundle for ablations (greedy base).
@@ -136,6 +219,7 @@ impl ExptCtx {
             cpu_eff: 1.0,
             layer_overhead_ns: 0,
             gpu_free_slots: dims.n_routed,
+            solve_cost: Default::default(),
         }
     }
 }
@@ -163,11 +247,19 @@ pub fn prefetch_accuracy(
     kind: PredKind,
     top_j: usize,
 ) -> f64 {
+    let n = trace.n_routed;
     let mut total = 0.0;
     let mut count = 0usize;
     let max_steps = steps.min(trace.min_steps());
+    // All buffers are hoisted out of the (step, layer) loop and reused —
+    // this routine scores thousands of cells per table.
+    let mut step = crate::workload::trace::BatchStep::default();
+    let mut pred_scores = vec![0.0f64; n];
+    let mut truth_scores = vec![0.0f64; n];
+    let mut pred = Vec::with_capacity(n);
+    let mut want = Vec::with_capacity(n);
     for s in 0..max_steps {
-        let step = trace.compose_decode(seq_ids, s);
+        trace.compose_decode_into(seq_ids, s, &mut step);
         if step.tokens == 0 {
             continue;
         }
@@ -176,14 +268,29 @@ pub fn prefetch_accuracy(
             if truth.iter().all(|&w| w == 0) {
                 continue;
             }
-            let pred_scores: Vec<f64> = match kind {
-                PredKind::Statistical => calib.freq[l + 1].clone(),
-                PredKind::Feature => step.layers[l].pred_raw.iter().map(|&c| c as f64).collect(),
-                PredKind::Residual => step.layers[l].pred_res.iter().map(|&c| c as f64).collect(),
-            };
-            let pred = top_n(&pred_scores, top_j);
-            let truth_scores: Vec<f64> = truth.iter().map(|&w| w as f64).collect();
-            let want = top_n(&truth_scores, top_j);
+            pred_scores.iter_mut().for_each(|d| *d = 0.0);
+            match kind {
+                PredKind::Statistical => {
+                    for (d, &f) in pred_scores.iter_mut().zip(&calib.freq[l + 1]) {
+                        *d = f;
+                    }
+                }
+                PredKind::Feature => {
+                    for (d, &c) in pred_scores.iter_mut().zip(&step.layers[l].pred_raw) {
+                        *d = c as f64;
+                    }
+                }
+                PredKind::Residual => {
+                    for (d, &c) in pred_scores.iter_mut().zip(&step.layers[l].pred_res) {
+                        *d = c as f64;
+                    }
+                }
+            }
+            top_n_into(&pred_scores, top_j, &mut pred);
+            for (d, &w) in truth_scores.iter_mut().zip(truth) {
+                *d = w as f64;
+            }
+            top_n_into(&truth_scores, top_j, &mut want);
             let hit = pred.iter().filter(|e| want.contains(e)).count();
             total += hit as f64 / top_j as f64;
             count += 1;

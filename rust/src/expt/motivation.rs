@@ -7,6 +7,7 @@ use crate::coordinator::assignment::StaticThresholdAssigner;
 use crate::coordinator::cache::{LruCache, NoCache, ScoreCache};
 use crate::coordinator::frameworks::Framework;
 use crate::coordinator::prefetch::{FeaturePrefetcher, NoPrefetcher};
+use crate::metrics::RunMetrics;
 use crate::util::Table;
 
 /// Fig. 4: execution time of CPU- vs GPU-assigned experts under the static
@@ -45,10 +46,28 @@ pub fn fig5(ctx: &ExptCtx) -> Result<String> {
     let mut out = String::from("## Fig. 5 — PCIe share of inference time\n\n");
     let mut t = Table::new(vec!["model", "batch", "HybriMoE", "DALI"]);
     let (mut h_sum, mut d_sum, mut n) = (0.0, 0.0, 0);
+    ctx.prewarm(&MODELS)?;
+    let traces = MODELS.iter().map(|p| ctx.trace_c4(p)).collect::<Result<Vec<_>>>()?;
+    let mut cells = Vec::new();
+    for (pi, preset) in MODELS.iter().enumerate() {
+        for &b in &BATCHES {
+            for fw in [Framework::HybriMoE, Framework::Dali] {
+                cells.push((pi, *preset, b, fw));
+            }
+        }
+    }
+    let mut metrics = ctx.parallel_cells(cells, |(pi, preset, b, fw)| {
+        ctx.decode_traced(preset, fw, &traces[pi], b, 32)
+    });
+    let mut next_cell = |preset: &str, b: usize, fw: Framework| -> Result<RunMetrics> {
+        let ((_, p, bb, f), m) = metrics.next().expect("one result per cell");
+        assert_eq!((p, bb, f), (preset, b, fw), "cell order diverged");
+        m
+    };
     for preset in MODELS {
         for &b in &BATCHES {
-            let h = ctx.decode(preset, Framework::HybriMoE, b, 32)?;
-            let d = ctx.decode(preset, Framework::Dali, b, 32)?;
+            let h = next_cell(preset, b, Framework::HybriMoE)?;
+            let d = next_cell(preset, b, Framework::Dali)?;
             h_sum += h.pcie_time_share();
             d_sum += d.pcie_time_share();
             n += 1;

@@ -12,13 +12,32 @@ pub fn fig12(ctx: &ExptCtx) -> Result<String> {
     let frameworks = Framework::comparison_set();
     let mut speedups: Vec<(Framework, Vec<f64>)> =
         frameworks.iter().map(|&f| (f, vec![])).collect();
-    for preset in MODELS {
+    // every (model, batch, framework) cell replays independently; each
+    // preset's trace is loaded from disk once and shared across its cells
+    ctx.prewarm(&MODELS)?;
+    let traces = MODELS.iter().map(|p| ctx.trace_c4(p)).collect::<Result<Vec<_>>>()?;
+    let mut cells = Vec::new();
+    for (pi, preset) in MODELS.iter().enumerate() {
+        for &b in &BATCHES {
+            for &fw in &frameworks {
+                cells.push((pi, *preset, b, fw));
+            }
+        }
+    }
+    // results come back paired with their cells so the two loop nests can
+    // never silently misattribute a replay to the wrong table cell
+    let mut metrics = ctx.parallel_cells(cells, |(pi, preset, b, fw)| {
+        ctx.decode_traced(preset, fw, &traces[pi], b, STEPS)
+    });
+    for (pi, preset) in MODELS.iter().enumerate() {
         let mut t = Table::new(vec!["batch", "llama.cpp", "ktransformers", "moe-lightning", "hybrimoe", "dali"]);
         for &b in &BATCHES {
             let mut row = vec![format!("BS{b}")];
             let mut tps = vec![];
             for &fw in &frameworks {
-                let m = ctx.decode(preset, fw, b, STEPS)?;
+                let (cell, m) = metrics.next().expect("one result per cell");
+                assert_eq!(cell, (pi, *preset, b, fw), "cell order diverged");
+                let m = m?;
                 tps.push(m.tokens_per_s());
                 row.push(format!("{:.2}", m.tokens_per_s()));
             }
@@ -50,11 +69,24 @@ pub fn fig13(ctx: &ExptCtx) -> Result<String> {
     let frameworks = Framework::comparison_set();
     let mut t = Table::new(vec!["batch", "llama.cpp", "ktransformers", "moe-lightning", "hybrimoe", "dali"]);
     let mut speedups: Vec<Vec<f64>> = vec![vec![]; frameworks.len()];
-    for &b in &[1usize, 8, 16, 32, 64] {
+    ctx.prewarm(&[preset])?;
+    let trace = ctx.trace_c4(preset)?;
+    let batches = [1usize, 8, 16, 32, 64];
+    let mut cells = Vec::new();
+    for &b in &batches {
+        for &fw in &frameworks {
+            cells.push((b, fw));
+        }
+    }
+    let mut metrics =
+        ctx.parallel_cells(cells, |(b, fw)| ctx.prefill_traced(preset, fw, &trace, b));
+    for &b in &batches {
         let mut row = vec![format!("BS{b}")];
         let mut tps = vec![];
         for &fw in &frameworks {
-            let m = ctx.prefill(preset, fw, b)?;
+            let (cell, m) = metrics.next().expect("one result per cell");
+            assert_eq!(cell, (b, fw), "cell order diverged");
+            let m = m?;
             tps.push(m.tokens_per_s());
             row.push(format!("{:.1}", m.tokens_per_s()));
         }

@@ -11,9 +11,8 @@ use crate::coordinator::prefetch::{NoPrefetcher, ResidualPrefetcher};
 use crate::coordinator::simrun::Phase;
 use crate::hw::CostModel;
 use crate::store::TieredStore;
-use crate::util::{DetRng, Table};
-use crate::workload::trace::{LayerStepRecord, PrefillLayerRecord, SeqTrace};
-use crate::workload::Trace;
+use crate::util::Table;
+use crate::workload::trace::synthetic_locality_trace;
 
 /// Fig. 18 (a-d): prefetch size, cache size, (w,u) hit grid, adaptation.
 pub fn fig18(ctx: &ExptCtx) -> Result<String> {
@@ -106,7 +105,7 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
             0,
         );
         let mut sim = crate::coordinator::simrun::StepSimulator::new(
-            &cost, bundle, calib.freq.clone(), dims.layers, dims.n_routed, dims.n_shared, 5,
+            &cost, bundle, &calib.freq, dims.layers, dims.n_routed, dims.n_shared, 5,
         );
         let ids: Vec<usize> = (0..4).collect();
         sim.run_step(&trace.compose_prefill(&ids), 8, Phase::Prefill);
@@ -129,68 +128,10 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
     Ok(out)
 }
 
-/// Synthetic routing trace with adjacent-step locality (no PJRT needed —
-/// this sweep isolates the storage hierarchy, not routing fidelity).
-fn synthetic_trace(layers: usize, n: usize, top_k: usize, seqs: usize, steps: usize) -> Trace {
-    let mut rng = DetRng::new(0x7157);
-    let mk_topk = |rng: &mut DetRng, hot: usize| -> Vec<u16> {
-        // zipf-ish: favour a per-sequence hot expert plus neighbours
-        let mut picked: Vec<u16> = Vec::with_capacity(top_k);
-        while picked.len() < top_k {
-            let raw = if rng.chance(0.5) {
-                (hot + rng.usize_below(2)) % n
-            } else {
-                rng.usize_below(n)
-            };
-            let e = raw as u16;
-            if !picked.contains(&e) {
-                picked.push(e);
-            }
-        }
-        picked
-    };
-    let seqs = (0..seqs)
-        .map(|s| {
-            let mut hot = s % n;
-            let mut step_recs = Vec::with_capacity(steps);
-            for _ in 0..steps {
-                if rng.chance(0.1) {
-                    hot = (hot + 1) % n; // topic drift
-                }
-                let recs: Vec<LayerStepRecord> = (0..layers)
-                    .map(|_| {
-                        let topk = mk_topk(&mut rng, hot);
-                        LayerStepRecord {
-                            topk_scores: topk.iter().map(|_| 1.0 / top_k as f32).collect(),
-                            pred_raw: topk.clone(),
-                            pred_res: topk.clone(),
-                            topk,
-                            cos_raw: 0.8,
-                            cos_res: 0.9,
-                        }
-                    })
-                    .collect();
-                step_recs.push(recs);
-            }
-            let pre = PrefillLayerRecord {
-                counts: {
-                    let mut c = vec![0u32; n];
-                    c[hot] = 4;
-                    c
-                },
-                gate_scores: vec![0.25; n],
-                pred_raw: vec![1; n],
-                pred_res: vec![1; n],
-            };
-            SeqTrace { prompt_len: 8, prefill: vec![pre; layers], steps: step_recs }
-        })
-        .collect();
-    Trace { preset: "synthetic".into(), task: "ram-sweep".into(), n_routed: n, top_k, layers, seqs }
-}
-
 /// Latency vs host-RAM budget (tiered expert store): the new scenario axis.
 /// DALI's policy bundle replayed over the same synthetic workload while the
-/// host tier shrinks from "holds everything" down to 8 GB.
+/// host tier shrinks from "holds everything" down to 8 GB — one parallel
+/// cell per hardware preset.
 pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
     let mut out = String::from(
         "## RAM-budget sensitivity — decode speed vs host RAM (tiered GPU/host/NVMe store)\n\n\
@@ -203,7 +144,7 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
     let dims = model.sim.clone();
     let cfg = ctx.fwcfg(preset)?;
     let presets = &ctx.presets;
-    let trace = synthetic_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48);
+    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48, 0x7157);
     let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
     let mut t = Table::new(vec![
         "hardware",
@@ -214,7 +155,8 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
         "NVMe busy share",
         "promotions",
     ]);
-    for hw_name in ["local-pc", "local-pc-ram16", "local-pc-ram8"] {
+    let hw_names = vec!["local-pc", "local-pc-ram16", "local-pc-ram8"];
+    let rows = ctx.parallel(hw_names, |hw_name| -> Result<Vec<String>> {
         let hw = presets.hw(hw_name)?;
         let cost = CostModel::new(model, hw);
         let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
@@ -232,7 +174,7 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
             32,
             &cost,
             bundle,
-            freq.clone(),
+            &freq,
             dims.n_shared,
             7,
             Some(store),
@@ -242,7 +184,7 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
         } else {
             format!("{:.0} GB", hw.host_ram_bytes / 1e9)
         };
-        t.row(vec![
+        Ok(vec![
             hw_name.to_string(),
             ram,
             slots,
@@ -250,7 +192,10 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
             pct(m.disk_miss_rate()),
             pct(m.nvme_time_share()),
             m.store_promotions.to_string(),
-        ]);
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     out.push_str(&t.render());
     out.push_str(
@@ -263,34 +208,64 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
 /// Table 9: decode speed under (w_size, u_size) settings.
 pub fn table9(ctx: &ExptCtx) -> Result<String> {
     let mut out = String::from("## Table 9 — tokens/s under (w_size, u_size) settings (batch 32)\n\n");
-    for preset in MODELS {
-        let dims = ctx.model(preset)?.sim.clone();
-        let trace = ctx.trace_c4(preset)?;
-        let cfg = ctx.fwcfg(preset)?;
-        let settings: Vec<(usize, usize)> = if dims.n_routed <= 8 {
+    let settings_for = |n_routed: usize| -> Vec<(usize, usize)> {
+        if n_routed <= 8 {
             vec![(2, 1), (2, 2), (4, 1), (4, 2), (8, 1)]
         } else {
             vec![(2, 8), (2, 16), (4, 8), (4, 16), (8, 8)]
+        }
+    };
+    // one cell per (model, setting) plus the HybriMoE anchor per model;
+    // each preset's trace is loaded once and shared across its cells
+    ctx.prewarm(&MODELS)?;
+    let traces = MODELS.iter().map(|p| ctx.trace_c4(p)).collect::<Result<Vec<_>>>()?;
+    let mut cells: Vec<(usize, &str, Option<(usize, usize)>)> = Vec::new();
+    for (pi, preset) in MODELS.iter().enumerate() {
+        cells.push((pi, preset, None));
+        for wu in settings_for(ctx.model(preset)?.sim.n_routed) {
+            cells.push((pi, preset, Some(wu)));
+        }
+    }
+    let mut metrics = ctx.parallel_cells(cells, |(pi, preset, setting)| -> Result<f64> {
+        let tps = match setting {
+            None => ctx
+                .decode_traced(
+                    preset,
+                    crate::coordinator::frameworks::Framework::HybriMoE,
+                    &traces[pi],
+                    32,
+                    32,
+                )?
+                .tokens_per_s(),
+            Some((w, u)) => {
+                let dims = ctx.model(preset)?.sim.clone();
+                let cfg = ctx.fwcfg(preset)?;
+                let bundle = ctx.bundle_parts(
+                    &dims,
+                    Box::new(GreedyAssigner::new()),
+                    Box::new(ResidualPrefetcher),
+                    Box::new(WorkloadAwareCache::new(
+                        dims.layers, dims.n_routed, cfg.cache_size, w, u.min(dims.n_routed), 3,
+                    )),
+                    cfg.prefetch_size,
+                );
+                ctx.decode_with(preset, bundle, &traces[pi], 32, 32)?.tokens_per_s()
+            }
         };
+        Ok(tps)
+    });
+    for preset in MODELS {
+        let settings = settings_for(ctx.model(preset)?.sim.n_routed);
         let mut header = vec!["model".to_string(), "HybriMoE".to_string()];
         header.extend(settings.iter().map(|(w, u)| format!("({w},{u})")));
         let mut t = Table::new(header);
-        let hybri = ctx
-            .decode(preset, crate::coordinator::frameworks::Framework::HybriMoE, 32, 32)?
-            .tokens_per_s();
-        let mut row = vec![preset.to_string(), format!("{hybri:.2}")];
-        for (w, u) in settings {
-            let bundle = ctx.bundle_parts(
-                &dims,
-                Box::new(GreedyAssigner::new()),
-                Box::new(ResidualPrefetcher),
-                Box::new(WorkloadAwareCache::new(
-                    dims.layers, dims.n_routed, cfg.cache_size, w, u.min(dims.n_routed), 3,
-                )),
-                cfg.prefetch_size,
-            );
-            let m = ctx.decode_with(preset, bundle, &trace, 32, 32)?;
-            row.push(format!("{:.2}", m.tokens_per_s()));
+        let ((_, p, s), hybri) = metrics.next().expect("hybrimoe cell");
+        assert_eq!((p, s), (preset, None), "cell order diverged");
+        let mut row = vec![preset.to_string(), format!("{:.2}", hybri?)];
+        for &wu in &settings {
+            let ((_, p, s), tps) = metrics.next().expect("setting cell");
+            assert_eq!((p, s), (preset, Some(wu)), "cell order diverged");
+            row.push(format!("{:.2}", tps?));
         }
         t.row(row);
         out.push_str(&t.render());

@@ -5,7 +5,11 @@
 //!   calibrate --preset P          compute residual vectors + activation stats
 //!   prepare [--preset P]          calibrate + generate all standard trace pools
 //!   run --preset P [--framework dali] [--batch 8] [--steps 32]
+//!       [--solve-cost modeled|measured]
 //!                                 replay a decode benchmark and print metrics
+//!   bench [--steps 256] [--batch 8] [--out BENCH_simrun.json] [--strict]
+//!                                 simulator hot-path throughput + allocation
+//!                                 audit; writes machine-readable JSON
 //!   serve --preset P [--port 8743] [--framework dali]
 //!                                 start the HTTP serving front-end
 //!
@@ -14,12 +18,21 @@
 use anyhow::{bail, Result};
 
 use dali::config::Presets;
+use dali::coordinator::assignment::SolveCost;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
-use dali::coordinator::simrun::replay_decode_store;
+use dali::coordinator::simrun::{replay_decode, replay_decode_store, Phase, StepSimulator};
 use dali::hw::CostModel;
 use dali::store::TieredStore;
-use dali::util::{fmt_ns, Args};
+use dali::util::alloc_counter::{alloc_calls, dealloc_calls, CountingAlloc};
+use dali::util::{fmt_ns, repo_root, Args};
 use dali::workload::prep;
+use dali::workload::trace::{synthetic_locality_trace, BatchStep};
+
+// `dali bench` reads the counters to prove the simulator's `run_step`
+// performs no steady-state heap allocation (see util::alloc_counter for
+// the overhead rationale).
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn parse_framework(name: &str) -> Result<Framework> {
     Ok(match name {
@@ -97,7 +110,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let calib = prep::ensure_calib(&model_name)?;
     let trace = prep::ensure_trace(&model_name, "c4-sim", 32, 16, 64)?;
     let cfg = FrameworkCfg::paper_default(&model.sim);
-    let bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
+    let mut bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
+    // `--solve-cost measured` restores the seed's wall-clock charging
+    // (nondeterministic; for calibrating the modeled constants).
+    bundle.solve_cost = match args.str_or("solve-cost", "modeled").as_str() {
+        "measured" => SolveCost::Measured,
+        "modeled" => SolveCost::Modeled,
+        other => bail!("unknown --solve-cost '{other}' (modeled|measured)"),
+    };
     let seq_ids: Vec<usize> = (0..batch).collect();
     let store = TieredStore::for_model(hw, &cost, model.sim.layers, model.sim.n_routed);
     let tiered = !store.is_unlimited();
@@ -107,7 +127,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         steps,
         &cost,
         bundle,
-        calib.freq.clone(),
+        &calib.freq,
         model.sim.n_shared,
         7,
         Some(store),
@@ -149,6 +169,132 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One preset's hot-path benchmark record.
+struct BenchEntry {
+    preset: String,
+    steps_per_s: f64,
+    layer_steps_per_s: f64,
+    replays: u64,
+    allocs_per_step: f64,
+    deallocs_per_step: f64,
+    sim_tokens_per_s: f64,
+}
+
+/// `dali bench` — simulator hot-path throughput + allocation audit.
+///
+/// Replays a synthetic locality workload (no PJRT / artifacts needed) with
+/// the DALI policy bundle per model preset, measuring (a) wall-clock replay
+/// steps/sec — the perf-trajectory metric — and (b) heap allocations per
+/// steady-state decode step via the counting global allocator, which must
+/// be zero after the scratch buffers warm up. Results go to stdout and to
+/// a machine-readable `BENCH_simrun.json`.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let steps = args.usize_or("steps", 256).max(32);
+    let batch = args.usize_or("batch", 8);
+    let strict = args.bool("strict");
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => repo_root().join("BENCH_simrun.json"),
+    };
+    let presets = Presets::load_default()?;
+    let mut entries: Vec<BenchEntry> = Vec::new();
+    for preset in ["deepseek-sim", "qwen-sim", "mixtral-sim"] {
+        let model = presets.model(preset)?;
+        let dims = &model.sim;
+        let hw = presets.hw("local-pc")?;
+        let cost = CostModel::new(model, hw);
+        let trace =
+            synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, steps, 0xbe7c);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        let ids: Vec<usize> = (0..batch).collect();
+
+        // --- (b) steady-state allocation audit ------------------------------
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+        let mut sim =
+            StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7);
+        let mut stepbuf = BatchStep::default();
+        trace.compose_prefill_into(&ids, &mut stepbuf);
+        sim.run_step(&stepbuf, 8, Phase::Prefill);
+        sim.reset_metrics();
+        let warmup = 16usize;
+        for s in 0..warmup {
+            trace.compose_decode_into(&ids, s, &mut stepbuf);
+            sim.run_step(&stepbuf, 16 + s, Phase::Decode);
+        }
+        let a0 = alloc_calls();
+        let d0 = dealloc_calls();
+        let audit_steps = (trace.min_steps() - warmup) as f64;
+        for s in warmup..trace.min_steps() {
+            trace.compose_decode_into(&ids, s, &mut stepbuf);
+            sim.run_step(&stepbuf, 16 + s, Phase::Decode);
+        }
+        let allocs_per_step = (alloc_calls() - a0) as f64 / audit_steps;
+        let deallocs_per_step = (dealloc_calls() - d0) as f64 / audit_steps;
+        let m = sim.finish();
+
+        // --- (a) replay throughput (wall clock) -----------------------------
+        let t0 = std::time::Instant::now();
+        let budget = std::time::Duration::from_millis(600);
+        let mut replays = 0u64;
+        let mut decode_steps = 0u64;
+        while t0.elapsed() < budget {
+            let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+            let mm = replay_decode(&trace, &ids, steps, &cost, bundle, &freq, dims.n_shared, 7);
+            decode_steps += mm.layer_steps / dims.layers as u64;
+            replays += 1;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let steps_per_s = decode_steps as f64 / wall;
+        let entry = BenchEntry {
+            preset: preset.to_string(),
+            steps_per_s,
+            layer_steps_per_s: steps_per_s * dims.layers as f64,
+            replays,
+            allocs_per_step,
+            deallocs_per_step,
+            sim_tokens_per_s: m.tokens_per_s(),
+        };
+        println!(
+            "bench simrun/{preset:<14} {:>10.0} steps/s  ({} replays, {} layers)  \
+             allocs/step {:.2}  frees/step {:.2}",
+            entry.steps_per_s, entry.replays, dims.layers, allocs_per_step, deallocs_per_step
+        );
+        entries.push(entry);
+    }
+
+    // machine-readable trajectory record (schema kept flat on purpose)
+    let mut json = String::from("{\n  \"bench\": \"simrun_replay\",\n  \"schema\": 1,\n");
+    json.push_str(&format!("  \"batch\": {batch},\n  \"decode_steps\": {steps},\n"));
+    json.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"preset\": \"{}\", \"steps_per_s\": {:.1}, \"layer_steps_per_s\": {:.1}, \
+             \"replays\": {}, \"hot_loop_allocs_per_step\": {:.3}, \
+             \"hot_loop_frees_per_step\": {:.3}, \"sim_tokens_per_s\": {:.3}}}{}\n",
+            e.preset,
+            e.steps_per_s,
+            e.layer_steps_per_s,
+            e.replays,
+            e.allocs_per_step,
+            e.deallocs_per_step,
+            e.sim_tokens_per_s,
+            if i + 1 == entries.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {}", out_path.display());
+    let worst = entries.iter().map(|e| e.allocs_per_step).fold(0.0f64, f64::max);
+    if worst > 0.0 {
+        println!("WARNING: hot loop allocated {worst:.2} times/step (expected 0)");
+        if strict {
+            bail!("--strict: steady-state allocation detected in run_step");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let preset = args.str_or("preset", "mixtral-sim");
     let port = args.usize_or("port", 8743) as u16;
@@ -163,7 +309,10 @@ fn main() -> Result<()> {
         Some("calibrate") => cmd_calibrate(&args),
         Some("prepare") => cmd_prepare(&args),
         Some("run") => cmd_run(&args),
+        Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
-        Some(other) => bail!("unknown subcommand '{other}' (info|calibrate|prepare|run|serve)"),
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (info|calibrate|prepare|run|bench|serve)")
+        }
     }
 }

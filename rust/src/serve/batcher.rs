@@ -198,7 +198,7 @@ impl Batcher {
                 let mut sim = StepSimulator::new(
                     cost,
                     bundle,
-                    calib_freq.to_vec(),
+                    calib_freq,
                     dims.layers,
                     dims.n_routed,
                     dims.n_shared,

@@ -151,8 +151,17 @@ impl TieredStore {
 
     /// Residency tiers of one whole layer (assignment input).
     pub fn layer_tiers(&self, layer: usize) -> Vec<Tier> {
+        let mut out = Vec::with_capacity(self.n_experts);
+        self.layer_tiers_into(layer, &mut out);
+        out
+    }
+
+    /// Buffer-reusing form of [`Self::layer_tiers`] — the simulator reads
+    /// this snapshot every MoE layer, so it must not allocate.
+    pub fn layer_tiers_into(&self, layer: usize, out: &mut Vec<Tier>) {
         let i = layer * self.n_experts;
-        self.tier[i..i + self.n_experts].to_vec()
+        out.clear();
+        out.extend_from_slice(&self.tier[i..i + self.n_experts]);
     }
 
     /// Record a use (LRU recency) without changing residency.

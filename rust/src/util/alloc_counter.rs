@@ -1,0 +1,47 @@
+//! Shared counting global allocator.
+//!
+//! One implementation serves both consumers — the `dali bench` subcommand
+//! (machine-readable allocs/step in `BENCH_simrun.json`, `--strict` CI
+//! gate) and the `tests/alloc_audit.rs` integration binary — so the two
+//! can never measure subtly different things. The library itself never
+//! installs it; each binary opts in with
+//! `#[global_allocator] static G: CountingAlloc = CountingAlloc;`.
+//!
+//! Counting costs two relaxed atomic increments per alloc/dealloc — noise
+//! for a syscall-bound CLI or the virtual-time simulator, and the audited
+//! hot path allocates nothing, so the counters stay cold exactly where
+//! performance matters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static DEALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Pass-through to the system allocator that counts every call.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Allocation calls (`alloc` + `realloc`) since process start.
+pub fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// Deallocation calls since process start.
+pub fn dealloc_calls() -> u64 {
+    DEALLOC_CALLS.load(Ordering::Relaxed)
+}

@@ -2,8 +2,10 @@
 
 use std::path::{Path, PathBuf};
 
+pub mod alloc_counter;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod table;
 

@@ -1,0 +1,104 @@
+//! Dependency-free scoped-thread parallel runner (`std::thread::scope`,
+//! no rayon — the offline build vendors everything).
+//!
+//! Experiment sweeps are embarrassingly parallel: every (model, batch,
+//! framework) cell replays an independent deterministic simulation, so
+//! [`parallel_map`] preserves input order and cell-level determinism —
+//! `--jobs 4` and `--jobs 1` produce bit-identical results.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a `--jobs N` flag: `0` (or unset) = one worker per available
+/// core, anything else taken literally.
+pub fn resolve_jobs(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `jobs` scoped worker threads and return
+/// the results in input order. Work is claimed from a shared atomic cursor,
+/// so long cells never serialize behind short ones. `jobs <= 1` degrades to
+/// a plain serial map with zero threading overhead.
+pub fn parallel_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let jobs = jobs.max(1).min(n.max(1));
+    if jobs <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // One slot per item: the input moves out as a worker claims it, the
+    // result moves in when it finishes. Slot-level mutexes are uncontended
+    // (each slot is touched by exactly one worker).
+    let slots: Vec<Mutex<(Option<T>, Option<R>)>> =
+        items.into_iter().map(|t| Mutex::new((Some(t), None))).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().0.take().expect("slot claimed once");
+                let r = f(item);
+                slots[i].lock().unwrap().1 = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().1.expect("worker filled slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let out = parallel_map(4, (0..100).collect(), |i: usize| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..64).collect();
+        let f = |x: u64| x.wrapping_mul(0x9e37_79b9).rotate_left(13);
+        let serial = parallel_map(1, items.clone(), f);
+        let par = parallel_map(4, items, f);
+        assert_eq!(serial, par, "jobs must not change results");
+    }
+
+    #[test]
+    fn more_jobs_than_items_is_fine() {
+        assert_eq!(parallel_map(16, vec![1, 2], |x| x + 1), vec![2, 3]);
+        assert_eq!(parallel_map(8, Vec::<usize>::new(), |x| x), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn zero_jobs_degrades_to_serial() {
+        assert_eq!(parallel_map(0, vec![5, 6], |x| x * 2), vec![10, 12]);
+        assert!(resolve_jobs(0) >= 1);
+        assert_eq!(resolve_jobs(3), 3);
+    }
+
+    #[test]
+    fn parallel_path_leaves_the_caller_thread() {
+        // The jobs > 1 path must run cells on worker threads (the caller
+        // thread only coordinates). How MANY workers get scheduled is
+        // timing-dependent, so only the off-main property is asserted.
+        let main_id = std::thread::current().id();
+        let ids = parallel_map(4, (0..64).collect::<Vec<usize>>(), |_| {
+            std::thread::current().id()
+        });
+        assert!(ids.iter().all(|&id| id != main_id));
+    }
+}

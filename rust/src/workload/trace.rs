@@ -235,7 +235,7 @@ impl Trace {
 }
 
 /// One composed batch step fed to the policy simulator: per-layer data.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct LayerStepData {
     /// True workload per routed expert (tokens routed there this step).
     pub workloads: Vec<u32>,
@@ -247,8 +247,22 @@ pub struct LayerStepData {
     pub pred_res: Vec<u32>,
 }
 
+impl LayerStepData {
+    /// Zero all counters at width `n`, reusing capacity.
+    fn reset(&mut self, n: usize) {
+        self.workloads.clear();
+        self.workloads.resize(n, 0);
+        self.gate_scores.clear();
+        self.gate_scores.resize(n, 0.0);
+        self.pred_raw.clear();
+        self.pred_raw.resize(n, 0);
+        self.pred_res.clear();
+        self.pred_res.resize(n, 0);
+    }
+}
+
 /// One batch step across all layers.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct BatchStep {
     /// Tokens processed this step (batch size during decode).
     pub tokens: usize,
@@ -256,28 +270,39 @@ pub struct BatchStep {
     pub layers: Vec<LayerStepData>,
 }
 
-impl Trace {
-    fn empty_layer(&self) -> LayerStepData {
-        LayerStepData {
-            workloads: vec![0; self.n_routed],
-            gate_scores: vec![0.0; self.n_routed],
-            pred_raw: vec![0; self.n_routed],
-            pred_res: vec![0; self.n_routed],
+impl BatchStep {
+    /// Shape as an all-zero step of `layers` × `n_routed`, reusing every
+    /// existing allocation — the replay loops call this once per step.
+    pub fn reset(&mut self, layers: usize, n_routed: usize) {
+        self.tokens = 0;
+        self.layers.resize_with(layers, LayerStepData::default);
+        for d in &mut self.layers {
+            d.reset(n_routed);
         }
     }
+}
 
+impl Trace {
     /// Compose decode step `step` for the batch given by `seq_ids`.
     pub fn compose_decode(&self, seq_ids: &[usize], step: usize) -> BatchStep {
-        let mut layers: Vec<LayerStepData> = (0..self.layers).map(|_| self.empty_layer()).collect();
-        let mut tokens = 0;
+        let mut out = BatchStep::default();
+        self.compose_decode_into(seq_ids, step, &mut out);
+        out
+    }
+
+    /// Buffer-reusing form of [`Self::compose_decode`]: overwrite `out`
+    /// with the composed step, allocating nothing once `out` has the
+    /// trace's shape.
+    pub fn compose_decode_into(&self, seq_ids: &[usize], step: usize, out: &mut BatchStep) {
+        out.reset(self.layers, self.n_routed);
         for &sid in seq_ids {
             let seq = &self.seqs[sid % self.seqs.len()];
             if step >= seq.steps.len() {
                 continue;
             }
-            tokens += 1;
+            out.tokens += 1;
             for (l, rec) in seq.steps[step].iter().enumerate() {
-                let dst = &mut layers[l];
+                let dst = &mut out.layers[l];
                 for (i, &e) in rec.topk.iter().enumerate() {
                     dst.workloads[e as usize] += 1;
                     dst.gate_scores[e as usize] += rec.topk_scores[i];
@@ -290,18 +315,23 @@ impl Trace {
                 }
             }
         }
-        BatchStep { tokens, layers }
     }
 
     /// Compose the prefill batch step for `seq_ids`.
     pub fn compose_prefill(&self, seq_ids: &[usize]) -> BatchStep {
-        let mut layers: Vec<LayerStepData> = (0..self.layers).map(|_| self.empty_layer()).collect();
-        let mut tokens = 0;
+        let mut out = BatchStep::default();
+        self.compose_prefill_into(seq_ids, &mut out);
+        out
+    }
+
+    /// Buffer-reusing form of [`Self::compose_prefill`].
+    pub fn compose_prefill_into(&self, seq_ids: &[usize], out: &mut BatchStep) {
+        out.reset(self.layers, self.n_routed);
         for &sid in seq_ids {
             let seq = &self.seqs[sid % self.seqs.len()];
-            tokens += seq.prompt_len;
+            out.tokens += seq.prompt_len;
             for (l, rec) in seq.prefill.iter().enumerate() {
-                let dst = &mut layers[l];
+                let dst = &mut out.layers[l];
                 for e in 0..self.n_routed {
                     dst.workloads[e] += rec.counts[e];
                     dst.gate_scores[e] += rec.gate_scores[e];
@@ -310,7 +340,80 @@ impl Trace {
                 }
             }
         }
-        BatchStep { tokens, layers }
+    }
+}
+
+/// Synthetic routing trace with adjacent-step locality (no PJRT needed):
+/// each sequence favours a slowly-drifting hot expert plus neighbours —
+/// zipf-ish routing with the temporal locality the cache policies exploit.
+/// Shared by the `expt ram` sweep, `dali bench`, and the throughput bench.
+pub fn synthetic_locality_trace(
+    layers: usize,
+    n_routed: usize,
+    top_k: usize,
+    seqs: usize,
+    steps: usize,
+    seed: u64,
+) -> Trace {
+    let mut rng = crate::util::DetRng::new(seed);
+    let mk_topk = |rng: &mut crate::util::DetRng, hot: usize| -> Vec<u16> {
+        let mut picked: Vec<u16> = Vec::with_capacity(top_k);
+        while picked.len() < top_k {
+            let raw = if rng.chance(0.5) {
+                (hot + rng.usize_below(2)) % n_routed
+            } else {
+                rng.usize_below(n_routed)
+            };
+            let e = raw as u16;
+            if !picked.contains(&e) {
+                picked.push(e);
+            }
+        }
+        picked
+    };
+    let seqs = (0..seqs)
+        .map(|s| {
+            let mut hot = s % n_routed;
+            let mut step_recs = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                if rng.chance(0.1) {
+                    hot = (hot + 1) % n_routed; // topic drift
+                }
+                let recs: Vec<LayerStepRecord> = (0..layers)
+                    .map(|_| {
+                        let topk = mk_topk(&mut rng, hot);
+                        LayerStepRecord {
+                            topk_scores: topk.iter().map(|_| 1.0 / top_k as f32).collect(),
+                            pred_raw: topk.clone(),
+                            pred_res: topk.clone(),
+                            topk,
+                            cos_raw: 0.8,
+                            cos_res: 0.9,
+                        }
+                    })
+                    .collect();
+                step_recs.push(recs);
+            }
+            let pre = PrefillLayerRecord {
+                counts: {
+                    let mut c = vec![0u32; n_routed];
+                    c[hot] = 4;
+                    c
+                },
+                gate_scores: vec![0.25; n_routed],
+                pred_raw: vec![1; n_routed],
+                pred_res: vec![1; n_routed],
+            };
+            SeqTrace { prompt_len: 8, prefill: vec![pre; layers], steps: step_recs }
+        })
+        .collect();
+    Trace {
+        preset: "synthetic".into(),
+        task: "locality".into(),
+        n_routed,
+        top_k,
+        layers,
+        seqs,
     }
 }
 
@@ -389,6 +492,46 @@ mod tests {
         let t = tiny_trace();
         let step = t.compose_decode(&[0, 2], 0); // 2 % 2 == 0 → seq 0 twice
         assert_eq!(step.layers[0].workloads, vec![2, 2, 0, 0]);
+    }
+
+    #[test]
+    fn compose_into_reuse_matches_fresh_compose() {
+        // Reusing one BatchStep across steps (the zero-allocation replay
+        // path) must be indistinguishable from composing fresh each step.
+        let t = tiny_trace();
+        let mut reused = BatchStep::default();
+        for step in 0..2 {
+            t.compose_decode_into(&[0, 1], step, &mut reused);
+            let fresh = t.compose_decode(&[0, 1], step);
+            assert_eq!(reused.tokens, fresh.tokens);
+            for l in 0..t.layers {
+                assert_eq!(reused.layers[l].workloads, fresh.layers[l].workloads);
+                assert_eq!(reused.layers[l].gate_scores, fresh.layers[l].gate_scores);
+                assert_eq!(reused.layers[l].pred_raw, fresh.layers[l].pred_raw);
+                assert_eq!(reused.layers[l].pred_res, fresh.layers[l].pred_res);
+            }
+        }
+        // a prefill composed into the same (dirty) buffer is also clean
+        t.compose_prefill_into(&[0, 1], &mut reused);
+        let fresh = t.compose_prefill(&[0, 1]);
+        assert_eq!(reused.tokens, fresh.tokens);
+        assert_eq!(reused.layers[0].workloads, fresh.layers[0].workloads);
+    }
+
+    #[test]
+    fn synthetic_trace_is_deterministic_and_shaped() {
+        let a = synthetic_locality_trace(2, 8, 2, 4, 16, 0x7157);
+        let b = synthetic_locality_trace(2, 8, 2, 4, 16, 0x7157);
+        assert_eq!(a.seqs.len(), 4);
+        assert_eq!(a.min_steps(), 16);
+        for (sa, sb) in a.seqs.iter().zip(&b.seqs) {
+            for (ra, rb) in sa.steps.iter().zip(&sb.steps) {
+                for (la, lb) in ra.iter().zip(rb) {
+                    assert_eq!(la.topk, lb.topk, "same seed must give same routing");
+                    assert_eq!(la.topk.len(), 2);
+                }
+            }
+        }
     }
 
     #[test]

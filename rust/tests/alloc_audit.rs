@@ -1,0 +1,80 @@
+//! Steady-state allocation audit for the simulator hot path.
+//!
+//! This file is its own integration-test binary on purpose: it installs a
+//! counting global allocator, and being the only test here means no other
+//! test thread can pollute the counters between the two snapshots.
+//!
+//! The ISSUE acceptance criterion: `run_step` performs **zero** heap
+//! allocation in steady state — the `StepScratch` buffers, the flat
+//! prefetch-arrival table, the `*_into` policy APIs, and the reused
+//! `BatchStep` absorb every per-step temporary after warm-up.
+
+use dali::util::alloc_counter::{alloc_calls, CountingAlloc};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::{Phase, StepSimulator};
+use dali::hw::CostModel;
+use dali::workload::trace::{synthetic_locality_trace, BatchStep};
+
+#[test]
+fn run_step_steady_state_is_allocation_free() {
+    // DALI (greedy + residual prefetch + workload-aware cache) and
+    // HybriMoE (static threshold + feature prefetch + score cache) — the
+    // two bundles the throughput benches measure head-to-head.
+    let presets = Presets::load_default().unwrap();
+    for (preset, fw) in [
+        ("mixtral-sim", Framework::Dali),
+        ("deepseek-sim", Framework::Dali),
+        ("mixtral-sim", Framework::HybriMoE),
+    ] {
+        let model = presets.model(preset).unwrap();
+        let dims = &model.sim;
+        let cost = CostModel::new(model, presets.hw("local-pc").unwrap());
+        let trace =
+            synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 96, 0xa11c);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        let bundle = fw.bundle(dims, &cost, &freq, &cfg);
+        let ids: Vec<usize> = (0..8).collect();
+        let mut sim = StepSimulator::new(
+            &cost,
+            bundle,
+            &freq,
+            dims.layers,
+            dims.n_routed,
+            dims.n_shared,
+            7,
+        );
+        let mut step = BatchStep::default();
+        trace.compose_prefill_into(&ids, &mut step);
+        sim.run_step(&step, 8, Phase::Prefill);
+        sim.reset_metrics();
+        // generous warm-up: several cache windows, prefetch issue/arrival
+        // cycles, and every policy branch the workload can hit
+        let warmup = 32;
+        for s in 0..warmup {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+        }
+        let before = alloc_calls();
+        for s in warmup..trace.min_steps() {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+        }
+        let allocs = alloc_calls() - before;
+        let m = sim.finish();
+        assert!(m.tokens_out > 0, "{preset}: audit must actually decode");
+        assert_eq!(
+            allocs,
+            0,
+            "{preset}/{}: run_step + compose_decode_into allocated {allocs} times \
+             across {} steady-state steps (expected zero)",
+            fw.name(),
+            96 - warmup
+        );
+    }
+}

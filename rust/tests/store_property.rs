@@ -134,6 +134,7 @@ fn bundle(layers: usize, n: usize, cache_size: usize, prefetch: bool) -> PolicyB
         cpu_eff: 1.0,
         layer_overhead_ns: 0,
         gpu_free_slots: n,
+        solve_cost: Default::default(),
     }
 }
 
@@ -145,15 +146,8 @@ fn run_sim(
     steps: usize,
     workloads: &[u32],
 ) -> (RunMetrics, Option<(usize, usize, usize)>, Option<usize>) {
-    let mut sim = StepSimulator::new(
-        c,
-        bundle(layers, n, 2, true),
-        vec![vec![0.0; n]; layers],
-        layers,
-        n,
-        0,
-        7,
-    );
+    let freq = vec![vec![0.0; n]; layers];
+    let mut sim = StepSimulator::new(c, bundle(layers, n, 2, true), &freq, layers, n, 0, 7);
     if let Some(st) = store {
         sim = sim.with_store(st);
     }
@@ -237,16 +231,9 @@ fn store_accounting_consistent_with_gpu_mem_model() {
     let layers = 4;
     let n = 8;
     let cache_size = 2;
-    let mut sim = StepSimulator::new(
-        &c,
-        bundle(layers, n, cache_size, false),
-        vec![vec![0.0; n]; layers],
-        layers,
-        n,
-        0,
-        3,
-    )
-    .with_store(TieredStore::new(
+    let freq = vec![vec![0.0; n]; layers];
+    let mut sim = StepSimulator::new(&c, bundle(layers, n, cache_size, false), &freq, layers, n, 0, 3)
+        .with_store(TieredStore::new(
         layers,
         n,
         StoreCfg { host_slots: 12, ..Default::default() },
