@@ -30,6 +30,7 @@ fn main() {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cost,
             gpu_free_slots: n,
             layer: 0,

@@ -95,6 +95,7 @@ fn main() {
             layer_overhead_ns: 0,
             gpu_free_slots: dims.n_routed,
             solve_cost: Default::default(),
+            placement: Default::default(),
         };
         let cfg = StoreCfg { host_slots: slots, ..Default::default() };
         let store = TieredStore::new(dims.layers, dims.n_routed, cfg);

@@ -39,6 +39,7 @@ fn main() -> Result<()> {
         layer_overhead_ns: 0,
         gpu_free_slots: dims.n_routed,
         solve_cost: Default::default(),
+        placement: Default::default(),
     };
     let mut sim = StepSimulator::new(
         &cost, bundle, &calib.freq, dims.layers, dims.n_routed, dims.n_shared, 5,
@@ -77,6 +78,7 @@ fn main() -> Result<()> {
             layer_overhead_ns: 0,
             gpu_free_slots: dims.n_routed,
             solve_cost: Default::default(),
+            placement: Default::default(),
         };
         let m = dali::coordinator::simrun::replay_decode(
             &trace, &seq_ids, 48, &cost, bundle, &calib.freq, dims.n_shared, 5,

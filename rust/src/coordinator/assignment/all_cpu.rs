@@ -47,6 +47,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,

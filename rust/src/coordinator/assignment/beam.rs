@@ -105,6 +105,7 @@ mod tests {
                 workloads: &workloads,
                 resident: &resident,
                 tiers: None,
+                host_wait: None,
                 cost: &cm,
                 gpu_free_slots: n,
                 layer: 0,
@@ -144,6 +145,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 3,
             layer: 0,
@@ -162,6 +164,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 2,
             layer: 0,

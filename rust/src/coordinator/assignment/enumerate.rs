@@ -110,6 +110,7 @@ mod tests {
                 workloads: &workloads,
                 resident: &resident,
                 tiers: None,
+                host_wait: None,
                 cost: &cm,
                 gpu_free_slots: n,
                 layer: 0,
@@ -132,6 +133,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 16,
             layer: 0,
@@ -159,6 +161,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 32,
             layer: 0,

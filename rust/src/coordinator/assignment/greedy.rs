@@ -88,6 +88,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 2,
             layer: 0,
@@ -109,6 +110,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,
@@ -136,6 +138,7 @@ mod tests {
                 workloads: &workloads,
                 resident: &resident,
                 tiers: None,
+                host_wait: None,
                 cost: &cm,
                 gpu_free_slots: n,
                 layer: 0,
@@ -163,6 +166,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 1,
             layer: 0,
@@ -183,6 +187,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,

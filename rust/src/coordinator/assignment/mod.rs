@@ -48,6 +48,12 @@ pub struct AssignCtx<'a> {
     /// GPU can), which every solver sees through [`Self::t_gpu`] /
     /// [`Self::t_cpu`].
     pub tiers: Option<&'a [Tier]>,
+    /// Per-expert extra wait before the weights are available in host RAM
+    /// (tiered store with placement tracking): the NVMe-fetch estimate for
+    /// disk residents, or the remaining in-flight predictive-promotion
+    /// time. `None` falls back to the tier-based estimate, so solvers see
+    /// identical costs whether or not the store reports arrivals.
+    pub host_wait: Option<&'a [Ns]>,
     pub cost: &'a CostModel,
     /// Eq. 9: how many *non-resident* experts may be staged on the GPU this
     /// layer (free VRAM / expert size).
@@ -70,9 +76,25 @@ impl AssignCtx<'_> {
         self.workloads.iter().filter(|&&w| w > 0).count()
     }
 
+    /// Extra ns before expert `e`'s weights reach host RAM: the store's
+    /// reported arrival wait when available, else the tier-based NVMe
+    /// estimate (identical for disk residents, zero otherwise).
+    pub fn host_wait_ns(&self, e: usize) -> Ns {
+        match self.host_wait {
+            Some(w) => w[e],
+            None => {
+                if self.tier(e) == Tier::Disk {
+                    self.cost.nvme_read_time()
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
     /// Eq. 5 estimate used by all solvers: `t_gpu(w)` with residency,
-    /// extended tier-aware — a disk-resident expert's transfer chains
-    /// NVMe-read → PCIe before compute can overlap it.
+    /// extended tier-aware — a disk-resident (or still-in-flight) expert's
+    /// transfer chains NVMe-read → PCIe before compute can overlap it.
     pub fn t_gpu(&self, e: usize) -> Ns {
         let w = self.workloads[e] as usize;
         if w == 0 {
@@ -81,25 +103,19 @@ impl AssignCtx<'_> {
         if self.resident[e] {
             return self.cost.t_gpu_compute(w);
         }
-        let mut trans = self.cost.trans_time();
-        if self.tier(e) == Tier::Disk {
-            trans += self.cost.nvme_read_time();
-        }
+        let trans = self.cost.trans_time() + self.host_wait_ns(e);
         self.cost.t_gpu_compute(w).max(trans)
     }
 
-    /// Eq. 4 estimate, tier-aware: a CPU-assigned disk-resident expert
-    /// pays the NVMe fetch into host RAM before the CPU can stream it.
+    /// Eq. 4 estimate, tier-aware: a CPU-assigned disk-resident (or
+    /// still-in-flight) expert pays the host-RAM wait before the CPU can
+    /// stream it.
     pub fn t_cpu(&self, e: usize) -> Ns {
         let w = self.workloads[e] as usize;
         if w == 0 {
             return 0;
         }
-        let mut t = self.cost.t_cpu(w);
-        if self.tier(e) == Tier::Disk {
-            t += self.cost.nvme_read_time();
-        }
-        t
+        self.cost.t_cpu(w) + self.host_wait_ns(e)
     }
 }
 
@@ -259,6 +275,7 @@ mod tier_tests {
             workloads: &workloads,
             resident: &resident,
             tiers: Some(&tiers),
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 2,
             layer: 0,
@@ -277,6 +294,42 @@ mod tier_tests {
     }
 
     #[test]
+    fn host_wait_snapshot_overrides_tier_estimate() {
+        // With a store-reported arrival snapshot, an in-flight (host-tier)
+        // expert carries its remaining promotion wait in both device costs.
+        let cm = cost("mixtral-sim");
+        let workloads = vec![4u32, 4];
+        let resident = vec![false, false];
+        let tiers = vec![Tier::Host, Tier::Host];
+        let wait: Vec<Ns> = vec![0, 77_000];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: Some(&tiers),
+            host_wait: Some(&wait),
+            cost: &cm,
+            gpu_free_slots: 2,
+            layer: 0,
+            layers: 4,
+        };
+        assert_eq!(ctx.host_wait_ns(0), 0);
+        assert_eq!(ctx.host_wait_ns(1), 77_000);
+        assert_eq!(ctx.t_cpu(0), cm.t_cpu(4));
+        assert_eq!(ctx.t_cpu(1), cm.t_cpu(4) + 77_000);
+        assert_eq!(ctx.t_gpu(1), cm.t_gpu_compute(4).max(cm.trans_time() + 77_000));
+        // a disk expert's snapshot wait equals the tier-based fallback, so
+        // store-reported and store-less costs agree for disk residents
+        let tiers2 = vec![Tier::Host, Tier::Disk];
+        let wait2: Vec<Ns> = vec![0, cm.nvme_read_time()];
+        let ctx2 = AssignCtx { tiers: Some(&tiers2), host_wait: Some(&wait2), ..ctx };
+        assert_eq!(ctx2.t_cpu(1), cm.t_cpu(4) + cm.nvme_read_time());
+        assert_eq!(
+            ctx2.t_gpu(1),
+            cm.t_gpu_compute(4).max(cm.trans_time() + cm.nvme_read_time())
+        );
+    }
+
+    #[test]
     fn no_tiers_means_host() {
         let cm = cost("deepseek-sim");
         let workloads = vec![7u32];
@@ -285,6 +338,7 @@ mod tier_tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 1,
             layer: 0,
@@ -306,6 +360,7 @@ mod solve_cost_tests {
             workloads,
             resident,
             tiers: None,
+            host_wait: None,
             cost: cm,
             gpu_free_slots: workloads.len(),
             layer: 0,

@@ -145,6 +145,7 @@ mod tests {
                 workloads: &workloads,
                 resident: &resident,
                 tiers: None,
+                host_wait: None,
                 cost: &cm,
                 gpu_free_slots: slots,
                 layer: 0,
@@ -169,6 +170,7 @@ mod tests {
                 workloads: &workloads,
                 resident: &resident,
                 tiers: None,
+                host_wait: None,
                 cost: &cm,
                 gpu_free_slots: n,
                 layer: 0,
@@ -189,6 +191,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,

@@ -105,6 +105,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 4,
             layer: 0,
@@ -126,6 +127,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,
@@ -149,6 +151,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,
@@ -167,6 +170,7 @@ mod tests {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: 8,
             layer: 0,

@@ -11,6 +11,7 @@ use crate::coordinator::cache::*;
 use crate::coordinator::prefetch::*;
 use crate::coordinator::simrun::PolicyBundle;
 use crate::hw::{ns, CostModel, GpuMemModel};
+use crate::store::PlacementCfg;
 
 /// The frameworks of the paper's evaluation plus DALI ablation variants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,6 +123,10 @@ impl Framework {
             layer_overhead_ns: 0,
             gpu_free_slots: cfg.gpu_free_slots,
             solve_cost: SolveCost::default(),
+            // Reactive (LRU-spill, demand-only) placement for the baselines:
+            // none of the compared systems anticipates NVMe residency, so
+            // giving them DALI's placement would misattribute its gains.
+            placement: PlacementCfg::default(),
         };
         let _ = cost;
         match self {
@@ -170,6 +175,8 @@ impl Framework {
                 prefetch_size: cfg.prefetch_size,
                 ..base
             },
+            // The DALI variants drive tiered-store placement from the same
+            // residual workload predictions that drive their prefetching.
             Framework::Dali => PolicyBundle {
                 assigner: Box::new(GreedyAssigner::new()),
                 prefetcher: Box::new(ResidualPrefetcher),
@@ -182,6 +189,7 @@ impl Framework {
                     cfg.seed,
                 )),
                 prefetch_size: cfg.prefetch_size,
+                placement: PlacementCfg::predictive(cfg.prefetch_size),
                 ..base
             },
             Framework::DaliOpt => PolicyBundle {
@@ -196,6 +204,7 @@ impl Framework {
                     cfg.seed,
                 )),
                 prefetch_size: cfg.prefetch_size,
+                placement: PlacementCfg::predictive(cfg.prefetch_size),
                 ..base
             },
             Framework::DaliBeam => PolicyBundle {
@@ -210,6 +219,7 @@ impl Framework {
                     cfg.seed,
                 )),
                 prefetch_size: cfg.prefetch_size,
+                placement: PlacementCfg::predictive(cfg.prefetch_size),
                 ..base
             },
         }
@@ -277,6 +287,32 @@ mod tests {
         assert_eq!(Framework::gpu_layers(&dims, 4), 2);
         assert_eq!(Framework::gpu_layers(&dims, 8), 4);
         assert_eq!(Framework::gpu_layers(&dims, 0), 0);
+    }
+
+    #[test]
+    fn only_dali_bundles_get_predictive_placement() {
+        let (dims, cost) = setup();
+        let cfg = FrameworkCfg::paper_default(&dims);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        for f in [Framework::Dali, Framework::DaliOpt, Framework::DaliBeam] {
+            let b = f.bundle(&dims, &cost, &freq, &cfg);
+            assert!(b.placement.predictive, "{} drives placement", f.name());
+            assert!(b.placement.ahead >= 2);
+        }
+        for f in [
+            Framework::Naive,
+            Framework::LlamaCpp,
+            Framework::KTransformers,
+            Framework::Fiddler,
+            Framework::MoELightning,
+            Framework::HybriMoE,
+        ] {
+            assert!(
+                !f.bundle(&dims, &cost, &freq, &cfg).placement.predictive,
+                "{} must keep reactive LRU-spill placement",
+                f.name()
+            );
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::coordinator::cache::{ExpertCache, Swap};
 use crate::coordinator::prefetch::{top_n_into, PrefetchCtx, Prefetcher};
 use crate::hw::{CostModel, GpuPipeline, Ns, TransferKind};
 use crate::metrics::RunMetrics;
-use crate::store::{Tier, TieredStore};
+use crate::store::{placement, PlacementCfg, Tier, TieredStore};
 use crate::util::DetRng;
 use crate::workload::trace::BatchStep;
 use crate::workload::Trace;
@@ -49,6 +49,11 @@ pub struct PolicyBundle {
     /// [`SolveCost::Modeled`] makes identical seeds produce bit-identical
     /// [`RunMetrics`] across runs and machines.
     pub solve_cost: SolveCost,
+    /// Tiered-store placement policy for this framework: predictive
+    /// (promote-ahead + score demotion, the DALI bundles) or reactive
+    /// (LRU spill, the baselines). Applied to the store on
+    /// [`StepSimulator::with_store`]; inert without a memory-limited store.
+    pub placement: PlacementCfg,
 }
 
 /// Which inference phase a step belongs to.
@@ -72,6 +77,9 @@ struct StepScratch {
     resident: Vec<bool>,
     /// Storage-tier snapshot of the current layer (tiered store only).
     tiers: Vec<Tier>,
+    /// Per-expert host-RAM arrival wait of the current layer (tiered store
+    /// only) — prices in-flight predictive promotions into assignment.
+    host_wait: Vec<Ns>,
     /// The solver's output for the current layer.
     assignment: Assignment,
     /// CPU-side (arrival, duration) pairs, sorted by arrival.
@@ -94,6 +102,7 @@ impl StepScratch {
             cache_resident: Vec::with_capacity(n_routed),
             resident: Vec::with_capacity(n_routed),
             tiers: Vec::with_capacity(n_routed),
+            host_wait: Vec::with_capacity(n_routed),
             assignment: Assignment::none(n_routed),
             cpu_timeline: Vec::with_capacity(n_routed),
             gpu_experts: Vec::with_capacity(n_routed),
@@ -164,9 +173,11 @@ impl<'a> StepSimulator<'a> {
 
     /// Attach a tiered expert store. The store's host floor is raised to
     /// the cache's total pinned capacity (GPU-resident experts keep a host
-    /// staging copy), so the slot invariant holds for any cache policy.
+    /// staging copy), so the slot invariant holds for any cache policy, and
+    /// the bundle's placement policy is installed on the store.
     pub fn with_store(mut self, mut store: TieredStore) -> Self {
         store.ensure_min_slots(self.policy.cache.capacity() * self.layers + 1);
+        store.set_placement(self.policy.placement);
         self.store = Some(store);
         self
     }
@@ -177,6 +188,29 @@ impl<'a> StepSimulator<'a> {
 
     pub fn now(&self) -> Ns {
         self.now
+    }
+
+    /// Host-RAM arrival for an execution-path access of (layer, e):
+    /// counts the tier hit/miss and waits for (or issues) the promotion.
+    /// Shared by the CPU-execution and GPU-demand-fetch paths so the tier
+    /// counters can never diverge between them.
+    fn exec_arrival(&mut self, l: usize, e: usize) -> Ns {
+        let now = self.now;
+        let cost = self.cost;
+        match self.store.as_mut() {
+            Some(st) => {
+                if st.tier(l, e) == Tier::Disk {
+                    self.metrics.tier_disk_misses += 1;
+                } else {
+                    self.metrics.tier_host_hits += 1;
+                }
+                st.host_arrival(l, e, now, cost)
+            }
+            None => {
+                self.metrics.tier_host_hits += 1;
+                now
+            }
+        }
     }
 
     /// Reset metrics but keep cache/prefetch state — used to measure the
@@ -192,8 +226,7 @@ impl<'a> StepSimulator<'a> {
             }
         }
         if let Some(st) = self.store.as_mut() {
-            st.xfer.rebase_and_clear(base);
-            st.clear_op_counters();
+            st.rebase_and_clear(base);
         }
         self.metrics = RunMetrics::default();
     }
@@ -215,6 +248,7 @@ impl<'a> StepSimulator<'a> {
             cache_resident,
             resident,
             tiers,
+            host_wait,
             assignment,
             cpu_timeline,
             gpu_experts,
@@ -222,6 +256,11 @@ impl<'a> StepSimulator<'a> {
             ranked,
             swaps,
         } = &mut scratch;
+        // Predictive placement is active only with a memory-limited store:
+        // with unlimited host RAM there is nothing to promote or demote, and
+        // gating here keeps the two-tier replay bit-identical to the seed.
+        let placement_on = self.policy.placement.predictive
+            && self.store.as_ref().map(|st| !st.is_unlimited()).unwrap_or(false);
         for l in 0..self.layers {
             let data = &step.layers[l];
             let layer_base = l * n;
@@ -265,17 +304,20 @@ impl<'a> StepSimulator<'a> {
                 .count();
 
             // --- assignment (modeled solve cost charged 1:1) ----------------
-            let tiers_snapshot: Option<&[Tier]> = match self.store.as_ref() {
-                Some(st) => {
-                    st.layer_tiers_into(l, tiers);
-                    Some(tiers.as_slice())
-                }
-                None => None,
-            };
+            let (tiers_snapshot, wait_snapshot): (Option<&[Tier]>, Option<&[Ns]>) =
+                match self.store.as_ref() {
+                    Some(st) => {
+                        st.layer_tiers_into(l, tiers);
+                        st.layer_host_wait_into(l, self.now, self.cost, host_wait);
+                        (Some(tiers.as_slice()), Some(host_wait.as_slice()))
+                    }
+                    None => (None, None),
+                };
             let ctx = AssignCtx {
                 workloads: &data.workloads,
                 resident,
                 tiers: tiers_snapshot,
+                host_wait: wait_snapshot,
                 cost: self.cost,
                 gpu_free_slots: self.policy.gpu_free_slots.saturating_sub(wasted_staging),
                 layer: l,
@@ -297,6 +339,11 @@ impl<'a> StepSimulator<'a> {
 
             // --- cache observation ------------------------------------------
             self.policy.cache.observe(l, &data.workloads, &data.gate_scores);
+            // placement observation: decay + accumulate the EWMA workload
+            // scores that rank host-tier demotion victims
+            if let Some(st) = self.store.as_mut() {
+                st.observe_workloads(l, &data.workloads);
+            }
 
             // --- CPU side: Eq. 4 (tier-aware) -------------------------------
             // Disk-resident CPU experts stream in over the NVMe read stream
@@ -310,19 +357,9 @@ impl<'a> StepSimulator<'a> {
                 }
                 let t = self.cost.t_cpu(data.workloads[e] as usize);
                 let dur = (t as f64 / self.policy.cpu_eff) as Ns;
-                let tier = self.store.as_ref().map(|st| st.tier(l, e)).unwrap_or(Tier::Host);
-                let arrival = if tier == Tier::Disk {
-                    self.metrics.tier_disk_misses += 1;
-                    let now = self.now;
-                    let cost = self.cost;
-                    self.store.as_mut().map(|st| st.ensure_host(l, e, now, cost)).unwrap_or(now)
-                } else {
-                    self.metrics.tier_host_hits += 1;
-                    if let Some(st) = self.store.as_mut() {
-                        st.touch(l, e);
-                    }
-                    self.now
-                };
+                // waits for in-flight predictive promotions and promotes
+                // on demand from disk
+                let arrival = self.exec_arrival(l, e);
                 cpu_timeline.push((arrival, dur));
                 cpu_total += dur;
             }
@@ -370,24 +407,9 @@ impl<'a> StepSimulator<'a> {
                     }
                 } else {
                     // demand fetch: disk-resident experts promote over NVMe
-                    // first, then the PCIe upload starts at arrival.
-                    let tier =
-                        self.store.as_ref().map(|st| st.tier(l, e)).unwrap_or(Tier::Host);
-                    let ready = if tier == Tier::Disk {
-                        self.metrics.tier_disk_misses += 1;
-                        let now = self.now;
-                        let cost = self.cost;
-                        self.store
-                            .as_mut()
-                            .map(|st| st.ensure_host(l, e, now, cost))
-                            .unwrap_or(now)
-                    } else {
-                        self.metrics.tier_host_hits += 1;
-                        if let Some(st) = self.store.as_mut() {
-                            st.touch(l, e);
-                        }
-                        self.now
-                    };
+                    // first (or join an in-flight predictive promotion),
+                    // then the PCIe upload starts at arrival.
+                    let ready = self.exec_arrival(l, e);
                     self.gpu.schedule_expert(ready, trans, bytes, compute);
                     let evicted = self.policy.cache.on_gpu_use(l, e, true);
                     if let Some(st) = self.store.as_mut() {
@@ -422,8 +444,8 @@ impl<'a> StepSimulator<'a> {
             // (paper Fig. 9) and overlaps the *next* layer.
             let gpu_end_experts = self.gpu.compute_free_at().max(self.now);
 
-            // --- issue prefetches for layer l+1 ------------------------------
-            if l + 1 < self.layers && self.policy.prefetch_size > 0 {
+            // --- issue prefetches + placement for layer l+1 ------------------
+            if l + 1 < self.layers && (self.policy.prefetch_size > 0 || placement_on) {
                 let mut ready = self.now;
                 if self.policy.prefetcher.needs_gate_pass() {
                     // prediction gating runs on the GPU work stream: costs a
@@ -449,6 +471,13 @@ impl<'a> StepSimulator<'a> {
                     scores,
                 );
                 top_n_into(scores, n, ranked);
+                // feed the fresh predictions into the placement demotion
+                // score table before any spill decision this layer
+                if placement_on {
+                    if let Some(st) = self.store.as_mut() {
+                        st.note_predictions(l + 1, scores);
+                    }
+                }
                 let next_base = (l + 1) * n;
                 let mut issued = 0;
                 for &e in ranked.iter() {
@@ -469,12 +498,14 @@ impl<'a> StepSimulator<'a> {
                     {
                         continue;
                     }
-                    // a disk-resident prefetch target chains NVMe → PCIe
+                    // a disk-resident (or still-arriving) prefetch target
+                    // chains its host arrival → PCIe; the read is
+                    // speculative, not demand-path
                     let mut pcie_ready = ready;
-                    if self.store.as_ref().map(|st| st.tier(l + 1, e)) == Some(Tier::Disk) {
-                        let cost = self.cost;
-                        if let Some(st) = self.store.as_mut() {
-                            pcie_ready = st.ensure_host(l + 1, e, ready, cost).max(ready);
+                    let cost = self.cost;
+                    if let Some(st) = self.store.as_mut() {
+                        if st.tier(l + 1, e) == Tier::Disk || st.pending(l + 1, e, ready) {
+                            pcie_ready = st.host_arrival_spec(l + 1, e, ready, cost).max(ready);
                         }
                     }
                     let arr = self
@@ -483,6 +514,19 @@ impl<'a> StepSimulator<'a> {
                     self.prefetch_arrival[next_base + e] = arr;
                     self.metrics.prefetch_issued += 1;
                     issued += 1;
+                }
+                // Predictive placement: NVMe→host promotions for layer l+1
+                // on the dedicated read stream, decoupled from the PCIe
+                // spec lane — issued AFTER the prefetch loop, so the budget
+                // goes to experts beyond the prefetch window (targets the
+                // lane just fetched are host-resident by now and skipped)
+                // and a promotion can only be consumed in a later instant,
+                // with genuinely hidden NVMe time.
+                if placement_on {
+                    let cost = self.cost;
+                    if let Some(st) = self.store.as_mut() {
+                        placement::promote_ahead_layer(st, l + 1, ranked, scores, ready, cost);
+                    }
                 }
             }
 
@@ -506,8 +550,9 @@ impl<'a> StepSimulator<'a> {
                     let cost = self.cost;
                     if let Some(st) = self.store.as_mut() {
                         st.demote_gpu(l, swap.evict);
-                        if st.tier(l, swap.load) == Tier::Disk {
-                            ready = st.ensure_host(l, swap.load, now, cost);
+                        if st.tier(l, swap.load) == Tier::Disk || st.pending(l, swap.load, now) {
+                            // cache-update traffic: speculative, not demand
+                            ready = st.host_arrival_spec(l, swap.load, now, cost);
                         }
                         st.admit_to_gpu(l, swap.load);
                     }
@@ -558,6 +603,11 @@ impl<'a> StepSimulator<'a> {
             self.metrics.store_promotions = st.promotions;
             self.metrics.store_spills = st.spills;
             self.metrics.store_gpu_demotions = st.gpu_demotions;
+            self.metrics.store_promote_ahead = st.ahead_issued;
+            self.metrics.promote_ahead_hits = st.ahead_hits;
+            self.metrics.promote_ahead_misses = st.ahead_misses;
+            self.metrics.nvme_demand_ns = st.demand_read_ns;
+            self.metrics.nvme_overlap_hidden_ns = st.overlap_hidden_ns;
         }
     }
 }
@@ -705,6 +755,7 @@ mod tests {
             layer_overhead_ns: 0,
             gpu_free_slots: 8,
             solve_cost: SolveCost::Modeled,
+            placement: PlacementCfg::default(),
         }
     }
 
@@ -816,6 +867,7 @@ mod tests {
             layer_overhead_ns: 0,
             gpu_free_slots: 8,
             solve_cost: SolveCost::Modeled,
+            placement: PlacementCfg::default(),
         };
         let mut sim = StepSimulator::new(&c, policy, &f, 4, 8, 0, 1);
         for _ in 0..4 {
@@ -847,6 +899,7 @@ mod tests {
                 layer_overhead_ns: 0,
                 gpu_free_slots: 8,
                 solve_cost: SolveCost::Modeled,
+                placement: PlacementCfg::default(),
             };
             let mut sim = StepSimulator::new(&c, policy, &f, 4, 8, 0, 1);
             for _ in 0..4 {
@@ -950,6 +1003,75 @@ mod tests {
             fast.total_ns
         );
         assert_eq!(fast.tier_disk_misses, 0);
+    }
+
+    #[test]
+    fn predictive_placement_on_unlimited_store_stays_transparent() {
+        // Placement can be enabled on every DALI bundle unconditionally:
+        // with an unlimited host budget it must be inert (nothing to
+        // promote or demote), preserving the two-tier regression.
+        let c = cost();
+        let f = freq(4, 8);
+        let w = [8u32, 8, 0, 8, 2, 0, 1, 0];
+        let run = |store: Option<crate::store::TieredStore>, predictive: bool| {
+            let mut policy = bundle(true, true);
+            if predictive {
+                policy.placement = PlacementCfg::predictive(1);
+            }
+            let mut sim = StepSimulator::new(&c, policy, &f, 4, 8, 1, 1);
+            if let Some(st) = store {
+                sim = sim.with_store(st);
+            }
+            for _ in 0..12 {
+                sim.run_step(&mk_step(4, 8, &w), 16, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let two_tier = run(None, false);
+        let mut tiered = run(Some(crate::store::TieredStore::unlimited(4, 8)), true);
+        assert_eq!(tiered.store_promote_ahead, 0);
+        assert_eq!(tiered.nvme_read_bytes, 0);
+        tiered.store_gpu_demotions = two_tier.store_gpu_demotions;
+        assert_eq!(tiered, two_tier, "placement must be inert without memory pressure");
+    }
+
+    #[test]
+    fn predictive_placement_reduces_demand_nvme_on_locality_trace() {
+        use crate::workload::trace::synthetic_locality_trace;
+        let c = cost();
+        let f = freq(4, 8);
+        let trace = synthetic_locality_trace(4, 8, 2, 8, 32, 0x7157);
+        let ids: Vec<usize> = (0..8).collect();
+        let run = |predictive: bool| {
+            let mut policy = bundle(true, true);
+            if predictive {
+                policy.placement = PlacementCfg::predictive(1);
+            }
+            let store = crate::store::TieredStore::new(
+                4,
+                8,
+                crate::store::StoreCfg { host_slots: 12, ..Default::default() },
+            );
+            replay_decode_store(&trace, &ids, 32, &c, policy, &f, 0, 7, Some(store))
+        };
+        let reactive = run(false);
+        let predictive = run(true);
+        assert_eq!(reactive.store_promote_ahead, 0);
+        assert!(predictive.store_promote_ahead > 0, "ahead promotions must fire");
+        assert!(predictive.promote_ahead_hits > 0, "and get consumed");
+        assert!(predictive.nvme_overlap_hidden_ns > 0, "hiding NVMe latency");
+        assert!(
+            predictive.tier_disk_misses < reactive.tier_disk_misses,
+            "promote-ahead must convert disk misses into host hits: {} vs {}",
+            predictive.tier_disk_misses,
+            reactive.tier_disk_misses
+        );
+        assert!(
+            predictive.nvme_demand_ns < reactive.nvme_demand_ns,
+            "demand-path NVMe time must shrink: {} vs {}",
+            predictive.nvme_demand_ns,
+            reactive.nvme_demand_ns
+        );
     }
 
     #[test]

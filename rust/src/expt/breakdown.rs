@@ -107,28 +107,37 @@ fn dali_like_bundle(
 }
 
 /// Fig. 15: end-to-end decode speed, greedy vs exact solver (solve cost
-/// charged into virtual time, as at runtime).
+/// charged into virtual time, as at runtime). One parallel cell per
+/// (model, batch, solver), sharing each preset's trace.
 pub fn fig15(ctx: &ExptCtx) -> Result<String> {
     let mut out = String::from("## Fig. 15 — greedy vs Opt_plan decode speed (incl. solving)\n\n");
     let mut t = Table::new(vec!["model", "batch", "Opt_plan tok/s", "greedy tok/s", "speedup", "opt sched%", "greedy sched%"]);
     let mut ratios = vec![];
-    for preset in ["deepseek-sim", "mixtral-sim"] {
+    let presets = ["deepseek-sim", "mixtral-sim"];
+    ctx.prewarm(&presets)?;
+    let traces = presets.iter().map(|p| ctx.trace_c4(p)).collect::<Result<Vec<_>>>()?;
+    let mut cells = Vec::new();
+    for (pi, preset) in presets.iter().enumerate() {
         for &b in &[16usize, 32] {
-            let trace = ctx.trace_c4(preset)?;
-            let g = ctx.decode_with(
-                preset,
-                dali_like_bundle(ctx, preset, Box::new(GreedyAssigner::new()))?,
-                &trace,
-                b,
-                32,
-            )?;
-            let o = ctx.decode_with(
-                preset,
-                dali_like_bundle(ctx, preset, Box::new(EnumerateAssigner::new()))?,
-                &trace,
-                b,
-                32,
-            )?;
+            for which in ["greedy", "opt"] {
+                cells.push((pi, *preset, b, which));
+            }
+        }
+    }
+    let mut metrics = ctx.parallel_cells(cells, |(pi, preset, b, which)| {
+        let assigner: Box<dyn crate::coordinator::assignment::Assigner> = match which {
+            "opt" => Box::new(EnumerateAssigner::new()),
+            _ => Box::new(GreedyAssigner::new()),
+        };
+        ctx.decode_with(preset, dali_like_bundle(ctx, preset, assigner)?, &traces[pi], b, 32)
+    });
+    for (pi, preset) in presets.iter().enumerate() {
+        for &b in &[16usize, 32] {
+            let (cell, g) = metrics.next().expect("greedy cell");
+            assert_eq!(cell, (pi, *preset, b, "greedy"), "cell order diverged");
+            let (cell, o) = metrics.next().expect("opt cell");
+            assert_eq!(cell, (pi, *preset, b, "opt"), "cell order diverged");
+            let (g, o) = (g?, o?);
             let speed = g.tokens_per_s() / o.tokens_per_s().max(1e-9);
             ratios.push(speed);
             t.row(vec![
@@ -192,14 +201,24 @@ pub fn table4(ctx: &ExptCtx) -> Result<String> {
 }
 
 /// Fig. 16: (a) speedup of prefetch strategies on Mixtral; (b) accuracy.
+/// Both sub-figures run one parallel cell per (strategy, batch) /
+/// (method, top-j) on the shared trace.
 pub fn fig16(ctx: &ExptCtx) -> Result<String> {
     let preset = "mixtral-sim";
     let dims = ctx.model(preset)?.sim.clone();
+    ctx.prewarm(&[preset])?;
     let trace = ctx.trace_c4(preset)?;
     let calib = ctx.calib(preset)?;
     let mut out = String::from("## Fig. 16 — prefetch strategies on Mixtral\n\n### (a) decode speedup vs no prefetching (each prefetches 2 experts)\n\n");
     let mut t = Table::new(vec!["strategy", "BS8 tok/s", "BS32 tok/s", "avg speedup"]);
-    let mk = |which: &str| -> crate::coordinator::simrun::PolicyBundle {
+    let strategies = ["naive", "random", "hybrimoe", "dali"];
+    let mut cells = Vec::new();
+    for which in strategies {
+        for b in [8usize, 32] {
+            cells.push((which, b));
+        }
+    }
+    let mut metrics = ctx.parallel_cells(cells, |(which, batch)| -> Result<f64> {
         let prefetcher: Box<dyn crate::coordinator::prefetch::Prefetcher> = match which {
             "random" => Box::new(RandomPrefetcher),
             "hybrimoe" => Box::new(FeaturePrefetcher),
@@ -207,18 +226,22 @@ pub fn fig16(ctx: &ExptCtx) -> Result<String> {
             _ => Box::new(NoPrefetcher),
         };
         let ps = if which == "naive" { 0 } else { 2 };
-        ctx.bundle_parts(
+        let bundle = ctx.bundle_parts(
             &dims,
             Box::new(GreedyAssigner::new()),
             prefetcher,
             Box::new(NoCache::new(dims.layers, dims.n_routed)),
             ps,
-        )
-    };
+        );
+        Ok(ctx.decode_with(preset, bundle, &trace, batch, 32)?.tokens_per_s())
+    });
     let mut base = (0.0, 0.0);
-    for which in ["naive", "random", "hybrimoe", "dali"] {
-        let a = ctx.decode_with(preset, mk(which), &trace, 8, 32)?.tokens_per_s();
-        let b = ctx.decode_with(preset, mk(which), &trace, 32, 32)?.tokens_per_s();
+    for which in strategies {
+        let (cell, a) = metrics.next().expect("BS8 cell");
+        assert_eq!(cell, (which, 8), "cell order diverged");
+        let (cell, b) = metrics.next().expect("BS32 cell");
+        assert_eq!(cell, (which, 32), "cell order diverged");
+        let (a, b) = (a?, b?);
         if which == "naive" {
             base = (a, b);
         }
@@ -230,14 +253,27 @@ pub fn fig16(ctx: &ExptCtx) -> Result<String> {
     out.push_str("\n### (b) prefetch accuracy (top-k highest-workload experts, batch 8)\n\n");
     let mut t2 = Table::new(vec!["method", "Top-1", "Top-2", "Top-3"]);
     let ids: Vec<usize> = (0..8).collect();
-    for (name, kind) in [
+    let methods = [
         ("EdgeMoE", PredKind::Statistical),
         ("HybriMoE", PredKind::Feature),
         ("DALI", PredKind::Residual),
-    ] {
+    ];
+    let mut acc_cells = Vec::new();
+    for &(name, kind) in &methods {
+        for j in [1usize, 2, 3] {
+            acc_cells.push((name, kind, j));
+        }
+    }
+    let mut accs = ctx
+        .parallel_cells(acc_cells, |(_, kind, j)| {
+            prefetch_accuracy(&trace, &calib, &ids, 48, kind, j)
+        });
+    for &(name, kind) in &methods {
         let mut row = vec![name.to_string()];
         for j in [1usize, 2, 3] {
-            row.push(pct(prefetch_accuracy(&trace, &calib, &ids, 48, kind, j)));
+            let (cell, acc) = accs.next().expect("one accuracy per cell");
+            assert_eq!(cell, (name, kind, j), "cell order diverged");
+            row.push(pct(acc));
         }
         t2.row(row);
     }
@@ -245,35 +281,52 @@ pub fn fig16(ctx: &ExptCtx) -> Result<String> {
     Ok(out)
 }
 
-/// Fig. 17: cache replacement strategies — decode speed + hit rate.
+/// Fig. 17: cache replacement strategies — decode speed + hit rate. One
+/// parallel cell per (cache ratio, policy) on the shared trace.
 pub fn fig17(ctx: &ExptCtx) -> Result<String> {
     let preset = "mixtral-sim";
     let dims = ctx.model(preset)?.sim.clone();
+    ctx.prewarm(&[preset])?;
     let trace = ctx.trace_c4(preset)?;
     let cfg = ctx.fwcfg(preset)?;
     let mut out = String::from("## Fig. 17 — cache replacement strategies (mixtral-sim, batch 4)\n\n");
     let mut t = Table::new(vec!["cache ratio", "LRU hit", "HybriMoE hit", "DALI hit", "HybriMoE tok/s", "DALI tok/s", "speedup"]);
-    for frac in [8usize, 4, 2] {
+    let fracs = [8usize, 4, 2];
+    let policies = ["lru", "score", "wa"];
+    let mut cells = Vec::new();
+    for &frac in &fracs {
+        for which in policies {
+            cells.push((frac, which));
+        }
+    }
+    let mut metrics = ctx.parallel_cells(cells, |(frac, which)| {
         let cs = (dims.n_routed / frac).max(1);
-        let mk = |which: &str| -> crate::coordinator::simrun::PolicyBundle {
-            let cache: Box<dyn crate::coordinator::cache::ExpertCache> = match which {
-                "lru" => Box::new(LruCache::new(dims.layers, dims.n_routed, cs, 13)),
-                "score" => Box::new(ScoreCache::new(dims.layers, dims.n_routed, cs, 13)),
-                _ => Box::new(WorkloadAwareCache::new(
-                    dims.layers, dims.n_routed, cs, cfg.w_size, cfg.u_size, 13,
-                )),
-            };
-            ctx.bundle_parts(
-                &dims,
-                Box::new(GreedyAssigner::new()),
-                Box::new(NoPrefetcher),
-                cache,
-                0,
-            )
+        let cache: Box<dyn crate::coordinator::cache::ExpertCache> = match which {
+            "lru" => Box::new(LruCache::new(dims.layers, dims.n_routed, cs, 13)),
+            "score" => Box::new(ScoreCache::new(dims.layers, dims.n_routed, cs, 13)),
+            _ => Box::new(WorkloadAwareCache::new(
+                dims.layers, dims.n_routed, cs, cfg.w_size, cfg.u_size, 13,
+            )),
         };
-        let lru = ctx.decode_with(preset, mk("lru"), &trace, 4, STEPS)?;
-        let sc = ctx.decode_with(preset, mk("score"), &trace, 4, STEPS)?;
-        let wa = ctx.decode_with(preset, mk("wa"), &trace, 4, STEPS)?;
+        let bundle = ctx.bundle_parts(
+            &dims,
+            Box::new(GreedyAssigner::new()),
+            Box::new(NoPrefetcher),
+            cache,
+            0,
+        );
+        ctx.decode_with(preset, bundle, &trace, 4, STEPS)
+    });
+    for &frac in &fracs {
+        let cs = (dims.n_routed / frac).max(1);
+        let mut next_cell = |which: &str| {
+            let (cell, m) = metrics.next().expect("one result per cell");
+            assert_eq!(cell, (frac, which), "cell order diverged");
+            m
+        };
+        let lru = next_cell("lru")?;
+        let sc = next_cell("score")?;
+        let wa = next_cell("wa")?;
         t.row(vec![
             format!("{}/{}", cs, dims.n_routed),
             pct(lru.cache_hit_rate()),
@@ -289,64 +342,65 @@ pub fn fig17(ctx: &ExptCtx) -> Result<String> {
     Ok(out)
 }
 
-/// Fig. 19: cumulative contribution of each technique.
+/// Fig. 19: cumulative contribution of each technique. One parallel cell
+/// per (model, stage); bundles are built inside the cell workers (boxed
+/// policies are not clonable across cells).
 pub fn fig19(ctx: &ExptCtx) -> Result<String> {
     let mut out = String::from("## Fig. 19 — breakdown waterfall (cache ratio 25%)\n\n");
-    for preset in ["mixtral-sim", "qwen-sim"] {
+    const STAGES: [&str; 4] = [
+        "naive (all CPU)",
+        "+ greedy assignment",
+        "+ residual prefetch",
+        "+ workload-aware cache",
+    ];
+    let presets = ["mixtral-sim", "qwen-sim"];
+    ctx.prewarm(&presets)?;
+    let traces = presets.iter().map(|p| ctx.trace_c4(p)).collect::<Result<Vec<_>>>()?;
+    let mut cells = Vec::new();
+    for (pi, preset) in presets.iter().enumerate() {
+        for stage in 0..STAGES.len() {
+            cells.push((pi, *preset, stage));
+        }
+    }
+    let mut metrics = ctx.parallel_cells(cells, |(pi, preset, stage)| -> Result<f64> {
         let dims = ctx.model(preset)?.sim.clone();
-        let trace = ctx.trace_c4(preset)?;
         let cfg = ctx.fwcfg(preset)?;
         let cs = (dims.n_routed / 4).max(1); // 25% cache ratio
         let ps = if dims.n_routed <= 8 { 1 } else { 8 };
-        let stages: Vec<(&str, crate::coordinator::simrun::PolicyBundle)> = vec![
-            (
-                "naive (all CPU)",
-                ctx.bundle_parts(
-                    &dims,
-                    Box::new(AllCpuAssigner::new()),
-                    Box::new(NoPrefetcher),
-                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
-                    0,
-                ),
-            ),
-            (
-                "+ greedy assignment",
-                ctx.bundle_parts(
-                    &dims,
-                    Box::new(GreedyAssigner::new()),
-                    Box::new(NoPrefetcher),
-                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
-                    0,
-                ),
-            ),
-            (
-                "+ residual prefetch",
-                ctx.bundle_parts(
-                    &dims,
-                    Box::new(GreedyAssigner::new()),
-                    Box::new(ResidualPrefetcher),
-                    Box::new(NoCache::new(dims.layers, dims.n_routed)),
-                    ps,
-                ),
-            ),
-            (
-                "+ workload-aware cache",
-                ctx.bundle_parts(
-                    &dims,
-                    Box::new(GreedyAssigner::new()),
-                    Box::new(ResidualPrefetcher),
-                    Box::new(WorkloadAwareCache::new(
-                        dims.layers, dims.n_routed, cs, cfg.w_size, cfg.u_size, cfg.seed,
-                    )),
-                    ps,
-                ),
-            ),
-        ];
+        let assigner: Box<dyn crate::coordinator::assignment::Assigner> = if stage == 0 {
+            Box::new(AllCpuAssigner::new())
+        } else {
+            Box::new(GreedyAssigner::new())
+        };
+        let prefetcher: Box<dyn crate::coordinator::prefetch::Prefetcher> = if stage >= 2 {
+            Box::new(ResidualPrefetcher)
+        } else {
+            Box::new(NoPrefetcher)
+        };
+        let cache: Box<dyn crate::coordinator::cache::ExpertCache> = if stage >= 3 {
+            Box::new(WorkloadAwareCache::new(
+                dims.layers, dims.n_routed, cs, cfg.w_size, cfg.u_size, cfg.seed,
+            ))
+        } else {
+            Box::new(NoCache::new(dims.layers, dims.n_routed))
+        };
+        let bundle = ctx.bundle_parts(
+            &dims,
+            assigner,
+            prefetcher,
+            cache,
+            if stage >= 2 { ps } else { 0 },
+        );
+        Ok(ctx.decode_with(preset, bundle, &traces[pi], 8, 32)?.tokens_per_s())
+    });
+    for (pi, preset) in presets.iter().enumerate() {
         let mut t = Table::new(vec!["configuration", "tokens/s", "vs naive", "vs previous"]);
         let mut naive = 0.0;
         let mut prev = 0.0;
-        for (name, bundle) in stages {
-            let tps = ctx.decode_with(preset, bundle, &trace, 8, 32)?.tokens_per_s();
+        for (stage, name) in STAGES.iter().enumerate() {
+            let (cell, tps) = metrics.next().expect("one result per stage cell");
+            assert_eq!(cell, (pi, *preset, stage), "cell order diverged");
+            let tps = tps?;
             if naive == 0.0 {
                 naive = tps;
                 prev = tps;

@@ -220,6 +220,7 @@ impl ExptCtx {
             layer_overhead_ns: 0,
             gpu_free_slots: dims.n_routed,
             solve_cost: Default::default(),
+            placement: Default::default(),
         }
     }
 }

@@ -44,7 +44,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("table9", "Table 9 — (w_size, u_size) sweep", sensitivity::table9),
         (
             "ram",
-            "RAM-budget sensitivity — decode speed vs host RAM (tiered store)",
+            "RAM-budget sensitivity — decode speed vs host RAM, predictive vs LRU placement",
             sensitivity::ram_budget,
         ),
         ("fig20", "Fig. 20 (A.1) — CPU/GPU balance HybriMoE vs DALI", appendix::fig20),

@@ -10,13 +10,17 @@ use crate::coordinator::cache::WorkloadAwareCache;
 use crate::coordinator::prefetch::{NoPrefetcher, ResidualPrefetcher};
 use crate::coordinator::simrun::Phase;
 use crate::hw::CostModel;
-use crate::store::TieredStore;
+use crate::metrics::RunMetrics;
+use crate::store::{PlacementCfg, TieredStore};
 use crate::util::Table;
-use crate::workload::trace::synthetic_locality_trace;
+use crate::workload::trace::{synthetic_locality_trace, Trace};
 
 /// Fig. 18 (a-d): prefetch size, cache size, (w,u) hit grid, adaptation.
+/// Sub-sweeps (a)-(c) run one parallel cell per setting on the shared
+/// trace; (d) is a single stateful simulation and stays serial.
 pub fn fig18(ctx: &ExptCtx) -> Result<String> {
     let mut out = String::from("## Fig. 18 — sensitivity analyses\n\n");
+    ctx.prewarm(&["mixtral-sim", "deepseek-sim"])?;
 
     // --- (a) prefetch size on Mixtral ---------------------------------------
     {
@@ -25,7 +29,8 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
         let trace = ctx.trace_c4(preset)?;
         let cfg = ctx.fwcfg(preset)?;
         let mut t = Table::new(vec!["prefetch size", "tokens/s (BS8)"]);
-        for ps in [0usize, 1, 2, 4] {
+        let cells: Vec<usize> = vec![0, 1, 2, 4];
+        for (ps, m) in ctx.parallel_cells(cells, |ps| -> Result<f64> {
             let bundle = ctx.bundle_parts(
                 &dims,
                 Box::new(GreedyAssigner::new()),
@@ -35,8 +40,9 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
                 )),
                 ps,
             );
-            let m = ctx.decode_with(preset, bundle, &trace, 8, 32)?;
-            t.row(vec![format!("PS{ps}"), format!("{:.2}", m.tokens_per_s())]);
+            Ok(ctx.decode_with(preset, bundle, &trace, 8, 32)?.tokens_per_s())
+        }) {
+            t.row(vec![format!("PS{ps}"), format!("{:.2}", m?)]);
         }
         out.push_str(&format!("### (a) prefetch size (mixtral-sim)\n\n{}\nPaper: PS=1 is optimal on Mixtral — larger PS cannot be overlapped.\n\n", t.render()));
     }
@@ -47,7 +53,8 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
         let dims = ctx.model(preset)?.sim.clone();
         let trace = ctx.trace_c4(preset)?;
         let mut t = Table::new(vec!["cache size", "tokens/s (BS8)", "hit rate"]);
-        for cs in [1usize, 2, 4, 6] {
+        let cells: Vec<usize> = vec![1, 2, 4, 6];
+        for (cs, m) in ctx.parallel_cells(cells, |cs| -> Result<RunMetrics> {
             let bundle = ctx.bundle_parts(
                 &dims,
                 Box::new(GreedyAssigner::new()),
@@ -55,7 +62,9 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
                 Box::new(WorkloadAwareCache::new(dims.layers, dims.n_routed, cs, 4, 1, 3)),
                 0,
             );
-            let m = ctx.decode_with(preset, bundle, &trace, 8, 32)?;
+            ctx.decode_with(preset, bundle, &trace, 8, 32)
+        }) {
+            let m = m?;
             t.row(vec![
                 cs.to_string(),
                 format!("{:.2}", m.tokens_per_s()),
@@ -71,19 +80,31 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
         let dims = ctx.model(preset)?.sim.clone();
         let trace = ctx.trace_c4(preset)?;
         let cs = (dims.n_routed / 2).max(1);
+        let ws = [2usize, 4, 8, 16];
+        let us = [1usize, 2, 4, 8];
+        let mut cells = Vec::new();
+        for &w in &ws {
+            for &u in &us {
+                cells.push((w, u));
+            }
+        }
+        let mut grid = ctx.parallel_cells(cells, |(w, u)| -> Result<f64> {
+            let bundle = ctx.bundle_parts(
+                &dims,
+                Box::new(GreedyAssigner::new()),
+                Box::new(NoPrefetcher),
+                Box::new(WorkloadAwareCache::new(dims.layers, dims.n_routed, cs, w, u, 3)),
+                0,
+            );
+            Ok(ctx.decode_with(preset, bundle, &trace, 4, STEPS)?.cache_hit_rate())
+        });
         let mut t = Table::new(vec!["w\\u", "u=1", "u=2", "u=4", "u=8"]);
-        for w in [2usize, 4, 8, 16] {
+        for &w in &ws {
             let mut row = vec![format!("w={w}")];
-            for u in [1usize, 2, 4, 8] {
-                let bundle = ctx.bundle_parts(
-                    &dims,
-                    Box::new(GreedyAssigner::new()),
-                    Box::new(NoPrefetcher),
-                    Box::new(WorkloadAwareCache::new(dims.layers, dims.n_routed, cs, w, u, 3)),
-                    0,
-                );
-                let m = ctx.decode_with(preset, bundle, &trace, 4, STEPS)?;
-                row.push(pct(m.cache_hit_rate()));
+            for &u in &us {
+                let ((cw, cu), rate) = grid.next().expect("one result per (w,u) cell");
+                assert_eq!((cw, cu), (w, u), "cell order diverged");
+                row.push(pct(rate?));
             }
             t.row(row);
         }
@@ -128,79 +149,132 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
     Ok(out)
 }
 
-/// Latency vs host-RAM budget (tiered expert store): the new scenario axis.
-/// DALI's policy bundle replayed over the same synthetic workload while the
-/// host tier shrinks from "holds everything" down to 8 GB — one parallel
-/// cell per hardware preset.
+/// Latency vs host-RAM budget (tiered expert store): the paper-style
+/// figure the two-tier model cannot express. For every hardware budget ×
+/// workload cell, DALI's bundle is replayed twice — predictive placement
+/// (promote-ahead + score demotion) vs the reactive LRU-spill baseline —
+/// so the figure tracks both the RAM cliff and what placement buys back.
+/// Workloads: the synthetic locality trace (always available) and the C4
+/// traced pool when artifacts exist (`dali prepare`).
 pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
     let mut out = String::from(
         "## RAM-budget sensitivity — decode speed vs host RAM (tiered GPU/host/NVMe store)\n\n\
-         Synthetic locality workload; DALI bundle (greedy + residual prefetch + workload-aware \
-         cache). `local-pc` holds every expert in RAM (two-tier baseline); the `ram*` presets \
-         spill cold experts to NVMe.\n\n",
+         DALI bundle (greedy + residual prefetch + workload-aware cache), batch 8. `local-pc` \
+         holds every expert in RAM (two-tier baseline); the `ram*` presets spill cold experts \
+         to NVMe. \"predictive\" = workload-predictive placement (promote-ahead on the NVMe \
+         read stream + predicted-workload demotion); \"lru-spill\" = reactive PR 1 baseline.\n\n",
     );
     let preset = "mixtral-sim";
     let model = ctx.model(preset)?;
     let dims = model.sim.clone();
     let cfg = ctx.fwcfg(preset)?;
     let presets = &ctx.presets;
-    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48, 0x7157);
+    let synthetic =
+        synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48, 0x7157);
+    // the paper-style traced workload, artifact-gated so the sweep stays
+    // runnable (synthetic-only) in a fresh checkout
+    let traced: Option<Trace> = ctx.trace_c4(preset).ok();
     let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
-    let mut t = Table::new(vec![
-        "hardware",
-        "host RAM",
-        "host slots",
-        "tokens/s (BS8)",
-        "disk miss rate",
-        "NVMe busy share",
-        "promotions",
-    ]);
-    let hw_names = vec!["local-pc", "local-pc-ram16", "local-pc-ram8"];
-    let rows = ctx.parallel(hw_names, |hw_name| -> Result<Vec<String>> {
-        let hw = presets.hw(hw_name)?;
-        let cost = CostModel::new(model, hw);
-        let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
-        let slots = if store.is_unlimited() {
-            "all".to_string()
-        } else {
-            store.host_slots().to_string()
-        };
-        let fw = crate::coordinator::frameworks::Framework::Dali;
-        let bundle = fw.bundle(&dims, &cost, &freq, &cfg);
-        let seq_ids: Vec<usize> = (0..8).collect();
-        let m = crate::coordinator::simrun::replay_decode_store(
-            &trace,
-            &seq_ids,
-            32,
-            &cost,
-            bundle,
-            &freq,
-            dims.n_shared,
-            7,
-            Some(store),
-        );
-        let ram = if hw.host_ram_bytes <= 0.0 {
-            "unlimited".to_string()
-        } else {
-            format!("{:.0} GB", hw.host_ram_bytes / 1e9)
-        };
-        Ok(vec![
-            hw_name.to_string(),
-            ram,
-            slots,
-            format!("{:.2}", m.tokens_per_s()),
-            pct(m.disk_miss_rate()),
-            pct(m.nvme_time_share()),
-            m.store_promotions.to_string(),
-        ])
-    });
-    for row in rows {
-        t.row(row?);
+    let mut workloads: Vec<(&str, &Trace)> = vec![("synthetic-locality", &synthetic)];
+    if let Some(t) = traced.as_ref() {
+        workloads.push(("c4-traced", t));
     }
-    out.push_str(&t.render());
+    let hw_names = ["local-pc", "local-pc-ram16", "local-pc-ram8"];
+    let mut cells: Vec<(usize, &str, bool)> = Vec::new();
+    for wi in 0..workloads.len() {
+        for hw_name in hw_names {
+            for predictive in [true, false] {
+                cells.push((wi, hw_name, predictive));
+            }
+        }
+    }
+    let workloads_ref = &workloads;
+    let mut results = ctx.parallel_cells(cells, move |(wi, hw_name, predictive)| {
+        || -> Result<(String, String, RunMetrics)> {
+            let hw = presets.hw(hw_name)?;
+            let cost = CostModel::new(model, hw);
+            let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+            let slots = if store.is_unlimited() {
+                "all".to_string()
+            } else {
+                store.host_slots().to_string()
+            };
+            let fw = crate::coordinator::frameworks::Framework::Dali;
+            let mut bundle = fw.bundle(&dims, &cost, &freq, &cfg);
+            if !predictive {
+                bundle.placement = PlacementCfg::default();
+            }
+            let seq_ids: Vec<usize> = (0..8).collect();
+            let m = crate::coordinator::simrun::replay_decode_store(
+                workloads_ref[wi].1,
+                &seq_ids,
+                32,
+                &cost,
+                bundle,
+                &freq,
+                dims.n_shared,
+                7,
+                Some(store),
+            );
+            let ram = if hw.host_ram_bytes <= 0.0 {
+                "unlimited".to_string()
+            } else {
+                format!("{:.0} GB", hw.host_ram_bytes / 1e9)
+            };
+            Ok((ram, slots, m))
+        }()
+    });
+    for (wi, (wname, _)) in workloads.iter().enumerate() {
+        let mut t = Table::new(vec![
+            "hardware",
+            "host RAM",
+            "host slots",
+            "tok/s predictive",
+            "tok/s lru-spill",
+            "placement gain",
+            "disk miss (pred)",
+            "ahead hit rate",
+            "NVMe hidden",
+        ]);
+        for hw_name in hw_names {
+            let (cell, pred) = results.next().expect("predictive cell");
+            assert_eq!(cell, (wi, hw_name, true), "cell order diverged");
+            let (cell, lru) = results.next().expect("lru cell");
+            assert_eq!(cell, (wi, hw_name, false), "cell order diverged");
+            let (ram, slots, pred) = pred?;
+            let (_, _, lru) = lru?;
+            let unlimited = slots == "all";
+            t.row(vec![
+                hw_name.to_string(),
+                ram,
+                slots,
+                format!("{:.2}", pred.tokens_per_s()),
+                format!("{:.2}", lru.tokens_per_s()),
+                if unlimited {
+                    "-".to_string()
+                } else {
+                    times(pred.tokens_per_s() / lru.tokens_per_s().max(1e-9))
+                },
+                pct(pred.disk_miss_rate()),
+                if unlimited { "-".to_string() } else { pct(pred.promote_ahead_hit_rate()) },
+                if unlimited {
+                    "-".to_string()
+                } else {
+                    format!("{:.1} ms", pred.nvme_overlap_hidden_ns as f64 / 1e6)
+                },
+            ]);
+        }
+        out.push_str(&format!("**{wname}**\n\n{}\n", t.render()));
+    }
+    if traced.is_none() {
+        out.push_str(
+            "\n(c4-traced workload skipped: no trace artifacts on disk — run `dali prepare`.)\n",
+        );
+    }
     out.push_str(
-        "\nExpected shape: tokens/s degrades monotonically as the host budget shrinks; the \
-         NVMe read stream saturates once the hot set no longer fits host RAM.\n",
+        "\nExpected shape: tokens/s degrades as the host budget shrinks; predictive placement \
+         claws part of the cliff back by hiding NVMe reads behind the previous layer's compute \
+         and spilling by predicted workload instead of recency.\n",
     );
     Ok(out)
 }

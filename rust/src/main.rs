@@ -5,11 +5,13 @@
 //!   calibrate --preset P          compute residual vectors + activation stats
 //!   prepare [--preset P]          calibrate + generate all standard trace pools
 //!   run --preset P [--framework dali] [--batch 8] [--steps 32]
-//!       [--solve-cost modeled|measured]
+//!       [--solve-cost modeled|measured] [--placement auto|on|off]
 //!                                 replay a decode benchmark and print metrics
 //!   bench [--steps 256] [--batch 8] [--out BENCH_simrun.json] [--strict]
 //!                                 simulator hot-path throughput + allocation
-//!                                 audit; writes machine-readable JSON
+//!                                 audit (incl. the memory-limited
+//!                                 store-attached scenario); writes
+//!                                 machine-readable JSON
 //!   serve --preset P [--port 8743] [--framework dali]
 //!                                 start the HTTP serving front-end
 //!
@@ -20,9 +22,9 @@ use anyhow::{bail, Result};
 use dali::config::Presets;
 use dali::coordinator::assignment::SolveCost;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
-use dali::coordinator::simrun::{replay_decode, replay_decode_store, Phase, StepSimulator};
+use dali::coordinator::simrun::{replay_decode_store, Phase, StepSimulator};
 use dali::hw::CostModel;
-use dali::store::TieredStore;
+use dali::store::{PlacementCfg, TieredStore};
 use dali::util::alloc_counter::{alloc_calls, dealloc_calls, CountingAlloc};
 use dali::util::{fmt_ns, repo_root, Args};
 use dali::workload::prep;
@@ -118,6 +120,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         "modeled" => SolveCost::Modeled,
         other => bail!("unknown --solve-cost '{other}' (modeled|measured)"),
     };
+    // `--placement on|off` overrides the framework's default placement
+    // policy (predictive for the DALI bundles, reactive for baselines).
+    match args.str_or("placement", "auto").as_str() {
+        "on" => bundle.placement = PlacementCfg::predictive(cfg.prefetch_size),
+        "off" => bundle.placement = PlacementCfg::default(),
+        "auto" => {}
+        other => bail!("unknown --placement '{other}' (auto|on|off)"),
+    }
     let seq_ids: Vec<usize> = (0..batch).collect();
     let store = TieredStore::for_model(hw, &cost, model.sim.layers, model.sim.n_routed);
     let tiered = !store.is_unlimited();
@@ -165,6 +175,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             m.nvme_read_bytes as f64 / 1e9,
             m.store_promotions
         );
+        println!(
+            "  placement         : {} ahead promotions ({:.1}% consumed), demand NVMe {}, \
+             {} hidden behind compute",
+            m.store_promote_ahead,
+            100.0 * m.promote_ahead_hit_rate(),
+            fmt_ns(m.nvme_demand_ns),
+            fmt_ns(m.nvme_overlap_hidden_ns)
+        );
     }
     Ok(())
 }
@@ -183,11 +201,14 @@ struct BenchEntry {
 /// `dali bench` — simulator hot-path throughput + allocation audit.
 ///
 /// Replays a synthetic locality workload (no PJRT / artifacts needed) with
-/// the DALI policy bundle per model preset, measuring (a) wall-clock replay
+/// the DALI policy bundle per scenario, measuring (a) wall-clock replay
 /// steps/sec — the perf-trajectory metric — and (b) heap allocations per
 /// steady-state decode step via the counting global allocator, which must
-/// be zero after the scratch buffers warm up. Results go to stdout and to
-/// a machine-readable `BENCH_simrun.json`.
+/// be zero after the scratch buffers warm up. The `mixtral-sim-ram16`
+/// scenario attaches the memory-limited tiered store, so the predictive
+/// placement path (promote-ahead, score demotion, NVMe arrival tracking)
+/// is on both the perf trajectory and the `--strict` allocation gate.
+/// Results go to stdout and to a machine-readable `BENCH_simrun.json`.
 fn cmd_bench(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 256).max(32);
     let batch = args.usize_or("batch", 8);
@@ -198,21 +219,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     let presets = Presets::load_default()?;
     let mut entries: Vec<BenchEntry> = Vec::new();
-    for preset in ["deepseek-sim", "qwen-sim", "mixtral-sim"] {
-        let model = presets.model(preset)?;
+    for scenario in ["deepseek-sim", "qwen-sim", "mixtral-sim", "mixtral-sim-ram16"] {
+        let (model, hw) = presets.scenario(scenario)?;
         let dims = &model.sim;
-        let hw = presets.hw("local-pc")?;
         let cost = CostModel::new(model, hw);
         let trace =
             synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, steps, 0xbe7c);
         let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
         let cfg = FrameworkCfg::paper_default(dims);
         let ids: Vec<usize> = (0..batch).collect();
+        let mk_store = || -> Option<TieredStore> {
+            let st = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+            (!st.is_unlimited()).then_some(st)
+        };
 
         // --- (b) steady-state allocation audit ------------------------------
         let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
         let mut sim =
             StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7);
+        if let Some(st) = mk_store() {
+            sim = sim.with_store(st);
+        }
         let mut stepbuf = BatchStep::default();
         trace.compose_prefill_into(&ids, &mut stepbuf);
         sim.run_step(&stepbuf, 8, Phase::Prefill);
@@ -240,14 +267,24 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let mut decode_steps = 0u64;
         while t0.elapsed() < budget {
             let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
-            let mm = replay_decode(&trace, &ids, steps, &cost, bundle, &freq, dims.n_shared, 7);
+            let mm = replay_decode_store(
+                &trace,
+                &ids,
+                steps,
+                &cost,
+                bundle,
+                &freq,
+                dims.n_shared,
+                7,
+                mk_store(),
+            );
             decode_steps += mm.layer_steps / dims.layers as u64;
             replays += 1;
         }
         let wall = t0.elapsed().as_secs_f64();
         let steps_per_s = decode_steps as f64 / wall;
         let entry = BenchEntry {
-            preset: preset.to_string(),
+            preset: scenario.to_string(),
             steps_per_s,
             layer_steps_per_s: steps_per_s * dims.layers as f64,
             replays,
@@ -256,7 +293,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             sim_tokens_per_s: m.tokens_per_s(),
         };
         println!(
-            "bench simrun/{preset:<14} {:>10.0} steps/s  ({} replays, {} layers)  \
+            "bench simrun/{scenario:<18} {:>10.0} steps/s  ({} replays, {} layers)  \
              allocs/step {:.2}  frees/step {:.2}",
             entry.steps_per_s, entry.replays, dims.layers, allocs_per_step, deallocs_per_step
         );

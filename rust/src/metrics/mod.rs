@@ -43,6 +43,19 @@ pub struct RunMetrics {
     pub store_spills: u64,
     pub store_gpu_demotions: u64,
 
+    // --- predictive placement (workload-aware tier placement) ------------------
+    /// NVMe→host promotions issued ahead of need from workload predictions.
+    pub store_promote_ahead: u64,
+    /// Ahead promotions later consumed by an access / spilled unused.
+    pub promote_ahead_hits: u64,
+    pub promote_ahead_misses: u64,
+    /// NVMe read time charged on the demand path (access-time promotions) —
+    /// the latency predictive placement exists to remove.
+    pub nvme_demand_ns: u64,
+    /// NVMe read time of ahead promotions that was already spent when the
+    /// expert was consumed: latency hidden behind earlier layers' compute.
+    pub nvme_overlap_hidden_ns: u64,
+
     // --- tier hit counters (per executed expert, by weight source) ------------
     /// Executions whose weights were already on the GPU (cache/prefetch).
     pub tier_gpu_hits: u64,
@@ -131,6 +144,24 @@ impl RunMetrics {
         self.nvme_read_ns as f64 / self.total_ns as f64
     }
 
+    /// Fraction of GPU+host-served expert executions (the complement of
+    /// [`Self::disk_miss_rate`]) — what predictive placement maximises.
+    pub fn tier_hit_rate(&self) -> f64 {
+        let n = self.tier_lookups();
+        if n == 0 {
+            return 0.0;
+        }
+        (self.tier_gpu_hits + self.tier_host_hits) as f64 / n as f64
+    }
+
+    /// Fraction of ahead promotions that were consumed by an access.
+    pub fn promote_ahead_hit_rate(&self) -> f64 {
+        if self.store_promote_ahead == 0 {
+            return 0.0;
+        }
+        self.promote_ahead_hits as f64 / self.store_promote_ahead as f64
+    }
+
     /// Accumulate another run's counters (for averaging across batches).
     pub fn merge(&mut self, o: &RunMetrics) {
         self.total_ns += o.total_ns;
@@ -153,6 +184,11 @@ impl RunMetrics {
         self.store_promotions += o.store_promotions;
         self.store_spills += o.store_spills;
         self.store_gpu_demotions += o.store_gpu_demotions;
+        self.store_promote_ahead += o.store_promote_ahead;
+        self.promote_ahead_hits += o.promote_ahead_hits;
+        self.promote_ahead_misses += o.promote_ahead_misses;
+        self.nvme_demand_ns += o.nvme_demand_ns;
+        self.nvme_overlap_hidden_ns += o.nvme_overlap_hidden_ns;
         self.tier_gpu_hits += o.tier_gpu_hits;
         self.tier_host_hits += o.tier_host_hits;
         self.tier_disk_misses += o.tier_disk_misses;
@@ -218,6 +254,11 @@ mod tests {
             store_promotions: 2,
             store_spills: 3,
             tier_disk_misses: 4,
+            store_promote_ahead: 5,
+            promote_ahead_hits: 3,
+            promote_ahead_misses: 1,
+            nvme_demand_ns: 90,
+            nvme_overlap_hidden_ns: 40,
             ..Default::default()
         };
         a.merge(&b);
@@ -225,5 +266,27 @@ mod tests {
         assert_eq!(a.store_promotions, 3);
         assert_eq!(a.store_spills, 3);
         assert_eq!(a.tier_disk_misses, 4);
+        assert_eq!(a.store_promote_ahead, 5);
+        assert_eq!(a.promote_ahead_hits, 3);
+        assert_eq!(a.promote_ahead_misses, 1);
+        assert_eq!(a.nvme_demand_ns, 90);
+        assert_eq!(a.nvme_overlap_hidden_ns, 40);
+    }
+
+    #[test]
+    fn placement_rates() {
+        let m = RunMetrics {
+            tier_gpu_hits: 3,
+            tier_host_hits: 5,
+            tier_disk_misses: 2,
+            store_promote_ahead: 4,
+            promote_ahead_hits: 3,
+            ..Default::default()
+        };
+        assert!((m.tier_hit_rate() - 0.8).abs() < 1e-9);
+        assert!((m.tier_hit_rate() + m.disk_miss_rate() - 1.0).abs() < 1e-9);
+        assert!((m.promote_ahead_hit_rate() - 0.75).abs() < 1e-9);
+        assert_eq!(RunMetrics::default().tier_hit_rate(), 0.0);
+        assert_eq!(RunMetrics::default().promote_ahead_hit_rate(), 0.0);
     }
 }

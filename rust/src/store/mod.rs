@@ -27,11 +27,21 @@
 //! no NVMe traffic ever occurs, and the simulator reproduces the two-tier
 //! virtual-time results bit-for-bit (regression-tested in
 //! `rust/tests/store_property.rs`).
+//!
+//! * [`PlacementCfg`] (module [`placement`]) — workload-predictive
+//!   placement: NVMe→host promotions issued from the prefetcher's workload
+//!   predictions one layer ahead of need (cross-layer overlap on the
+//!   dedicated read stream) and predicted-workload-score demotion instead
+//!   of LRU spill. Off by default; the DALI bundles enable it, the
+//!   baseline frameworks keep the reactive PR 1 behaviour
+//!   (invariant-tested in `rust/tests/placement_property.rs`).
 
+pub mod placement;
 mod scheduler;
 mod tier;
 mod tiered;
 
+pub use placement::PlacementCfg;
 pub use scheduler::TransferScheduler;
 pub use tier::Tier;
 pub use tiered::{StoreCfg, TieredStore};

@@ -1,0 +1,166 @@
+//! Workload-predictive tier placement (the DALI thesis applied to the
+//! storage hierarchy).
+//!
+//! PR 1's store placed experts *reactively*: NVMe promotions happened at
+//! access time (demand) or chained onto the same layer's speculative PCIe
+//! lane (prefetch), and host-tier spills picked the LRU victim — exactly
+//! the static-policy mismatch the paper argues against for GPU caching,
+//! replayed one tier down. This module makes residency *anticipatory*:
+//!
+//! * **Promote ahead** — the residual prefetcher's per-layer workload
+//!   predictions (paper §4.2) drive NVMe→host promotions for layer `l+1`
+//!   while layer `l` computes. The reads run on the store's dedicated NVMe
+//!   read stream, decoupled from the PCIe spec lane, so by the time the
+//!   expert is demanded (on either device) most of the NVMe latency is
+//!   hidden behind compute ([`crate::metrics::RunMetrics::nvme_overlap_hidden_ns`]).
+//! * **Demote by predicted workload** — the host-tier spill victim is the
+//!   expert with the lowest EWMA workload score (observed workloads decayed
+//!   per step, raised by fresh predictions), not the LRU one. HybriMoE
+//!   (arXiv:2504.05897) and DAOP (arXiv:2501.10375) both observe that
+//!   prediction only pays when it drives placement, not just fetch.
+//!
+//! The policy is pure virtual-time bookkeeping over pre-allocated tables:
+//! zero steady-state allocation (enforced by `tests/alloc_audit.rs` on the
+//! `mixtral-sim-ram16` scenario) and bit-deterministic for a fixed seed.
+
+use crate::hw::{CostModel, Ns};
+
+use super::tiered::TieredStore;
+
+/// Placement policy knobs, carried per framework bundle so the
+/// DALI-vs-baselines comparisons stay honest (baselines keep LRU spill and
+/// demand-only promotion).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementCfg {
+    /// Master switch: predictive promote-ahead + score-based demotion.
+    pub predictive: bool,
+    /// Max predictive NVMe→host promotions issued per layer step.
+    pub ahead: usize,
+    /// Backlog gate: stop issuing speculative reads once the NVMe read
+    /// stream is this many expert-reads behind `now` (wrong predictions
+    /// must never starve demand promotions of stream time).
+    pub max_backlog: u64,
+    /// Per-step EWMA decay of the observed-workload score table.
+    pub decay: f64,
+}
+
+impl Default for PlacementCfg {
+    fn default() -> Self {
+        PlacementCfg { predictive: false, ahead: 2, max_backlog: 2, decay: 0.5 }
+    }
+}
+
+impl PlacementCfg {
+    /// The predictive configuration used by the DALI bundles: promote-ahead
+    /// budget scales with the framework's prefetch size (the same
+    /// prediction ranking feeds both), clamped to keep the NVMe stream from
+    /// running more than a few expert-reads speculative.
+    pub fn predictive(prefetch_size: usize) -> Self {
+        PlacementCfg {
+            predictive: true,
+            ahead: (2 * prefetch_size.max(1)).min(8),
+            ..PlacementCfg::default()
+        }
+    }
+}
+
+/// Issue up to `cfg.ahead` predictive NVMe→host promotions for `layer`,
+/// walking `ranked` (expert ids by descending predicted workload) and
+/// skipping experts that are already host/GPU-resident or predicted idle.
+/// `now` is the instant the prediction becomes available (after the gate
+/// pass), i.e. while the *previous* layer's compute is still running.
+/// Returns the number of promotions issued.
+pub fn promote_ahead_layer(
+    store: &mut TieredStore,
+    layer: usize,
+    ranked: &[usize],
+    scores: &[f64],
+    now: Ns,
+    cost: &CostModel,
+) -> usize {
+    let budget = store.placement().ahead;
+    let mut issued = 0usize;
+    for &e in ranked {
+        if issued == budget {
+            break;
+        }
+        if scores[e] <= 0.0 {
+            break; // ranked is sorted: nothing predicted beyond this point
+        }
+        if store.promote_ahead(layer, e, now, cost) {
+            issued += 1;
+        }
+    }
+    issued
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Presets;
+    use crate::store::{StoreCfg, Tier};
+
+    fn cost() -> CostModel {
+        let p = Presets::load_default().unwrap();
+        CostModel::new(p.model("mixtral-sim").unwrap(), p.hw("local-pc-ram16").unwrap())
+    }
+
+    fn predictive_store(layers: usize, n: usize, slots: usize) -> TieredStore {
+        let mut st =
+            TieredStore::new(layers, n, StoreCfg { host_slots: slots, ..Default::default() });
+        st.set_placement(PlacementCfg::predictive(1));
+        st
+    }
+
+    #[test]
+    fn default_is_reactive_and_predictive_scales_with_prefetch() {
+        assert!(!PlacementCfg::default().predictive);
+        let p1 = PlacementCfg::predictive(1);
+        assert!(p1.predictive);
+        assert_eq!(p1.ahead, 2);
+        assert_eq!(PlacementCfg::predictive(4).ahead, 8);
+        assert_eq!(PlacementCfg::predictive(16).ahead, 8, "budget is clamped");
+        assert_eq!(PlacementCfg::predictive(0).ahead, 2);
+    }
+
+    #[test]
+    fn promote_ahead_layer_respects_budget_and_ranking() {
+        let c = cost();
+        let mut st = predictive_store(2, 8, 8);
+        // expert-major fill: 8 slots cover experts 0..4 of both layers,
+        // so layer 1 experts 4..8 start on disk
+        assert_eq!(st.tier(1, 5), Tier::Disk);
+        let scores = vec![0.0, 0.0, 0.0, 0.0, 3.0, 9.0, 1.0, 0.0];
+        let ranked = vec![5usize, 4, 6, 0, 1, 2, 3, 7];
+        st.note_predictions(1, &scores);
+        let issued = promote_ahead_layer(&mut st, 1, &ranked, &scores, 0, &c);
+        assert_eq!(issued, 2, "budget (ahead=2) bounds issuance");
+        assert_eq!(st.tier(1, 5), Tier::Host);
+        assert_eq!(st.tier(1, 4), Tier::Host);
+        assert_eq!(st.tier(1, 6), Tier::Disk, "third candidate over budget");
+        assert_eq!(st.ahead_issued, 2);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn zero_scores_issue_nothing() {
+        let c = cost();
+        let mut st = predictive_store(1, 8, 4);
+        let scores = vec![0.0; 8];
+        let ranked: Vec<usize> = (0..8).collect();
+        assert_eq!(promote_ahead_layer(&mut st, 0, &ranked, &scores, 0, &c), 0);
+        assert_eq!(st.ahead_issued, 0);
+        assert_eq!(st.xfer.read_bytes, 0);
+    }
+
+    #[test]
+    fn disabled_placement_never_promotes_ahead() {
+        let c = cost();
+        let mut st = TieredStore::new(1, 8, StoreCfg { host_slots: 2, ..Default::default() });
+        assert_eq!(st.placement(), &PlacementCfg::default());
+        let scores = vec![5.0; 8];
+        let ranked: Vec<usize> = (0..8).collect();
+        assert_eq!(promote_ahead_layer(&mut st, 0, &ranked, &scores, 0, &c), 0);
+        assert_eq!(st.promotions, 0);
+    }
+}

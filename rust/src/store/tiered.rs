@@ -6,10 +6,19 @@
 //! slot count by taking the fraction of total paper-scale expert bytes it
 //! can hold and applying that fraction to the sim grid. Timing ratios
 //! (NVMe vs PCIe vs compute) therefore match the paper-scale hardware.
+//!
+//! Placement is either *reactive* (LRU spill, demand-only promotion — the
+//! PR 1 behaviour, kept for the baseline frameworks) or *predictive* via
+//! [`super::PlacementCfg`]: promotions are issued ahead of need from the
+//! prefetcher's workload predictions and spills evict the lowest
+//! predicted-workload expert. Every promotion records its host-arrival
+//! instant in a flat table, so consumers (CPU execution, PCIe uploads)
+//! wait for in-flight reads instead of pretending the weights teleported.
 
 use crate::config::HwConfig;
 use crate::hw::{CostModel, Ns};
 
+use super::placement::PlacementCfg;
 use super::scheduler::TransferScheduler;
 use super::tier::Tier;
 
@@ -50,9 +59,25 @@ pub struct TieredStore {
     last_use: Vec<u64>,
     /// Layers whose initial GPU cache residency has been reconciled.
     synced: Vec<bool>,
+    /// Flat ids whose tier is exactly Host — the spill-victim candidate
+    /// set, kept as an index so victim selection scans host residents
+    /// only, not the whole grid (order-independent: selection tie-breaks
+    /// on the flat id, so the set's internal order never matters).
+    host_members: Vec<usize>,
+    /// Position of each flat id in `host_members` (`usize::MAX` = absent).
+    member_pos: Vec<usize>,
+    /// Virtual instant each expert's host copy is (or will be) available —
+    /// consumers of a still-in-flight NVMe promotion wait for this.
+    host_ready: Vec<Ns>,
+    /// Predictively promoted and not yet consumed by any access.
+    ahead: Vec<bool>,
+    /// EWMA predicted-workload score per expert (spill-victim ranking when
+    /// placement is predictive).
+    score: Vec<f64>,
+    placement: PlacementCfg,
     /// NVMe read/write virtual-time streams.
     pub xfer: TransferScheduler,
-    /// Disk→host promotions (NVMe reads charged).
+    /// Disk→host promotions (NVMe reads charged), demand + ahead.
     pub promotions: u64,
     /// Host→disk spills.
     pub spills: u64,
@@ -62,6 +87,16 @@ pub struct TieredStore {
     /// GPU-resident expert (capacity floor violations; see
     /// `ensure_min_slots`).
     pub overcommits: u64,
+    /// Predictive promotions issued / later consumed / spilled unused.
+    pub ahead_issued: u64,
+    pub ahead_hits: u64,
+    pub ahead_misses: u64,
+    /// NVMe read busy-time charged by demand-path (access-time) promotions.
+    pub demand_read_ns: Ns,
+    /// NVMe read time of predictive promotions that was already spent by
+    /// the time the expert was consumed — latency hidden behind earlier
+    /// layers' compute.
+    pub overlap_hidden_ns: Ns,
 }
 
 impl TieredStore {
@@ -82,6 +117,14 @@ impl TieredStore {
                 placed += 1;
             }
         }
+        let mut host_members = Vec::with_capacity(total);
+        let mut member_pos = vec![usize::MAX; total];
+        for (i, t) in tier.iter().enumerate() {
+            if *t == Tier::Host {
+                member_pos[i] = host_members.len();
+                host_members.push(i);
+            }
+        }
         TieredStore {
             layers,
             n_experts,
@@ -92,11 +135,22 @@ impl TieredStore {
             clock: 0,
             last_use: vec![0; total],
             synced: vec![false; layers],
+            host_members,
+            member_pos,
+            host_ready: vec![0; total],
+            ahead: vec![false; total],
+            score: vec![0.0; total],
+            placement: PlacementCfg::default(),
             xfer: TransferScheduler::new(),
             promotions: 0,
             spills: 0,
             gpu_demotions: 0,
             overcommits: 0,
+            ahead_issued: 0,
+            ahead_hits: 0,
+            ahead_misses: 0,
+            demand_read_ns: 0,
+            overlap_hidden_ns: 0,
         }
     }
 
@@ -140,6 +194,16 @@ impl TieredStore {
         self.host_slots >= self.layers * self.n_experts
     }
 
+    /// Install the placement policy for this store (the simulator applies
+    /// the policy bundle's config when the store is attached).
+    pub fn set_placement(&mut self, cfg: PlacementCfg) {
+        self.placement = cfg;
+    }
+
+    pub fn placement(&self) -> &PlacementCfg {
+        &self.placement
+    }
+
     fn idx(&self, layer: usize, e: usize) -> usize {
         debug_assert!(layer < self.layers && e < self.n_experts);
         layer * self.n_experts + e
@@ -147,6 +211,18 @@ impl TieredStore {
 
     pub fn tier(&self, layer: usize, e: usize) -> Tier {
         self.tier[self.idx(layer, e)]
+    }
+
+    /// EWMA predicted-workload score of one expert (placement ranking).
+    pub fn score(&self, layer: usize, e: usize) -> f64 {
+        self.score[self.idx(layer, e)]
+    }
+
+    /// Whether (layer, e) has an unconsumed predictive promotion or an
+    /// NVMe read still in flight at `now`.
+    pub fn pending(&self, layer: usize, e: usize, now: Ns) -> bool {
+        let i = self.idx(layer, e);
+        self.ahead[i] || self.host_ready[i] > now
     }
 
     /// Residency tiers of one whole layer (assignment input).
@@ -164,11 +240,64 @@ impl TieredStore {
         out.extend_from_slice(&self.tier[i..i + self.n_experts]);
     }
 
+    /// Per-expert extra wait before weights are available in host RAM at
+    /// `now`: the NVMe-fetch estimate for disk residents, or the remaining
+    /// in-flight promotion time for host/GPU residents. Assignment reads
+    /// this snapshot every layer (allocation-free), so solvers price
+    /// in-flight predictive promotions instead of assuming host residency
+    /// is instantaneous.
+    pub fn layer_host_wait_into(
+        &self,
+        layer: usize,
+        now: Ns,
+        cost: &CostModel,
+        out: &mut Vec<Ns>,
+    ) {
+        out.clear();
+        let base = layer * self.n_experts;
+        let nvme = cost.nvme_read_time();
+        for e in 0..self.n_experts {
+            let i = base + e;
+            out.push(match self.tier[i] {
+                Tier::Disk => nvme,
+                _ => self.host_ready[i].saturating_sub(now),
+            });
+        }
+    }
+
     /// Record a use (LRU recency) without changing residency.
     pub fn touch(&mut self, layer: usize, e: usize) {
         self.clock += 1;
         let i = self.idx(layer, e);
         self.last_use[i] = self.clock;
+    }
+
+    /// EWMA-decay one layer's scores with this step's observed workloads
+    /// (predictive placement only; the baselines keep pure LRU state).
+    pub fn observe_workloads(&mut self, layer: usize, workloads: &[u32]) {
+        if !self.placement.predictive {
+            return;
+        }
+        let base = layer * self.n_experts;
+        for (e, &w) in workloads.iter().take(self.n_experts).enumerate() {
+            let s = &mut self.score[base + e];
+            *s = *s * self.placement.decay + w as f64;
+        }
+    }
+
+    /// Raise one layer's scores to at least the prefetcher's freshly
+    /// predicted workloads (scores in routed-token units, same as
+    /// observation counts).
+    pub fn note_predictions(&mut self, layer: usize, predicted: &[f64]) {
+        if !self.placement.predictive {
+            return;
+        }
+        let base = layer * self.n_experts;
+        for (e, &p) in predicted.iter().take(self.n_experts).enumerate() {
+            if p > self.score[base + e] {
+                self.score[base + e] = p;
+            }
+        }
     }
 
     /// Raise the host capacity floor so it can always pin the GPU cache's
@@ -182,26 +311,80 @@ impl TieredStore {
 
     /// Zero the operation counters (metrics-period boundary). Residency
     /// state and stream clocks are untouched — pair with
-    /// `xfer.rebase_and_clear`.
+    /// `xfer.rebase_and_clear` or use [`Self::rebase_and_clear`].
     pub fn clear_op_counters(&mut self) {
         self.promotions = 0;
         self.spills = 0;
         self.gpu_demotions = 0;
         self.overcommits = 0;
+        self.ahead_issued = 0;
+        self.ahead_hits = 0;
+        self.ahead_misses = 0;
+        self.demand_read_ns = 0;
+        self.overlap_hidden_ns = 0;
     }
 
-    /// Make `e` of `layer` host-resident, charging an NVMe read if it was
-    /// on disk (and spilling an LRU host victim if the host tier is full).
-    /// Returns the virtual instant the weights are available in host RAM
-    /// (`now` when already host- or GPU-resident).
+    /// Metrics-period boundary: shift every virtual-time clock back by
+    /// `base` (stream free-times and in-flight host arrivals) and clear
+    /// the operation counters. Mirrors the simulator re-basing in-flight
+    /// prefetch arrivals in `reset_metrics`. Unconsumed ahead flags are
+    /// dropped with the counters (their reads stay in flight and consumers
+    /// still wait via `host_ready`, but hit/miss accounting belongs to the
+    /// period that issued them — keeping `hits + misses <= issued` exact).
+    pub fn rebase_and_clear(&mut self, base: Ns) {
+        self.xfer.rebase_and_clear(base);
+        for r in self.host_ready.iter_mut() {
+            *r = r.saturating_sub(base);
+        }
+        for a in self.ahead.iter_mut() {
+            *a = false;
+        }
+        self.clear_op_counters();
+    }
+
+    /// Add / remove a flat id to the Host-tier member index (O(1), no
+    /// allocation — `host_members` is pre-sized to the grid).
+    fn member_add(&mut self, i: usize) {
+        debug_assert_eq!(self.member_pos[i], usize::MAX);
+        self.member_pos[i] = self.host_members.len();
+        self.host_members.push(i);
+    }
+
+    fn member_remove(&mut self, i: usize) {
+        let p = self.member_pos[i];
+        debug_assert_ne!(p, usize::MAX);
+        self.host_members.swap_remove(p);
+        if let Some(&moved) = self.host_members.get(p) {
+            self.member_pos[moved] = p;
+        }
+        self.member_pos[i] = usize::MAX;
+    }
+
+    /// Make `e` of `layer` host-resident, charging a demand-path NVMe
+    /// read if it was on disk (and spilling a victim if the host tier is
+    /// full — LRU, or lowest predicted-workload score under predictive
+    /// placement). Returns the virtual instant the weights are available
+    /// in host RAM (`now` when already resident and nothing in flight).
     pub fn ensure_host(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> Ns {
+        self.arrival(layer, e, now, cost, true)
+    }
+
+    /// Unified arrival: touch, promote from disk if needed. `demand`
+    /// classifies a promotion's NVMe read: true for access-time fetches on
+    /// the execution path (CPU exec, GPU demand fetch), false for
+    /// speculative consumers (prefetch chaining, cache-update loads) —
+    /// `nvme_demand_ns` must measure only the reads predictive placement
+    /// exists to remove, identically across placement policies.
+    fn arrival(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel, demand: bool) -> Ns {
         let i = self.idx(layer, e);
         self.touch(layer, e);
         if self.tier[i] != Tier::Disk {
-            return now;
+            return self.host_ready[i].max(now);
         }
         if self.host_used >= self.host_slots {
-            self.spill_one(now, (layer, e), cost);
+            if let Some(v) = self.spill_victim(i) {
+                self.spill_index(v, now, cost);
+            }
         }
         if self.host_used >= self.host_slots {
             // every slot is pinned by a GPU-resident staging copy: those
@@ -211,35 +394,132 @@ impl TieredStore {
             self.overcommits += 1;
         }
         self.tier[i] = Tier::Host;
+        self.member_add(i);
         self.host_used += 1;
         self.promotions += 1;
+        let dur = cost.nvme_read_time();
+        if demand {
+            self.demand_read_ns += dur;
+        }
         let bytes = cost.expert_bytes() as u64;
-        self.xfer.schedule_read(now, cost.nvme_read_time(), bytes)
+        let arr = self.xfer.schedule_read(now, dur, bytes);
+        self.host_ready[i] = arr;
+        arr
     }
 
-    /// Spill the least-recently-used host-primary expert to disk. GPU-tier
-    /// experts are pinned (their host copy backs the GPU cache) and never
-    /// chosen. No-op if every slot is pinned — the caller then grows the
-    /// budget floor and records an overcommit.
-    fn spill_one(&mut self, now: Ns, protect: (usize, usize), cost: &CostModel) {
-        let pi = protect.0 * self.n_experts + protect.1;
+    /// Consume (layer, e)'s predictive promotion if one is outstanding:
+    /// records the hit and how much of the NVMe read was already hidden
+    /// behind earlier layers' compute by the time of consumption.
+    fn consume_ahead(&mut self, i: usize, now: Ns, cost: &CostModel) {
+        if self.ahead[i] {
+            self.ahead[i] = false;
+            self.ahead_hits += 1;
+            let dur = cost.nvme_read_time();
+            let wait = self.host_ready[i].saturating_sub(now).min(dur);
+            self.overlap_hidden_ns += dur - wait;
+        }
+    }
+
+    /// Host arrival for an execution-path access (CPU execution, GPU
+    /// demand fetch) — a promotion here is a demand-path NVMe read.
+    pub fn host_arrival(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> Ns {
+        self.consume_ahead(self.idx(layer, e), now, cost);
+        self.arrival(layer, e, now, cost, true)
+    }
+
+    /// Host arrival for a speculative consumer (prefetch-chained PCIe
+    /// upload, cache-update load) — promotes if needed, but the read is
+    /// not charged to the demand path.
+    pub fn host_arrival_spec(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> Ns {
+        self.consume_ahead(self.idx(layer, e), now, cost);
+        self.arrival(layer, e, now, cost, false)
+    }
+
+    /// Predictively promote (layer, e) NVMe→host on the dedicated read
+    /// stream, ahead of any access. Refused (returns `false`) when
+    /// placement is reactive, the expert is already host/GPU-resident, the
+    /// read stream's speculative backlog is too deep, or the host tier is
+    /// full and holds no strictly-colder victim (by predicted-workload
+    /// score) — speculation must never thrash warmer residents out.
+    pub fn promote_ahead(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> bool {
+        if !self.placement.predictive {
+            return false;
+        }
+        let i = self.idx(layer, e);
+        if self.tier[i] != Tier::Disk {
+            return false;
+        }
+        let dur = cost.nvme_read_time();
+        if self.xfer.read_free_at() > now + self.placement.max_backlog * dur {
+            return false;
+        }
+        if self.host_used >= self.host_slots {
+            let v = match self.spill_victim(i) {
+                Some(v) if self.score[v] < self.score[i] => v,
+                _ => return false,
+            };
+            self.spill_index(v, now, cost);
+        }
+        self.tier[i] = Tier::Host;
+        self.member_add(i);
+        self.host_used += 1;
+        self.promotions += 1;
+        self.ahead_issued += 1;
+        self.ahead[i] = true;
+        self.touch(layer, e);
+        let bytes = cost.expert_bytes() as u64;
+        self.host_ready[i] = self.xfer.schedule_read(now, dur, bytes);
+        true
+    }
+
+    /// Pick the host-tier spill victim, never the protected index and
+    /// never a pinned GPU-tier expert (the member index holds Host-tier
+    /// experts only, so the scan is O(host residents), not O(grid)).
+    /// Predictive placement evicts the lowest predicted-workload score;
+    /// reactive placement is pure LRU. Both tie-break on recency then the
+    /// flat id, so the member set's internal order never affects the
+    /// choice (determinism).
+    fn spill_victim(&self, protect: usize) -> Option<usize> {
         let mut victim: Option<usize> = None;
-        for i in 0..self.tier.len() {
-            if i == pi || self.tier[i] != Tier::Host {
+        for &i in &self.host_members {
+            if i == protect {
                 continue;
             }
-            if victim.map(|v| self.last_use[i] < self.last_use[v]).unwrap_or(true) {
+            debug_assert_eq!(self.tier[i], Tier::Host);
+            let better = match victim {
+                None => true,
+                Some(v) => {
+                    if self.placement.predictive {
+                        (self.score[i], self.last_use[i], i)
+                            < (self.score[v], self.last_use[v], v)
+                    } else {
+                        (self.last_use[i], i) < (self.last_use[v], v)
+                    }
+                }
+            };
+            if better {
                 victim = Some(i);
             }
         }
-        if let Some(v) = victim {
-            self.tier[v] = Tier::Disk;
-            self.host_used -= 1;
-            self.spills += 1;
-            if self.spill_writeback {
-                let bytes = cost.expert_bytes() as u64;
-                self.xfer.schedule_write(now, cost.nvme_write_time(), bytes);
-            }
+        victim
+    }
+
+    /// Spill the host-resident expert at flat index `v` to disk. An
+    /// unconsumed predictive promotion spilled here was a wasted ahead
+    /// read (miss).
+    fn spill_index(&mut self, v: usize, now: Ns, cost: &CostModel) {
+        debug_assert_eq!(self.tier[v], Tier::Host);
+        self.tier[v] = Tier::Disk;
+        self.member_remove(v);
+        self.host_used -= 1;
+        self.spills += 1;
+        if self.ahead[v] {
+            self.ahead[v] = false;
+            self.ahead_misses += 1;
+        }
+        if self.spill_writeback {
+            let bytes = cost.expert_bytes() as u64;
+            self.xfer.schedule_write(now, cost.nvme_write_time(), bytes);
         }
     }
 
@@ -251,12 +531,16 @@ impl TieredStore {
     pub fn admit_to_gpu(&mut self, layer: usize, e: usize) {
         let i = self.idx(layer, e);
         self.touch(layer, e);
-        if self.tier[i] == Tier::Disk {
-            // initial placement path (cache seeded before the store syncs)
-            self.host_used += 1;
-            if self.host_used > self.host_slots {
-                self.host_slots = self.host_used;
+        match self.tier[i] {
+            Tier::Disk => {
+                // initial placement path (cache seeded before the store syncs)
+                self.host_used += 1;
+                if self.host_used > self.host_slots {
+                    self.host_slots = self.host_used;
+                }
             }
+            Tier::Host => self.member_remove(i),
+            Tier::Gpu => {}
         }
         self.tier[i] = Tier::Gpu;
     }
@@ -267,6 +551,7 @@ impl TieredStore {
         let i = self.idx(layer, e);
         if self.tier[i] == Tier::Gpu {
             self.tier[i] = Tier::Host;
+            self.member_add(i);
             self.gpu_demotions += 1;
         }
     }
@@ -336,6 +621,29 @@ impl TieredStore {
                 self.host_used, self.host_slots
             ));
         }
+        for (i, &a) in self.ahead.iter().enumerate() {
+            if a && self.tier[i] == Tier::Disk {
+                return Err(format!("expert {i} flagged ahead-promoted but disk-resident"));
+            }
+        }
+        if self.ahead_hits + self.ahead_misses > self.ahead_issued {
+            return Err(format!(
+                "ahead accounting drift: {} hits + {} misses > {} issued",
+                self.ahead_hits, self.ahead_misses, self.ahead_issued
+            ));
+        }
+        if self.host_members.len() != host {
+            return Err(format!(
+                "member index drift: {} members vs {} host-tier experts",
+                self.host_members.len(),
+                host
+            ));
+        }
+        for (p, &i) in self.host_members.iter().enumerate() {
+            if self.tier[i] != Tier::Host || self.member_pos[i] != p {
+                return Err(format!("member index corrupt at slot {p} (flat id {i})"));
+            }
+        }
         Ok(())
     }
 }
@@ -388,11 +696,25 @@ mod tests {
         assert_eq!(s.tier(1, 0), Tier::Disk, "LRU host expert spilled");
         assert_eq!(s.promotions, 1);
         assert_eq!(s.spills, 1);
+        assert_eq!(s.demand_read_ns, c.nvme_read_time());
         assert_eq!(s.xfer.write_bytes, 0, "clean spill is free by default");
         s.check_invariants().unwrap();
         // second promotion queues behind the first on the read stream
         let arr2 = s.ensure_host(1, 3, 0, &c);
         assert_eq!(arr2, 2 * c.nvme_read_time());
+    }
+
+    #[test]
+    fn ensure_host_waits_for_in_flight_promotions() {
+        // A second access before the NVMe read lands must wait for the
+        // recorded host arrival, not pretend the weights teleported.
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        let arr = s.ensure_host(0, 2, 0, &c);
+        assert!(arr > 0);
+        assert_eq!(s.ensure_host(0, 2, 0, &c), arr, "still in flight at t=0");
+        assert_eq!(s.ensure_host(0, 2, arr + 5, &c), arr + 5, "landed by then");
+        assert_eq!(s.promotions, 1, "no duplicate read charged");
     }
 
     #[test]
@@ -450,5 +772,126 @@ mod tests {
         // unlimited hardware → unlimited store
         let c2 = CostModel::new(m, p.hw("local-pc").unwrap());
         assert!(TieredStore::for_model(p.hw("local-pc").unwrap(), &c2, 4, 8).is_unlimited());
+    }
+
+    #[test]
+    fn promote_ahead_hides_nvme_latency_and_counts_hits() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 3, ..Default::default() });
+        s.set_placement(PlacementCfg::predictive(1));
+        assert_eq!(s.tier(0, 3), Tier::Disk);
+        s.note_predictions(0, &[0.0, 0.0, 0.0, 5.0]);
+        assert!(s.promote_ahead(0, 3, 0, &c));
+        assert!(s.pending(0, 3, 0));
+        assert_eq!(s.ahead_issued, 1);
+        let dur = c.nvme_read_time();
+        // consumed well after the read landed: the whole read was hidden
+        let arr = s.host_arrival(0, 3, 2 * dur, &c);
+        assert_eq!(arr, 2 * dur);
+        assert_eq!(s.ahead_hits, 1);
+        assert_eq!(s.overlap_hidden_ns, dur);
+        assert_eq!(s.demand_read_ns, 0, "no demand-path read was needed");
+        assert!(!s.pending(0, 3, 2 * dur));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn promote_ahead_partial_overlap_counts_hidden_portion() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 3, ..Default::default() });
+        s.set_placement(PlacementCfg::predictive(1));
+        s.note_predictions(0, &[0.0, 0.0, 0.0, 4.0]);
+        assert!(s.promote_ahead(0, 3, 0, &c));
+        let dur = c.nvme_read_time();
+        // consumed halfway through the read: half the latency was hidden
+        let arr = s.host_arrival(0, 3, dur / 2, &c);
+        assert_eq!(arr, dur, "consumer waits for the in-flight read");
+        assert_eq!(s.overlap_hidden_ns, dur - (dur - dur / 2));
+    }
+
+    #[test]
+    fn promote_ahead_refuses_backlog_and_warmer_victims() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 8, StoreCfg { host_slots: 2, ..Default::default() });
+        s.set_placement(PlacementCfg { predictive: true, ahead: 8, max_backlog: 1, decay: 0.5 });
+        // hosts 0 and 1 are warm; candidates colder than both are refused
+        s.observe_workloads(0, &[9, 9, 0, 0, 0, 0, 0, 0]);
+        assert!(!s.promote_ahead(0, 2, 0, &c), "no colder victim to displace");
+        assert_eq!(s.spills, 0);
+        // hotter candidates displace the coldest hosts, until the read
+        // stream's speculative backlog gate trips
+        s.note_predictions(0, &[0.0, 0.0, 0.0, 20.0, 30.0, 40.0, 0.0, 0.0]);
+        assert!(s.promote_ahead(0, 3, 0, &c));
+        assert_eq!(s.spills, 1);
+        assert!(s.promote_ahead(0, 4, 0, &c), "one read of backlog allowed");
+        assert!(!s.promote_ahead(0, 5, 0, &c), "two reads of backlog refused");
+        assert_eq!(s.ahead_issued, 2);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn spilling_an_unused_ahead_promotion_is_a_miss() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 8, StoreCfg { host_slots: 1, ..Default::default() });
+        s.set_placement(PlacementCfg::predictive(1));
+        s.note_predictions(0, &[0.0, 0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(s.promote_ahead(0, 2, 0, &c));
+        // a demand promotion now evicts the (lowest-score) victim; with
+        // only one slot the unconsumed ahead promotion itself goes
+        s.note_predictions(0, &[0.0, 0.0, 0.0, 9.0, 0.0, 0.0, 0.0, 0.0]);
+        s.ensure_host(0, 3, 0, &c);
+        assert_eq!(s.ahead_misses, 1);
+        assert_eq!(s.ahead_hits, 0);
+        assert_eq!(s.tier(0, 2), Tier::Disk);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn predictive_spill_picks_lowest_score_not_lru() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        s.set_placement(PlacementCfg::predictive(1));
+        // expert 0 is hot by score but least recently used; expert 1 cold
+        s.observe_workloads(0, &[10, 1, 0, 0]);
+        s.touch(0, 1); // LRU would evict 0
+        s.ensure_host(0, 3, 0, &c);
+        assert_eq!(s.tier(0, 0), Tier::Host, "hot expert survives");
+        assert_eq!(s.tier(0, 1), Tier::Disk, "cold score evicted despite recency");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn observe_decays_and_predictions_raise_scores() {
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        // reactive stores keep the table idle
+        s.observe_workloads(0, &[4, 0, 0, 0]);
+        assert_eq!(s.score(0, 0), 0.0);
+        s.set_placement(PlacementCfg::predictive(1));
+        s.observe_workloads(0, &[4, 0, 0, 0]);
+        assert_eq!(s.score(0, 0), 4.0);
+        s.observe_workloads(0, &[0, 0, 0, 0]);
+        assert_eq!(s.score(0, 0), 2.0, "decay halves an idle expert");
+        s.note_predictions(0, &[1.0, 8.0, 0.0, 0.0]);
+        assert_eq!(s.score(0, 0), 2.0, "lower prediction never lowers");
+        assert_eq!(s.score(0, 1), 8.0);
+    }
+
+    #[test]
+    fn rebase_shifts_host_arrivals_and_clears_counters() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        s.set_placement(PlacementCfg::predictive(1));
+        s.note_predictions(0, &[0.0, 0.0, 3.0, 0.0]);
+        assert!(s.promote_ahead(0, 2, 0, &c));
+        let dur = c.nvme_read_time();
+        s.rebase_and_clear(dur / 2);
+        assert_eq!(s.ahead_issued, 0);
+        assert_eq!(s.xfer.read_busy, 0);
+        assert!(!s.pending(0, 2, dur), "ahead flag belongs to the cleared period");
+        // the in-flight arrival shifted with the clock and is still waited on
+        let arr = s.host_arrival(0, 2, 0, &c);
+        assert_eq!(arr, dur - dur / 2);
+        assert_eq!(s.ahead_hits, 0, "hit accounting does not cross the reset");
+        s.check_invariants().unwrap();
     }
 }

@@ -18,22 +18,28 @@ use dali::config::Presets;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
 use dali::coordinator::simrun::{Phase, StepSimulator};
 use dali::hw::CostModel;
+use dali::store::TieredStore;
 use dali::workload::trace::{synthetic_locality_trace, BatchStep};
 
 #[test]
 fn run_step_steady_state_is_allocation_free() {
     // DALI (greedy + residual prefetch + workload-aware cache) and
     // HybriMoE (static threshold + feature prefetch + score cache) — the
-    // two bundles the throughput benches measure head-to-head.
+    // two bundles the throughput benches measure head-to-head — plus the
+    // memory-limited `mixtral-sim-ram16` scenario, which exercises the
+    // tiered store's predictive-placement hot path (promote-ahead, score
+    // demotion, host-arrival tracking) and must be just as allocation-free
+    // as the two-tier bundles.
     let presets = Presets::load_default().unwrap();
-    for (preset, fw) in [
+    for (scenario, fw) in [
         ("mixtral-sim", Framework::Dali),
         ("deepseek-sim", Framework::Dali),
         ("mixtral-sim", Framework::HybriMoE),
+        ("mixtral-sim-ram16", Framework::Dali),
     ] {
-        let model = presets.model(preset).unwrap();
+        let (model, hw) = presets.scenario(scenario).unwrap();
         let dims = &model.sim;
-        let cost = CostModel::new(model, presets.hw("local-pc").unwrap());
+        let cost = CostModel::new(model, hw);
         let trace =
             synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 96, 0xa11c);
         let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
@@ -49,6 +55,11 @@ fn run_step_steady_state_is_allocation_free() {
             dims.n_shared,
             7,
         );
+        let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+        let memory_limited = !store.is_unlimited();
+        if memory_limited {
+            sim = sim.with_store(store);
+        }
         let mut step = BatchStep::default();
         trace.compose_prefill_into(&ids, &mut step);
         sim.run_step(&step, 8, Phase::Prefill);
@@ -67,11 +78,17 @@ fn run_step_steady_state_is_allocation_free() {
         }
         let allocs = alloc_calls() - before;
         let m = sim.finish();
-        assert!(m.tokens_out > 0, "{preset}: audit must actually decode");
+        assert!(m.tokens_out > 0, "{scenario}: audit must actually decode");
+        if memory_limited {
+            assert!(
+                m.store_promote_ahead > 0,
+                "{scenario}: the audit must exercise predictive placement"
+            );
+        }
         assert_eq!(
             allocs,
             0,
-            "{preset}/{}: run_step + compose_decode_into allocated {allocs} times \
+            "{scenario}/{}: run_step + compose_decode_into allocated {allocs} times \
              across {} steady-state steps (expected zero)",
             fw.name(),
             96 - warmup

@@ -12,9 +12,12 @@ use dali::coordinator::assignment::{GreedyAssigner, SolveCost};
 use dali::coordinator::cache::WorkloadAwareCache;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
 use dali::coordinator::prefetch::ResidualPrefetcher;
-use dali::coordinator::simrun::{replay_decode, Phase, PolicyBundle, StepSimulator};
+use dali::coordinator::simrun::{
+    replay_decode, replay_decode_store, Phase, PolicyBundle, StepSimulator,
+};
 use dali::hw::CostModel;
 use dali::metrics::RunMetrics;
+use dali::store::{PlacementCfg, TieredStore};
 use dali::util::pool::parallel_map;
 use dali::workload::trace::{synthetic_locality_trace, Trace};
 
@@ -35,6 +38,7 @@ fn dali_bundle(layers: usize, n: usize) -> PolicyBundle {
         layer_overhead_ns: 0,
         gpu_free_slots: n,
         solve_cost: SolveCost::Modeled,
+        placement: PlacementCfg::default(),
     }
 }
 
@@ -119,6 +123,67 @@ fn scratch_reuse_matches_naive_reference_replay() {
 }
 
 #[test]
+fn memory_limited_store_replays_are_bit_identical() {
+    // The placement subsystem (EWMA scores, promote-ahead, arrival table)
+    // must preserve the determinism guarantee: same seed + same store
+    // budget → field-for-field identical RunMetrics, predictive or not.
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
+    let c = CostModel::new(model, hw);
+    let dims = &model.sim;
+    let t = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 8, 40, LAYERS_SEED);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let ids: Vec<usize> = (0..6).collect();
+    for predictive in [false, true] {
+        let run = || {
+            let mut bundle = dali_bundle(dims.layers, dims.n_routed);
+            if predictive {
+                bundle.placement = PlacementCfg::predictive(1);
+            }
+            let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+            replay_decode_store(&t, &ids, 32, &c, bundle, &freq, 1, 7, Some(store))
+        };
+        let a = run();
+        assert_eq!(a, run(), "predictive={predictive}: store replays must be bit-identical");
+        assert!(a.tier_disk_misses + a.store_promote_ahead > 0, "store must be exercised");
+    }
+}
+
+#[test]
+fn ram_sweep_cells_parallel_match_serial() {
+    // The `expt ram` sweep shape — (hardware budget × placement × seed)
+    // cells over a shared traced workload — must report identical numbers
+    // under `--jobs 4` and serial execution.
+    let p = Presets::load_default().unwrap();
+    let model = p.model("mixtral-sim").unwrap();
+    let dims = &model.sim;
+    let t = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 8, 32, LAYERS_SEED);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let mut cells: Vec<(&str, bool, u64)> = Vec::new();
+    for hw_name in ["local-pc", "local-pc-ram16", "local-pc-ram8"] {
+        for predictive in [false, true] {
+            for seed in [7u64, 13] {
+                cells.push((hw_name, predictive, seed));
+            }
+        }
+    }
+    let run_cell = |(hw_name, predictive, seed): (&str, bool, u64)| -> RunMetrics {
+        let hw = p.hw(hw_name).unwrap();
+        let c = CostModel::new(model, hw);
+        let mut bundle = dali_bundle(dims.layers, dims.n_routed);
+        if predictive {
+            bundle.placement = PlacementCfg::predictive(1);
+        }
+        let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+        let ids: Vec<usize> = (0..6).collect();
+        replay_decode_store(&t, &ids, 24, &c, bundle, &freq, 1, seed, Some(store))
+    };
+    let serial = parallel_map(1, cells.clone(), run_cell);
+    let par = parallel_map(4, cells, run_cell);
+    assert_eq!(serial, par, "--jobs must never change ram-sweep metrics");
+}
+
+#[test]
 fn framework_bundles_replay_deterministically() {
     // Every comparison-set bundle (not just DALI's) is covered by the
     // modeled-solve-cost guarantee.
@@ -136,5 +201,17 @@ fn framework_bundles_replay_deterministically() {
             replay_decode(&t, &ids, 16, &c, bundle, &freq, dims.n_shared, 11)
         };
         assert_eq!(run(), run(), "{} must replay deterministically", fw.name());
+    }
+    // and with a memory-limited store attached (placement active for DALI,
+    // reactive for the baselines) the guarantee still holds per bundle
+    let hw16 = p.hw("local-pc-ram16").unwrap();
+    let c16 = CostModel::new(model, hw16);
+    for fw in Framework::comparison_set() {
+        let run = || {
+            let bundle = fw.bundle(dims, &c16, &freq, &cfg);
+            let store = TieredStore::for_model(hw16, &c16, dims.layers, dims.n_routed);
+            replay_decode_store(&t, &ids, 16, &c16, bundle, &freq, dims.n_shared, 11, Some(store))
+        };
+        assert_eq!(run(), run(), "{} + store must replay deterministically", fw.name());
     }
 }

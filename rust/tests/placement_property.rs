@@ -1,0 +1,288 @@
+//! Property + acceptance tests for workload-predictive tier placement
+//! (`dali::store::placement`): residency stays conserved under arbitrary
+//! interleavings of predictive and demand operations, budgets are never
+//! exceeded, NVMe byte/time accounting conserves across promote+demote
+//! cycles, and — the regression-locked acceptance criterion — predictive
+//! placement strictly beats the LRU-spill baseline on the synthetic
+//! locality trace under the `mixtral-sim-ram16` budget: higher GPU+host
+//! tier hit rate, fewer disk misses, less demand-path NVMe time.
+
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::replay_decode_store;
+use dali::hw::CostModel;
+use dali::metrics::RunMetrics;
+use dali::store::{placement, PlacementCfg, StoreCfg, TieredStore};
+use dali::util::DetRng;
+use dali::workload::trace::synthetic_locality_trace;
+
+fn cost(model: &str, hw: &str) -> CostModel {
+    let p = Presets::load_default().unwrap();
+    CostModel::new(p.model(model).unwrap(), p.hw(hw).unwrap())
+}
+
+/// Run `f` over `n` seeded cases, reporting the failing seed.
+fn for_seeds(n: u64, f: impl Fn(u64)) {
+    for seed in 0..n {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if result.is_err() {
+            panic!("property failed at seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_residency_conserved_under_predictive_ops() {
+    // Exactly-one-tier conservation, host-slot budgets, and the ahead
+    // bookkeeping invariants hold under arbitrary interleavings of
+    // promote-ahead, demand promotion, GPU admission/demotion, score
+    // observation, and prediction updates.
+    let c = cost("mixtral-sim", "local-pc-ram16");
+    for_seeds(120, |seed| {
+        let mut rng = DetRng::new(seed ^ 0x9dac);
+        let layers = 1 + rng.usize_below(5);
+        let n = 2 + rng.usize_below(12);
+        let total = layers * n;
+        let slots = 1 + rng.usize_below(total);
+        let mut st = TieredStore::new(
+            layers,
+            n,
+            StoreCfg { host_slots: slots, spill_writeback: rng.chance(0.3) },
+        );
+        st.set_placement(PlacementCfg {
+            predictive: true,
+            ahead: 1 + rng.usize_below(4),
+            max_backlog: 1 + rng.usize_below(3) as u64,
+            decay: 0.5,
+        });
+        let mut now = 0u64;
+        let mut workloads = vec![0u32; n];
+        let mut predicted = vec![0.0f64; n];
+        for _ in 0..250 {
+            let l = rng.usize_below(layers);
+            let e = rng.usize_below(n);
+            now += 1;
+            match rng.usize_below(6) {
+                0 => {
+                    st.host_arrival(l, e, now, &c);
+                }
+                1 => {
+                    st.promote_ahead(l, e, now, &c);
+                }
+                2 => {
+                    st.host_arrival(l, e, now, &c);
+                    st.admit_to_gpu(l, e);
+                }
+                3 => st.demote_gpu(l, e),
+                4 => {
+                    for w in workloads.iter_mut() {
+                        *w = rng.usize_below(6) as u32;
+                    }
+                    st.observe_workloads(l, &workloads);
+                }
+                _ => {
+                    for p in predicted.iter_mut() {
+                        *p = rng.usize_below(8) as f64;
+                    }
+                    st.note_predictions(l, &predicted);
+                }
+            }
+            st.check_invariants().unwrap();
+            let (g, h, d) = st.counts();
+            assert_eq!(g + h + d, total, "residency must be conserved");
+            assert!(g + h <= st.host_slots(), "host budget exceeded");
+            assert!(st.ahead_hits + st.ahead_misses <= st.ahead_issued);
+        }
+    });
+}
+
+#[test]
+fn prop_nvme_accounting_conserves_across_promote_demote_cycles() {
+    // Every promotion — demand or ahead — charges exactly one expert read
+    // of bytes and time; demand and hidden time are consistent subsets;
+    // write traffic appears iff write-back spilling is on.
+    let c = cost("mixtral-sim", "local-pc-ram16");
+    let expert_bytes = c.expert_bytes() as u64;
+    let read_dur = c.nvme_read_time();
+    for_seeds(80, |seed| {
+        let mut rng = DetRng::new(seed ^ 0x0715);
+        let writeback = rng.chance(0.5);
+        let mut st =
+            TieredStore::new(2, 8, StoreCfg { host_slots: 4, spill_writeback: writeback });
+        st.set_placement(PlacementCfg::predictive(1 + rng.usize_below(3)));
+        let mut predicted = vec![0.0f64; 8];
+        for i in 0..120u64 {
+            let l = rng.usize_below(2);
+            let e = rng.usize_below(8);
+            if rng.chance(0.5) {
+                for p in predicted.iter_mut() {
+                    *p = rng.usize_below(9) as f64;
+                }
+                st.note_predictions(l, &predicted);
+                st.promote_ahead(l, e, i, &c);
+            } else {
+                st.host_arrival(l, e, i, &c);
+            }
+            if rng.chance(0.2) {
+                st.demote_gpu(l, e);
+            }
+        }
+        assert_eq!(st.xfer.read_bytes, st.promotions * expert_bytes);
+        assert_eq!(st.xfer.reads, st.promotions);
+        assert_eq!(st.xfer.read_busy, st.promotions * read_dur);
+        let demand_promotions = st.promotions - st.ahead_issued;
+        assert_eq!(st.demand_read_ns, demand_promotions * read_dur);
+        assert!(st.overlap_hidden_ns <= st.ahead_hits * read_dur);
+        if writeback {
+            assert_eq!(st.xfer.write_bytes, st.spills * expert_bytes);
+        } else {
+            assert_eq!(st.xfer.write_bytes, 0);
+        }
+        st.check_invariants().unwrap();
+    });
+}
+
+#[test]
+fn promote_ahead_layer_never_overflows_budgets() {
+    // The simrun driver path: repeated ranked promote-ahead rounds can
+    // never exceed the per-round budget, the host-slot budget, or promote
+    // an expert into two tiers at once.
+    let c = cost("mixtral-sim", "local-pc-ram16");
+    for_seeds(60, |seed| {
+        let mut rng = DetRng::new(seed ^ 0xabcd);
+        let layers = 2 + rng.usize_below(3);
+        let n = 4 + rng.usize_below(8);
+        let slots = 1 + rng.usize_below(layers * n);
+        let mut st =
+            TieredStore::new(layers, n, StoreCfg { host_slots: slots, ..Default::default() });
+        let cfg = PlacementCfg::predictive(1 + rng.usize_below(4));
+        st.set_placement(cfg);
+        let mut scores = vec![0.0f64; n];
+        let mut ranked: Vec<usize> = (0..n).collect();
+        for round in 0..40u64 {
+            let l = rng.usize_below(layers);
+            for s in scores.iter_mut() {
+                *s = rng.usize_below(10) as f64;
+            }
+            ranked.sort_unstable_by(|&a, &b| {
+                scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+            });
+            st.note_predictions(l, &scores);
+            let issued =
+                placement::promote_ahead_layer(&mut st, l, &ranked, &scores, round * 3, &c);
+            assert!(issued <= cfg.ahead, "per-round budget exceeded");
+            st.check_invariants().unwrap();
+            assert!(st.host_used() <= st.host_slots());
+        }
+    });
+}
+
+/// DALI bundle replay over the synthetic locality workload with the
+/// `mixtral-sim-ram16` store; `predictive` toggles the placement policy
+/// (false = PR 1's reactive LRU-spill baseline).
+fn ram16_replay(predictive: bool, seed: u64) -> RunMetrics {
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
+    assert!(hw.is_memory_limited(&model.paper));
+    let c = CostModel::new(model, hw);
+    let dims = &model.sim;
+    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48, 0x7157);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let cfg = FrameworkCfg::paper_default(dims);
+    let mut bundle = Framework::Dali.bundle(dims, &c, &freq, &cfg);
+    assert!(bundle.placement.predictive, "DALI defaults to predictive placement");
+    if !predictive {
+        bundle.placement = PlacementCfg::default();
+    }
+    let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+    assert!(!store.is_unlimited());
+    let ids: Vec<usize> = (0..8).collect();
+    replay_decode_store(&trace, &ids, 40, &c, bundle, &freq, dims.n_shared, seed, Some(store))
+}
+
+#[test]
+fn predictive_placement_beats_lru_spill_on_locality_trace() {
+    // ISSUE acceptance, regression-locked: on mixtral-sim-ram16 with the
+    // locality trace, predictive placement strictly improves the GPU+host
+    // tier hit rate and reduces demand-path NVMe time vs LRU spill.
+    let lru = ram16_replay(false, 7);
+    let pred = ram16_replay(true, 7);
+    // the baseline must genuinely exercise the disk tier
+    assert!(lru.tier_disk_misses > 0, "baseline must see disk misses");
+    assert_eq!(lru.store_promote_ahead, 0, "reactive baseline never promotes ahead");
+    // predictive placement actually fired and was consumed
+    assert!(pred.store_promote_ahead > 0);
+    assert!(pred.promote_ahead_hits > 0);
+    assert!(pred.nvme_overlap_hidden_ns > 0, "NVMe latency must hide behind compute");
+    // --- the acceptance inequalities ------------------------------------
+    assert!(
+        pred.tier_hit_rate() > lru.tier_hit_rate(),
+        "GPU+host tier hit rate must strictly improve: {:.4} vs {:.4}",
+        pred.tier_hit_rate(),
+        lru.tier_hit_rate()
+    );
+    assert!(
+        pred.tier_disk_misses < lru.tier_disk_misses,
+        "disk misses must drop: {} vs {}",
+        pred.tier_disk_misses,
+        lru.tier_disk_misses
+    );
+    assert!(
+        pred.nvme_demand_ns < lru.nvme_demand_ns,
+        "demand-path NVMe time must shrink: {} vs {}",
+        pred.nvme_demand_ns,
+        lru.nvme_demand_ns
+    );
+}
+
+#[test]
+fn placement_comparison_pair_replays_bit_identically() {
+    // Both sides of the comparison stay deterministic — the speedup claim
+    // is meaningless if either side drifts run-to-run.
+    assert_eq!(ram16_replay(true, 11), ram16_replay(true, 11));
+    assert_eq!(ram16_replay(false, 11), ram16_replay(false, 11));
+}
+
+#[test]
+fn gpu_tier_census_respects_cache_budget_under_placement() {
+    // Predictive promotion feeds the host tier only; the GPU tier is still
+    // bounded by the cache capacity per layer.
+    use dali::coordinator::simrun::{Phase, StepSimulator};
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
+    let c = CostModel::new(model, hw);
+    let dims = &model.sim;
+    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 8, 32, 0x55aa);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let cfg = FrameworkCfg::paper_default(dims);
+    let bundle = Framework::Dali.bundle(dims, &c, &freq, &cfg);
+    let cache_size = cfg.cache_size;
+    let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+    let mut sim = StepSimulator::new(
+        &c,
+        bundle,
+        &freq,
+        dims.layers,
+        dims.n_routed,
+        dims.n_shared,
+        7,
+    )
+    .with_store(store);
+    let ids: Vec<usize> = (0..8).collect();
+    let mut step = dali::workload::trace::BatchStep::default();
+    trace.compose_prefill_into(&ids, &mut step);
+    sim.run_step(&step, 8, Phase::Prefill);
+    for s in 0..trace.min_steps() {
+        trace.compose_decode_into(&ids, s, &mut step);
+        sim.run_step(&step, 16 + s, Phase::Decode);
+        let st = sim.store().unwrap();
+        st.check_invariants().unwrap();
+        for l in 0..dims.layers {
+            assert!(
+                st.gpu_count_layer(l) <= cache_size,
+                "step {s} layer {l}: {} GPU-primary experts exceed cache budget {cache_size}",
+                st.gpu_count_layer(l)
+            );
+        }
+    }
+}

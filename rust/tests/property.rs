@@ -44,6 +44,7 @@ fn prop_all_assigners_satisfy_constraints() {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: cm,
             gpu_free_slots: slots,
             layer: rng.usize_below(4),
@@ -81,6 +82,7 @@ fn prop_optimal_not_worse_than_any_heuristic() {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: slots,
             layer: 0,
@@ -107,6 +109,7 @@ fn prop_greedy_within_2x_of_optimal() {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: n,
             layer: 0,
@@ -196,6 +199,7 @@ fn prop_makespan_estimate_is_max_of_sides() {
             workloads: &workloads,
             resident: &resident,
             tiers: None,
+            host_wait: None,
             cost: &cm,
             gpu_free_slots: n,
             layer: 0,

@@ -135,6 +135,7 @@ fn bundle(layers: usize, n: usize, cache_size: usize, prefetch: bool) -> PolicyB
         layer_overhead_ns: 0,
         gpu_free_slots: n,
         solve_cost: Default::default(),
+        placement: Default::default(),
     }
 }
 
@@ -280,6 +281,7 @@ fn tier_aware_assignment_prefers_host_experts() {
         workloads: &workloads,
         resident: &resident,
         tiers: Some(&tiers),
+        host_wait: None,
         cost: &c,
         gpu_free_slots: 2,
         layer: 0,
