@@ -11,7 +11,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::util::json::Value;
 
@@ -178,6 +178,11 @@ impl HwConfig {
 pub struct Scenario {
     pub model: String,
     pub hardware: String,
+    /// On-disk bytes per fp16 byte for NVMe-resident experts — the tiered
+    /// store's quantized on-disk format (the `*-q4` scenarios). 1.0 (the
+    /// default) keeps fp16 on disk: no transcode stage, the PR 1
+    /// behaviour. Consumed by `CostModel::with_quant_ratio`.
+    pub quant_ratio: f64,
 }
 
 /// Static shape buckets for the AOT artifacts.
@@ -239,11 +244,17 @@ impl Presets {
         let mut scenarios = BTreeMap::new();
         if let Some(s) = v.opt("scenarios") {
             for (name, sc) in s.as_obj()? {
+                let quant_ratio =
+                    sc.opt("quant_ratio").map(|x| x.as_f64()).transpose()?.unwrap_or(1.0);
+                if !(quant_ratio > 0.0 && quant_ratio <= 1.0) {
+                    bail!("scenario '{name}': quant_ratio must be in (0, 1], got {quant_ratio}");
+                }
                 scenarios.insert(
                     name.clone(),
                     Scenario {
                         model: sc.get("model")?.as_str()?.to_string(),
                         hardware: sc.get("hardware")?.as_str()?.to_string(),
+                        quant_ratio,
                     },
                 );
             }
@@ -285,6 +296,15 @@ impl Presets {
 
     pub fn scenario_names(&self) -> Vec<&str> {
         self.scenarios.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// On-disk quantization ratio of a scenario: the scenario's
+    /// `quant_ratio` field, or 1.0 (fp16 on disk) for plain model presets
+    /// and scenarios without the field. Prefer building scenario cost
+    /// models through `CostModel::for_scenario`, which pairs this lookup
+    /// with the constructor so it can't be forgotten.
+    pub fn quant_ratio(&self, name: &str) -> f64 {
+        self.scenarios.get(name).map(|s| s.quant_ratio).unwrap_or(1.0)
     }
 }
 
@@ -346,6 +366,25 @@ mod tests {
         assert!(!hw2.is_memory_limited(&m2.paper));
         assert!(p.scenario("no-such-model").is_err());
         assert!(!p.scenario_names().is_empty());
+    }
+
+    #[test]
+    fn quantized_scenarios_carry_their_disk_ratio() {
+        let p = Presets::load_default().unwrap();
+        // fp16-on-disk scenarios (and plain models) default to 1.0
+        assert_eq!(p.quant_ratio("mixtral-sim-ram16"), 1.0);
+        assert_eq!(p.quant_ratio("mixtral-sim"), 1.0);
+        assert_eq!(p.quant_ratio("no-such-scenario"), 1.0);
+        // the q4 scenarios keep offloaded experts quantized on NVMe
+        let q4 = p.quant_ratio("mixtral-sim-ram16-q4");
+        assert!(q4 > 0.0 && q4 < 0.5, "q4 ratio = {q4}");
+        assert_eq!(p.quant_ratio("mixtral-sim-ram8-q4"), q4);
+        // q4 scenarios resolve to the same (model, hardware) as their
+        // fp16 twins — only the on-disk format differs
+        let (m, hw) = p.scenario("mixtral-sim-ram16-q4").unwrap();
+        let (m2, hw2) = p.scenario("mixtral-sim-ram16").unwrap();
+        assert_eq!(m.display, m2.display);
+        assert_eq!(hw, hw2);
     }
 
     #[test]

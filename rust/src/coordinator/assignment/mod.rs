@@ -76,15 +76,17 @@ impl AssignCtx<'_> {
         self.workloads.iter().filter(|&&w| w > 0).count()
     }
 
-    /// Extra ns before expert `e`'s weights reach host RAM: the store's
-    /// reported arrival wait when available, else the tier-based NVMe
-    /// estimate (identical for disk residents, zero otherwise).
+    /// Extra ns before expert `e`'s weights are *usable* in host RAM: the
+    /// store's reported arrival wait when available, else the tier-based
+    /// NVMe-fetch estimate — the on-disk read plus, for quantized on-disk
+    /// formats, the CPU transcode stage (identical for disk residents,
+    /// zero otherwise).
     pub fn host_wait_ns(&self, e: usize) -> Ns {
         match self.host_wait {
             Some(w) => w[e],
             None => {
                 if self.tier(e) == Tier::Disk {
-                    self.cost.nvme_read_time()
+                    self.cost.nvme_fetch_time()
                 } else {
                     0
                 }
@@ -94,7 +96,8 @@ impl AssignCtx<'_> {
 
     /// Eq. 5 estimate used by all solvers: `t_gpu(w)` with residency,
     /// extended tier-aware — a disk-resident (or still-in-flight) expert's
-    /// transfer chains NVMe-read → PCIe before compute can overlap it.
+    /// transfer chains NVMe-read → transcode → PCIe before compute can
+    /// overlap it.
     pub fn t_gpu(&self, e: usize) -> Ns {
         let w = self.workloads[e] as usize;
         if w == 0 {
@@ -327,6 +330,38 @@ mod tier_tests {
             ctx2.t_gpu(1),
             cm.t_gpu_compute(4).max(cm.trans_time() + cm.nvme_read_time())
         );
+    }
+
+    #[test]
+    fn quantized_disk_fallback_prices_read_plus_transcode() {
+        // With a quantized on-disk format and no store-reported snapshot,
+        // a disk-resident expert's wait is the full fetch: the (smaller)
+        // NVMe read plus the CPU transcode stage — on either device.
+        let fp16 = cost("mixtral-sim");
+        let q4 = cost("mixtral-sim").with_quant_ratio(0.28);
+        let workloads = vec![4u32, 4];
+        let resident = vec![false, false];
+        let tiers = vec![Tier::Host, Tier::Disk];
+        let mk = |cm: &CostModel| AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: Some(&tiers),
+            host_wait: None,
+            cost: cm,
+            gpu_free_slots: 2,
+            layer: 0,
+            layers: 4,
+        };
+        let (cq, cf) = (mk(&q4), mk(&fp16));
+        assert_eq!(cq.host_wait_ns(1), q4.nvme_fetch_time());
+        assert_eq!(cq.host_wait_ns(0), 0, "host residents wait for nothing");
+        assert_eq!(cq.t_cpu(1), q4.t_cpu(4) + q4.nvme_read_time() + q4.transcode_time());
+        // the asymmetric format makes the disk expert cheaper to reach on
+        // both devices than fp16-on-disk would
+        assert!(cq.t_cpu(1) < cf.t_cpu(1));
+        assert!(cq.t_gpu(1) <= cf.t_gpu(1));
+        // host-resident costs are format-independent
+        assert_eq!(cq.t_cpu(0), cf.t_cpu(0));
     }
 
     #[test]

@@ -608,6 +608,8 @@ impl<'a> StepSimulator<'a> {
             self.metrics.promote_ahead_misses = st.ahead_misses;
             self.metrics.nvme_demand_ns = st.demand_read_ns;
             self.metrics.nvme_overlap_hidden_ns = st.overlap_hidden_ns;
+            self.metrics.transcode_ns = st.xfer.transcode_busy;
+            self.metrics.disk_bytes_saved = st.bytes_saved;
         }
     }
 }
@@ -1003,6 +1005,92 @@ mod tests {
             fast.total_ns
         );
         assert_eq!(fast.tier_disk_misses, 0);
+    }
+
+    #[test]
+    fn quantized_disk_format_shrinks_demand_nvme_time() {
+        // Same policy, trace, and host budget — only the on-disk format
+        // differs. The q4 tier's smaller reads must strictly cut
+        // demand-path NVMe time and bytes, pay a real (separately
+        // reported) transcode stage, and save NVMe traffic.
+        let f = freq(4, 8);
+        let w = [8u32, 8, 8, 8, 8, 8, 8, 8];
+        let run = |ratio: f64| {
+            let c = cost().with_quant_ratio(ratio);
+            let mut sim = StepSimulator::new(&c, bundle(false, true), &f, 4, 8, 0, 1)
+                .with_store(crate::store::TieredStore::new(
+                    4,
+                    8,
+                    crate::store::StoreCfg { host_slots: 10, ..Default::default() },
+                ));
+            for _ in 0..12 {
+                sim.run_step(&mk_step(4, 8, &w), 16, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let fp16 = run(1.0);
+        let q4 = run(0.28);
+        assert_eq!(fp16.transcode_ns, 0, "fp16 on disk never transcodes");
+        assert_eq!(fp16.disk_bytes_saved, 0);
+        assert!(fp16.nvme_demand_ns > 0, "the budget must force demand reads");
+        assert!(q4.transcode_ns > 0, "q4 promotions pass the transcode lane");
+        assert!(q4.disk_bytes_saved > 0);
+        assert!(
+            q4.nvme_demand_ns < fp16.nvme_demand_ns,
+            "quantized reads must cut demand NVMe time: {} vs {}",
+            q4.nvme_demand_ns,
+            fp16.nvme_demand_ns
+        );
+        assert!(q4.nvme_read_bytes < fp16.nvme_read_bytes);
+    }
+
+    #[test]
+    fn transcode_rides_demand_arrivals_not_gpu_streams() {
+        // All-CPU execution over a memory-limited q4 store: every demand
+        // arrival includes the transcode completion (CPU work waits for
+        // it), yet the GPU compute and PCIe streams stay untouched — the
+        // transcode lane is not GPU time.
+        let f = freq(4, 8);
+        let w = [4u32, 4, 4, 4, 4, 4, 4, 4];
+        let run = |ratio: f64| {
+            let c = cost().with_quant_ratio(ratio);
+            let policy = PolicyBundle {
+                assigner: Box::new(AllCpuAssigner::new()),
+                prefetcher: Box::new(NoPrefetcher),
+                cache: Box::new(NoCache::new(4, 8)),
+                prefetch_size: 0,
+                cpu_eff: 1.0,
+                layer_overhead_ns: 0,
+                gpu_free_slots: 8,
+                solve_cost: SolveCost::Modeled,
+                placement: PlacementCfg::default(),
+            };
+            let mut sim = StepSimulator::new(&c, policy, &f, 4, 8, 0, 1).with_store(
+                crate::store::TieredStore::new(
+                    4,
+                    8,
+                    crate::store::StoreCfg { host_slots: 10, ..Default::default() },
+                ),
+            );
+            for _ in 0..6 {
+                sim.run_step(&mk_step(4, 8, &w), 8, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let q4 = run(0.28);
+        assert!(q4.transcode_ns > 0, "CPU demand arrivals pass the transcode lane");
+        assert_eq!(q4.moe_gpu_busy_ns, 0, "transcode never lands on the GPU stream");
+        assert_eq!(q4.pcie_demand_bytes, 0);
+        assert!(q4.moe_cpu_busy_ns > 0);
+        // and the asymmetric format wins end-to-end: small read + CPU
+        // transcode arrives sooner than the big fp16 read
+        let fp16 = run(1.0);
+        assert!(
+            q4.total_ns < fp16.total_ns,
+            "q4 fetches must be faster end-to-end: {} vs {}",
+            q4.total_ns,
+            fp16.total_ns
+        );
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! tiered-store extension — decode latency vs host-RAM budget (a scenario
 //! axis the paper's two-tier model cannot express).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::common::*;
 use crate::coordinator::assignment::GreedyAssigner;
@@ -151,18 +151,22 @@ pub fn fig18(ctx: &ExptCtx) -> Result<String> {
 
 /// Latency vs host-RAM budget (tiered expert store): the paper-style
 /// figure the two-tier model cannot express. For every hardware budget ×
-/// workload cell, DALI's bundle is replayed twice — predictive placement
-/// (promote-ahead + score demotion) vs the reactive LRU-spill baseline —
-/// so the figure tracks both the RAM cliff and what placement buys back.
-/// Workloads: the synthetic locality trace (always available) and the C4
-/// traced pool when artifacts exist (`dali prepare`).
+/// workload × on-disk-format cell, DALI's bundle is replayed twice —
+/// predictive placement (promote-ahead + score demotion) vs the reactive
+/// LRU-spill baseline — so the figure tracks the RAM cliff, what placement
+/// buys back, and what the quantized on-disk format (small NVMe reads +
+/// CPU transcode) buys on top. Workloads: the synthetic locality trace
+/// (always available) and the C4 traced pool when artifacts exist
+/// (`dali prepare`).
 pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
     let mut out = String::from(
         "## RAM-budget sensitivity — decode speed vs host RAM (tiered GPU/host/NVMe store)\n\n\
          DALI bundle (greedy + residual prefetch + workload-aware cache), batch 8. `local-pc` \
          holds every expert in RAM (two-tier baseline); the `ram*` presets spill cold experts \
          to NVMe. \"predictive\" = workload-predictive placement (promote-ahead on the NVMe \
-         read stream + predicted-workload demotion); \"lru-spill\" = reactive PR 1 baseline.\n\n",
+         read stream + predicted-workload demotion); \"lru-spill\" = reactive PR 1 baseline. \
+         \"disk fmt\" = on-disk expert format: fp16, or q4 (quantized on NVMe — reads move \
+         ~0.28x the bytes, then a CPU transcode lane dequantizes, overlapping later reads).\n\n",
     );
     let preset = "mixtral-sim";
     let model = ctx.model(preset)?;
@@ -180,19 +184,43 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
         workloads.push(("c4-traced", t));
     }
     let hw_names = ["local-pc", "local-pc-ram16", "local-pc-ram8"];
-    let mut cells: Vec<(usize, &str, bool)> = Vec::new();
+    // Hardware × on-disk-format rows. q4 is swept only where a disk tier
+    // exists (with unlimited RAM nothing is ever read back from NVMe),
+    // and each q4 row takes its ratio from its own matching `-q4`
+    // scenario, so the sweep and the scenario replays stay on the same
+    // number per budget. Guard each lookup: quant_ratio() falls back to
+    // 1.0 for unknown names, which would silently turn a q4 row into a
+    // duplicate fp16 one.
+    let mut hw_rows: Vec<(&str, &str, f64)> = Vec::new();
+    for hw_name in hw_names {
+        hw_rows.push((hw_name, "fp16", 1.0));
+        let q4_scenario = match hw_name {
+            "local-pc-ram16" => Some("mixtral-sim-ram16-q4"),
+            "local-pc-ram8" => Some("mixtral-sim-ram8-q4"),
+            _ => None,
+        };
+        if let Some(sc) = q4_scenario {
+            let ratio = presets.quant_ratio(sc);
+            ensure!(ratio < 1.0, "scenario '{sc}' is missing or not quantized (ratio {ratio})");
+            hw_rows.push((hw_name, "q4", ratio));
+        }
+    }
+    // (workload index, hardware/format row index, predictive)
+    let mut cells: Vec<(usize, usize, bool)> = Vec::new();
     for wi in 0..workloads.len() {
-        for hw_name in hw_names {
+        for ri in 0..hw_rows.len() {
             for predictive in [true, false] {
-                cells.push((wi, hw_name, predictive));
+                cells.push((wi, ri, predictive));
             }
         }
     }
     let workloads_ref = &workloads;
-    let mut results = ctx.parallel_cells(cells, move |(wi, hw_name, predictive)| {
+    let hw_rows_ref = &hw_rows;
+    let mut results = ctx.parallel_cells(cells, move |(wi, ri, predictive)| {
         || -> Result<(String, String, RunMetrics)> {
+            let (hw_name, _, ratio) = hw_rows_ref[ri];
             let hw = presets.hw(hw_name)?;
-            let cost = CostModel::new(model, hw);
+            let cost = CostModel::new(model, hw).with_quant_ratio(ratio);
             let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
             let slots = if store.is_unlimited() {
                 "all".to_string()
@@ -228,40 +256,39 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
         let mut t = Table::new(vec![
             "hardware",
             "host RAM",
+            "disk fmt",
             "host slots",
             "tok/s predictive",
             "tok/s lru-spill",
             "placement gain",
             "disk miss (pred)",
             "ahead hit rate",
+            "demand NVMe",
+            "transcode",
             "NVMe hidden",
         ]);
-        for hw_name in hw_names {
+        for (ri, &(hw_name, fmt_name, _)) in hw_rows.iter().enumerate() {
             let (cell, pred) = results.next().expect("predictive cell");
-            assert_eq!(cell, (wi, hw_name, true), "cell order diverged");
+            assert_eq!(cell, (wi, ri, true), "cell order diverged");
             let (cell, lru) = results.next().expect("lru cell");
-            assert_eq!(cell, (wi, hw_name, false), "cell order diverged");
+            assert_eq!(cell, (wi, ri, false), "cell order diverged");
             let (ram, slots, pred) = pred?;
             let (_, _, lru) = lru?;
             let unlimited = slots == "all";
+            let dash = |s: String| if unlimited { "-".to_string() } else { s };
             t.row(vec![
                 hw_name.to_string(),
                 ram,
+                fmt_name.to_string(),
                 slots,
                 format!("{:.2}", pred.tokens_per_s()),
                 format!("{:.2}", lru.tokens_per_s()),
-                if unlimited {
-                    "-".to_string()
-                } else {
-                    times(pred.tokens_per_s() / lru.tokens_per_s().max(1e-9))
-                },
+                dash(times(pred.tokens_per_s() / lru.tokens_per_s().max(1e-9))),
                 pct(pred.disk_miss_rate()),
-                if unlimited { "-".to_string() } else { pct(pred.promote_ahead_hit_rate()) },
-                if unlimited {
-                    "-".to_string()
-                } else {
-                    format!("{:.1} ms", pred.nvme_overlap_hidden_ns as f64 / 1e6)
-                },
+                dash(pct(pred.promote_ahead_hit_rate())),
+                dash(format!("{:.1} ms", pred.nvme_demand_ns as f64 / 1e6)),
+                dash(format!("{:.1} ms", pred.transcode_ns as f64 / 1e6)),
+                dash(format!("{:.1} ms", pred.nvme_overlap_hidden_ns as f64 / 1e6)),
             ]);
         }
         out.push_str(&format!("**{wname}**\n\n{}\n", t.render()));
@@ -274,7 +301,9 @@ pub fn ram_budget(ctx: &ExptCtx) -> Result<String> {
     out.push_str(
         "\nExpected shape: tokens/s degrades as the host budget shrinks; predictive placement \
          claws part of the cliff back by hiding NVMe reads behind the previous layer's compute \
-         and spilling by predicted workload instead of recency.\n",
+         and spilling by predicted workload instead of recency; the q4 on-disk format cuts \
+         demand NVMe time further (smaller reads, transcode overlapped on its own CPU lane) at \
+         the price of the reported transcode column.\n",
     );
     Ok(out)
 }

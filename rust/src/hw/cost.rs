@@ -8,7 +8,9 @@
 //! numbers and Table 3 model dimensions (or, alternatively, by actually
 //! warm-up-profiling the PJRT kernels — see [`super::calibrate`]).
 
-use crate::config::{HwConfig, ModelPreset, PaperDims};
+use anyhow::Result;
+
+use crate::config::{HwConfig, ModelPreset, PaperDims, Presets};
 
 /// Virtual nanoseconds.
 pub type Ns = u64;
@@ -25,16 +27,57 @@ pub struct CostModel {
     pub paper: PaperDims,
     /// Scaled k (experts activated per token) — same as paper dims.
     pub top_k: usize,
+    /// On-disk bytes per fp16 byte for NVMe-resident experts (the tiered
+    /// store's quantized on-disk format; 1.0 = fp16 on disk, the format
+    /// host RAM and the GPU execute from). Set from the scenario's
+    /// `quant_ratio` preset field via [`Self::with_quant_ratio`].
+    pub disk_quant_ratio: f64,
 }
 
 impl CostModel {
     pub fn new(model: &ModelPreset, hw: &HwConfig) -> Self {
-        CostModel { hw: hw.clone(), paper: model.paper.clone(), top_k: model.paper.top_k }
+        CostModel {
+            hw: hw.clone(),
+            paper: model.paper.clone(),
+            top_k: model.paper.top_k,
+            disk_quant_ratio: 1.0,
+        }
+    }
+
+    /// The one-stop constructor for scenario consumers: resolve a
+    /// scenario (or plain model preset) name and apply its on-disk
+    /// quantization ratio. Prefer this over hand-pairing
+    /// `CostModel::new` with [`Presets::quant_ratio`] — a `-q4` scenario
+    /// built through here can never silently run with fp16-on-disk costs.
+    pub fn for_scenario(presets: &Presets, name: &str) -> Result<Self> {
+        let (model, hw) = presets.scenario(name)?;
+        Ok(Self::new(model, hw).with_quant_ratio(presets.quant_ratio(name)))
+    }
+
+    /// Apply a scenario's on-disk quantization ratio (see
+    /// [`crate::config::Scenario::quant_ratio`]). Experts on NVMe then
+    /// occupy `ratio × fp16` bytes: reads/writes move fewer bytes, but a
+    /// promoted expert must pass the CPU [`Self::transcode_time`] stage
+    /// before host RAM holds usable fp16 weights.
+    pub fn with_quant_ratio(mut self, ratio: f64) -> Self {
+        // hard assert, not debug: a silently-clamped ratio would distort
+        // every NVMe timing downstream (config parsing validates its own
+        // inputs with a proper error; reaching here out of range is a
+        // caller bug, and this is a cold construction path)
+        assert!(ratio > 0.0 && ratio <= 1.0, "quant ratio must be in (0, 1], got {ratio}");
+        self.disk_quant_ratio = ratio;
+        self
     }
 
     /// Bytes of one expert's parameters.
     pub fn expert_bytes(&self) -> f64 {
         self.paper.expert_bytes()
+    }
+
+    /// Bytes of one expert as stored on NVMe (quantized when the scenario
+    /// keeps offloaded experts in a compressed on-disk format).
+    pub fn disk_expert_bytes(&self) -> f64 {
+        self.expert_bytes() * self.disk_quant_ratio
     }
 
     /// CPU execution time for one expert with workload `w` tokens (Eq. 4's
@@ -66,15 +109,39 @@ impl CostModel {
     }
 
     /// NVMe read time for one expert (disk → host promotion in the tiered
-    /// store). This is the third-tier analogue of [`Self::trans_time`].
+    /// store), computed from the *on-disk* bytes — a quantized format
+    /// makes the read proportionally cheaper. This is the third-tier
+    /// analogue of [`Self::trans_time`].
     pub fn nvme_read_time(&self) -> Ns {
-        ns(self.expert_bytes() / self.hw.nvme_read_bw + self.hw.nvme_latency_s)
+        ns(self.disk_expert_bytes() / self.hw.nvme_read_bw + self.hw.nvme_latency_s)
     }
 
     /// NVMe write time for one expert (host → disk spill, when the store
-    /// runs with write-back enabled).
+    /// runs with write-back enabled). Write-back persists the on-disk
+    /// format, so it too moves the (possibly quantized) disk bytes.
     pub fn nvme_write_time(&self) -> Ns {
-        ns(self.expert_bytes() / self.hw.nvme_write_bw + self.hw.nvme_latency_s)
+        ns(self.disk_expert_bytes() / self.hw.nvme_write_bw + self.hw.nvme_latency_s)
+    }
+
+    /// CPU transcode (dequantize) time for one expert promoted from a
+    /// quantized on-disk format: memory-bound — stream the quantized
+    /// bytes in and write the fp16 weights out through host DRAM — plus
+    /// one CPU dispatch. Zero when the on-disk format is already fp16
+    /// (ratio 1.0): the read lands directly usable.
+    pub fn transcode_time(&self) -> Ns {
+        if self.disk_quant_ratio >= 1.0 {
+            return 0;
+        }
+        ns((self.disk_expert_bytes() + self.expert_bytes()) / self.hw.cpu_mem_bw
+            + self.hw.cpu_dispatch_s)
+    }
+
+    /// End-to-end disk → usable-in-host-RAM latency estimate for one
+    /// expert: NVMe read of the on-disk bytes chained into the CPU
+    /// transcode stage. What assignment cost estimates and the store's
+    /// host-wait snapshots charge for a disk-resident expert.
+    pub fn nvme_fetch_time(&self) -> Ns {
+        self.nvme_read_time() + self.transcode_time()
     }
 
     /// Total paper-scale bytes of all routed experts (all layers) — the
@@ -205,6 +272,55 @@ mod tests {
             let c = cm(m);
             assert!(c.nvme_read_time() > c.trans_time(), "{m}: NVMe read must cost more");
             assert!(c.nvme_write_time() >= c.nvme_read_time(), "{m}: writes are slower");
+        }
+    }
+
+    #[test]
+    fn quantized_disk_tier_is_asymmetric() {
+        // A q4 on-disk format trades the big fp16 NVMe read for a small
+        // quantized read plus a CPU transcode stage — and wins.
+        let fp16 = cm("mixtral-sim");
+        let q4 = cm("mixtral-sim").with_quant_ratio(0.28);
+        assert_eq!(fp16.disk_quant_ratio, 1.0, "fp16 on disk is the default");
+        assert_eq!(fp16.transcode_time(), 0, "fp16 on disk needs no transcode");
+        assert_eq!(fp16.nvme_fetch_time(), fp16.nvme_read_time());
+        assert_eq!(fp16.disk_expert_bytes(), fp16.expert_bytes());
+        // on-disk bytes and read/write times shrink with the ratio
+        assert!(q4.disk_expert_bytes() < 0.3 * fp16.disk_expert_bytes());
+        assert!(q4.nvme_read_time() < fp16.nvme_read_time() / 3);
+        assert!(q4.nvme_write_time() < fp16.nvme_write_time() / 3);
+        // the transcode stage is real and separately priced
+        assert!(q4.transcode_time() > 0);
+        assert_eq!(q4.nvme_fetch_time(), q4.nvme_read_time() + q4.transcode_time());
+        // the asymmetry pays: small read + CPU transcode beats the big read
+        assert!(q4.nvme_fetch_time() < fp16.nvme_fetch_time());
+        // host RAM and PCIe still see fp16 (the transcode's output format)
+        assert_eq!(q4.expert_bytes(), fp16.expert_bytes());
+        assert_eq!(q4.trans_time(), fp16.trans_time());
+    }
+
+    #[test]
+    fn for_scenario_applies_the_preset_quant_ratio() {
+        let p = Presets::load_default().unwrap();
+        let q4 = CostModel::for_scenario(&p, "mixtral-sim-ram16-q4").unwrap();
+        let fp16 = CostModel::for_scenario(&p, "mixtral-sim-ram16").unwrap();
+        assert!(q4.disk_quant_ratio < 1.0, "q4 scenario must carry its ratio");
+        assert_eq!(fp16.disk_quant_ratio, 1.0);
+        assert!(q4.nvme_read_time() < fp16.nvme_read_time());
+        // plain model presets resolve too (default hardware, fp16 disk)
+        let plain = CostModel::for_scenario(&p, "mixtral-sim").unwrap();
+        assert_eq!(plain.disk_quant_ratio, 1.0);
+        assert!(CostModel::for_scenario(&p, "no-such-scenario").is_err());
+    }
+
+    #[test]
+    fn quant_ratio_applies_across_models() {
+        for m in ["mixtral-sim", "deepseek-sim", "qwen-sim"] {
+            let fp16 = cm(m);
+            let q4 = cm(m).with_quant_ratio(0.28);
+            assert!(q4.nvme_read_time() < fp16.nvme_read_time(), "{m}");
+            assert!(q4.transcode_time() > 0, "{m}");
+            assert!(q4.nvme_fetch_time() < fp16.nvme_fetch_time(), "{m}");
         }
     }
 

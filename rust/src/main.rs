@@ -108,7 +108,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     let model = presets.model(&model_name)?;
     let hw = presets.hw(&hw_name)?;
-    let cost = CostModel::new(model, hw);
+    // Scenarios may keep offloaded experts quantized on NVMe (`*-q4`):
+    // smaller reads, plus a CPU transcode stage per promotion. The hand
+    // pairing (instead of `CostModel::for_scenario`) exists only because
+    // `--hw` may override the scenario's hardware; `quant` always follows
+    // the scenario itself.
+    let quant = presets.quant_ratio(&preset);
+    let cost = CostModel::new(model, hw).with_quant_ratio(quant);
     let calib = prep::ensure_calib(&model_name)?;
     let trace = prep::ensure_trace(&model_name, "c4-sim", 32, 16, 64)?;
     let cfg = FrameworkCfg::paper_default(&model.sim);
@@ -183,6 +189,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             fmt_ns(m.nvme_demand_ns),
             fmt_ns(m.nvme_overlap_hidden_ns)
         );
+        println!(
+            "  on-disk format    : {} — transcode {}, {:.2} GB NVMe saved",
+            if quant < 1.0 { format!("quantized ({quant:.2}x fp16)") } else { "fp16".into() },
+            fmt_ns(m.transcode_ns),
+            m.disk_bytes_saved as f64 / 1e9
+        );
     }
     Ok(())
 }
@@ -207,7 +219,9 @@ struct BenchEntry {
 /// be zero after the scratch buffers warm up. The `mixtral-sim-ram16`
 /// scenario attaches the memory-limited tiered store, so the predictive
 /// placement path (promote-ahead, score demotion, NVMe arrival tracking)
-/// is on both the perf trajectory and the `--strict` allocation gate.
+/// is on both the perf trajectory and the `--strict` allocation gate;
+/// `mixtral-sim-ram16-q4` repeats it with the quantized on-disk format,
+/// putting the asymmetric read/transcode lanes under the same gate.
 /// Results go to stdout and to a machine-readable `BENCH_simrun.json`.
 fn cmd_bench(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 256).max(32);
@@ -219,10 +233,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     let presets = Presets::load_default()?;
     let mut entries: Vec<BenchEntry> = Vec::new();
-    for scenario in ["deepseek-sim", "qwen-sim", "mixtral-sim", "mixtral-sim-ram16"] {
+    for scenario in
+        ["deepseek-sim", "qwen-sim", "mixtral-sim", "mixtral-sim-ram16", "mixtral-sim-ram16-q4"]
+    {
         let (model, hw) = presets.scenario(scenario)?;
         let dims = &model.sim;
-        let cost = CostModel::new(model, hw);
+        let cost = CostModel::for_scenario(&presets, scenario)?;
         let trace =
             synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, steps, 0xbe7c);
         let freq = vec![vec![0.0; dims.n_routed]; dims.layers];

@@ -56,6 +56,17 @@ pub struct RunMetrics {
     /// expert was consumed: latency hidden behind earlier layers' compute.
     pub nvme_overlap_hidden_ns: u64,
 
+    // --- quantized on-disk format (asymmetric read/transcode tier) -------------
+    /// CPU transcode lane busy time: dequantizing promoted experts into
+    /// usable host weights (plus re-quantizing spilled ones when
+    /// write-back is on). It runs on its own virtual-time lane —
+    /// overlapping subsequent NVMe reads — and never occupies the GPU
+    /// compute or copy streams.
+    pub transcode_ns: u64,
+    /// NVMe bytes the quantized on-disk format kept off the link (fp16
+    /// bytes minus on-disk bytes, over promotions + write-back spills).
+    pub disk_bytes_saved: u64,
+
     // --- tier hit counters (per executed expert, by weight source) ------------
     /// Executions whose weights were already on the GPU (cache/prefetch).
     pub tier_gpu_hits: u64,
@@ -189,6 +200,8 @@ impl RunMetrics {
         self.promote_ahead_misses += o.promote_ahead_misses;
         self.nvme_demand_ns += o.nvme_demand_ns;
         self.nvme_overlap_hidden_ns += o.nvme_overlap_hidden_ns;
+        self.transcode_ns += o.transcode_ns;
+        self.disk_bytes_saved += o.disk_bytes_saved;
         self.tier_gpu_hits += o.tier_gpu_hits;
         self.tier_host_hits += o.tier_host_hits;
         self.tier_disk_misses += o.tier_disk_misses;
@@ -259,6 +272,8 @@ mod tests {
             promote_ahead_misses: 1,
             nvme_demand_ns: 90,
             nvme_overlap_hidden_ns: 40,
+            transcode_ns: 25,
+            disk_bytes_saved: 11,
             ..Default::default()
         };
         a.merge(&b);
@@ -271,6 +286,8 @@ mod tests {
         assert_eq!(a.promote_ahead_misses, 1);
         assert_eq!(a.nvme_demand_ns, 90);
         assert_eq!(a.nvme_overlap_hidden_ns, 40);
+        assert_eq!(a.transcode_ns, 25);
+        assert_eq!(a.disk_bytes_saved, 11);
     }
 
     #[test]

@@ -12,9 +12,13 @@
 //!   exactly one *primary* tier (the conservation invariant the property
 //!   tests assert).
 //! * [`TransferScheduler`] — distinct virtual-time NVMe read/write streams
-//!   (disk↔host). Host↔GPU traffic stays on the existing
-//!   [`crate::hw::GpuPipeline`] PCIe lanes; promotions from disk chain
-//!   NVMe-read → PCIe.
+//!   (disk↔host) plus a CPU *transcode lane*: scenarios with a quantized
+//!   on-disk format (`quant_ratio` < 1 in `configs/presets.json`) read
+//!   fewer bytes off NVMe but must dequantize before host RAM holds
+//!   usable fp16 weights — the transcode runs on its own lane, so it
+//!   overlaps subsequent reads and all GPU work. Host↔GPU traffic stays
+//!   on the existing [`crate::hw::GpuPipeline`] PCIe lanes; promotions
+//!   from disk chain NVMe-read → transcode → PCIe.
 //! * [`TieredStore`] — per-expert residency state plus a slot allocator for
 //!   the host tier. Promotions (disk→host→GPU) are charged to the streams;
 //!   GPU cache evictions *demote into the store* instead of dropping.

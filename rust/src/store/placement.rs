@@ -19,9 +19,16 @@
 //!   (arXiv:2504.05897) and DAOP (arXiv:2501.10375) both observe that
 //!   prediction only pays when it drives placement, not just fetch.
 //!
+//! Quantized on-disk formats (scenario `quant_ratio` < 1) compound with
+//! promote-ahead: each speculative read moves fewer bytes, so the read
+//! stream's backlog gate admits more promotions per layer, and the CPU
+//! transcode stage of each promotion overlaps the next expert's read on
+//! its own lane (see [`crate::store::TransferScheduler`]).
+//!
 //! The policy is pure virtual-time bookkeeping over pre-allocated tables:
 //! zero steady-state allocation (enforced by `tests/alloc_audit.rs` on the
-//! `mixtral-sim-ram16` scenario) and bit-deterministic for a fixed seed.
+//! `mixtral-sim-ram16` scenario, fp16 and q4 on-disk) and
+//! bit-deterministic for a fixed seed.
 
 use crate::hw::{CostModel, Ns};
 

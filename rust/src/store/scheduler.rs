@@ -1,28 +1,45 @@
-//! Virtual-time NVMe transfer streams (disk ↔ host).
+//! Virtual-time NVMe transfer streams (disk ↔ host) plus the CPU
+//! transcode lane.
 //!
 //! Mirrors [`crate::hw::GpuPipeline`]'s stream discipline for the third
-//! tier: one read stream (disk → host promotions) and one write stream
-//! (host → disk spills), each FIFO with its own free-time pointer, so
-//! promotions and demotions overlap each other and all GPU work. A
-//! promotion that feeds a PCIe upload chains: the PCIe transfer may start
-//! only at the NVMe arrival instant.
+//! tier: one read stream (disk → host promotions), one write stream
+//! (host → disk spills), and one CPU transcode lane (dequantizing a
+//! quantized on-disk format into usable fp16 host weights), each FIFO
+//! with its own free-time pointer. Promotions, demotions and transcodes
+//! therefore overlap each other and all GPU work: while one expert
+//! dequantizes, the next expert's (smaller, quantized) read is already in
+//! flight. A promotion that feeds a PCIe upload chains: the PCIe transfer
+//! may start only at the transcode-completion (host-usable) instant.
 
 use crate::hw::Ns;
 
-/// Two independent NVMe virtual-time streams plus traffic counters.
+/// Three independent virtual-time lanes plus traffic counters.
 #[derive(Debug, Clone, Default)]
 pub struct TransferScheduler {
     read_free: Ns,
     write_free: Ns,
-    /// Busy-time integrals per stream.
+    transcode_free: Ns,
+    /// Start of the contiguous busy run ending at each lane's free
+    /// pointer — lets [`Self::rebase_and_clear`] carry the residual busy
+    /// time of in-flight work across a metrics reset instead of dropping
+    /// it (transfers straddling the reset used to be undercounted).
+    read_run: Ns,
+    write_run: Ns,
+    transcode_run: Ns,
+    /// Busy-time integrals per lane.
     pub read_busy: Ns,
     pub write_busy: Ns,
-    /// Bytes moved per direction.
+    /// CPU transcode (dequantize) lane busy time — a quantized disk read
+    /// becomes usable host weights only after this stage.
+    pub transcode_busy: Ns,
+    /// Bytes moved per direction (on-disk bytes: quantized when the
+    /// scenario stores experts compressed).
     pub read_bytes: u64,
     pub write_bytes: u64,
-    /// Transfer counts per direction.
+    /// Operation counts per lane.
     pub reads: u64,
     pub writes: u64,
+    pub transcodes: u64,
 }
 
 impl TransferScheduler {
@@ -40,9 +57,17 @@ impl TransferScheduler {
         self.write_free
     }
 
+    /// Next instant the transcode lane is free.
+    pub fn transcode_free_at(&self) -> Ns {
+        self.transcode_free
+    }
+
     /// Schedule a disk→host read at or after `now`; returns arrival time.
     pub fn schedule_read(&mut self, now: Ns, dur: Ns, bytes: u64) -> Ns {
         let start = self.read_free.max(now);
+        if start > self.read_free {
+            self.read_run = start;
+        }
         self.read_free = start + dur;
         self.read_busy += dur;
         self.read_bytes += bytes;
@@ -53,6 +78,9 @@ impl TransferScheduler {
     /// Schedule a host→disk write at or after `now`; returns completion.
     pub fn schedule_write(&mut self, now: Ns, dur: Ns, bytes: u64) -> Ns {
         let start = self.write_free.max(now);
+        if start > self.write_free {
+            self.write_run = start;
+        }
         self.write_free = start + dur;
         self.write_busy += dur;
         self.write_bytes += bytes;
@@ -60,18 +88,62 @@ impl TransferScheduler {
         self.write_free
     }
 
-    /// Re-base stream clocks after a metrics reset (mirrors
+    /// Schedule the CPU transcode (dequantize) of one promoted expert at
+    /// or after `after` (its NVMe read completion); returns the instant
+    /// the fp16 host copy is usable. FIFO on its own lane, so transcodes
+    /// overlap subsequent reads and all GPU/PCIe work.
+    pub fn schedule_transcode(&mut self, after: Ns, dur: Ns) -> Ns {
+        let start = self.transcode_free.max(after);
+        if start > self.transcode_free {
+            self.transcode_run = start;
+        }
+        self.transcode_free = start + dur;
+        self.transcode_busy += dur;
+        self.transcodes += 1;
+        self.transcode_free
+    }
+
+    /// Re-base lane clocks after a metrics reset (mirrors
     /// `StepSimulator::reset_metrics` re-basing in-flight prefetches) and
-    /// clear the counters.
+    /// clear the counters. Busy integrals restart at the *residual* of
+    /// work still in flight at `base` — the portion of the current busy
+    /// run extending past the reset — so post-reset utilization metrics
+    /// don't undercount transfers straddling the reset (they used to be
+    /// zeroed outright). Bytes and operation counts are attributed to the
+    /// period that issued them and drop to zero. The residual is exact
+    /// whenever the lane's current busy run began at or before `base` —
+    /// always true for the read stream (every read is issued at a sim
+    /// instant the next layer barrier has absorbed by reset time); items
+    /// chained off future completions — transcodes after their reads,
+    /// quantized write-backs after their re-quantize — can start runs
+    /// past `base`, where only the latest run's residual is kept (runs
+    /// older than it are conservatively dropped).
+    ///
+    /// Attribution note: busy time is charged at *issue* time, so a
+    /// straddling transfer appears in full in the issuing period's
+    /// integral AND as a residual in the next period's. Per-period
+    /// utilization is therefore never undercounted, but summing busy
+    /// integrals across a reset double-counts the straddling portion —
+    /// don't add phase-split busy numbers; every current caller resets
+    /// exactly once, after a discarded warmup.
     pub fn rebase_and_clear(&mut self, base: Ns) {
+        fn residual(free: Ns, run: Ns, base: Ns) -> Ns {
+            free.saturating_sub(run.max(base))
+        }
+        self.read_busy = residual(self.read_free, self.read_run, base);
+        self.write_busy = residual(self.write_free, self.write_run, base);
+        self.transcode_busy = residual(self.transcode_free, self.transcode_run, base);
         self.read_free = self.read_free.saturating_sub(base);
         self.write_free = self.write_free.saturating_sub(base);
-        self.read_busy = 0;
-        self.write_busy = 0;
+        self.transcode_free = self.transcode_free.saturating_sub(base);
+        self.read_run = self.read_run.saturating_sub(base);
+        self.write_run = self.write_run.saturating_sub(base);
+        self.transcode_run = self.transcode_run.saturating_sub(base);
         self.read_bytes = 0;
         self.write_bytes = 0;
         self.reads = 0;
         self.writes = 0;
+        self.transcodes = 0;
     }
 }
 
@@ -106,14 +178,67 @@ mod tests {
     }
 
     #[test]
-    fn rebase_shifts_clocks_and_clears_counters() {
+    fn transcode_lane_chains_reads_and_overlaps_the_next_read() {
+        let mut s = TransferScheduler::new();
+        let r1 = s.schedule_read(0, 100, 8);
+        let t1 = s.schedule_transcode(r1, 30);
+        assert_eq!(t1, 130, "transcode starts at read completion");
+        // the second read runs while expert 1 transcodes
+        let r2 = s.schedule_read(0, 100, 8);
+        assert_eq!(r2, 200, "read stream never waits on the transcode lane");
+        let t2 = s.schedule_transcode(r2, 30);
+        assert_eq!(t2, 230, "second transcode waits for its own read, lane was idle");
+        assert_eq!(s.transcode_busy, 60);
+        assert_eq!(s.transcodes, 2);
+        // a busy transcode lane queues FIFO
+        let t3 = s.schedule_transcode(0, 50);
+        assert_eq!(t3, 280);
+    }
+
+    #[test]
+    fn rebase_shifts_clocks_and_keeps_residual_busy() {
         let mut s = TransferScheduler::new();
         s.schedule_read(0, 1000, 4);
         s.schedule_write(0, 300, 4);
         s.rebase_and_clear(400);
         assert_eq!(s.read_free_at(), 600);
         assert_eq!(s.write_free_at(), 0);
-        assert_eq!(s.read_busy, 0);
+        // the regression the bugfix pins: the read still has 600 ns in
+        // flight past the reset — busy carries the residual, not zero
+        assert_eq!(s.read_busy, 600);
+        assert_eq!(s.write_busy, 0, "the write finished before the reset");
+        assert_eq!(s.read_bytes, 0, "bytes belong to the issuing period");
         assert_eq!(s.write_bytes, 0);
+        assert_eq!(s.reads, 0);
+    }
+
+    #[test]
+    fn rebase_residual_ignores_pre_gap_busy_time() {
+        // Two reads separated by an idle gap: only the in-flight portion
+        // of the *current* run survives the reset, not the whole backlog.
+        let mut s = TransferScheduler::new();
+        s.schedule_read(0, 100, 1); // done at 100
+        s.schedule_read(500, 100, 1); // idle 100..500, done at 600
+        s.rebase_and_clear(550);
+        assert_eq!(s.read_busy, 50, "residual = portion of the run past the reset");
+        assert_eq!(s.read_free_at(), 50);
+        // a run starting entirely after the reset carries fully over
+        let mut s2 = TransferScheduler::new();
+        s2.schedule_read(0, 100, 1);
+        s2.rebase_and_clear(700);
+        assert_eq!(s2.read_busy, 0, "fully-landed transfers leave no residual");
+        assert_eq!(s2.read_free_at(), 0);
+    }
+
+    #[test]
+    fn rebase_carries_transcode_residual() {
+        let mut s = TransferScheduler::new();
+        let r = s.schedule_read(0, 100, 1);
+        s.schedule_transcode(r, 60); // busy 100..160
+        s.rebase_and_clear(120);
+        assert_eq!(s.read_busy, 0);
+        assert_eq!(s.transcode_busy, 40, "in-flight transcode keeps its residual");
+        assert_eq!(s.transcode_free_at(), 40);
+        assert_eq!(s.transcodes, 0);
     }
 }

@@ -29,10 +29,13 @@ pub struct StoreCfg {
     /// paper's two-tier assumption).
     pub host_slots: usize,
     /// Charge an NVMe write when spilling host → disk. Off by default:
-    /// expert weights are immutable and the disk master copy always
-    /// exists, so a spill of the canonical format is a free drop. Enable
-    /// for stores whose host pool holds a transcoded (e.g. dequantized)
-    /// format that must be persisted to NVMe scratch.
+    /// expert weights are immutable and the on-disk master copy (in its
+    /// on-disk, possibly quantized format) always exists, so a spill is a
+    /// free drop — even for quantized scenarios, where re-promotion
+    /// simply re-reads and re-transcodes. Enable for scratch stores
+    /// without master copies; write-back then persists the *on-disk*
+    /// format — charged quantized bytes, after a re-quantize pass on the
+    /// CPU transcode lane.
     pub spill_writeback: bool,
 }
 
@@ -53,6 +56,18 @@ pub struct TieredStore {
     /// Experts whose primary tier is Host or Gpu (inclusive host↔GPU).
     host_used: usize,
     host_slots: usize,
+    /// Host slots the *initial placement* borrowed beyond the configured
+    /// budget (caches seed GPU-resident sets before the store syncs, and
+    /// each GPU expert pins a host staging copy). Tracked separately so
+    /// the seeding can never silently widen `host_slots` itself — only
+    /// `sync_layer` may grow this allowance, and each demand-pressure
+    /// spill repays one borrowed slot, so the effective capacity decays
+    /// back to the configured budget after warmup.
+    seed_slack: usize,
+    /// True only inside `sync_layer`'s initial-placement reconciliation —
+    /// guards the one `admit_to_gpu` path allowed to claim a slot for a
+    /// disk-resident expert.
+    syncing: bool,
     spill_writeback: bool,
     /// LRU clock for host-victim selection.
     clock: u64,
@@ -97,6 +112,10 @@ pub struct TieredStore {
     /// the time the expert was consumed — latency hidden behind earlier
     /// layers' compute.
     pub overlap_hidden_ns: Ns,
+    /// NVMe bytes the quantized on-disk format kept off the link: fp16
+    /// bytes minus on-disk bytes, summed over promotions and write-back
+    /// spills. Zero when experts are stored fp16 on disk.
+    pub bytes_saved: u64,
 }
 
 impl TieredStore {
@@ -131,6 +150,8 @@ impl TieredStore {
             tier,
             host_used: placed,
             host_slots: cfg.host_slots,
+            seed_slack: 0,
+            syncing: false,
             spill_writeback: cfg.spill_writeback,
             clock: 0,
             last_use: vec![0; total],
@@ -151,6 +172,7 @@ impl TieredStore {
             ahead_misses: 0,
             demand_read_ns: 0,
             overlap_hidden_ns: 0,
+            bytes_saved: 0,
         }
     }
 
@@ -181,8 +203,24 @@ impl TieredStore {
         self.n_experts
     }
 
+    /// The configured host budget. Never inflated by initial placement —
+    /// slots the cache seeding borrowed beyond it live in
+    /// [`Self::seed_slack`].
     pub fn host_slots(&self) -> usize {
         self.host_slots
+    }
+
+    /// Host slots the initial placement borrowed beyond the configured
+    /// budget: zero when seeding fits the budget, and repaid one slot per
+    /// demand-pressure spill afterwards.
+    pub fn seed_slack(&self) -> usize {
+        self.seed_slack
+    }
+
+    /// Effective host capacity: the configured budget plus the seed
+    /// allowance.
+    fn effective_slots(&self) -> usize {
+        self.host_slots.saturating_add(self.seed_slack)
     }
 
     pub fn host_used(&self) -> usize {
@@ -255,7 +293,7 @@ impl TieredStore {
     ) {
         out.clear();
         let base = layer * self.n_experts;
-        let nvme = cost.nvme_read_time();
+        let nvme = cost.nvme_fetch_time();
         for e in 0..self.n_experts {
             let i = base + e;
             out.push(match self.tier[i] {
@@ -322,6 +360,7 @@ impl TieredStore {
         self.ahead_misses = 0;
         self.demand_read_ns = 0;
         self.overlap_hidden_ns = 0;
+        self.bytes_saved = 0;
     }
 
     /// Metrics-period boundary: shift every virtual-time clock back by
@@ -369,40 +408,77 @@ impl TieredStore {
         self.arrival(layer, e, now, cost, true)
     }
 
+    /// On-disk bytes of one expert transfer, with the bytes-saved
+    /// bookkeeping shared by both NVMe directions (promotion reads and
+    /// write-back spills) — one definition, so the conservation property
+    /// tests can't be broken by the two sites drifting apart.
+    fn disk_bytes_accounted(&mut self, cost: &CostModel) -> u64 {
+        let bytes = cost.disk_expert_bytes() as u64;
+        self.bytes_saved += (cost.expert_bytes() as u64).saturating_sub(bytes);
+        bytes
+    }
+
+    /// Charge one disk→host promotion on the NVMe lanes: a read of the
+    /// *on-disk* (possibly quantized) bytes, chained into the CPU
+    /// transcode lane when the on-disk format is not fp16. Returns the
+    /// instant the fp16 host copy is usable and books the bytes the
+    /// quantized format kept off the NVMe link.
+    fn schedule_promotion(&mut self, now: Ns, cost: &CostModel) -> Ns {
+        let bytes = self.disk_bytes_accounted(cost);
+        let read_done = self.xfer.schedule_read(now, cost.nvme_read_time(), bytes);
+        let transcode = cost.transcode_time();
+        if transcode == 0 {
+            read_done
+        } else {
+            self.xfer.schedule_transcode(read_done, transcode)
+        }
+    }
+
     /// Unified arrival: touch, promote from disk if needed. `demand`
     /// classifies a promotion's NVMe read: true for access-time fetches on
     /// the execution path (CPU exec, GPU demand fetch), false for
     /// speculative consumers (prefetch chaining, cache-update loads) —
     /// `nvme_demand_ns` must measure only the reads predictive placement
-    /// exists to remove, identically across placement policies.
+    /// exists to remove, identically across placement policies. The
+    /// returned arrival is the transcode completion for quantized on-disk
+    /// formats: host RAM holds usable fp16 weights only then.
     fn arrival(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel, demand: bool) -> Ns {
         let i = self.idx(layer, e);
         self.touch(layer, e);
         if self.tier[i] != Tier::Disk {
             return self.host_ready[i].max(now);
         }
-        if self.host_used >= self.host_slots {
+        if self.host_used >= self.effective_slots() {
             if let Some(v) = self.spill_victim(i) {
                 self.spill_index(v, now, cost);
             }
+            // Repay one warmup-borrowed slot per demand-pressure event:
+            // spill a second victim and shrink the seed allowance, so the
+            // effective capacity decays back to the configured budget as
+            // real traffic arrives instead of staying inflated at the
+            // seeding peak forever.
+            if self.seed_slack > 0 {
+                if let Some(v) = self.spill_victim(i) {
+                    self.spill_index(v, now, cost);
+                    self.seed_slack -= 1;
+                }
+            }
         }
-        if self.host_used >= self.host_slots {
+        if self.host_used >= self.effective_slots() {
             // every slot is pinned by a GPU-resident staging copy: those
             // set a hard floor below which the budget cannot shrink — grow
             // it and record the overcommit.
-            self.host_slots = self.host_used + 1;
+            self.host_slots = (self.host_used + 1).saturating_sub(self.seed_slack);
             self.overcommits += 1;
         }
         self.tier[i] = Tier::Host;
         self.member_add(i);
         self.host_used += 1;
         self.promotions += 1;
-        let dur = cost.nvme_read_time();
         if demand {
-            self.demand_read_ns += dur;
+            self.demand_read_ns += cost.nvme_read_time();
         }
-        let bytes = cost.expert_bytes() as u64;
-        let arr = self.xfer.schedule_read(now, dur, bytes);
+        let arr = self.schedule_promotion(now, cost);
         self.host_ready[i] = arr;
         arr
     }
@@ -414,7 +490,8 @@ impl TieredStore {
         if self.ahead[i] {
             self.ahead[i] = false;
             self.ahead_hits += 1;
-            let dur = cost.nvme_read_time();
+            // the full fetch — NVMe read plus transcode — can hide
+            let dur = cost.nvme_fetch_time();
             let wait = self.host_ready[i].saturating_sub(now).min(dur);
             self.overlap_hidden_ns += dur - wait;
         }
@@ -449,11 +526,15 @@ impl TieredStore {
         if self.tier[i] != Tier::Disk {
             return false;
         }
+        // the backlog gate watches the read stream only: quantized
+        // on-disk formats shrink each read, so the same gate admits more
+        // speculative promotions per layer — exactly the asymmetry the
+        // format buys (transcodes queue on their own lane).
         let dur = cost.nvme_read_time();
         if self.xfer.read_free_at() > now + self.placement.max_backlog * dur {
             return false;
         }
-        if self.host_used >= self.host_slots {
+        if self.host_used >= self.effective_slots() {
             let v = match self.spill_victim(i) {
                 Some(v) if self.score[v] < self.score[i] => v,
                 _ => return false,
@@ -467,8 +548,7 @@ impl TieredStore {
         self.ahead_issued += 1;
         self.ahead[i] = true;
         self.touch(layer, e);
-        let bytes = cost.expert_bytes() as u64;
-        self.host_ready[i] = self.xfer.schedule_read(now, dur, bytes);
+        self.host_ready[i] = self.schedule_promotion(now, cost);
         true
     }
 
@@ -518,8 +598,16 @@ impl TieredStore {
             self.ahead_misses += 1;
         }
         if self.spill_writeback {
-            let bytes = cost.expert_bytes() as u64;
-            self.xfer.schedule_write(now, cost.nvme_write_time(), bytes);
+            // Write-back persists the on-disk format: quantized bytes, not
+            // the fp16 host copy — which first costs the reverse transcode
+            // (re-quantize) on the shared CPU transcode lane; the NVMe
+            // write starts only once the encoded bytes exist. Symmetric
+            // with promotion (read → dequantize), so neither direction of
+            // the asymmetric format is priced as free.
+            let bytes = self.disk_bytes_accounted(cost);
+            let t = cost.transcode_time();
+            let encoded = if t == 0 { now } else { self.xfer.schedule_transcode(now, t) };
+            self.xfer.schedule_write(encoded, cost.nvme_write_time(), bytes);
         }
     }
 
@@ -533,10 +621,21 @@ impl TieredStore {
         self.touch(layer, e);
         match self.tier[i] {
             Tier::Disk => {
-                // initial placement path (cache seeded before the store syncs)
+                // Initial placement (cache seeded before the store synced):
+                // claim a host staging slot without NVMe traffic. Slots
+                // beyond the configured budget are tracked as `seed_slack`,
+                // NOT folded into `host_slots` — the configured budget must
+                // survive warmup, so mid-run admissions can't silently
+                // inflate host RAM. Outside `sync_layer` the caller must
+                // have promoted via `ensure_host` first.
+                debug_assert!(
+                    self.syncing,
+                    "disk-tier GPU admission outside initial placement \
+                     (layer {layer}, expert {e})"
+                );
                 self.host_used += 1;
-                if self.host_used > self.host_slots {
-                    self.host_slots = self.host_used;
+                if self.host_used > self.effective_slots() {
+                    self.seed_slack = self.host_used - self.host_slots;
                 }
             }
             Tier::Host => self.member_remove(i),
@@ -564,12 +663,14 @@ impl TieredStore {
             return;
         }
         self.synced[layer] = true;
+        self.syncing = true;
         for e in 0..self.n_experts.min(gpu_mask.len()) {
             let i = self.idx(layer, e);
             if gpu_mask[e] && self.tier[i] != Tier::Gpu {
                 self.admit_to_gpu(layer, e);
             }
         }
+        self.syncing = false;
     }
 
     /// (gpu, host, disk) expert counts across the whole grid.
@@ -615,10 +716,10 @@ impl TieredStore {
                 self.host_used
             ));
         }
-        if self.host_used > self.host_slots {
+        if self.host_used > self.effective_slots() {
             return Err(format!(
-                "host over capacity: {} used > {} slots",
-                self.host_used, self.host_slots
+                "host over capacity: {} used > {} slots + {} seed slack",
+                self.host_used, self.host_slots, self.seed_slack
             ));
         }
         for (i, &a) in self.ahead.iter().enumerate() {
@@ -877,6 +978,104 @@ mod tests {
     }
 
     #[test]
+    fn quantized_promotion_chains_read_and_transcode() {
+        let c = cost().with_quant_ratio(0.25);
+        assert!(c.transcode_time() > 0);
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        let arr = s.ensure_host(0, 2, 0, &c);
+        // host arrival is the transcode completion, not the read's
+        assert_eq!(arr, c.nvme_read_time() + c.transcode_time());
+        // NVMe moved only the on-disk (quantized) bytes
+        assert_eq!(s.xfer.read_bytes, c.disk_expert_bytes() as u64);
+        assert_eq!(s.xfer.transcode_busy, c.transcode_time());
+        assert_eq!(s.xfer.transcodes, 1);
+        // the demand charge is the read — the transcode lane is separate
+        assert_eq!(s.demand_read_ns, c.nvme_read_time());
+        assert_eq!(
+            s.bytes_saved,
+            c.expert_bytes() as u64 - c.disk_expert_bytes() as u64
+        );
+        // a second promotion's read overlaps the first expert's transcode
+        let arr2 = s.ensure_host(0, 3, 0, &c);
+        assert_eq!(
+            arr2,
+            2 * c.nvme_read_time() + c.transcode_time(),
+            "expert 3's read runs while expert 2 transcodes"
+        );
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn quantized_writeback_spills_quantized_bytes() {
+        let c = cost().with_quant_ratio(0.25);
+        let mut s = TieredStore::new(2, 4, StoreCfg { host_slots: 1, spill_writeback: true });
+        s.ensure_host(1, 3, 0, &c);
+        assert_eq!(s.spills, 1);
+        assert_eq!(s.xfer.write_bytes, c.disk_expert_bytes() as u64);
+        assert_eq!(s.xfer.write_busy, c.nvme_write_time());
+        assert!((s.xfer.write_bytes as f64) < c.expert_bytes(), "spill re-quantizes");
+        // the spill's re-quantize and the promotion's dequantize share the
+        // transcode lane, and the NVMe write waits for the encoded bytes
+        assert_eq!(s.xfer.transcodes, 2);
+        assert_eq!(s.xfer.write_free_at(), c.transcode_time() + c.nvme_write_time());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn seeded_gpu_admissions_never_widen_the_configured_budget() {
+        // Bugfix regression: the initial-placement Disk path in
+        // `admit_to_gpu` used to fold borrowed slots into `host_slots`,
+        // permanently inflating the configured budget. The allowance now
+        // lives in `seed_slack` and the budget survives warmup.
+        let c = cost();
+        let mut s = TieredStore::new(2, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        // initial fill (expert-major, 2 slots over 2 layers): e0 of both
+        // layers is host-resident; the cache seeds 3 GPU residents in
+        // layer 0, two of them disk-resident
+        s.sync_layer(0, &[true, true, true, false]);
+        assert_eq!(s.host_slots(), 2, "configured budget survives seeding");
+        assert_eq!(s.seed_slack(), 2, "borrowed slots are tracked separately");
+        assert_eq!(s.host_used(), 4);
+        s.check_invariants().unwrap();
+        // demand traffic fits the effective capacity without inflating
+        // the budget any further
+        s.ensure_host(1, 3, 0, &c);
+        assert_eq!(s.host_slots(), 2, "mid-run promotions must not inflate the budget");
+        assert_eq!(s.seed_slack(), 2, "GPU-pinned slots cannot be repaid yet");
+        assert_eq!(s.spills, 1, "the promotion displaced a host victim");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn demand_pressure_repays_the_seed_allowance() {
+        // Once seeded GPU residents demote back to host, every
+        // demand-pressure spill repays one borrowed slot: the effective
+        // capacity decays to the configured budget instead of staying
+        // inflated at the warmup peak.
+        let c = cost();
+        let mut s = TieredStore::new(1, 8, StoreCfg { host_slots: 2, ..Default::default() });
+        s.sync_layer(0, &[true, true, true, true, false, false, false, false]);
+        assert_eq!(s.seed_slack(), 2, "e2/e3 were seeded beyond the 2-slot budget");
+        assert_eq!(s.host_used(), 4);
+        for e in 0..4 {
+            s.demote_gpu(0, e);
+        }
+        assert_eq!(s.host_used(), 4, "demotion keeps the pinned host copies");
+        // two pressure events each spill a victim for the promotion plus
+        // one extra to repay the allowance
+        s.ensure_host(0, 5, 0, &c);
+        assert_eq!(s.seed_slack(), 1);
+        assert_eq!(s.host_used(), 3);
+        s.ensure_host(0, 6, 0, &c);
+        assert_eq!(s.seed_slack(), 0, "allowance fully repaid");
+        assert_eq!(s.host_used(), 2);
+        assert_eq!(s.host_used(), s.host_slots(), "back at the configured budget");
+        assert_eq!(s.spills, 4);
+        assert_eq!(s.promotions, 2);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
     fn rebase_shifts_host_arrivals_and_clears_counters() {
         let c = cost();
         let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
@@ -886,7 +1085,10 @@ mod tests {
         let dur = c.nvme_read_time();
         s.rebase_and_clear(dur / 2);
         assert_eq!(s.ahead_issued, 0);
-        assert_eq!(s.xfer.read_busy, 0);
+        // the in-flight read's residual survives the reset (busy time past
+        // the reset instant must not be undercounted)
+        assert_eq!(s.xfer.read_busy, dur - dur / 2);
+        assert_eq!(s.xfer.read_bytes, 0, "bytes belong to the issuing period");
         assert!(!s.pending(0, 2, dur), "ahead flag belongs to the cleared period");
         // the in-flight arrival shifted with the clock and is still waited on
         let arr = s.host_arrival(0, 2, 0, &c);

@@ -29,17 +29,20 @@ fn run_step_steady_state_is_allocation_free() {
     // memory-limited `mixtral-sim-ram16` scenario, which exercises the
     // tiered store's predictive-placement hot path (promote-ahead, score
     // demotion, host-arrival tracking) and must be just as allocation-free
-    // as the two-tier bundles.
+    // as the two-tier bundles. `mixtral-sim-ram16-q4` repeats that with
+    // the quantized on-disk format: smaller NVMe reads chained into the
+    // CPU transcode lane, equally allocation-free.
     let presets = Presets::load_default().unwrap();
     for (scenario, fw) in [
         ("mixtral-sim", Framework::Dali),
         ("deepseek-sim", Framework::Dali),
         ("mixtral-sim", Framework::HybriMoE),
         ("mixtral-sim-ram16", Framework::Dali),
+        ("mixtral-sim-ram16-q4", Framework::Dali),
     ] {
         let (model, hw) = presets.scenario(scenario).unwrap();
         let dims = &model.sim;
-        let cost = CostModel::new(model, hw);
+        let cost = CostModel::for_scenario(&presets, scenario).unwrap();
         let trace =
             synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 96, 0xa11c);
         let freq = vec![vec![0.0; dims.n_routed]; dims.layers];

@@ -126,26 +126,35 @@ fn scratch_reuse_matches_naive_reference_replay() {
 fn memory_limited_store_replays_are_bit_identical() {
     // The placement subsystem (EWMA scores, promote-ahead, arrival table)
     // must preserve the determinism guarantee: same seed + same store
-    // budget → field-for-field identical RunMetrics, predictive or not.
+    // budget → field-for-field identical RunMetrics, predictive or not —
+    // and with the quantized on-disk format (read + transcode lanes) just
+    // the same.
     let p = Presets::load_default().unwrap();
-    let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
-    let c = CostModel::new(model, hw);
-    let dims = &model.sim;
-    let t = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 8, 40, LAYERS_SEED);
-    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
-    let ids: Vec<usize> = (0..6).collect();
-    for predictive in [false, true] {
-        let run = || {
-            let mut bundle = dali_bundle(dims.layers, dims.n_routed);
-            if predictive {
-                bundle.placement = PlacementCfg::predictive(1);
-            }
-            let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
-            replay_decode_store(&t, &ids, 32, &c, bundle, &freq, 1, 7, Some(store))
-        };
-        let a = run();
-        assert_eq!(a, run(), "predictive={predictive}: store replays must be bit-identical");
-        assert!(a.tier_disk_misses + a.store_promote_ahead > 0, "store must be exercised");
+    for scenario in ["mixtral-sim-ram16", "mixtral-sim-ram16-q4"] {
+        let (model, hw) = p.scenario(scenario).unwrap();
+        let c = CostModel::for_scenario(&p, scenario).unwrap();
+        let dims = &model.sim;
+        let t =
+            synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 8, 40, LAYERS_SEED);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let ids: Vec<usize> = (0..6).collect();
+        for predictive in [false, true] {
+            let run = || {
+                let mut bundle = dali_bundle(dims.layers, dims.n_routed);
+                if predictive {
+                    bundle.placement = PlacementCfg::predictive(1);
+                }
+                let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+                replay_decode_store(&t, &ids, 32, &c, bundle, &freq, 1, 7, Some(store))
+            };
+            let a = run();
+            assert_eq!(
+                a,
+                run(),
+                "{scenario} predictive={predictive}: store replays must be bit-identical"
+            );
+            assert!(a.tier_disk_misses + a.store_promote_ahead > 0, "store must be exercised");
+        }
     }
 }
 

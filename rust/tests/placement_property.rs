@@ -179,12 +179,14 @@ fn promote_ahead_layer_never_overflows_budgets() {
 
 /// DALI bundle replay over the synthetic locality workload with the
 /// `mixtral-sim-ram16` store; `predictive` toggles the placement policy
-/// (false = PR 1's reactive LRU-spill baseline).
-fn ram16_replay(predictive: bool, seed: u64) -> RunMetrics {
+/// (false = PR 1's reactive LRU-spill baseline) and `quant_ratio` picks
+/// the on-disk expert format (1.0 = fp16, the `-q4` scenarios' ratio for
+/// quantized).
+fn ram16_replay_fmt(predictive: bool, seed: u64, quant_ratio: f64) -> RunMetrics {
     let p = Presets::load_default().unwrap();
     let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
     assert!(hw.is_memory_limited(&model.paper));
-    let c = CostModel::new(model, hw);
+    let c = CostModel::new(model, hw).with_quant_ratio(quant_ratio);
     let dims = &model.sim;
     let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48, 0x7157);
     let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
@@ -198,6 +200,10 @@ fn ram16_replay(predictive: bool, seed: u64) -> RunMetrics {
     assert!(!store.is_unlimited());
     let ids: Vec<usize> = (0..8).collect();
     replay_decode_store(&trace, &ids, 40, &c, bundle, &freq, dims.n_shared, seed, Some(store))
+}
+
+fn ram16_replay(predictive: bool, seed: u64) -> RunMetrics {
+    ram16_replay_fmt(predictive, seed, 1.0)
 }
 
 #[test]
@@ -236,11 +242,45 @@ fn predictive_placement_beats_lru_spill_on_locality_trace() {
 }
 
 #[test]
+fn q4_on_disk_cuts_demand_nvme_vs_fp16() {
+    // ISSUE acceptance, regression-locked: on mixtral-sim-ram16 with the
+    // locality trace, the q4 on-disk format shows strictly lower demand
+    // NVMe time than fp16-on-disk (the `expt ram` quant column's claim) —
+    // the asymmetry is actually modeled: smaller reads on the demand
+    // path, a real transcode stage on its own lane, NVMe bytes saved.
+    // Holds under predictive placement and the LRU-spill baseline alike.
+    let p = Presets::load_default().unwrap();
+    let q4_ratio = p.quant_ratio("mixtral-sim-ram16-q4");
+    assert!(q4_ratio < 1.0, "the q4 scenario must exist and be quantized");
+    for predictive in [true, false] {
+        let fp16 = ram16_replay_fmt(predictive, 7, 1.0);
+        let q4 = ram16_replay_fmt(predictive, 7, q4_ratio);
+        assert!(fp16.nvme_demand_ns > 0, "baseline must pay demand reads");
+        assert_eq!(fp16.transcode_ns, 0, "fp16 on disk never transcodes");
+        assert_eq!(fp16.disk_bytes_saved, 0);
+        assert!(
+            q4.nvme_demand_ns < fp16.nvme_demand_ns,
+            "predictive={predictive}: q4 demand NVMe must be strictly lower: {} vs {}",
+            q4.nvme_demand_ns,
+            fp16.nvme_demand_ns
+        );
+        assert!(q4.transcode_ns > 0, "q4 promotions pass the transcode lane");
+        assert!(q4.disk_bytes_saved > 0, "quantized reads keep bytes off NVMe");
+        assert!(q4.nvme_read_bytes < fp16.nvme_read_bytes);
+    }
+}
+
+#[test]
 fn placement_comparison_pair_replays_bit_identically() {
     // Both sides of the comparison stay deterministic — the speedup claim
-    // is meaningless if either side drifts run-to-run.
+    // is meaningless if either side drifts run-to-run. The quantized
+    // format preserves the guarantee (its transcode lane is pure
+    // virtual-time bookkeeping).
     assert_eq!(ram16_replay(true, 11), ram16_replay(true, 11));
     assert_eq!(ram16_replay(false, 11), ram16_replay(false, 11));
+    let p = Presets::load_default().unwrap();
+    let q4 = p.quant_ratio("mixtral-sim-ram16-q4");
+    assert_eq!(ram16_replay_fmt(true, 11, q4), ram16_replay_fmt(true, 11, q4));
 }
 
 #[test]

@@ -106,6 +106,67 @@ fn prop_nvme_streams_account_all_promotions() {
     });
 }
 
+#[test]
+fn prop_quantized_disk_accounting_conserves() {
+    // Quantized-format invariants: on-disk bytes never exceed the fp16
+    // host footprint, every promotion moves exactly the on-disk bytes and
+    // chains exactly one transcode, bytes-saved accounting matches
+    // (promotions + write-backs) × (fp16 − disk) bytes, and demand
+    // arrivals land at transcode completion — across random promote/spill
+    // cycles and ratios.
+    let base = cost("mixtral-sim", "local-pc-ram16");
+    for_seeds(60, |seed| {
+        let mut rng = DetRng::new(seed ^ 0x9a4d);
+        let ratio = 0.15 + 0.1 * (seed % 9) as f64; // 0.15 ..= 0.95
+        let c = base.clone().with_quant_ratio(ratio);
+        let writeback = rng.chance(0.5);
+        let mut st =
+            TieredStore::new(2, 8, StoreCfg { host_slots: 3, spill_writeback: writeback });
+        for i in 0..60 {
+            st.ensure_host(rng.usize_below(2), rng.usize_below(8), i, &c);
+        }
+        let disk_bytes = c.disk_expert_bytes() as u64;
+        let fp_bytes = c.expert_bytes() as u64;
+        assert!(disk_bytes <= fp_bytes, "on-disk format never exceeds fp16");
+        assert_eq!(st.xfer.read_bytes, st.promotions * disk_bytes);
+        assert_eq!(st.xfer.read_busy, st.promotions * c.nvme_read_time());
+        // one transcode per promotion (dequantize) — plus one per
+        // write-back spill (re-quantize) — iff the format is quantized
+        let transcodes = if c.transcode_time() == 0 {
+            0
+        } else if writeback {
+            st.promotions + st.spills
+        } else {
+            st.promotions
+        };
+        assert_eq!(st.xfer.transcodes, transcodes);
+        assert_eq!(st.xfer.transcode_busy, transcodes * c.transcode_time());
+        let mut saved = st.promotions * (fp_bytes - disk_bytes);
+        if writeback {
+            assert_eq!(st.xfer.write_bytes, st.spills * disk_bytes);
+            saved += st.spills * (fp_bytes - disk_bytes);
+        } else {
+            assert_eq!(st.xfer.write_bytes, 0);
+        }
+        assert_eq!(st.bytes_saved, saved);
+        st.check_invariants().unwrap();
+    });
+}
+
+#[test]
+fn quantized_demand_arrival_is_transcode_completion() {
+    // A single demand promotion on an idle store: the returned host
+    // arrival is read + transcode — the transcode appears in the demand
+    // arrival, never on any GPU stream (the store owns no GPU lanes).
+    let c = cost("mixtral-sim", "local-pc-ram16").with_quant_ratio(0.28);
+    let mut st = TieredStore::new(1, 8, StoreCfg { host_slots: 4, ..Default::default() });
+    let arr = st.ensure_host(0, 6, 0, &c);
+    assert!(c.transcode_time() > 0);
+    assert_eq!(arr, c.nvme_read_time() + c.transcode_time());
+    assert_eq!(st.demand_read_ns, c.nvme_read_time(), "demand charge is the read alone");
+    st.check_invariants().unwrap();
+}
+
 fn mk_step(layers: usize, n: usize, w: &[u32]) -> BatchStep {
     assert_eq!(w.len(), n);
     BatchStep {
