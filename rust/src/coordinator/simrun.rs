@@ -20,6 +20,15 @@
 //! `layer × expert` arrival table instead of a `HashMap`; policies write
 //! into caller buffers via the `*_into` APIs. `tests/alloc_audit.rs`
 //! enforces this with a counting global allocator.
+//!
+//! **Tracing:** the simulator is generic over a [`TraceSink`] and emits a
+//! typed [`Event`] at every scheduling decision (assignment devices,
+//! prefetch issue/hit/wasted, cache swaps, per-lane busy intervals, step
+//! boundaries). With the default [`NullSink`] every emission site —
+//! guarded `if S::ENABLED` — monomorphizes away, so the hot path stays
+//! zero-alloc and bit-identical; the `alloc_audit` and `determinism`
+//! suites run against this default. Attach a sink with
+//! [`StepSimulator::with_sink`] or [`replay_decode_traced`].
 
 use crate::coordinator::assignment::{AssignCtx, Assigner, Assignment, SolveCost};
 use crate::coordinator::cache::{ExpertCache, Swap};
@@ -27,6 +36,7 @@ use crate::coordinator::prefetch::{top_n_into, PrefetchCtx, Prefetcher};
 use crate::hw::{CostModel, GpuPipeline, Ns, TransferKind};
 use crate::metrics::RunMetrics;
 use crate::store::{placement, PlacementCfg, Tier, TieredStore};
+use crate::trace::{Event, Lane, NullSink, TraceSink};
 use crate::util::DetRng;
 use crate::workload::trace::BatchStep;
 use crate::workload::Trace;
@@ -113,8 +123,10 @@ impl StepScratch {
     }
 }
 
-/// The virtual-time step simulator.
-pub struct StepSimulator<'a> {
+/// The virtual-time step simulator, generic over a trace sink. The
+/// default [`NullSink`] is statically disabled, so untraced users (every
+/// pre-existing call site) pay nothing and compile unchanged.
+pub struct StepSimulator<'a, S: TraceSink = NullSink> {
     cost: &'a CostModel,
     pub policy: PolicyBundle,
     /// Calibration activation frequencies per layer (EdgeMoE predictor) —
@@ -140,6 +152,9 @@ pub struct StepSimulator<'a> {
     /// evictions into demotions, and charges NVMe promotions.
     store: Option<TieredStore>,
     scratch: StepScratch,
+    /// Steps retired so far (both phases) — the `StepEnd` event index.
+    steps_done: u64,
+    sink: S,
 }
 
 impl<'a> StepSimulator<'a> {
@@ -168,6 +183,35 @@ impl<'a> StepSimulator<'a> {
             last_assignments: vec![None; layers],
             store: None,
             scratch: StepScratch::with_dims(n_routed),
+            steps_done: 0,
+            sink: NullSink,
+        }
+    }
+}
+
+impl<'a, S: TraceSink> StepSimulator<'a, S> {
+    /// Replace the trace sink (typically on a freshly built simulator).
+    /// Consumes `self` because the sink type is part of the simulator's
+    /// type; all accumulated state carries over.
+    pub fn with_sink<T: TraceSink>(self, sink: T) -> StepSimulator<'a, T> {
+        StepSimulator {
+            cost: self.cost,
+            policy: self.policy,
+            calib_freq: self.calib_freq,
+            gpu: self.gpu,
+            now: self.now,
+            metrics: self.metrics,
+            rng: self.rng,
+            prefetch_arrival: self.prefetch_arrival,
+            decode_steps_done: self.decode_steps_done,
+            layers: self.layers,
+            n_routed: self.n_routed,
+            n_shared: self.n_shared,
+            last_assignments: self.last_assignments,
+            store: self.store,
+            scratch: self.scratch,
+            steps_done: self.steps_done,
+            sink,
         }
     }
 
@@ -204,7 +248,7 @@ impl<'a> StepSimulator<'a> {
                 } else {
                     self.metrics.tier_host_hits += 1;
                 }
-                st.host_arrival(l, e, now, cost)
+                st.host_arrival_t(l, e, now, cost, &mut self.sink)
             }
             None => {
                 self.metrics.tier_host_hits += 1;
@@ -227,6 +271,28 @@ impl<'a> StepSimulator<'a> {
         }
         if let Some(st) = self.store.as_mut() {
             st.rebase_and_clear(base);
+        }
+        if S::ENABLED {
+            self.sink.emit(&Event::Reset { at: base });
+            // Carry events: re-seed each NVMe/transcode lane with the
+            // residual of work still in flight at the reset (the store's
+            // busy integrals were just rebased to exactly that residual),
+            // so post-reset per-lane interval sums reconstruct the final
+            // busy counters exactly — residual + every later duration is
+            // precisely the integral `fold_pipeline` reports. The GPU
+            // pipeline is recreated from scratch at reset, so its lanes
+            // need no carry.
+            if let Some(st) = self.store.as_ref() {
+                for (lane, busy, free) in [
+                    (Lane::NvmeRead, st.xfer.read_busy, st.xfer.read_free_at()),
+                    (Lane::NvmeWrite, st.xfer.write_busy, st.xfer.write_free_at()),
+                    (Lane::Transcode, st.xfer.transcode_busy, st.xfer.transcode_free_at()),
+                ] {
+                    if busy > 0 {
+                        self.sink.emit(&Event::LaneBusy { lane, start: free - busy, end: free });
+                    }
+                }
+            }
         }
         self.metrics = RunMetrics::default();
     }
@@ -336,6 +402,29 @@ impl<'a> StepSimulator<'a> {
             };
             self.now += solve;
             self.metrics.sched_ns += solve;
+            if S::ENABLED {
+                // one Assign per non-idle expert, with the priced cost of
+                // the chosen side (what the solver compared)
+                for e in 0..n {
+                    let w = data.workloads[e];
+                    if w == 0 || (!assignment.to_gpu[e] && !assignment.to_cpu[e]) {
+                        continue;
+                    }
+                    let gpu = assignment.to_gpu[e];
+                    let cost_ns = if gpu {
+                        self.cost.t_gpu_compute(w as usize)
+                    } else {
+                        (self.cost.t_cpu(w as usize) as f64 / self.policy.cpu_eff) as Ns
+                    };
+                    self.sink.emit(&Event::Assign {
+                        layer: l as u32,
+                        expert: e as u32,
+                        gpu,
+                        workload: w,
+                        cost_ns,
+                    });
+                }
+            }
 
             // --- cache observation ------------------------------------------
             self.policy.cache.observe(l, &data.workloads, &data.gate_scores);
@@ -368,7 +457,11 @@ impl<'a> StepSimulator<'a> {
             cpu_timeline.sort_unstable_by_key(|&(a, _)| a);
             let mut cpu_end = self.now;
             for &(arrival, dur) in cpu_timeline.iter() {
-                cpu_end = cpu_end.max(arrival) + dur;
+                let start = cpu_end.max(arrival);
+                cpu_end = start + dur;
+                if S::ENABLED {
+                    self.sink.emit(&Event::LaneBusy { lane: Lane::Cpu, start, end: cpu_end });
+                }
             }
             self.metrics.moe_cpu_busy_ns += cpu_total;
 
@@ -389,8 +482,21 @@ impl<'a> StepSimulator<'a> {
                 if cache_resident[e] {
                     self.metrics.cache_hits += 1;
                     self.metrics.tier_gpu_hits += 1;
-                    self.gpu.schedule_expert(self.now, 0, 0, compute);
+                    let out = self.gpu.schedule_expert(self.now, 0, 0, compute);
+                    if S::ENABLED {
+                        self.sink.emit(&Event::LaneBusy {
+                            lane: Lane::GpuCompute,
+                            start: out.compute_end - compute,
+                            end: out.compute_end,
+                        });
+                    }
                     let evicted = self.policy.cache.on_gpu_use(l, e, false);
+                    if S::ENABLED {
+                        if let Some(v) = evicted {
+                            self.sink
+                                .emit(&Event::CacheEvict { layer: l as u32, expert: v as u32 });
+                        }
+                    }
                     if let Some(st) = self.store.as_mut() {
                         st.touch(l, e);
                         if let Some(v) = evicted {
@@ -401,7 +507,14 @@ impl<'a> StepSimulator<'a> {
                     // prefetched: wait for arrival if still in flight,
                     // no new transfer
                     self.metrics.tier_gpu_hits += 1;
-                    self.gpu.schedule_expert(arr.max(self.now), 0, 0, compute);
+                    let out = self.gpu.schedule_expert(arr.max(self.now), 0, 0, compute);
+                    if S::ENABLED {
+                        self.sink.emit(&Event::LaneBusy {
+                            lane: Lane::GpuCompute,
+                            start: out.compute_end - compute,
+                            end: out.compute_end,
+                        });
+                    }
                     if let Some(st) = self.store.as_mut() {
                         st.touch(l, e);
                     }
@@ -410,8 +523,30 @@ impl<'a> StepSimulator<'a> {
                     // first (or join an in-flight predictive promotion),
                     // then the PCIe upload starts at arrival.
                     let ready = self.exec_arrival(l, e);
-                    self.gpu.schedule_expert(ready, trans, bytes, compute);
+                    let out = self.gpu.schedule_expert(ready, trans, bytes, compute);
+                    if S::ENABLED {
+                        if trans > 0 {
+                            self.sink.emit(&Event::LaneBusy {
+                                lane: Lane::PcieDemand,
+                                start: out.copy_end - trans,
+                                end: out.copy_end,
+                            });
+                        }
+                        self.sink.emit(&Event::LaneBusy {
+                            lane: Lane::GpuCompute,
+                            start: out.compute_end - compute,
+                            end: out.compute_end,
+                        });
+                    }
                     let evicted = self.policy.cache.on_gpu_use(l, e, true);
+                    if S::ENABLED {
+                        if let Some(v) = evicted {
+                            self.sink
+                                .emit(&Event::CacheEvict { layer: l as u32, expert: v as u32 });
+                            self.sink
+                                .emit(&Event::CacheAdmit { layer: l as u32, expert: e as u32 });
+                        }
+                    }
                     if let Some(st) = self.store.as_mut() {
                         if let Some(v) = evicted {
                             // the cache admitted the fetched expert: fold the
@@ -425,7 +560,14 @@ impl<'a> StepSimulator<'a> {
             // shared experts always run on GPU on the full token batch
             for _s in 0..self.n_shared {
                 let compute = self.cost.t_gpu_compute(step.tokens);
-                self.gpu.schedule_expert(self.now, 0, 0, compute);
+                let out = self.gpu.schedule_expert(self.now, 0, 0, compute);
+                if S::ENABLED {
+                    self.sink.emit(&Event::LaneBusy {
+                        lane: Lane::GpuCompute,
+                        start: out.compute_end - compute,
+                        end: out.compute_end,
+                    });
+                }
             }
 
             // --- prefetch accounting for this layer's arrivals --------------
@@ -435,6 +577,15 @@ impl<'a> StepSimulator<'a> {
                     *slot = NO_ARRIVAL;
                     if assignment.to_gpu[e] && data.workloads[e] > 0 {
                         self.metrics.prefetch_useful += 1;
+                        if S::ENABLED {
+                            self.sink
+                                .emit(&Event::PrefetchHit { layer: l as u32, expert: e as u32 });
+                        }
+                    } else if S::ENABLED && data.workloads[e] == 0 {
+                        // staged for nothing: the wrong-prediction case the
+                        // paper calls "costly inaccurate prefetches"
+                        self.sink
+                            .emit(&Event::PrefetchWasted { layer: l as u32, expert: e as u32 });
                     }
                 }
             }
@@ -456,6 +607,13 @@ impl<'a> StepSimulator<'a> {
                     let pred_cost = self.cost.gate_time(step.tokens) + self.cost.layer_fixed();
                     let out = self.gpu.schedule_expert(self.now, 0, 0, pred_cost);
                     self.metrics.prefetch_gate_ns += pred_cost;
+                    if S::ENABLED {
+                        self.sink.emit(&Event::LaneBusy {
+                            lane: Lane::GpuCompute,
+                            start: out.compute_end - pred_cost,
+                            end: out.compute_end,
+                        });
+                    }
                     ready = out.compute_end;
                 }
                 let true_next = step.layers.get(l + 1).map(|d| d.workloads.as_slice());
@@ -505,7 +663,9 @@ impl<'a> StepSimulator<'a> {
                     let cost = self.cost;
                     if let Some(st) = self.store.as_mut() {
                         if st.tier(l + 1, e) == Tier::Disk || st.pending(l + 1, e, ready) {
-                            pcie_ready = st.host_arrival_spec(l + 1, e, ready, cost).max(ready);
+                            pcie_ready = st
+                                .host_arrival_spec_t(l + 1, e, ready, cost, &mut self.sink)
+                                .max(ready);
                         }
                     }
                     let arr = self
@@ -513,6 +673,20 @@ impl<'a> StepSimulator<'a> {
                         .schedule_transfer(pcie_ready, trans, bytes, TransferKind::Prefetch);
                     self.prefetch_arrival[next_base + e] = arr;
                     self.metrics.prefetch_issued += 1;
+                    if S::ENABLED {
+                        self.sink.emit(&Event::PrefetchIssue {
+                            layer: (l + 1) as u32,
+                            expert: e as u32,
+                            arrival: arr,
+                        });
+                        if trans > 0 {
+                            self.sink.emit(&Event::LaneBusy {
+                                lane: Lane::PcieSpec,
+                                start: arr - trans,
+                                end: arr,
+                            });
+                        }
+                    }
                     issued += 1;
                 }
                 // Predictive placement: NVMe→host promotions for layer l+1
@@ -525,7 +699,15 @@ impl<'a> StepSimulator<'a> {
                 if placement_on {
                     let cost = self.cost;
                     if let Some(st) = self.store.as_mut() {
-                        placement::promote_ahead_layer(st, l + 1, ranked, scores, ready, cost);
+                        placement::promote_ahead_layer_t(
+                            st,
+                            l + 1,
+                            ranked,
+                            scores,
+                            ready,
+                            cost,
+                            &mut self.sink,
+                        );
                     }
                 }
             }
@@ -548,15 +730,29 @@ impl<'a> StepSimulator<'a> {
                     let mut ready = self.now;
                     let now = self.now;
                     let cost = self.cost;
+                    if S::ENABLED {
+                        self.sink
+                            .emit(&Event::CacheEvict { layer: l as u32, expert: swap.evict as u32 });
+                        self.sink
+                            .emit(&Event::CacheAdmit { layer: l as u32, expert: swap.load as u32 });
+                    }
                     if let Some(st) = self.store.as_mut() {
                         st.demote_gpu(l, swap.evict);
                         if st.tier(l, swap.load) == Tier::Disk || st.pending(l, swap.load, now) {
                             // cache-update traffic: speculative, not demand
-                            ready = st.host_arrival_spec(l, swap.load, now, cost);
+                            ready = st.host_arrival_spec_t(l, swap.load, now, cost, &mut self.sink);
                         }
                         st.admit_to_gpu(l, swap.load);
                     }
-                    self.gpu.schedule_transfer(ready, trans, bytes, TransferKind::CacheUpdate);
+                    let arr =
+                        self.gpu.schedule_transfer(ready, trans, bytes, TransferKind::CacheUpdate);
+                    if S::ENABLED && trans > 0 {
+                        self.sink.emit(&Event::LaneBusy {
+                            lane: Lane::PcieSpec,
+                            start: arr - trans,
+                            end: arr,
+                        });
+                    }
                 }
             }
             match &mut self.last_assignments[l] {
@@ -578,12 +774,28 @@ impl<'a> StepSimulator<'a> {
             }
         }
         self.metrics.layer_steps += self.layers as u64;
+        if S::ENABLED {
+            self.sink.emit(&Event::StepEnd {
+                step: self.steps_done,
+                decode: phase == Phase::Decode,
+                end_ns: self.now,
+                tokens: step.tokens as u32,
+            });
+        }
+        self.steps_done += 1;
     }
 
     /// Fold pipeline counters and close out.
     pub fn finish(mut self) -> RunMetrics {
         self.fold_pipeline();
         self.metrics
+    }
+
+    /// [`Self::finish`], also handing the sink back (to flush a JSON sink
+    /// or read a digest's event count).
+    pub fn finish_with_sink(mut self) -> (RunMetrics, S) {
+        self.fold_pipeline();
+        (self.metrics, self.sink)
     }
 
     /// Fold pipeline counters without consuming (for phase-split metrics).
@@ -611,6 +823,9 @@ impl<'a> StepSimulator<'a> {
             self.metrics.transcode_ns = st.xfer.transcode_busy;
             self.metrics.disk_bytes_saved = st.bytes_saved;
         }
+        // None under the default NullSink — keeps untraced metric equality
+        // (e.g. the unlimited-store transparency tests) exactly as before.
+        self.metrics.trace_digest = self.sink.digest();
     }
 }
 
@@ -644,6 +859,30 @@ pub fn replay_decode_store(
     seed: u64,
     store: Option<TieredStore>,
 ) -> RunMetrics {
+    replay_decode_traced(
+        trace, seq_ids, steps, cost, policy, calib_freq, n_shared, seed, store, NullSink,
+    )
+    .0
+}
+
+/// [`replay_decode_store`] with a trace sink attached: every scheduling
+/// decision of the decode phase (plus the warm-up reset boundary) streams
+/// into `sink`, which is returned alongside the metrics so callers can
+/// flush a JSON sink or read a digest. With [`NullSink`] this is exactly
+/// `replay_decode_store`.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_decode_traced<S: TraceSink>(
+    trace: &Trace,
+    seq_ids: &[usize],
+    steps: usize,
+    cost: &CostModel,
+    policy: PolicyBundle,
+    calib_freq: &[Vec<f64>],
+    n_shared: usize,
+    seed: u64,
+    store: Option<TieredStore>,
+    sink: S,
+) -> (RunMetrics, S) {
     let mut sim = StepSimulator::new(
         cost,
         policy,
@@ -652,7 +891,8 @@ pub fn replay_decode_store(
         trace.n_routed,
         n_shared,
         seed,
-    );
+    )
+    .with_sink(sink);
     if let Some(st) = store {
         sim = sim.with_store(st);
     }
@@ -666,7 +906,7 @@ pub fn replay_decode_store(
         trace.compose_decode_into(seq_ids, s, &mut step);
         sim.run_step(&step, prompt_len + s, Phase::Decode);
     }
-    sim.finish()
+    sim.finish_with_sink()
 }
 
 /// Replay the prefill phase only.

@@ -8,8 +8,9 @@
 //!   ([`coordinator::cache`], §4.3), the tiered GPU/host/NVMe expert
 //!   [`store`] (residency + async transfer scheduling beyond the paper's
 //!   two-tier assumption), the inference engine, baseline frameworks, a
-//!   serving front-end, and the heterogeneous-platform simulator ([`hw`])
-//!   standing in for the paper's RTX 3090 + EPYC testbed.
+//!   serving front-end, the heterogeneous-platform simulator ([`hw`])
+//!   standing in for the paper's RTX 3090 + EPYC testbed, and a structured
+//!   step-[`trace`] subsystem (typed events, zero-cost sinks, run digests).
 //! * **Layer 2** — the JAX MoE model (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts.
 //! * **Layer 1** — Pallas kernels for the expert FFN and fused gate
@@ -28,6 +29,7 @@ pub mod moe;
 pub mod runtime;
 pub mod serve;
 pub mod store;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

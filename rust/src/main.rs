@@ -6,12 +6,25 @@
 //!   prepare [--preset P]          calibrate + generate all standard trace pools
 //!   run --preset P [--framework dali] [--batch 8] [--steps 32]
 //!       [--solve-cost modeled|measured] [--placement auto|on|off]
-//!                                 replay a decode benchmark and print metrics
+//!       [--trace out.jsonl] [--trace-digest] [--synthetic]
+//!                                 replay a decode benchmark and print metrics;
+//!                                 every run also prints a whole-run trace
+//!                                 digest (`trace_digest=0x…`). `--trace`
+//!                                 streams typed scheduling events to a JSONL
+//!                                 file, `--trace-digest` prints only the
+//!                                 audit line, `--synthetic` replays a
+//!                                 generated locality workload (no artifacts
+//!                                 needed — what CI uses)
+//!   trace summarize FILE [--top 10]
+//!                                 aggregate a `--trace` capture: per-lane
+//!                                 utilization, prefetch/promote-ahead
+//!                                 accounting, top-N wasted prefetches
 //!   bench [--steps 256] [--batch 8] [--out BENCH_simrun.json] [--strict]
 //!                                 simulator hot-path throughput + allocation
 //!                                 audit (incl. the memory-limited
-//!                                 store-attached scenario); writes
-//!                                 machine-readable JSON
+//!                                 store-attached scenario) + per-scenario
+//!                                 replay digest (--strict fails on drift);
+//!                                 writes machine-readable JSON
 //!   serve --preset P [--port 8743] [--framework dali]
 //!                                 start the HTTP serving front-end
 //!
@@ -22,9 +35,10 @@ use anyhow::{bail, Result};
 use dali::config::Presets;
 use dali::coordinator::assignment::SolveCost;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
-use dali::coordinator::simrun::{replay_decode_store, Phase, StepSimulator};
+use dali::coordinator::simrun::{replay_decode_traced, Phase, StepSimulator};
 use dali::hw::CostModel;
 use dali::store::{PlacementCfg, TieredStore};
+use dali::trace::{DigestSink, JsonSink, TraceSummary};
 use dali::util::alloc_counter::{alloc_calls, dealloc_calls, CountingAlloc};
 use dali::util::{fmt_ns, repo_root, Args};
 use dali::workload::prep;
@@ -115,10 +129,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     // the scenario itself.
     let quant = presets.quant_ratio(&preset);
     let cost = CostModel::new(model, hw).with_quant_ratio(quant);
-    let calib = prep::ensure_calib(&model_name)?;
-    let trace = prep::ensure_trace(&model_name, "c4-sim", 32, 16, 64)?;
+    // `--synthetic` replays a generated locality workload with a cold
+    // frequency prior instead of the calibrated trace pools — no artifacts
+    // required, so a clean checkout (read: CI) can exercise the full
+    // store + trace path. Same generator and seed as `dali bench`.
+    let (trace, freq) = if args.bool("synthetic") {
+        let dims = &model.sim;
+        let t = synthetic_locality_trace(
+            dims.layers,
+            dims.n_routed,
+            dims.top_k,
+            16,
+            steps.max(32),
+            0xbe7c,
+        );
+        (t, vec![vec![0.0; dims.n_routed]; dims.layers])
+    } else {
+        let calib = prep::ensure_calib(&model_name)?;
+        (prep::ensure_trace(&model_name, "c4-sim", 32, 16, 64)?, calib.freq)
+    };
     let cfg = FrameworkCfg::paper_default(&model.sim);
-    let mut bundle = fw.bundle(&model.sim, &cost, &calib.freq, &cfg);
+    let mut bundle = fw.bundle(&model.sim, &cost, &freq, &cfg);
     // `--solve-cost measured` restores the seed's wall-clock charging
     // (nondeterministic; for calibrating the modeled constants).
     bundle.solve_cost = match args.str_or("solve-cost", "modeled").as_str() {
@@ -137,17 +168,52 @@ fn cmd_run(args: &Args) -> Result<()> {
     let seq_ids: Vec<usize> = (0..batch).collect();
     let store = TieredStore::for_model(hw, &cost, model.sim.layers, model.sim.n_routed);
     let tiered = !store.is_unlimited();
-    let m = replay_decode_store(
-        &trace,
-        &seq_ids,
-        steps,
-        &cost,
-        bundle,
-        &calib.freq,
-        model.sim.n_shared,
-        7,
-        Some(store),
-    );
+    // Every run goes through a digest sink (allocation-free; the whole-run
+    // audit line below is what CI's digest-stability check compares).
+    // `--trace PATH` tees the same event stream into a JSONL file.
+    let m = match args.get("trace") {
+        Some(path) => {
+            let file = std::fs::File::create(path)?;
+            let (m, (_digest, json)) = replay_decode_traced(
+                &trace,
+                &seq_ids,
+                steps,
+                &cost,
+                bundle,
+                &freq,
+                model.sim.n_shared,
+                7,
+                Some(store),
+                (DigestSink::new(), JsonSink::new(file)),
+            );
+            let events = json.events;
+            json.finish()?;
+            println!("trace: {events} events -> {path}");
+            m
+        }
+        None => {
+            replay_decode_traced(
+                &trace,
+                &seq_ids,
+                steps,
+                &cost,
+                bundle,
+                &freq,
+                model.sim.n_shared,
+                7,
+                Some(store),
+                DigestSink::new(),
+            )
+            .0
+        }
+    };
+    if args.bool("trace-digest") {
+        // audit-only mode: just the machine-greppable line below
+        if let Some(d) = m.trace_digest {
+            println!("trace_digest=0x{d:016x}");
+        }
+        return Ok(());
+    }
     println!("preset={preset} framework={} batch={batch} steps={steps}", fw.name());
     println!("  decode speed      : {:.2} tokens/s (simulated)", m.tokens_per_s());
     println!("  virtual time      : {}", fmt_ns(m.total_ns));
@@ -196,7 +262,30 @@ fn cmd_run(args: &Args) -> Result<()> {
             m.disk_bytes_saved as f64 / 1e9
         );
     }
+    if let Some(d) = m.trace_digest {
+        println!("trace_digest=0x{d:016x}");
+    }
     Ok(())
+}
+
+/// `dali trace summarize FILE [--top N]` — aggregate a `--trace` JSONL
+/// capture offline: per-lane busy time/utilization, overlap-hidden time,
+/// prefetch + promote-ahead accounting, and the top-N most-wasted
+/// prefetch targets.
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("summarize") => {
+            let path = match args.positional.get(2) {
+                Some(p) => p.clone(),
+                None => args.require("in")?.to_string(),
+            };
+            let text = std::fs::read_to_string(&path)?;
+            let summary = TraceSummary::from_json_lines(&text)?;
+            print!("{}", summary.render(args.usize_or("top", 10)));
+            Ok(())
+        }
+        other => bail!("unknown trace subcommand {other:?} (expected: summarize FILE [--top N])"),
+    }
 }
 
 /// One preset's hot-path benchmark record.
@@ -208,6 +297,13 @@ struct BenchEntry {
     allocs_per_step: f64,
     deallocs_per_step: f64,
     sim_tokens_per_s: f64,
+    /// Whole-run trace digest of the scenario's replay (every replay in the
+    /// throughput loop runs the same (trace, bundle, seed), so they must all
+    /// produce this digest).
+    trace_digest: u64,
+    /// True if any replay in the loop disagreed — nondeterminism in the
+    /// scheduling path. `--strict` turns this into a failure.
+    digest_drift: bool,
 }
 
 /// `dali bench` — simulator hot-path throughput + allocation audit.
@@ -281,9 +377,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let budget = std::time::Duration::from_millis(600);
         let mut replays = 0u64;
         let mut decode_steps = 0u64;
+        // Every replay runs under the digest sink, so the throughput number
+        // includes the (allocation-free) audit cost and each scenario pins
+        // one digest for the whole loop — drift means the scheduling path
+        // went nondeterministic.
+        let mut run_digest: Option<u64> = None;
+        let mut digest_drift = false;
         while t0.elapsed() < budget {
             let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
-            let mm = replay_decode_store(
+            let (mm, _sink) = replay_decode_traced(
                 &trace,
                 &ids,
                 steps,
@@ -293,7 +395,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 dims.n_shared,
                 7,
                 mk_store(),
+                DigestSink::new(),
             );
+            match (run_digest, mm.trace_digest) {
+                (None, d) => run_digest = d,
+                (Some(a), Some(b)) => digest_drift |= a != b,
+                (Some(_), None) => digest_drift = true,
+            }
             decode_steps += mm.layer_steps / dims.layers as u64;
             replays += 1;
         }
@@ -307,11 +415,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
             allocs_per_step,
             deallocs_per_step,
             sim_tokens_per_s: m.tokens_per_s(),
+            trace_digest: run_digest.unwrap_or(0),
+            digest_drift,
         };
         println!(
             "bench simrun/{scenario:<18} {:>10.0} steps/s  ({} replays, {} layers)  \
-             allocs/step {:.2}  frees/step {:.2}",
-            entry.steps_per_s, entry.replays, dims.layers, allocs_per_step, deallocs_per_step
+             allocs/step {:.2}  frees/step {:.2}  digest 0x{:016x}{}",
+            entry.steps_per_s,
+            entry.replays,
+            dims.layers,
+            allocs_per_step,
+            deallocs_per_step,
+            entry.trace_digest,
+            if entry.digest_drift { "  DRIFT" } else { "" }
         );
         entries.push(entry);
     }
@@ -324,7 +440,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         json.push_str(&format!(
             "    {{\"preset\": \"{}\", \"steps_per_s\": {:.1}, \"layer_steps_per_s\": {:.1}, \
              \"replays\": {}, \"hot_loop_allocs_per_step\": {:.3}, \
-             \"hot_loop_frees_per_step\": {:.3}, \"sim_tokens_per_s\": {:.3}}}{}\n",
+             \"hot_loop_frees_per_step\": {:.3}, \"sim_tokens_per_s\": {:.3}, \
+             \"trace_digest\": \"0x{:016x}\", \"digest_drift\": {}}}{}\n",
             e.preset,
             e.steps_per_s,
             e.layer_steps_per_s,
@@ -332,6 +449,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
             e.allocs_per_step,
             e.deallocs_per_step,
             e.sim_tokens_per_s,
+            e.trace_digest,
+            e.digest_drift,
             if i + 1 == entries.len() { "" } else { "," }
         ));
     }
@@ -343,6 +462,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
         println!("WARNING: hot loop allocated {worst:.2} times/step (expected 0)");
         if strict {
             bail!("--strict: steady-state allocation detected in run_step");
+        }
+    }
+    let drifted: Vec<&str> =
+        entries.iter().filter(|e| e.digest_drift).map(|e| e.preset.as_str()).collect();
+    if !drifted.is_empty() {
+        println!("WARNING: replay digest drift in {drifted:?} (expected bit-identical replays)");
+        if strict {
+            bail!("--strict: trace digest drift across identical replays");
         }
     }
     Ok(())
@@ -362,10 +489,11 @@ fn main() -> Result<()> {
         Some("calibrate") => cmd_calibrate(&args),
         Some("prepare") => cmd_prepare(&args),
         Some("run") => cmd_run(&args),
+        Some("trace") => cmd_trace(&args),
         Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
         Some(other) => {
-            bail!("unknown subcommand '{other}' (info|calibrate|prepare|run|bench|serve)")
+            bail!("unknown subcommand '{other}' (info|calibrate|prepare|run|trace|bench|serve)")
         }
     }
 }

@@ -88,6 +88,13 @@ pub struct RunMetrics {
     pub tokens_in: u64,
     pub tokens_out: u64,
     pub layer_steps: u64,
+
+    // --- trace audit -----------------------------------------------------------
+    /// Whole-run digest from the trace subsystem's digest sink: an FNV-1a
+    /// hash over every emitted scheduling event, in order. `None` under
+    /// the default `NullSink` (tracing off). Equal digests ⇔ identical
+    /// event streams, so one `u64` locks a whole run in golden tests.
+    pub trace_digest: Option<u64>,
 }
 
 impl RunMetrics {
@@ -212,6 +219,16 @@ impl RunMetrics {
         self.tokens_in += o.tokens_in;
         self.tokens_out += o.tokens_out;
         self.layer_steps += o.layer_steps;
+        // Digests are stream hashes, not counters: concatenation order is
+        // meaningless for merged runs, so two present digests combine as
+        // an order-independent wrapping sum (commutative + associative —
+        // parallel and serial sweeps merge to the same value), and a
+        // missing digest on either side poisons the merge to `None` (a
+        // partial audit is no audit).
+        self.trace_digest = match (self.trace_digest, o.trace_digest) {
+            (Some(a), Some(b)) => Some(a.wrapping_add(b)),
+            _ => None,
+        };
     }
 }
 
@@ -288,6 +305,168 @@ mod tests {
         assert_eq!(a.nvme_overlap_hidden_ns, 40);
         assert_eq!(a.transcode_ns, 25);
         assert_eq!(a.disk_bytes_saved, 11);
+    }
+
+    /// Exhaustive-destructure guard: `merge` must support every field.
+    ///
+    /// The struct literal below names all fields (no `..Default`), the
+    /// pattern match binds all fields (no `..` rest), and the assertions
+    /// check each one — so adding a counter to `RunMetrics` without
+    /// wiring it into `merge` fails to COMPILE here (the PR 5
+    /// `transcode_ns` near-miss class), rather than silently merging as
+    /// zero. Field k gets value k+1 (all distinct) and the merged result
+    /// must be exactly 2·(k+1) for counters; the digest follows its own
+    /// documented rule.
+    #[test]
+    fn merge_supports_every_field_exhaustively() {
+        let mk = || RunMetrics {
+            total_ns: 1,
+            attn_ns: 2,
+            gate_ns: 3,
+            prefetch_gate_ns: 4,
+            moe_ns: 5,
+            moe_cpu_busy_ns: 6,
+            moe_gpu_busy_ns: 7,
+            stall_ns: 8,
+            sched_ns: 9,
+            pcie_busy_ns: 10,
+            pcie_demand_bytes: 11,
+            pcie_prefetch_bytes: 12,
+            pcie_cache_bytes: 13,
+            nvme_read_ns: 14,
+            nvme_write_ns: 15,
+            nvme_read_bytes: 16,
+            nvme_write_bytes: 17,
+            store_promotions: 18,
+            store_spills: 19,
+            store_gpu_demotions: 20,
+            store_promote_ahead: 21,
+            promote_ahead_hits: 22,
+            promote_ahead_misses: 23,
+            nvme_demand_ns: 24,
+            nvme_overlap_hidden_ns: 25,
+            transcode_ns: 26,
+            disk_bytes_saved: 27,
+            tier_gpu_hits: 28,
+            tier_host_hits: 29,
+            tier_disk_misses: 30,
+            cache_hits: 31,
+            cache_lookups: 32,
+            prefetch_issued: 33,
+            prefetch_useful: 34,
+            tokens_in: 35,
+            tokens_out: 36,
+            layer_steps: 37,
+            trace_digest: Some(0x1000),
+        };
+        let mut m = mk();
+        m.merge(&mk());
+        let RunMetrics {
+            total_ns,
+            attn_ns,
+            gate_ns,
+            prefetch_gate_ns,
+            moe_ns,
+            moe_cpu_busy_ns,
+            moe_gpu_busy_ns,
+            stall_ns,
+            sched_ns,
+            pcie_busy_ns,
+            pcie_demand_bytes,
+            pcie_prefetch_bytes,
+            pcie_cache_bytes,
+            nvme_read_ns,
+            nvme_write_ns,
+            nvme_read_bytes,
+            nvme_write_bytes,
+            store_promotions,
+            store_spills,
+            store_gpu_demotions,
+            store_promote_ahead,
+            promote_ahead_hits,
+            promote_ahead_misses,
+            nvme_demand_ns,
+            nvme_overlap_hidden_ns,
+            transcode_ns,
+            disk_bytes_saved,
+            tier_gpu_hits,
+            tier_host_hits,
+            tier_disk_misses,
+            cache_hits,
+            cache_lookups,
+            prefetch_issued,
+            prefetch_useful,
+            tokens_in,
+            tokens_out,
+            layer_steps,
+            trace_digest,
+        } = m;
+        for (i, v) in [
+            total_ns,
+            attn_ns,
+            gate_ns,
+            prefetch_gate_ns,
+            moe_ns,
+            moe_cpu_busy_ns,
+            moe_gpu_busy_ns,
+            stall_ns,
+            sched_ns,
+            pcie_busy_ns,
+            pcie_demand_bytes,
+            pcie_prefetch_bytes,
+            pcie_cache_bytes,
+            nvme_read_ns,
+            nvme_write_ns,
+            nvme_read_bytes,
+            nvme_write_bytes,
+            store_promotions,
+            store_spills,
+            store_gpu_demotions,
+            store_promote_ahead,
+            promote_ahead_hits,
+            promote_ahead_misses,
+            nvme_demand_ns,
+            nvme_overlap_hidden_ns,
+            transcode_ns,
+            disk_bytes_saved,
+            tier_gpu_hits,
+            tier_host_hits,
+            tier_disk_misses,
+            cache_hits,
+            cache_lookups,
+            prefetch_issued,
+            prefetch_useful,
+            tokens_in,
+            tokens_out,
+            layer_steps,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            assert_eq!(v, 2 * (i as u64 + 1), "field #{i} must merge additively");
+        }
+        assert_eq!(trace_digest, Some(0x2000), "digests mix as a wrapping sum");
+    }
+
+    #[test]
+    fn merge_digest_rules() {
+        // present + present → order-independent mix (commutative)
+        let a = RunMetrics { trace_digest: Some(7), ..Default::default() };
+        let b = RunMetrics { trace_digest: Some(u64::MAX), ..Default::default() };
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.trace_digest, Some(6), "wrapping sum");
+        assert_eq!(ab.trace_digest, ba.trace_digest, "merge order must not matter");
+        // any missing side poisons the merged digest
+        let none = RunMetrics::default();
+        let mut p = a.clone();
+        p.merge(&none);
+        assert_eq!(p.trace_digest, None);
+        let mut q = none;
+        q.merge(&a);
+        assert_eq!(q.trace_digest, None);
     }
 
     #[test]

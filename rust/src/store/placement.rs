@@ -31,6 +31,7 @@
 //! bit-deterministic for a fixed seed.
 
 use crate::hw::{CostModel, Ns};
+use crate::trace::{NullSink, TraceSink};
 
 use super::tiered::TieredStore;
 
@@ -85,6 +86,21 @@ pub fn promote_ahead_layer(
     now: Ns,
     cost: &CostModel,
 ) -> usize {
+    promote_ahead_layer_t(store, layer, ranked, scores, now, cost, &mut NullSink)
+}
+
+/// [`promote_ahead_layer`] with a trace sink: each issued promotion emits
+/// an `ahead_issue` event (plus its NVMe/transcode lane intervals).
+#[allow(clippy::too_many_arguments)]
+pub fn promote_ahead_layer_t<S: TraceSink>(
+    store: &mut TieredStore,
+    layer: usize,
+    ranked: &[usize],
+    scores: &[f64],
+    now: Ns,
+    cost: &CostModel,
+    sink: &mut S,
+) -> usize {
     let budget = store.placement().ahead;
     let mut issued = 0usize;
     for &e in ranked {
@@ -94,7 +110,7 @@ pub fn promote_ahead_layer(
         if scores[e] <= 0.0 {
             break; // ranked is sorted: nothing predicted beyond this point
         }
-        if store.promote_ahead(layer, e, now, cost) {
+        if store.promote_ahead_t(layer, e, now, cost, sink) {
             issued += 1;
         }
     }

@@ -126,6 +126,24 @@ impl TransferScheduler {
     /// integrals across a reset double-counts the straddling portion —
     /// don't add phase-split busy numbers; every current caller resets
     /// exactly once, after a discarded warmup.
+    ///
+    /// Trace reconstruction: the step-trace subsystem makes these
+    /// integrals auditable from the event stream. At a reset the
+    /// simulator emits one carry `LaneBusy` interval per lane covering
+    /// exactly the rebased residual (`[free − busy, free)` of the
+    /// post-rebase state), so summing a trace's per-lane intervals after
+    /// the last `reset` event reconstructs `read/write/transcode_busy`
+    /// **exactly** — by construction, residual + every duration scheduled
+    /// afterwards is precisely the integral. The trace is the source of
+    /// truth for the *counters*; the counters themselves keep the bounded
+    /// error documented above versus physical ground truth: a lane whose
+    /// items chain off future completions (transcode, quantized
+    /// write-back) can have several distinct busy runs past `base`, and
+    /// only the latest run's residual is carried — older straddling runs
+    /// are conservatively dropped from the post-reset period (each is
+    /// still fully charged to the issuing period). The undercount is
+    /// bounded by the backlog the issue gates allow and is pinned by
+    /// `rebase_keeps_only_the_latest_future_transcode_run` below.
     pub fn rebase_and_clear(&mut self, base: Ns) {
         fn residual(free: Ns, run: Ns, base: Ns) -> Ns {
             free.saturating_sub(run.max(base))
@@ -240,5 +258,34 @@ mod tests {
         assert_eq!(s.transcode_busy, 40, "in-flight transcode keeps its residual");
         assert_eq!(s.transcode_free_at(), 40);
         assert_eq!(s.transcodes, 0);
+    }
+
+    #[test]
+    fn rebase_keeps_only_the_latest_future_transcode_run() {
+        // The documented bounded error of the busy counters: lanes whose
+        // items chain off future completions (transcodes after reads) can
+        // hold several distinct busy runs entirely past the reset instant,
+        // and the run-start carry keeps only the latest one. Two reads
+        // chained into two gapped transcodes: run 100..160, gap, run
+        // 200..260 — a reset at 50 precedes both, but the carried residual
+        // is the latest run's 60 ns, not the physical 120 ns still ahead.
+        let mut s = TransferScheduler::new();
+        let r1 = s.schedule_read(0, 100, 1); // read 0..100
+        s.schedule_transcode(r1, 60); // transcode 100..160
+        let r2 = s.schedule_read(100, 100, 1); // read 100..200
+        s.schedule_transcode(r2, 60); // transcode 200..260 (lane idle 160..200)
+        assert_eq!(s.transcode_busy, 120);
+        s.rebase_and_clear(50);
+        // the read lane's single contiguous run 0..200 carries exactly
+        assert_eq!(s.read_busy, 150, "read lane: one run, exact residual");
+        // the transcode lane drops the older future run (100..160)
+        assert_eq!(
+            s.transcode_busy, 60,
+            "only the latest future transcode run survives the carry"
+        );
+        assert_eq!(s.transcode_free_at(), 210);
+        // the trace-side carry interval [free − busy, free) = [150, 210)
+        // is what post-reset interval sums rebuild — consistent with the
+        // counter by construction, conservative versus ground truth.
     }
 }

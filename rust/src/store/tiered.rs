@@ -17,6 +17,7 @@
 
 use crate::config::HwConfig;
 use crate::hw::{CostModel, Ns};
+use crate::trace::{Event, Lane, NullSink, TraceSink};
 
 use super::placement::PlacementCfg;
 use super::scheduler::TransferScheduler;
@@ -405,7 +406,21 @@ impl TieredStore {
     /// placement). Returns the virtual instant the weights are available
     /// in host RAM (`now` when already resident and nothing in flight).
     pub fn ensure_host(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> Ns {
-        self.arrival(layer, e, now, cost, true)
+        self.ensure_host_t(layer, e, now, cost, &mut NullSink)
+    }
+
+    /// [`Self::ensure_host`] with a trace sink (the `_t` variants thread
+    /// the simulator's sink through the store; the unsuffixed names keep
+    /// every existing call site compiling against a [`NullSink`]).
+    pub fn ensure_host_t<S: TraceSink>(
+        &mut self,
+        layer: usize,
+        e: usize,
+        now: Ns,
+        cost: &CostModel,
+        sink: &mut S,
+    ) -> Ns {
+        self.arrival(layer, e, now, cost, true, sink)
     }
 
     /// On-disk bytes of one expert transfer, with the bytes-saved
@@ -423,14 +438,30 @@ impl TieredStore {
     /// transcode lane when the on-disk format is not fp16. Returns the
     /// instant the fp16 host copy is usable and books the bytes the
     /// quantized format kept off the NVMe link.
-    fn schedule_promotion(&mut self, now: Ns, cost: &CostModel) -> Ns {
+    fn schedule_promotion<S: TraceSink>(&mut self, now: Ns, cost: &CostModel, sink: &mut S) -> Ns {
         let bytes = self.disk_bytes_accounted(cost);
-        let read_done = self.xfer.schedule_read(now, cost.nvme_read_time(), bytes);
+        let read = cost.nvme_read_time();
+        let read_done = self.xfer.schedule_read(now, read, bytes);
+        if S::ENABLED {
+            sink.emit(&Event::LaneBusy {
+                lane: Lane::NvmeRead,
+                start: read_done - read,
+                end: read_done,
+            });
+        }
         let transcode = cost.transcode_time();
         if transcode == 0 {
             read_done
         } else {
-            self.xfer.schedule_transcode(read_done, transcode)
+            let t_done = self.xfer.schedule_transcode(read_done, transcode);
+            if S::ENABLED {
+                sink.emit(&Event::LaneBusy {
+                    lane: Lane::Transcode,
+                    start: t_done - transcode,
+                    end: t_done,
+                });
+            }
+            t_done
         }
     }
 
@@ -442,7 +473,15 @@ impl TieredStore {
     /// exists to remove, identically across placement policies. The
     /// returned arrival is the transcode completion for quantized on-disk
     /// formats: host RAM holds usable fp16 weights only then.
-    fn arrival(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel, demand: bool) -> Ns {
+    fn arrival<S: TraceSink>(
+        &mut self,
+        layer: usize,
+        e: usize,
+        now: Ns,
+        cost: &CostModel,
+        demand: bool,
+        sink: &mut S,
+    ) -> Ns {
         let i = self.idx(layer, e);
         self.touch(layer, e);
         if self.tier[i] != Tier::Disk {
@@ -450,7 +489,7 @@ impl TieredStore {
         }
         if self.host_used >= self.effective_slots() {
             if let Some(v) = self.spill_victim(i) {
-                self.spill_index(v, now, cost);
+                self.spill_index(v, now, cost, sink);
             }
             // Repay one warmup-borrowed slot per demand-pressure event:
             // spill a second victim and shrink the seed allowance, so the
@@ -459,7 +498,7 @@ impl TieredStore {
             // seeding peak forever.
             if self.seed_slack > 0 {
                 if let Some(v) = self.spill_victim(i) {
-                    self.spill_index(v, now, cost);
+                    self.spill_index(v, now, cost, sink);
                     self.seed_slack -= 1;
                 }
             }
@@ -478,15 +517,31 @@ impl TieredStore {
         if demand {
             self.demand_read_ns += cost.nvme_read_time();
         }
-        let arr = self.schedule_promotion(now, cost);
+        let arr = self.schedule_promotion(now, cost, sink);
         self.host_ready[i] = arr;
+        if S::ENABLED {
+            sink.emit(&Event::Fetch {
+                layer: layer as u32,
+                expert: e as u32,
+                demand,
+                arrival: arr,
+            });
+        }
         arr
     }
 
     /// Consume (layer, e)'s predictive promotion if one is outstanding:
     /// records the hit and how much of the NVMe read was already hidden
     /// behind earlier layers' compute by the time of consumption.
-    fn consume_ahead(&mut self, i: usize, now: Ns, cost: &CostModel) {
+    fn consume_ahead<S: TraceSink>(
+        &mut self,
+        layer: usize,
+        e: usize,
+        now: Ns,
+        cost: &CostModel,
+        sink: &mut S,
+    ) {
+        let i = self.idx(layer, e);
         if self.ahead[i] {
             self.ahead[i] = false;
             self.ahead_hits += 1;
@@ -494,22 +549,53 @@ impl TieredStore {
             let dur = cost.nvme_fetch_time();
             let wait = self.host_ready[i].saturating_sub(now).min(dur);
             self.overlap_hidden_ns += dur - wait;
+            if S::ENABLED {
+                sink.emit(&Event::AheadHit {
+                    layer: layer as u32,
+                    expert: e as u32,
+                    hidden_ns: dur - wait,
+                });
+            }
         }
     }
 
     /// Host arrival for an execution-path access (CPU execution, GPU
     /// demand fetch) — a promotion here is a demand-path NVMe read.
     pub fn host_arrival(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> Ns {
-        self.consume_ahead(self.idx(layer, e), now, cost);
-        self.arrival(layer, e, now, cost, true)
+        self.host_arrival_t(layer, e, now, cost, &mut NullSink)
+    }
+
+    /// [`Self::host_arrival`] with a trace sink.
+    pub fn host_arrival_t<S: TraceSink>(
+        &mut self,
+        layer: usize,
+        e: usize,
+        now: Ns,
+        cost: &CostModel,
+        sink: &mut S,
+    ) -> Ns {
+        self.consume_ahead(layer, e, now, cost, sink);
+        self.arrival(layer, e, now, cost, true, sink)
     }
 
     /// Host arrival for a speculative consumer (prefetch-chained PCIe
     /// upload, cache-update load) — promotes if needed, but the read is
     /// not charged to the demand path.
     pub fn host_arrival_spec(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> Ns {
-        self.consume_ahead(self.idx(layer, e), now, cost);
-        self.arrival(layer, e, now, cost, false)
+        self.host_arrival_spec_t(layer, e, now, cost, &mut NullSink)
+    }
+
+    /// [`Self::host_arrival_spec`] with a trace sink.
+    pub fn host_arrival_spec_t<S: TraceSink>(
+        &mut self,
+        layer: usize,
+        e: usize,
+        now: Ns,
+        cost: &CostModel,
+        sink: &mut S,
+    ) -> Ns {
+        self.consume_ahead(layer, e, now, cost, sink);
+        self.arrival(layer, e, now, cost, false, sink)
     }
 
     /// Predictively promote (layer, e) NVMe→host on the dedicated read
@@ -519,6 +605,18 @@ impl TieredStore {
     /// full and holds no strictly-colder victim (by predicted-workload
     /// score) — speculation must never thrash warmer residents out.
     pub fn promote_ahead(&mut self, layer: usize, e: usize, now: Ns, cost: &CostModel) -> bool {
+        self.promote_ahead_t(layer, e, now, cost, &mut NullSink)
+    }
+
+    /// [`Self::promote_ahead`] with a trace sink.
+    pub fn promote_ahead_t<S: TraceSink>(
+        &mut self,
+        layer: usize,
+        e: usize,
+        now: Ns,
+        cost: &CostModel,
+        sink: &mut S,
+    ) -> bool {
         if !self.placement.predictive {
             return false;
         }
@@ -539,7 +637,7 @@ impl TieredStore {
                 Some(v) if self.score[v] < self.score[i] => v,
                 _ => return false,
             };
-            self.spill_index(v, now, cost);
+            self.spill_index(v, now, cost, sink);
         }
         self.tier[i] = Tier::Host;
         self.member_add(i);
@@ -548,7 +646,11 @@ impl TieredStore {
         self.ahead_issued += 1;
         self.ahead[i] = true;
         self.touch(layer, e);
-        self.host_ready[i] = self.schedule_promotion(now, cost);
+        let arr = self.schedule_promotion(now, cost, sink);
+        self.host_ready[i] = arr;
+        if S::ENABLED {
+            sink.emit(&Event::AheadIssue { layer: layer as u32, expert: e as u32, arrival: arr });
+        }
         true
     }
 
@@ -587,8 +689,9 @@ impl TieredStore {
     /// Spill the host-resident expert at flat index `v` to disk. An
     /// unconsumed predictive promotion spilled here was a wasted ahead
     /// read (miss).
-    fn spill_index(&mut self, v: usize, now: Ns, cost: &CostModel) {
+    fn spill_index<S: TraceSink>(&mut self, v: usize, now: Ns, cost: &CostModel, sink: &mut S) {
         debug_assert_eq!(self.tier[v], Tier::Host);
+        let (layer, expert) = ((v / self.n_experts) as u32, (v % self.n_experts) as u32);
         self.tier[v] = Tier::Disk;
         self.member_remove(v);
         self.host_used -= 1;
@@ -596,6 +699,12 @@ impl TieredStore {
         if self.ahead[v] {
             self.ahead[v] = false;
             self.ahead_misses += 1;
+            if S::ENABLED {
+                sink.emit(&Event::AheadMiss { layer, expert });
+            }
+        }
+        if S::ENABLED {
+            sink.emit(&Event::Spill { layer, expert, writeback: self.spill_writeback });
         }
         if self.spill_writeback {
             // Write-back persists the on-disk format: quantized bytes, not
@@ -607,7 +716,22 @@ impl TieredStore {
             let bytes = self.disk_bytes_accounted(cost);
             let t = cost.transcode_time();
             let encoded = if t == 0 { now } else { self.xfer.schedule_transcode(now, t) };
-            self.xfer.schedule_write(encoded, cost.nvme_write_time(), bytes);
+            if S::ENABLED && t > 0 {
+                sink.emit(&Event::LaneBusy {
+                    lane: Lane::Transcode,
+                    start: encoded - t,
+                    end: encoded,
+                });
+            }
+            let write = cost.nvme_write_time();
+            let w_done = self.xfer.schedule_write(encoded, write, bytes);
+            if S::ENABLED && write > 0 {
+                sink.emit(&Event::LaneBusy {
+                    lane: Lane::NvmeWrite,
+                    start: w_done - write,
+                    end: w_done,
+                });
+            }
         }
     }
 

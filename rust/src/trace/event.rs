@@ -1,0 +1,412 @@
+//! Typed per-step trace events.
+//!
+//! Every scheduling decision the simulator takes — assignment devices,
+//! prefetch issue/consumption, predictive promotions, demand fetches,
+//! spills, cache swaps — plus every lane's busy intervals, expressed as
+//! plain-old-data variants (`Copy`, no heap) so emitting one costs a few
+//! register moves and hashing one needs no buffer.
+//!
+//! Two serial forms exist side by side:
+//! * [`Event::fold_words`] — the canonical `u64`-word encoding the digest
+//!   sink hashes (variant tag first, then every field in declaration
+//!   order);
+//! * [`Event::to_value`] / [`Event::from_value`] — a JSON object per event
+//!   (`{"ev": "...", ...}`) for the JSON-lines sink, round-trippable
+//!   through [`crate::util::json`].
+
+use anyhow::{bail, Result};
+
+use crate::hw::Ns;
+use crate::util::json::Value;
+
+/// A virtual-time execution lane. Busy intervals are reported per lane so
+/// utilization and overlap can be reconstructed from the trace alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// NVMe read stream (disk → host promotions).
+    NvmeRead,
+    /// NVMe write stream (write-back spills).
+    NvmeWrite,
+    /// CPU transcode lane (de/re-quantize of the on-disk format).
+    Transcode,
+    /// High-priority PCIe lane (demand fetches — the critical path).
+    PcieDemand,
+    /// Low-priority PCIe lane (prefetch + cache-update traffic).
+    PcieSpec,
+    /// GPU compute stream (expert kernels, gate passes).
+    GpuCompute,
+    /// CPU expert execution.
+    Cpu,
+}
+
+impl Lane {
+    pub const COUNT: usize = 7;
+    pub const ALL: [Lane; Lane::COUNT] = [
+        Lane::NvmeRead,
+        Lane::NvmeWrite,
+        Lane::Transcode,
+        Lane::PcieDemand,
+        Lane::PcieSpec,
+        Lane::GpuCompute,
+        Lane::Cpu,
+    ];
+
+    /// Stable dense index (array slot + digest word).
+    pub fn idx(self) -> usize {
+        match self {
+            Lane::NvmeRead => 0,
+            Lane::NvmeWrite => 1,
+            Lane::Transcode => 2,
+            Lane::PcieDemand => 3,
+            Lane::PcieSpec => 4,
+            Lane::GpuCompute => 5,
+            Lane::Cpu => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::NvmeRead => "nvme_read",
+            Lane::NvmeWrite => "nvme_write",
+            Lane::Transcode => "transcode",
+            Lane::PcieDemand => "pcie_demand",
+            Lane::PcieSpec => "pcie_spec",
+            Lane::GpuCompute => "gpu_compute",
+            Lane::Cpu => "cpu",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Lane> {
+        for l in Lane::ALL {
+            if l.name() == s {
+                return Ok(l);
+            }
+        }
+        bail!("unknown lane '{s}'")
+    }
+}
+
+/// One trace event. Times are virtual ns on the run's clock; `layer` /
+/// `expert` address the sim-scale expert grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Assignment chose a device for one non-idle expert; `cost_ns` is the
+    /// priced execution cost of the chosen side (GPU kernel estimate, or
+    /// the CPU GEMM time after the bundle's efficiency factor).
+    Assign { layer: u32, expert: u32, gpu: bool, workload: u32, cost_ns: Ns },
+    /// A speculative PCIe prefetch was issued for the next layer;
+    /// `arrival` is its scheduled GPU arrival instant.
+    PrefetchIssue { layer: u32, expert: u32, arrival: Ns },
+    /// A prefetched expert was consumed by a GPU assignment with real
+    /// workload (counts 1:1 with `RunMetrics::prefetch_useful`).
+    PrefetchHit { layer: u32, expert: u32 },
+    /// A prefetched expert retired with zero workload — staging budget and
+    /// PCIe time wasted on a wrong prediction.
+    PrefetchWasted { layer: u32, expert: u32 },
+    /// Predictive NVMe→host promotion issued ahead of need.
+    AheadIssue { layer: u32, expert: u32, arrival: Ns },
+    /// An ahead promotion was consumed; `hidden_ns` is the portion of its
+    /// NVMe fetch already hidden behind compute by consumption time.
+    AheadHit { layer: u32, expert: u32, hidden_ns: Ns },
+    /// An unconsumed ahead promotion was spilled back out (wasted read).
+    AheadMiss { layer: u32, expert: u32 },
+    /// Disk→host promotion at access time. `demand` marks execution-path
+    /// fetches (counts 1:1 with `RunMetrics::tier_disk_misses`); false is
+    /// speculative chaining (prefetch / cache-update consumers).
+    Fetch { layer: u32, expert: u32, demand: bool, arrival: Ns },
+    /// Host→disk spill; `writeback` when an NVMe write was charged.
+    Spill { layer: u32, expert: u32, writeback: bool },
+    /// Cache admitted an expert to the GPU-resident set.
+    CacheAdmit { layer: u32, expert: u32 },
+    /// Cache evicted an expert from the GPU-resident set (a demotion when
+    /// a tiered store is attached).
+    CacheEvict { layer: u32, expert: u32 },
+    /// One busy interval `[start, end)` on a lane. Sums per lane
+    /// reconstruct the corresponding `RunMetrics` busy integrals exactly
+    /// (see the carry rule on [`Event::Reset`]).
+    LaneBusy { lane: Lane, start: Ns, end: Ns },
+    /// Metrics reset (warmup boundary): the clock rebased to 0 at `at`.
+    /// Followed immediately by carry `LaneBusy` events re-seeding each
+    /// NVMe/transcode lane with the residual of work still in flight, so
+    /// post-reset interval sums still equal the busy counters exactly.
+    Reset { at: Ns },
+    /// One batch step retired. `end_ns` is the clock after the step (the
+    /// final step's `end_ns` equals `RunMetrics::total_ns`).
+    StepEnd { step: u64, decode: bool, end_ns: Ns, tokens: u32 },
+}
+
+impl Event {
+    /// Short stable name of the variant (the JSON `"ev"` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::Assign { .. } => "assign",
+            Event::PrefetchIssue { .. } => "prefetch_issue",
+            Event::PrefetchHit { .. } => "prefetch_hit",
+            Event::PrefetchWasted { .. } => "prefetch_wasted",
+            Event::AheadIssue { .. } => "ahead_issue",
+            Event::AheadHit { .. } => "ahead_hit",
+            Event::AheadMiss { .. } => "ahead_miss",
+            Event::Fetch { .. } => "fetch",
+            Event::Spill { .. } => "spill",
+            Event::CacheAdmit { .. } => "cache_admit",
+            Event::CacheEvict { .. } => "cache_evict",
+            Event::LaneBusy { .. } => "lane",
+            Event::Reset { .. } => "reset",
+            Event::StepEnd { .. } => "step",
+        }
+    }
+
+    /// Fold the event into `u64` words: variant tag, then every field in
+    /// declaration order. This is the digest sink's canonical encoding —
+    /// allocation-free and stable across platforms.
+    pub fn fold_words(&self, f: &mut impl FnMut(u64)) {
+        match *self {
+            Event::Assign { layer, expert, gpu, workload, cost_ns } => {
+                f(1);
+                f(layer as u64);
+                f(expert as u64);
+                f(gpu as u64);
+                f(workload as u64);
+                f(cost_ns);
+            }
+            Event::PrefetchIssue { layer, expert, arrival } => {
+                f(2);
+                f(layer as u64);
+                f(expert as u64);
+                f(arrival);
+            }
+            Event::PrefetchHit { layer, expert } => {
+                f(3);
+                f(layer as u64);
+                f(expert as u64);
+            }
+            Event::PrefetchWasted { layer, expert } => {
+                f(4);
+                f(layer as u64);
+                f(expert as u64);
+            }
+            Event::AheadIssue { layer, expert, arrival } => {
+                f(5);
+                f(layer as u64);
+                f(expert as u64);
+                f(arrival);
+            }
+            Event::AheadHit { layer, expert, hidden_ns } => {
+                f(6);
+                f(layer as u64);
+                f(expert as u64);
+                f(hidden_ns);
+            }
+            Event::AheadMiss { layer, expert } => {
+                f(7);
+                f(layer as u64);
+                f(expert as u64);
+            }
+            Event::Fetch { layer, expert, demand, arrival } => {
+                f(8);
+                f(layer as u64);
+                f(expert as u64);
+                f(demand as u64);
+                f(arrival);
+            }
+            Event::Spill { layer, expert, writeback } => {
+                f(9);
+                f(layer as u64);
+                f(expert as u64);
+                f(writeback as u64);
+            }
+            Event::CacheAdmit { layer, expert } => {
+                f(10);
+                f(layer as u64);
+                f(expert as u64);
+            }
+            Event::CacheEvict { layer, expert } => {
+                f(11);
+                f(layer as u64);
+                f(expert as u64);
+            }
+            Event::LaneBusy { lane, start, end } => {
+                f(12);
+                f(lane.idx() as u64);
+                f(start);
+                f(end);
+            }
+            Event::Reset { at } => {
+                f(13);
+                f(at);
+            }
+            Event::StepEnd { step, decode, end_ns, tokens } => {
+                f(14);
+                f(step);
+                f(decode as u64);
+                f(end_ns);
+                f(tokens as u64);
+            }
+        }
+    }
+
+    /// JSON form (one object; the JSON-lines sink writes one per line).
+    /// Virtual-time fields stay well inside f64's 53-bit integer range
+    /// (runs are seconds of ns), so numbers round-trip exactly.
+    pub fn to_value(&self) -> Value {
+        let ev = Value::str(self.name());
+        match *self {
+            Event::Assign { layer, expert, gpu, workload, cost_ns } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("gpu", Value::Bool(gpu)),
+                ("workload", Value::num(workload as f64)),
+                ("cost_ns", Value::num(cost_ns as f64)),
+            ]),
+            Event::PrefetchIssue { layer, expert, arrival }
+            | Event::AheadIssue { layer, expert, arrival } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("arrival", Value::num(arrival as f64)),
+            ]),
+            Event::PrefetchHit { layer, expert }
+            | Event::PrefetchWasted { layer, expert }
+            | Event::AheadMiss { layer, expert }
+            | Event::CacheAdmit { layer, expert }
+            | Event::CacheEvict { layer, expert } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+            ]),
+            Event::AheadHit { layer, expert, hidden_ns } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("hidden_ns", Value::num(hidden_ns as f64)),
+            ]),
+            Event::Fetch { layer, expert, demand, arrival } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("demand", Value::Bool(demand)),
+                ("arrival", Value::num(arrival as f64)),
+            ]),
+            Event::Spill { layer, expert, writeback } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("writeback", Value::Bool(writeback)),
+            ]),
+            Event::LaneBusy { lane, start, end } => Value::obj(vec![
+                ("ev", ev),
+                ("lane", Value::str(lane.name())),
+                ("start", Value::num(start as f64)),
+                ("end", Value::num(end as f64)),
+            ]),
+            Event::Reset { at } => {
+                Value::obj(vec![("ev", ev), ("at", Value::num(at as f64))])
+            }
+            Event::StepEnd { step, decode, end_ns, tokens } => Value::obj(vec![
+                ("ev", ev),
+                ("step", Value::num(step as f64)),
+                ("decode", Value::Bool(decode)),
+                ("end_ns", Value::num(end_ns as f64)),
+                ("tokens", Value::num(tokens as f64)),
+            ]),
+        }
+    }
+
+    /// Parse the JSON form back (the schema round-trip the sink tests
+    /// lock: `from_value(to_value(e)) == e` for every variant).
+    pub fn from_value(v: &Value) -> Result<Event> {
+        let le = |k: &str| -> Result<u32> { Ok(v.get(k)?.as_u64()? as u32) };
+        let ns = |k: &str| -> Result<Ns> { v.get(k)?.as_u64() };
+        Ok(match v.get("ev")?.as_str()? {
+            "assign" => Event::Assign {
+                layer: le("layer")?,
+                expert: le("expert")?,
+                gpu: v.get("gpu")?.as_bool()?,
+                workload: le("workload")?,
+                cost_ns: ns("cost_ns")?,
+            },
+            "prefetch_issue" => Event::PrefetchIssue {
+                layer: le("layer")?,
+                expert: le("expert")?,
+                arrival: ns("arrival")?,
+            },
+            "prefetch_hit" => {
+                Event::PrefetchHit { layer: le("layer")?, expert: le("expert")? }
+            }
+            "prefetch_wasted" => {
+                Event::PrefetchWasted { layer: le("layer")?, expert: le("expert")? }
+            }
+            "ahead_issue" => Event::AheadIssue {
+                layer: le("layer")?,
+                expert: le("expert")?,
+                arrival: ns("arrival")?,
+            },
+            "ahead_hit" => Event::AheadHit {
+                layer: le("layer")?,
+                expert: le("expert")?,
+                hidden_ns: ns("hidden_ns")?,
+            },
+            "ahead_miss" => {
+                Event::AheadMiss { layer: le("layer")?, expert: le("expert")? }
+            }
+            "fetch" => Event::Fetch {
+                layer: le("layer")?,
+                expert: le("expert")?,
+                demand: v.get("demand")?.as_bool()?,
+                arrival: ns("arrival")?,
+            },
+            "spill" => Event::Spill {
+                layer: le("layer")?,
+                expert: le("expert")?,
+                writeback: v.get("writeback")?.as_bool()?,
+            },
+            "cache_admit" => {
+                Event::CacheAdmit { layer: le("layer")?, expert: le("expert")? }
+            }
+            "cache_evict" => {
+                Event::CacheEvict { layer: le("layer")?, expert: le("expert")? }
+            }
+            "lane" => Event::LaneBusy {
+                lane: Lane::from_name(v.get("lane")?.as_str()?)?,
+                start: ns("start")?,
+                end: ns("end")?,
+            },
+            "reset" => Event::Reset { at: ns("at")? },
+            "step" => Event::StepEnd {
+                step: ns("step")?,
+                decode: v.get("decode")?.as_bool()?,
+                end_ns: ns("end_ns")?,
+                tokens: le("tokens")?,
+            },
+            other => bail!("unknown trace event '{other}'"),
+        })
+    }
+
+    /// One exemplar of every variant — keeps round-trip and digest tests
+    /// exhaustive by construction (a new variant must be added here, or
+    /// the match in `fold_words`/`to_value` fails to compile first).
+    pub fn examples() -> Vec<Event> {
+        vec![
+            Event::Assign { layer: 3, expert: 7, gpu: true, workload: 12, cost_ns: 4096 },
+            Event::Assign { layer: 3, expert: 2, gpu: false, workload: 1, cost_ns: 900 },
+            Event::PrefetchIssue { layer: 4, expert: 1, arrival: 77_000 },
+            Event::PrefetchHit { layer: 4, expert: 1 },
+            Event::PrefetchWasted { layer: 4, expert: 6 },
+            Event::AheadIssue { layer: 5, expert: 0, arrival: 123_456 },
+            Event::AheadHit { layer: 5, expert: 0, hidden_ns: 98_765 },
+            Event::AheadMiss { layer: 5, expert: 3 },
+            Event::Fetch { layer: 2, expert: 4, demand: true, arrival: 55_555 },
+            Event::Fetch { layer: 2, expert: 5, demand: false, arrival: 66_666 },
+            Event::Spill { layer: 1, expert: 2, writeback: false },
+            Event::Spill { layer: 1, expert: 3, writeback: true },
+            Event::CacheAdmit { layer: 0, expert: 5 },
+            Event::CacheEvict { layer: 0, expert: 2 },
+            Event::LaneBusy { lane: Lane::NvmeRead, start: 100, end: 350 },
+            Event::LaneBusy { lane: Lane::Transcode, start: 350, end: 400 },
+            Event::LaneBusy { lane: Lane::Cpu, start: 0, end: 10 },
+            Event::Reset { at: 1_000_000 },
+            Event::StepEnd { step: 9, decode: true, end_ns: 2_000_000, tokens: 8 },
+        ]
+    }
+}

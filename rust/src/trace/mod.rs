@@ -1,0 +1,33 @@
+//! Structured step-trace subsystem: typed per-step events, zero-cost
+//! sinks, and digest-locked replay audits.
+//!
+//! The simulator's determinism guarantee (same scenario + bundle + seed →
+//! bit-identical `RunMetrics`) is asserted in tests but was never
+//! *exported*: runs could not be diffed across machines or inspected at
+//! the timeline level. This module makes every scheduling decision
+//! observable without touching the hot path's costs:
+//!
+//! * [`Event`] — typed, `Copy`, per-step events: assignment devices with
+//!   priced costs, prefetch issue/hit/wasted, promote-ahead
+//!   issue/hit/miss, demand fetches, spills, cache admit/evict, per-lane
+//!   busy intervals in virtual time, resets, and step boundaries.
+//! * [`TraceSink`] — the receiver trait. Statically zero-cost when
+//!   disabled: [`NullSink`] sets `ENABLED = false` and every emission
+//!   site (guarded `if S::ENABLED`) compiles out, proven by the
+//!   `alloc_audit` and `determinism` suites running against the default.
+//! * [`DigestSink`] — allocation-free FNV-1a over the canonical event
+//!   words; one `u64` per run, surfaced in `RunMetrics::trace_digest`,
+//!   printed by `dali run`, recorded per tier by `dali bench`, and
+//!   equality-locked in golden tests.
+//! * [`JsonSink`] — buffered JSON-lines for `dali run --trace out.jsonl`;
+//!   [`TraceSummary`] reduces the file for `dali trace summarize`
+//!   (per-lane utilization, overlap-hidden time, top-N wasted
+//!   prefetches) and reproduces the run's busy counters exactly.
+
+pub mod event;
+pub mod sink;
+pub mod summary;
+
+pub use event::{Event, Lane};
+pub use sink::{DigestSink, JsonSink, NullSink, TraceSink};
+pub use summary::TraceSummary;

@@ -1,0 +1,173 @@
+//! Trace sinks: where events go, at what cost.
+//!
+//! The simulator is generic over `S: TraceSink` and guards every emission
+//! site with `if S::ENABLED { ... }`. With the default [`NullSink`]
+//! (`ENABLED = false`) the guard is a compile-time constant and the whole
+//! instrumentation monomorphizes to nothing — the hot path stays
+//! zero-alloc and bit-identical, which `alloc_audit` / `determinism`
+//! continue to prove.
+//!
+//! Shipped sinks:
+//! * [`NullSink`] — the zero-cost default;
+//! * [`DigestSink`] — allocation-free FNV-1a over every event's canonical
+//!   word encoding; its single `u64` locks whole runs in golden tests and
+//!   surfaces in `RunMetrics::trace_digest`;
+//! * [`JsonSink`] — buffered JSON-lines writer for `dali run --trace` and
+//!   offline `dali trace summarize`.
+//!
+//! Sinks compose: `(DigestSink, JsonSink)` hashes and records in one pass.
+
+use std::io::{self, Write};
+
+use super::event::Event;
+
+/// Receiver for trace events. `ENABLED` is an associated constant so the
+/// disabled case is decided at monomorphization time, not at runtime.
+pub trait TraceSink {
+    /// Whether this sink wants events. Emission sites are guarded with
+    /// `if S::ENABLED`, so a `false` here deletes the instrumentation
+    /// (including the argument computation inside the guard) entirely.
+    const ENABLED: bool = true;
+
+    fn emit(&mut self, ev: &Event);
+
+    /// The run digest, if this sink (or a composed member) computes one.
+    fn digest(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// The default sink: statically disabled, every emission compiles out.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    const ENABLED: bool = false;
+
+    #[inline(always)]
+    fn emit(&mut self, _ev: &Event) {}
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Allocation-free FNV-1a 64 over the canonical word encoding of every
+/// event ([`Event::fold_words`], each word hashed as 8 little-endian
+/// bytes). Two runs emit the same digest iff they emitted the same event
+/// sequence — a whole-run equality lock in one `u64`.
+#[derive(Debug, Clone, Copy)]
+pub struct DigestSink {
+    h: u64,
+    /// Total events folded in (handy for sanity checks; not part of the
+    /// digest itself — the event stream already determines it).
+    pub events: u64,
+}
+
+impl DigestSink {
+    pub fn new() -> Self {
+        DigestSink { h: FNV_OFFSET, events: 0 }
+    }
+
+    /// Current digest value.
+    pub fn value(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for DigestSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink for DigestSink {
+    #[inline]
+    fn emit(&mut self, ev: &Event) {
+        let mut h = self.h;
+        ev.fold_words(&mut |w: u64| {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        });
+        self.h = h;
+        self.events += 1;
+    }
+
+    fn digest(&self) -> Option<u64> {
+        Some(self.h)
+    }
+}
+
+/// Buffered JSON-lines sink: one `Event::to_value()` object per line.
+/// Buffers into a `String` and flushes to the writer in 64 KiB chunks so
+/// tracing a run costs large sequential writes, not a syscall per event.
+/// I/O errors are deferred to [`JsonSink::finish`] (the simulator's
+/// emission path stays infallible).
+pub struct JsonSink<W: Write> {
+    w: W,
+    buf: String,
+    err: Option<io::Error>,
+    /// Events written (including any dropped after a deferred error).
+    pub events: u64,
+}
+
+const JSON_FLUSH_BYTES: usize = 1 << 16;
+
+impl<W: Write> JsonSink<W> {
+    pub fn new(w: W) -> Self {
+        JsonSink { w, buf: String::with_capacity(JSON_FLUSH_BYTES + 1024), err: None, events: 0 }
+    }
+
+    fn flush_buf(&mut self) {
+        if self.err.is_some() || self.buf.is_empty() {
+            return;
+        }
+        if let Err(e) = self.w.write_all(self.buf.as_bytes()) {
+            self.err = Some(e);
+        }
+        self.buf.clear();
+    }
+
+    /// Flush remaining buffered lines and hand back the writer, or the
+    /// first I/O error encountered while streaming.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.flush_buf();
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+impl<W: Write> TraceSink for JsonSink<W> {
+    fn emit(&mut self, ev: &Event) {
+        self.buf.push_str(&ev.to_value().to_json());
+        self.buf.push('\n');
+        self.events += 1;
+        if self.buf.len() >= JSON_FLUSH_BYTES {
+            self.flush_buf();
+        }
+    }
+}
+
+/// Composition: both members see every event. Enabled if either is, and
+/// the digest comes from the first member that computes one.
+impl<A: TraceSink, B: TraceSink> TraceSink for (A, B) {
+    const ENABLED: bool = A::ENABLED || B::ENABLED;
+
+    #[inline]
+    fn emit(&mut self, ev: &Event) {
+        if A::ENABLED {
+            self.0.emit(ev);
+        }
+        if B::ENABLED {
+            self.1.emit(ev);
+        }
+    }
+
+    fn digest(&self) -> Option<u64> {
+        self.0.digest().or(self.1.digest())
+    }
+}

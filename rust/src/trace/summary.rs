@@ -1,0 +1,209 @@
+//! Offline reduction of a JSON-lines trace: per-lane utilization,
+//! overlap-hidden time, prefetch/promotion outcomes, top-N wasted
+//! prefetches. Backs `dali trace summarize`.
+//!
+//! The accumulators mirror the simulator's own bookkeeping: a `reset`
+//! event zeroes them (warmup boundary) exactly like `reset_metrics`
+//! zeroes `RunMetrics`, and the carry `LaneBusy` events emitted right
+//! after a reset re-seed in-flight lane work — so the summary's lane
+//! totals equal the final `RunMetrics` busy counters *exactly*, which the
+//! sink tests assert.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::hw::Ns;
+use crate::util::json::Value;
+
+use super::event::{Event, Lane};
+
+/// Aggregates computed from an event stream (file or in-memory).
+#[derive(Debug, Default, Clone)]
+pub struct TraceSummary {
+    /// Total events observed, including pre-reset ones.
+    pub events: u64,
+    /// Number of `reset` events (metrics rebaselines).
+    pub resets: u64,
+    /// Steps retired since the last reset.
+    pub steps: u64,
+    /// Decode steps among them.
+    pub decode_steps: u64,
+    /// Tokens across retired steps.
+    pub tokens: u64,
+    /// Clock at the last `step` event == `RunMetrics::total_ns`.
+    pub end_ns: Ns,
+    /// Busy time per lane (indexed by `Lane::idx`), since the last reset.
+    pub lane_busy: [Ns; Lane::COUNT],
+    /// Interval count per lane, since the last reset.
+    pub lane_ops: [u64; Lane::COUNT],
+    pub assignments_gpu: u64,
+    pub assignments_cpu: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_wasted: u64,
+    pub ahead_issued: u64,
+    pub ahead_hits: u64,
+    pub ahead_misses: u64,
+    /// Sum of `hidden_ns` over ahead hits == `nvme_overlap_hidden_ns`.
+    pub overlap_hidden_ns: Ns,
+    /// Demand-path disk fetches == `tier_disk_misses`.
+    pub demand_fetches: u64,
+    /// Speculative disk fetches (prefetch / cache-update chains).
+    pub spec_fetches: u64,
+    pub spills: u64,
+    pub writeback_spills: u64,
+    pub cache_admits: u64,
+    pub cache_evicts: u64,
+    /// Wasted-prefetch count per (layer, expert), since the last reset.
+    pub wasted_by_expert: BTreeMap<(u32, u32), u64>,
+}
+
+impl TraceSummary {
+    /// Fold one event in. Order matters only the way it does for the
+    /// emitting run: a `reset` zeroes the post-warmup accumulators.
+    pub fn observe(&mut self, ev: &Event) {
+        self.events += 1;
+        match *ev {
+            Event::Reset { .. } => {
+                let events = self.events;
+                let resets = self.resets + 1;
+                *self = TraceSummary::default();
+                self.events = events;
+                self.resets = resets;
+            }
+            Event::Assign { gpu, .. } => {
+                if gpu {
+                    self.assignments_gpu += 1;
+                } else {
+                    self.assignments_cpu += 1;
+                }
+            }
+            Event::PrefetchIssue { .. } => self.prefetch_issued += 1,
+            Event::PrefetchHit { .. } => self.prefetch_hits += 1,
+            Event::PrefetchWasted { layer, expert } => {
+                self.prefetch_wasted += 1;
+                *self.wasted_by_expert.entry((layer, expert)).or_insert(0) += 1;
+            }
+            Event::AheadIssue { .. } => self.ahead_issued += 1,
+            Event::AheadHit { hidden_ns, .. } => {
+                self.ahead_hits += 1;
+                self.overlap_hidden_ns += hidden_ns;
+            }
+            Event::AheadMiss { .. } => self.ahead_misses += 1,
+            Event::Fetch { demand, .. } => {
+                if demand {
+                    self.demand_fetches += 1;
+                } else {
+                    self.spec_fetches += 1;
+                }
+            }
+            Event::Spill { writeback, .. } => {
+                self.spills += 1;
+                if writeback {
+                    self.writeback_spills += 1;
+                }
+            }
+            Event::CacheAdmit { .. } => self.cache_admits += 1,
+            Event::CacheEvict { .. } => self.cache_evicts += 1,
+            Event::LaneBusy { lane, start, end } => {
+                self.lane_busy[lane.idx()] += end.saturating_sub(start);
+                self.lane_ops[lane.idx()] += 1;
+            }
+            Event::StepEnd { decode, end_ns, tokens, .. } => {
+                self.steps += 1;
+                if decode {
+                    self.decode_steps += 1;
+                }
+                self.tokens += tokens as u64;
+                self.end_ns = end_ns;
+            }
+        }
+    }
+
+    /// Parse a JSON-lines trace (blank lines ignored) and fold every
+    /// event. Fails on the first malformed line, with its line number.
+    pub fn from_json_lines(text: &str) -> Result<TraceSummary> {
+        let mut s = TraceSummary::default();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = Value::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+            let ev = Event::from_value(&v).with_context(|| format!("trace line {}", i + 1))?;
+            s.observe(&ev);
+        }
+        Ok(s)
+    }
+
+    /// The `n` (layer, expert) pairs with the most wasted prefetches,
+    /// most-wasted first (ties broken by grid order).
+    pub fn top_wasted(&self, n: usize) -> Vec<((u32, u32), u64)> {
+        let mut v: Vec<((u32, u32), u64)> =
+            self.wasted_by_expert.iter().map(|(k, c)| (*k, *c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+
+    /// Human-readable report for `dali trace summarize`.
+    pub fn render(&self, top_n: usize) -> String {
+        let mut out = String::new();
+        let pct = |busy: Ns| -> f64 {
+            if self.end_ns == 0 {
+                0.0
+            } else {
+                100.0 * busy as f64 / self.end_ns as f64
+            }
+        };
+        out.push_str(&format!(
+            "events {}  resets {}  steps {} ({} decode)  tokens {}  span {:.3} ms\n",
+            self.events,
+            self.resets,
+            self.steps,
+            self.decode_steps,
+            self.tokens,
+            self.end_ns as f64 / 1e6
+        ));
+        out.push_str("lane utilization (since last reset):\n");
+        for lane in Lane::ALL {
+            let i = lane.idx();
+            out.push_str(&format!(
+                "  {:<12} busy {:>12} ns  ({:>5.1}%)  intervals {}\n",
+                lane.name(),
+                self.lane_busy[i],
+                pct(self.lane_busy[i]),
+                self.lane_ops[i]
+            ));
+        }
+        out.push_str(&format!(
+            "assignments: gpu {}  cpu {}\n",
+            self.assignments_gpu, self.assignments_cpu
+        ));
+        out.push_str(&format!(
+            "prefetch: issued {}  hits {}  wasted {}\n",
+            self.prefetch_issued, self.prefetch_hits, self.prefetch_wasted
+        ));
+        out.push_str(&format!(
+            "promote-ahead: issued {}  hits {}  misses {}  overlap-hidden {} ns\n",
+            self.ahead_issued, self.ahead_hits, self.ahead_misses, self.overlap_hidden_ns
+        ));
+        out.push_str(&format!(
+            "store: demand fetches {}  spec fetches {}  spills {} ({} writeback)\n",
+            self.demand_fetches, self.spec_fetches, self.spills, self.writeback_spills
+        ));
+        out.push_str(&format!(
+            "cache: admits {}  evicts {}\n",
+            self.cache_admits, self.cache_evicts
+        ));
+        let top = self.top_wasted(top_n);
+        if !top.is_empty() {
+            out.push_str(&format!("top-{} wasted prefetches (layer, expert, count):\n", top.len()));
+            for ((l, e), c) in top {
+                out.push_str(&format!("  L{l:<3} E{e:<3} x{c}\n"));
+            }
+        }
+        out
+    }
+}

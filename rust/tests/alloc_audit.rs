@@ -19,6 +19,7 @@ use dali::coordinator::frameworks::{Framework, FrameworkCfg};
 use dali::coordinator::simrun::{Phase, StepSimulator};
 use dali::hw::CostModel;
 use dali::store::TieredStore;
+use dali::trace::DigestSink;
 use dali::workload::trace::{synthetic_locality_trace, BatchStep};
 
 #[test]
@@ -95,6 +96,59 @@ fn run_step_steady_state_is_allocation_free() {
              across {} steady-state steps (expected zero)",
             fw.name(),
             96 - warmup
+        );
+    }
+
+    // --- digest-sink pass: tracing must not cost allocations either -------
+    // The DigestSink hashes every event in place (no buffer), so a traced
+    // replay of the hardest scenario (quantized tiered store) stays just
+    // as allocation-free as the NullSink default. Runs inside the same
+    // #[test] because this binary's counters are process-global.
+    {
+        let scenario = "mixtral-sim-ram16-q4";
+        let (model, hw) = presets.scenario(scenario).unwrap();
+        let dims = &model.sim;
+        let cost = CostModel::for_scenario(&presets, scenario).unwrap();
+        let trace =
+            synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 96, 0xa11c);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+        let ids: Vec<usize> = (0..8).collect();
+        let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+        assert!(!store.is_unlimited());
+        let mut sim = StepSimulator::new(
+            &cost,
+            bundle,
+            &freq,
+            dims.layers,
+            dims.n_routed,
+            dims.n_shared,
+            7,
+        )
+        .with_sink(DigestSink::new())
+        .with_store(store);
+        let mut step = BatchStep::default();
+        trace.compose_prefill_into(&ids, &mut step);
+        sim.run_step(&step, 8, Phase::Prefill);
+        sim.reset_metrics();
+        let warmup = 32;
+        for s in 0..warmup {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+        }
+        let before = alloc_calls();
+        for s in warmup..trace.min_steps() {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+        }
+        let allocs = alloc_calls() - before;
+        let (m, sink) = sim.finish_with_sink();
+        assert!(sink.events > 0, "the digest sink must have observed events");
+        assert!(m.trace_digest.is_some(), "digest must surface in RunMetrics");
+        assert_eq!(
+            allocs, 0,
+            "{scenario}/dali+digest: traced run_step allocated {allocs} times (expected zero)"
         );
     }
 }

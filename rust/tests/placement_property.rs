@@ -9,10 +9,11 @@
 
 use dali::config::Presets;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
-use dali::coordinator::simrun::replay_decode_store;
+use dali::coordinator::simrun::{replay_decode_store, replay_decode_traced};
 use dali::hw::CostModel;
 use dali::metrics::RunMetrics;
 use dali::store::{placement, PlacementCfg, StoreCfg, TieredStore};
+use dali::trace::DigestSink;
 use dali::util::DetRng;
 use dali::workload::trace::synthetic_locality_trace;
 
@@ -183,6 +184,16 @@ fn promote_ahead_layer_never_overflows_budgets() {
 /// the on-disk expert format (1.0 = fp16, the `-q4` scenarios' ratio for
 /// quantized).
 fn ram16_replay_fmt(predictive: bool, seed: u64, quant_ratio: f64) -> RunMetrics {
+    ram16_replay_impl(predictive, seed, quant_ratio, false)
+}
+
+/// [`ram16_replay_fmt`] under a digest sink: the returned metrics carry
+/// `trace_digest`, the whole-run event-stream hash.
+fn ram16_digest(predictive: bool, seed: u64, quant_ratio: f64) -> u64 {
+    ram16_replay_impl(predictive, seed, quant_ratio, true).trace_digest.unwrap()
+}
+
+fn ram16_replay_impl(predictive: bool, seed: u64, quant_ratio: f64, traced: bool) -> RunMetrics {
     let p = Presets::load_default().unwrap();
     let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
     assert!(hw.is_memory_limited(&model.paper));
@@ -199,7 +210,23 @@ fn ram16_replay_fmt(predictive: bool, seed: u64, quant_ratio: f64) -> RunMetrics
     let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
     assert!(!store.is_unlimited());
     let ids: Vec<usize> = (0..8).collect();
-    replay_decode_store(&trace, &ids, 40, &c, bundle, &freq, dims.n_shared, seed, Some(store))
+    if traced {
+        replay_decode_traced(
+            &trace,
+            &ids,
+            40,
+            &c,
+            bundle,
+            &freq,
+            dims.n_shared,
+            seed,
+            Some(store),
+            DigestSink::new(),
+        )
+        .0
+    } else {
+        replay_decode_store(&trace, &ids, 40, &c, bundle, &freq, dims.n_shared, seed, Some(store))
+    }
 }
 
 fn ram16_replay(predictive: bool, seed: u64) -> RunMetrics {
@@ -273,14 +300,27 @@ fn q4_on_disk_cuts_demand_nvme_vs_fp16() {
 #[test]
 fn placement_comparison_pair_replays_bit_identically() {
     // Both sides of the comparison stay deterministic — the speedup claim
-    // is meaningless if either side drifts run-to-run. The quantized
-    // format preserves the guarantee (its transcode lane is pure
-    // virtual-time bookkeeping).
-    assert_eq!(ram16_replay(true, 11), ram16_replay(true, 11));
-    assert_eq!(ram16_replay(false, 11), ram16_replay(false, 11));
+    // is meaningless if either side drifts run-to-run. The lock is a
+    // whole-run trace digest per (scenario, bundle, seed): equal digests
+    // mean the two replays emitted the *same event stream*, a strictly
+    // stronger guarantee than the old per-metric equality (which sampled
+    // a few dozen counters out of the schedule). The quantized format
+    // preserves the guarantee (its transcode lane is pure virtual-time
+    // bookkeeping).
     let p = Presets::load_default().unwrap();
     let q4 = p.quant_ratio("mixtral-sim-ram16-q4");
-    assert_eq!(ram16_replay_fmt(true, 11, q4), ram16_replay_fmt(true, 11, q4));
+    for (predictive, quant) in [(true, 1.0), (false, 1.0), (true, q4), (false, q4)] {
+        assert_eq!(
+            ram16_digest(predictive, 11, quant),
+            ram16_digest(predictive, 11, quant),
+            "predictive={predictive} quant={quant}: replay digest must be stable"
+        );
+    }
+    // the two compared policies must not hash to the same stream
+    assert_ne!(ram16_digest(true, 11, 1.0), ram16_digest(false, 11, 1.0));
+    // and the untraced default still replays metric-for-metric (digest
+    // audits complement RunMetrics determinism, they don't replace it)
+    assert_eq!(ram16_replay(true, 11), ram16_replay(true, 11));
 }
 
 #[test]

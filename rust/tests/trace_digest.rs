@@ -1,0 +1,165 @@
+//! Whole-run digest audits: one FNV-1a `u64` over every emitted trace
+//! event locks an entire run. Identical (scenario, bundle, seed) replays
+//! must produce equal digests; different policies must not; the untraced
+//! default stays byte-for-byte what it was (`trace_digest == None`, all
+//! other metrics unchanged). The comparison-set bundles on the
+//! memory-limited scenarios are additionally locked against
+//! `tests/golden/run_digests.json` — regenerate with
+//! `DALI_BLESS_DIGESTS=1 cargo test --test trace_digest`.
+
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::{replay_decode_store, replay_decode_traced};
+use dali::hw::CostModel;
+use dali::metrics::RunMetrics;
+use dali::store::{PlacementCfg, TieredStore};
+use dali::trace::DigestSink;
+use dali::util::json::Value;
+use dali::util::repo_root;
+use dali::workload::trace::synthetic_locality_trace;
+
+/// The framework bundles whose digests the golden file locks — the
+/// paper's comparison set on the memory-limited scenarios.
+const COMPARISON_SET: [Framework; 6] = [
+    Framework::LlamaCpp,
+    Framework::KTransformers,
+    Framework::Fiddler,
+    Framework::MoELightning,
+    Framework::HybriMoE,
+    Framework::Dali,
+];
+
+/// Replay `scenario` with `fw`'s bundle over the synthetic locality
+/// trace. `reactive` forces the PR 1 LRU-spill placement; `traced`
+/// attaches a digest sink (false reproduces the untraced default).
+fn replay(scenario: &str, fw: Framework, reactive: bool, seed: u64, traced: bool) -> RunMetrics {
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario(scenario).unwrap();
+    let c = CostModel::new(model, hw).with_quant_ratio(p.quant_ratio(scenario));
+    let dims = &model.sim;
+    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48, 0x7157);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let cfg = FrameworkCfg::paper_default(dims);
+    let mut bundle = fw.bundle(dims, &c, &freq, &cfg);
+    if reactive {
+        bundle.placement = PlacementCfg::default();
+    }
+    let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+    assert!(!store.is_unlimited());
+    let ids: Vec<usize> = (0..8).collect();
+    if traced {
+        replay_decode_traced(
+            &trace,
+            &ids,
+            40,
+            &c,
+            bundle,
+            &freq,
+            dims.n_shared,
+            seed,
+            Some(store),
+            DigestSink::new(),
+        )
+        .0
+    } else {
+        replay_decode_store(&trace, &ids, 40, &c, bundle, &freq, dims.n_shared, seed, Some(store))
+    }
+}
+
+fn digest(scenario: &str, fw: Framework, reactive: bool, seed: u64) -> u64 {
+    replay(scenario, fw, reactive, seed, true)
+        .trace_digest
+        .expect("a digest-sink replay must surface its digest")
+}
+
+#[test]
+fn identical_replays_produce_equal_digests() {
+    for scenario in ["mixtral-sim-ram16", "mixtral-sim-ram16-q4"] {
+        let a = digest(scenario, Framework::Dali, false, 11);
+        let b = digest(scenario, Framework::Dali, false, 11);
+        assert_eq!(a, b, "{scenario}: same (scenario, bundle, seed) must replay to one digest");
+    }
+}
+
+#[test]
+fn different_policies_produce_different_digests() {
+    // predictive vs reactive placement schedule different event streams
+    let pred = digest("mixtral-sim-ram16", Framework::Dali, false, 11);
+    let lru = digest("mixtral-sim-ram16", Framework::Dali, true, 11);
+    assert_ne!(pred, lru, "placement policies must be distinguishable by digest");
+    // so do the on-disk formats (q4 transcodes, fp16 does not)
+    let q4 = digest("mixtral-sim-ram16-q4", Framework::Dali, false, 11);
+    assert_ne!(pred, q4, "on-disk formats must be distinguishable by digest");
+}
+
+#[test]
+fn untraced_replay_keeps_metrics_and_reports_no_digest() {
+    // The NullSink default is the zero-cost path: no digest, and every
+    // other metric identical to the traced run — instrumentation observes
+    // the schedule, it never perturbs it.
+    let untraced = replay("mixtral-sim-ram16-q4", Framework::Dali, false, 11, false);
+    assert_eq!(untraced.trace_digest, None, "tracing off means no digest");
+    let mut traced = replay("mixtral-sim-ram16-q4", Framework::Dali, false, 11, true);
+    assert!(traced.trace_digest.is_some());
+    traced.trace_digest = None;
+    assert_eq!(traced, untraced, "a sink must not change the simulated run");
+}
+
+#[test]
+fn golden_digests_lock_comparison_set() {
+    // Digest-locked replay audit per (scenario, bundle, seed): one u64
+    // per cell replaces per-metric regression locks. Bless with
+    // `DALI_BLESS_DIGESTS=1 cargo test --test trace_digest` after an
+    // intentional scheduling change; unblessed entries warn (first run on
+    // a fresh clone) instead of failing.
+    let path = repo_root().join("rust").join("tests").join("golden").join("run_digests.json");
+    let mut got: Vec<(String, u64)> = Vec::new();
+    for scenario in ["mixtral-sim-ram16", "mixtral-sim-ram16-q4"] {
+        for fw in COMPARISON_SET {
+            let key = format!("{scenario}/{}/seed11", fw.name());
+            got.push((key, digest(scenario, fw, false, 11)));
+        }
+    }
+    if std::env::var("DALI_BLESS_DIGESTS").is_ok() {
+        let mut pairs: Vec<(&str, Value)> = vec![(
+            "_note",
+            Value::str(
+                "whole-run trace digests (FNV-1a over every event); \
+                 regenerate with DALI_BLESS_DIGESTS=1 cargo test --test trace_digest",
+            ),
+        )];
+        let hex: Vec<(String, String)> =
+            got.iter().map(|(k, d)| (k.clone(), format!("0x{d:016x}"))).collect();
+        for (k, h) in &hex {
+            pairs.push((k.as_str(), Value::str(h.clone())));
+        }
+        std::fs::write(&path, Value::obj(pairs).to_json() + "\n").unwrap();
+        eprintln!("blessed {} digests into {}", got.len(), path.display());
+        return;
+    }
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden file {}: {e}", path.display()));
+    let golden = Value::parse(&text).unwrap();
+    let mut missing = Vec::new();
+    for (key, d) in &got {
+        match golden.opt(key) {
+            Some(v) => {
+                let want_hex = v.as_str().unwrap();
+                let want = u64::from_str_radix(want_hex.trim_start_matches("0x"), 16).unwrap();
+                assert_eq!(
+                    *d, want,
+                    "golden digest drift for {key}: got 0x{d:016x}, locked {want_hex} — \
+                     if the scheduling change is intentional, re-bless with DALI_BLESS_DIGESTS=1"
+                );
+            }
+            None => missing.push(key.clone()),
+        }
+    }
+    if !missing.is_empty() {
+        eprintln!(
+            "warning: {} comparison-set digests not blessed yet \
+             (DALI_BLESS_DIGESTS=1 cargo test --test trace_digest): {missing:?}",
+            missing.len()
+        );
+    }
+}
