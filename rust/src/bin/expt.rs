@@ -11,8 +11,12 @@
 //! `--jobs N` runs sweep cells on N scoped worker threads (`--jobs 0` /
 //! default = one per core). Replays are deterministic, so the parallelism
 //! never changes a reported number — only the wall time.
+//!
+//! A failing experiment (error or panic) no longer aborts the sweep: the
+//! remaining experiments still run and write their results, then the
+//! driver reports every failure by id and exits non-zero.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use dali::expt::{registry, run_one, ExptCtx};
 use dali::util::{pool, results_dir, Args};
@@ -38,15 +42,48 @@ fn main() -> Result<()> {
         which.iter().map(|s| s.as_str()).collect()
     };
     let t0 = std::time::Instant::now();
+    let mut failed: Vec<(String, String)> = Vec::new();
     for id in ids {
         let started = std::time::Instant::now();
         eprintln!("[expt] running {id}...");
-        let text = run_one(&ctx, id)?;
+        // Catch panics (a bad sweep cell, an assertion in a replay) as well
+        // as plain errors, so one broken experiment never discards the
+        // results of the ones that already completed.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_one(&ctx, id)));
+        let text = match outcome {
+            Ok(Ok(text)) => text,
+            Ok(Err(e)) => {
+                eprintln!("[expt] {id} FAILED: {e:#}");
+                failed.push((id.to_string(), format!("{e:#}")));
+                continue;
+            }
+            Err(payload) => {
+                let msg = payload
+                    .downcast::<String>()
+                    .map(|s| *s)
+                    .or_else(|p| p.downcast::<&'static str>().map(|s| (*s).to_string()))
+                    .unwrap_or_else(|_| "non-string panic payload".to_string());
+                eprintln!("[expt] {id} PANICKED: {msg}");
+                failed.push((id.to_string(), msg));
+                continue;
+            }
+        };
         println!("{text}");
         let path = results_dir().join(format!("{id}.md"));
         std::fs::write(&path, &text)?;
         eprintln!("[expt] {id} done in {:.1}s → {}", started.elapsed().as_secs_f64(), path.display());
     }
     eprintln!("[expt] total {:.1}s", t0.elapsed().as_secs_f64());
+    if !failed.is_empty() {
+        eprintln!("[expt] {} experiment(s) failed:", failed.len());
+        for (id, msg) in &failed {
+            eprintln!("[expt]   {id}: {}", msg.lines().next().unwrap_or(""));
+        }
+        bail!(
+            "{} of the requested experiments failed: {}",
+            failed.len(),
+            failed.iter().map(|(id, _)| id.as_str()).collect::<Vec<_>>().join(", ")
+        );
+    }
     Ok(())
 }

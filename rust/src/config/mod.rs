@@ -13,6 +13,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fault::FaultProfile;
 use crate::util::json::Value;
 
 /// Scaled model dimensions — what PJRT actually computes.
@@ -170,6 +171,35 @@ impl HwConfig {
     pub fn is_memory_limited(&self, paper: &PaperDims) -> bool {
         self.host_ram_bytes > 0.0 && self.host_ram_bytes < paper.total_expert_bytes()
     }
+
+    /// Reject degenerate platform parameters at load time instead of
+    /// letting them divide their way into NaN/infinite virtual times deep
+    /// inside a run. Every rate and the GPU cache budget must be strictly
+    /// positive; `host_ram_bytes` may be 0 (the documented "unlimited"
+    /// two-tier sentinel) but not negative or non-finite.
+    pub fn validate(&self, name: &str) -> Result<()> {
+        for (field, v) in [
+            ("gpu_flops", self.gpu_flops),
+            ("gpu_mem_bw", self.gpu_mem_bw),
+            ("gpu_mem_bytes", self.gpu_mem_bytes),
+            ("cpu_flops", self.cpu_flops),
+            ("cpu_mem_bw", self.cpu_mem_bw),
+            ("pcie_bw", self.pcie_bw),
+            ("nvme_read_bw", self.nvme_read_bw),
+            ("nvme_write_bw", self.nvme_write_bw),
+        ] {
+            if !(v > 0.0 && v.is_finite()) {
+                bail!("hardware preset '{name}': {field} must be positive, got {v}");
+            }
+        }
+        if !(self.host_ram_bytes >= 0.0 && self.host_ram_bytes.is_finite()) {
+            bail!(
+                "hardware preset '{name}': host_ram_bytes must be >= 0 (0 = unlimited), got {}",
+                self.host_ram_bytes
+            );
+        }
+        Ok(())
+    }
 }
 
 /// A named (model, hardware) pairing — the memory-limited presets such as
@@ -219,6 +249,9 @@ pub struct Presets {
     pub buckets: Buckets,
     pub hardware: BTreeMap<String, HwConfig>,
     pub scenarios: BTreeMap<String, Scenario>,
+    /// Named fault-injection profiles (`fault_profiles` section), stored
+    /// as the same `key=value` spec strings `dali run --faults` accepts.
+    pub fault_profiles: BTreeMap<String, FaultProfile>,
 }
 
 impl Presets {
@@ -239,7 +272,10 @@ impl Presets {
         }
         let mut hardware = BTreeMap::new();
         for (name, h) in v.get("hardware")?.as_obj()? {
-            hardware.insert(name.clone(), HwConfig::from_json(h)?);
+            let hw = HwConfig::from_json(h)
+                .with_context(|| format!("hardware preset '{name}'"))?;
+            hw.validate(name)?;
+            hardware.insert(name.clone(), hw);
         }
         let mut scenarios = BTreeMap::new();
         if let Some(s) = v.opt("scenarios") {
@@ -249,14 +285,38 @@ impl Presets {
                 if !(quant_ratio > 0.0 && quant_ratio <= 1.0) {
                     bail!("scenario '{name}': quant_ratio must be in (0, 1], got {quant_ratio}");
                 }
-                scenarios.insert(
-                    name.clone(),
-                    Scenario {
-                        model: sc.get("model")?.as_str()?.to_string(),
-                        hardware: sc.get("hardware")?.as_str()?.to_string(),
-                        quant_ratio,
-                    },
-                );
+                let model = sc.get("model")?.as_str()?.to_string();
+                let hw_name = sc.get("hardware")?.as_str()?.to_string();
+                let mp = match models.get(&model) {
+                    Some(mp) => mp,
+                    None => bail!("scenario '{name}': unknown model preset '{model}'"),
+                };
+                let hw = match hardware.get(&hw_name) {
+                    Some(hw) => hw,
+                    None => bail!("scenario '{name}': unknown hardware preset '{hw_name}'"),
+                };
+                // A RAM budget too small for even one expert is a zero-slot
+                // host tier: every access would thrash the same slot and
+                // virtual times go nonsensical without an explicit error.
+                if hw.host_ram_bytes > 0.0 && hw.host_ram_bytes < mp.paper.expert_bytes() {
+                    bail!(
+                        "scenario '{name}': host RAM budget {:.0} B holds zero experts \
+                         ({:.0} B each) — raise host_ram_bytes or omit it for the \
+                         unlimited two-tier mode",
+                        hw.host_ram_bytes,
+                        mp.paper.expert_bytes()
+                    );
+                }
+                scenarios
+                    .insert(name.clone(), Scenario { model, hardware: hw_name, quant_ratio });
+            }
+        }
+        let mut fault_profiles = BTreeMap::new();
+        if let Some(fp) = v.opt("fault_profiles") {
+            for (name, spec) in fp.as_obj()? {
+                let prof = FaultProfile::parse_spec(spec.as_str()?)
+                    .with_context(|| format!("fault profile '{name}'"))?;
+                fault_profiles.insert(name.clone(), prof);
             }
         }
         Ok(Presets {
@@ -264,6 +324,7 @@ impl Presets {
             buckets: Buckets::from_json(v.get("buckets")?)?,
             hardware,
             scenarios,
+            fault_profiles,
         })
     }
 
@@ -305,6 +366,27 @@ impl Presets {
     /// with the constructor so it can't be forgotten.
     pub fn quant_ratio(&self, name: &str) -> f64 {
         self.scenarios.get(name).map(|s| s.quant_ratio).unwrap_or(1.0)
+    }
+
+    /// Resolve `dali run --faults <arg>`: the presets file's
+    /// `fault_profiles` section first, then the built-in named profiles
+    /// (so `clean`/`flaky-nvme`/`thermal`/`ram-pressure` work without a
+    /// presets file), then an inline `key=value,...` spec.
+    pub fn fault_profile(&self, name: &str) -> Result<FaultProfile> {
+        if let Some(p) = self.fault_profiles.get(name) {
+            return Ok(*p);
+        }
+        if let Some(p) = FaultProfile::named(name) {
+            return Ok(p);
+        }
+        FaultProfile::parse_spec(name).with_context(|| {
+            format!(
+                "'{name}' is not a named fault profile (presets: [{}], built-ins: \
+                 clean, flaky-nvme, thermal, ram-pressure) and failed to parse as a \
+                 key=value spec",
+                self.fault_profiles.keys().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })
     }
 }
 
@@ -396,6 +478,71 @@ mod tests {
         assert_eq!(hw.host_ram_bytes, 0.0, "default host RAM is unlimited");
         let ram16 = p.hw("local-pc-ram16").unwrap();
         assert!((ram16.host_ram_bytes - 16e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn degenerate_hw_budgets_are_rejected_by_name() {
+        let p = Presets::load_default().unwrap();
+        let hw = p.hw("local-pc").unwrap();
+        // explicit zero host RAM is the documented unlimited sentinel
+        assert!(hw.validate("local-pc").is_ok());
+        let mut bad = hw.clone();
+        bad.gpu_mem_bytes = 0.0;
+        let err = bad.validate("zero-cache").unwrap_err().to_string();
+        assert!(err.contains("zero-cache") && err.contains("gpu_mem_bytes"), "{err}");
+        let mut bad = hw.clone();
+        bad.nvme_read_bw = 0.0;
+        assert!(bad.validate("dead-nvme").unwrap_err().to_string().contains("nvme_read_bw"));
+        let mut bad = hw.clone();
+        bad.host_ram_bytes = -1.0;
+        assert!(bad.validate("neg-ram").unwrap_err().to_string().contains("host_ram_bytes"));
+    }
+
+    #[test]
+    fn zero_slot_scenarios_fail_to_load() {
+        // a RAM budget smaller than one expert is a zero-slot host tier
+        let text = r#"{
+            "models": {"m": {"display": "m", "sim": {
+                "layers": 2, "hidden": 64, "heads": 4, "head_dim": 16,
+                "n_routed": 4, "top_k": 2, "n_shared": 0, "moe_inter": 64,
+                "vocab": 256, "max_seq": 64},
+              "paper": {"layers": 2, "hidden": 4096, "n_routed": 4,
+                "top_k": 2, "n_shared": 0, "moe_inter": 14336,
+                "dtype_bytes": 2}}},
+            "buckets": {"tokens": [1], "prefill_seq": [8], "decode_batch": [1]},
+            "hardware": {"h": {"display": "h", "gpu_flops": 1e12,
+                "gpu_mem_bw": 1e11, "gpu_mem_bytes": 1e9,
+                "gpu_kernel_launch_s": 1e-6, "cpu_flops": 1e11,
+                "cpu_mem_bw": 1e10, "cpu_dispatch_s": 1e-6, "cpu_cores": 8,
+                "pcie_bw": 1e10, "pcie_latency_s": 1e-6,
+                "host_ram_bytes": 1e6}},
+            "scenarios": {"tiny-ram": {"model": "m", "hardware": "h"}}
+        }"#;
+        let dir = std::env::temp_dir().join("dali_cfg_test_zero_slot");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("presets.json");
+        std::fs::write(&path, text).unwrap();
+        let err = Presets::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("tiny-ram") && msg.contains("zero experts"), "{msg}");
+    }
+
+    #[test]
+    fn fault_profiles_resolve_from_presets_builtins_and_specs() {
+        let p = Presets::load_default().unwrap();
+        // presets.json mirrors the built-ins — same knobs either way
+        let from_file = p.fault_profile("flaky-nvme").unwrap();
+        assert_eq!(Some(from_file), crate::fault::FaultProfile::named("flaky-nvme"));
+        assert!(p.fault_profile("clean").unwrap().is_clean());
+        assert!(!p.fault_profile("thermal").unwrap().is_clean());
+        assert!(!p.fault_profile("ram-pressure").unwrap().is_clean());
+        // inline spec fallback
+        let spec = p.fault_profile("nvme_fail_prob=0.5,max_retries=1").unwrap();
+        assert_eq!(spec.nvme_fail_prob, 0.5);
+        assert_eq!(spec.max_retries, 1);
+        // garbage is a named error
+        let err = p.fault_profile("no-such-profile").unwrap_err();
+        assert!(format!("{err:#}").contains("no-such-profile"));
     }
 
     #[test]

@@ -33,6 +33,7 @@
 use crate::coordinator::assignment::{AssignCtx, Assigner, Assignment, SolveCost};
 use crate::coordinator::cache::{ExpertCache, Swap};
 use crate::coordinator::prefetch::{top_n_into, PrefetchCtx, Prefetcher};
+use crate::fault::FaultPlan;
 use crate::hw::{CostModel, GpuPipeline, Ns, TransferKind};
 use crate::metrics::RunMetrics;
 use crate::store::{placement, PlacementCfg, Tier, TieredStore};
@@ -152,8 +153,17 @@ pub struct StepSimulator<'a, S: TraceSink = NullSink> {
     /// evictions into demotions, and charges NVMe promotions.
     store: Option<TieredStore>,
     scratch: StepScratch,
-    /// Steps retired so far (both phases) — the `StepEnd` event index.
+    /// Steps retired so far (both phases) — the `StepEnd` event index and
+    /// the step index every fault process is keyed on.
     steps_done: u64,
+    /// Deterministic fault plan (`None` = healthy machine). Installed with
+    /// [`StepSimulator::with_faults`]; a clean plan is bit-transparent.
+    faults: Option<FaultPlan>,
+    /// Pre-built degraded cost-model views, indexed
+    /// `(gpu throttled) | (pcie degraded) << 1`. Built once when the plan
+    /// is installed (`CostModel::degraded` clones, and the step loop must
+    /// stay allocation-free), empty without an active non-clean plan.
+    fault_costs: Vec<CostModel>,
     sink: S,
 }
 
@@ -184,6 +194,8 @@ impl<'a> StepSimulator<'a> {
             store: None,
             scratch: StepScratch::with_dims(n_routed),
             steps_done: 0,
+            faults: None,
+            fault_costs: Vec::new(),
             sink: NullSink,
         }
     }
@@ -211,8 +223,35 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             store: self.store,
             scratch: self.scratch,
             steps_done: self.steps_done,
+            faults: self.faults,
+            fault_costs: self.fault_costs,
             sink,
         }
+    }
+
+    /// Install a deterministic fault plan. Pre-builds the degraded
+    /// cost-model views for the four `(GPU throttled) × (PCIe degraded)`
+    /// combinations up front, so per-step selection in `run_step` is a
+    /// slice index with no allocation, and propagates the plan to an
+    /// already-attached store; [`Self::with_store`] propagates it the
+    /// other way, so either installation order works. A clean plan is
+    /// fully transparent: no views are built and every fault process is
+    /// a no-op.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.fault_costs.clear();
+        if !plan.is_clean() {
+            let p = *plan.profile();
+            for idx in 0..4usize {
+                let gpu = if idx & 1 != 0 { p.gpu_mult } else { 1.0 };
+                let pcie = if idx & 2 != 0 { p.pcie_mult } else { 1.0 };
+                self.fault_costs.push(self.cost.degraded(gpu, pcie));
+            }
+        }
+        if let Some(st) = self.store.as_mut() {
+            st.set_faults(Some(plan));
+        }
+        self.faults = Some(plan);
+        self
     }
 
     /// Attach a tiered expert store. The store's host floor is raised to
@@ -222,6 +261,9 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
     pub fn with_store(mut self, mut store: TieredStore) -> Self {
         store.ensure_min_slots(self.policy.cache.capacity() * self.layers + 1);
         store.set_placement(self.policy.placement);
+        if let Some(plan) = self.faults {
+            store.set_faults(Some(plan));
+        }
         self.store = Some(store);
         self
     }
@@ -305,8 +347,42 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             return;
         }
         debug_assert_eq!(step.layers.len(), self.layers);
-        let trans = self.cost.trans_time();
-        let bytes = self.cost.expert_bytes() as u64;
+        // --- fault processes for this step ------------------------------
+        // Pure functions of (plan seed, step index): select the degraded
+        // cost-model view for any GPU-throttle / PCIe-degradation window
+        // covering this step, and apply the RAM-pressure budget to the
+        // store. The views were pre-built in `with_faults`, so selection
+        // never allocates; the vec is taken out of `self` (like the
+        // scratch) so the `cost` borrow can't fight `&mut self` below.
+        let fault_costs = std::mem::take(&mut self.fault_costs);
+        let (gpu_hot, pcie_hot) = match &self.faults {
+            Some(plan) if !plan.is_clean() => (
+                plan.gpu_mult(self.steps_done) > 1.0,
+                plan.pcie_mult(self.steps_done) > 1.0,
+            ),
+            _ => (false, false),
+        };
+        let cost: &CostModel = if (gpu_hot || pcie_hot) && !fault_costs.is_empty() {
+            &fault_costs[(gpu_hot as usize) | ((pcie_hot as usize) << 1)]
+        } else {
+            self.cost
+        };
+        if self.faults.is_some() {
+            if let Some(st) = self.store.as_mut() {
+                st.apply_fault_step(self.steps_done, self.now, cost, &mut self.sink);
+            }
+        }
+        let step_start = self.now;
+        // Everything below prices through the selected view: degraded PCIe
+        // stretches `trans` (demand, prefetch, and cache-update transfers
+        // plus the spec-lane backlog gate), a throttled GPU stretches
+        // attention, gating, expert kernels, and the head — and both feed
+        // the assignment ctx, so Greedy reroutes marginal experts to the
+        // CPU for exactly the steps a window covers. NVMe and CPU times
+        // are identical in every view, so store promotions and the
+        // `exec_arrival` path are unaffected by construction.
+        let trans = cost.trans_time();
+        let bytes = cost.expert_bytes() as u64;
         let n = self.n_routed;
         let calib_freq = self.calib_freq;
         let mut scratch = std::mem::take(&mut self.scratch);
@@ -331,13 +407,13 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             let data = &step.layers[l];
             let layer_base = l * n;
             // --- attention + fixed overheads -------------------------------
-            let attn = self.cost.attn_time(step.tokens, kv_len)
-                + self.cost.layer_fixed()
+            let attn = cost.attn_time(step.tokens, kv_len)
+                + cost.layer_fixed()
                 + self.policy.layer_overhead_ns;
             self.now += attn;
             self.metrics.attn_ns += attn;
             // --- gate -------------------------------------------------------
-            let gate = self.cost.gate_time(step.tokens);
+            let gate = cost.gate_time(step.tokens);
             self.now += gate;
             self.metrics.gate_ns += gate;
 
@@ -374,7 +450,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                 match self.store.as_ref() {
                     Some(st) => {
                         st.layer_tiers_into(l, tiers);
-                        st.layer_host_wait_into(l, self.now, self.cost, host_wait);
+                        st.layer_host_wait_into(l, self.now, cost, host_wait);
                         (Some(tiers.as_slice()), Some(host_wait.as_slice()))
                     }
                     None => (None, None),
@@ -384,7 +460,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                 resident,
                 tiers: tiers_snapshot,
                 host_wait: wait_snapshot,
-                cost: self.cost,
+                cost,
                 gpu_free_slots: self.policy.gpu_free_slots.saturating_sub(wasted_staging),
                 layer: l,
                 layers: self.layers,
@@ -412,9 +488,9 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                     }
                     let gpu = assignment.to_gpu[e];
                     let cost_ns = if gpu {
-                        self.cost.t_gpu_compute(w as usize)
+                        cost.t_gpu_compute(w as usize)
                     } else {
-                        (self.cost.t_cpu(w as usize) as f64 / self.policy.cpu_eff) as Ns
+                        (cost.t_cpu(w as usize) as f64 / self.policy.cpu_eff) as Ns
                     };
                     self.sink.emit(&Event::Assign {
                         layer: l as u32,
@@ -444,7 +520,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                 if !assignment.to_cpu[e] {
                     continue;
                 }
-                let t = self.cost.t_cpu(data.workloads[e] as usize);
+                let t = cost.t_cpu(data.workloads[e] as usize);
                 let dur = (t as f64 / self.policy.cpu_eff) as Ns;
                 // waits for in-flight predictive promotions and promotes
                 // on demand from disk
@@ -476,7 +552,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             });
             for &e in gpu_experts.iter() {
                 let w = data.workloads[e] as usize;
-                let compute = self.cost.t_gpu_compute(w);
+                let compute = cost.t_gpu_compute(w);
                 self.metrics.cache_lookups += 1;
                 let arr = self.prefetch_arrival[layer_base + e];
                 if cache_resident[e] {
@@ -559,7 +635,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             }
             // shared experts always run on GPU on the full token batch
             for _s in 0..self.n_shared {
-                let compute = self.cost.t_gpu_compute(step.tokens);
+                let compute = cost.t_gpu_compute(step.tokens);
                 let out = self.gpu.schedule_expert(self.now, 0, 0, compute);
                 if S::ENABLED {
                     self.sink.emit(&Event::LaneBusy {
@@ -604,7 +680,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                     // for SMs (scheduled on the compute stream, delaying the
                     // *next* layer's kernels) but is not part of this layer's
                     // barrier.
-                    let pred_cost = self.cost.gate_time(step.tokens) + self.cost.layer_fixed();
+                    let pred_cost = cost.gate_time(step.tokens) + cost.layer_fixed();
                     let out = self.gpu.schedule_expert(self.now, 0, 0, pred_cost);
                     self.metrics.prefetch_gate_ns += pred_cost;
                     if S::ENABLED {
@@ -660,7 +736,6 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                     // chains its host arrival → PCIe; the read is
                     // speculative, not demand-path
                     let mut pcie_ready = ready;
-                    let cost = self.cost;
                     if let Some(st) = self.store.as_mut() {
                         if st.tier(l + 1, e) == Tier::Disk || st.pending(l + 1, e, ready) {
                             pcie_ready = st
@@ -697,7 +772,6 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                 // and a promotion can only be consumed in a later instant,
                 // with genuinely hidden NVMe time.
                 if placement_on {
-                    let cost = self.cost;
                     if let Some(st) = self.store.as_mut() {
                         placement::promote_ahead_layer_t(
                             st,
@@ -729,7 +803,6 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                 for swap in swaps.iter() {
                     let mut ready = self.now;
                     let now = self.now;
-                    let cost = self.cost;
                     if S::ENABLED {
                         self.sink
                             .emit(&Event::CacheEvict { layer: l as u32, expert: swap.evict as u32 });
@@ -762,9 +835,18 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
         }
         self.scratch = scratch;
         // --- LM head ----------------------------------------------------------
-        let head = self.cost.head_time(step.tokens);
+        let head = cost.head_time(step.tokens);
         self.now += head;
         self.metrics.attn_ns += head;
+
+        // attribute the step's span to any fault window that covered it
+        if gpu_hot {
+            self.metrics.degraded_gpu_ns += self.now - step_start;
+        }
+        if pcie_hot {
+            self.metrics.degraded_pcie_ns += self.now - step_start;
+        }
+        self.fault_costs = fault_costs;
 
         match phase {
             Phase::Prefill => self.metrics.tokens_in += step.tokens as u64,
@@ -822,6 +904,11 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             self.metrics.nvme_overlap_hidden_ns = st.overlap_hidden_ns;
             self.metrics.transcode_ns = st.xfer.transcode_busy;
             self.metrics.disk_bytes_saved = st.bytes_saved;
+            self.metrics.fault_retries = st.fault_retries;
+            self.metrics.fault_aborts = st.fault_aborts;
+            self.metrics.fault_stall_ns = st.fault_stall_ns;
+            self.metrics.ram_pressure_events = st.ram_pressure_events;
+            self.metrics.ram_pressure_spills = st.ram_pressure_spills;
         }
         // None under the default NullSink — keeps untraced metric equality
         // (e.g. the unlimited-store transparency tests) exactly as before.
@@ -883,6 +970,33 @@ pub fn replay_decode_traced<S: TraceSink>(
     store: Option<TieredStore>,
     sink: S,
 ) -> (RunMetrics, S) {
+    replay_decode_faulted(
+        trace, seq_ids, steps, cost, policy, calib_freq, n_shared, seed, None, store, sink,
+    )
+}
+
+/// [`replay_decode_traced`] with a deterministic fault plan installed:
+/// NVMe retry storms, PCIe/GPU degradation windows, and mid-run
+/// RAM-pressure budget shrinks all replay bit-identically for a fixed
+/// `(plan seed, profile)` — `dali run --faults`, the bench faulted tier,
+/// and the chaos suite route through here. `faults: None` (or a clean
+/// plan) is exactly `replay_decode_traced`. Fault step indices count
+/// both phases, so the warm-up prefill consumes step 0 and decode step
+/// `s` sees fault step `s + 1`.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_decode_faulted<S: TraceSink>(
+    trace: &Trace,
+    seq_ids: &[usize],
+    steps: usize,
+    cost: &CostModel,
+    policy: PolicyBundle,
+    calib_freq: &[Vec<f64>],
+    n_shared: usize,
+    seed: u64,
+    faults: Option<FaultPlan>,
+    store: Option<TieredStore>,
+    sink: S,
+) -> (RunMetrics, S) {
     let mut sim = StepSimulator::new(
         cost,
         policy,
@@ -893,6 +1007,9 @@ pub fn replay_decode_traced<S: TraceSink>(
         seed,
     )
     .with_sink(sink);
+    if let Some(plan) = faults {
+        sim = sim.with_faults(plan);
+    }
     if let Some(st) = store {
         sim = sim.with_store(st);
     }
@@ -1400,6 +1517,184 @@ mod tests {
             predictive.nvme_demand_ns,
             reactive.nvme_demand_ns
         );
+    }
+
+    #[test]
+    fn clean_fault_plan_is_bit_transparent() {
+        // Acceptance criterion: installing a clean plan must not move a
+        // single bit of any metric — same arithmetic, same branches.
+        use crate::fault::{FaultPlan, FaultProfile};
+        let c = cost();
+        let f = freq(4, 8);
+        let run = |faulted: bool| {
+            let mut sim = StepSimulator::new(&c, bundle(true, true), &f, 4, 8, 1, 9).with_store(
+                crate::store::TieredStore::new(
+                    4,
+                    8,
+                    crate::store::StoreCfg { host_slots: 12, ..Default::default() },
+                ),
+            );
+            if faulted {
+                sim = sim.with_faults(FaultPlan::new(FaultProfile::clean(), 0xfa));
+            }
+            for i in 0..16 {
+                let w = [8u32, (i % 3) as u32, 8, 0, 2, 0, 1, i as u32 % 5];
+                sim.run_step(&mk_step(4, 8, &w), 16 + i as usize, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let clean = run(false);
+        let planned = run(true);
+        assert_eq!(planned, clean, "a clean fault plan must be bit-transparent");
+        assert_eq!(planned.fault_retries, 0);
+        assert_eq!(planned.degraded_gpu_ns, 0);
+        assert_eq!(planned.ram_pressure_events, 0);
+    }
+
+    #[test]
+    fn flaky_nvme_plan_is_deterministic_and_charges_retry_stalls() {
+        use crate::fault::{FaultPlan, FaultProfile};
+        let c = cost();
+        let f = freq(4, 8);
+        let w = [8u32, 8, 8, 8, 8, 8, 8, 8];
+        let run = |plan: Option<FaultPlan>| {
+            let mut sim = StepSimulator::new(&c, bundle(false, true), &f, 4, 8, 0, 1);
+            if let Some(p) = plan {
+                sim = sim.with_faults(p);
+            }
+            sim = sim.with_store(crate::store::TieredStore::new(
+                4,
+                8,
+                crate::store::StoreCfg { host_slots: 10, ..Default::default() },
+            ));
+            for _ in 0..12 {
+                sim.run_step(&mk_step(4, 8, &w), 16, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let mut profile = FaultProfile::named("flaky-nvme").unwrap();
+        profile.nvme_fail_prob = 0.5; // make retries certain over 12 steps
+        let a = run(Some(FaultPlan::new(profile, 0x51)));
+        let b = run(Some(FaultPlan::new(profile, 0x51)));
+        assert_eq!(a, b, "same (seed, profile) must replay bit-identically");
+        assert!(a.fault_retries > 0, "half the reads failing must retry");
+        assert!(a.fault_stall_ns > 0, "failed attempts hold the read lane");
+        let clean = run(None);
+        assert!(
+            a.total_ns > clean.total_ns,
+            "retry storms must cost virtual time: {} vs {}",
+            a.total_ns,
+            clean.total_ns
+        );
+        // no speculative traffic in this bundle — only abortable reads abort
+        assert_eq!(a.fault_aborts, 0);
+        assert_eq!(a.store_promotions, clean.store_promotions, "demand reads always land");
+    }
+
+    #[test]
+    fn gpu_throttle_windows_reroute_work_to_cpu() {
+        use crate::fault::{FaultPlan, FaultProfile};
+        let c = cost();
+        let f = freq(4, 8);
+        let w = [32u32, 32, 32, 32, 32, 32, 32, 32];
+        let run = |plan: Option<FaultPlan>| {
+            let mut sim = StepSimulator::new(&c, bundle(false, false), &f, 4, 8, 0, 1);
+            if let Some(p) = plan {
+                sim = sim.with_faults(p);
+            }
+            for _ in 0..8 {
+                sim.run_step(&mk_step(4, 8, &w), 32, Phase::Decode);
+            }
+            sim.finish()
+        };
+        // window covers every step (len == period), 8x slower GPU
+        let profile = FaultProfile {
+            gpu_period: 8,
+            gpu_len: 8,
+            gpu_mult: 8.0,
+            ..FaultProfile::clean()
+        };
+        let clean = run(None);
+        let hot = run(Some(FaultPlan::new(profile, 3)));
+        assert_eq!(hot.degraded_gpu_ns, hot.total_ns, "every step falls in the window");
+        assert_eq!(hot.degraded_pcie_ns, 0);
+        assert!(hot.total_ns > clean.total_ns, "a throttled GPU must cost time");
+        assert!(
+            hot.moe_cpu_busy_ns > clean.moe_cpu_busy_ns,
+            "assignment must reroute marginal experts to the CPU: {} vs {}",
+            hot.moe_cpu_busy_ns,
+            clean.moe_cpu_busy_ns
+        );
+    }
+
+    #[test]
+    fn thermal_profile_accumulates_both_degradation_windows() {
+        use crate::fault::{FaultPlan, FaultProfile};
+        let c = cost();
+        let f = freq(4, 8);
+        let w = [16u32, 16, 16, 16, 0, 0, 0, 0];
+        let run = |plan: Option<FaultPlan>| {
+            let mut sim = StepSimulator::new(&c, bundle(false, false), &f, 4, 8, 0, 1);
+            if let Some(p) = plan {
+                sim = sim.with_faults(p);
+            }
+            for _ in 0..72 {
+                sim.run_step(&mk_step(4, 8, &w), 16, Phase::Decode);
+            }
+            sim.finish()
+        };
+        let profile = FaultProfile::named("thermal").unwrap();
+        let clean = run(None);
+        let hot = run(Some(FaultPlan::new(profile, 0x7e)));
+        // 72 steps cover three GPU periods and two PCIe periods: both
+        // windows must have been live for whole steps at a time
+        assert!(hot.degraded_gpu_ns > 0, "GPU throttle windows must land");
+        assert!(hot.degraded_pcie_ns > 0, "PCIe degradation windows must land");
+        assert!(hot.total_ns > clean.total_ns);
+        assert_eq!(clean.degraded_gpu_ns, 0);
+    }
+
+    #[test]
+    fn replay_decode_faulted_matches_traced_when_clean() {
+        use crate::fault::{FaultPlan, FaultProfile};
+        let c = cost();
+        let f = freq(4, 8);
+        let t = tiny_trace(4, 8, 16);
+        let store = || {
+            crate::store::TieredStore::new(
+                4,
+                8,
+                crate::store::StoreCfg { host_slots: 12, ..Default::default() },
+            )
+        };
+        let base = replay_decode_traced(
+            &t,
+            &[0, 0],
+            16,
+            &c,
+            bundle(true, true),
+            &f,
+            0,
+            5,
+            Some(store()),
+            NullSink,
+        )
+        .0;
+        let clean = replay_decode_faulted(
+            &t,
+            &[0, 0],
+            16,
+            &c,
+            bundle(true, true),
+            &f,
+            0,
+            5,
+            Some(FaultPlan::new(FaultProfile::clean(), 9)),
+            Some(store()),
+            NullSink,
+        )
+        .0;
+        assert_eq!(clean, base, "clean plan through the replay entry must be exact");
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! Deterministic fault injection: seeded hardware-perturbation processes
+//! plus the bookkeeping the pipeline's graceful-degradation responses key
+//! off.
+//!
+//! Real local PCs — the paper's target platform — are exactly the machines
+//! where the simulator's perfect-hardware assumptions break: consumer NVMe
+//! drives stall and retry, PCIe links renegotiate under contention, GPUs
+//! thermal-throttle in small cases, and the OS reclaims host RAM from under
+//! the process. This module makes those perturbations a first-class,
+//! replay-locked axis of the reproduction:
+//!
+//! * [`FaultProfile`] — the perturbation parameters (all plain numbers,
+//!   `Copy`). Named presets ship in code ([`FaultProfile::named`]) and in
+//!   `configs/presets.json` (`fault_profiles`, parsed by [`crate::config`]):
+//!   `clean`, `flaky-nvme`, `thermal`, `ram-pressure`.
+//! * [`FaultPlan`] — a profile bound to a seed. Every query is a **pure
+//!   function of `(seed, step, lane/expert, attempt)`** — no wall clock, no
+//!   mutable RNG state — so the same `(seed, profile)` replays
+//!   bit-identically (the `fault_property` chaos suite locks this via
+//!   whole-run trace digests) and resuming from any step needs no replayed
+//!   history.
+//!
+//! Perturbation processes and who responds to them:
+//!
+//! * **NVMe latency spikes + transient read failures** — consulted by
+//!   `TieredStore::schedule_promotion` per read attempt. Failed attempts
+//!   occupy the read lane for a timeout, back off exponentially in virtual
+//!   time, and retry up to [`FaultProfile::max_retries`]; each retry
+//!   surfaces as an `Event::FaultRetry`. Speculative promotions whose
+//!   retries exhaust are *aborted* (`Event::FaultAbort`, expert stays on
+//!   disk); demand promotions fall back to a final raw read that always
+//!   succeeds, so execution can never deadlock. The inflated
+//!   `read_free_at()` feeds the existing promote-ahead backlog gate, which
+//!   throttles speculation on a sick drive for free.
+//! * **PCIe bandwidth degradation windows** — step-periodic multiplier on
+//!   PCIe transfer durations; priced into `AssignCtx` so Greedy Assignment
+//!   reroutes load to the CPU instead of piling onto the degraded link.
+//! * **GPU thermal throttle intervals** — step-periodic multiplier on GPU
+//!   compute durations, applied to execution and priced into assignment.
+//! * **Host-RAM budget shrink/restore** — step-periodic confiscation of a
+//!   fraction of the host tier's slots; `TieredStore::apply_fault_step`
+//!   demotes under the workload-aware score until the shrunken budget
+//!   holds, with the conservation invariants intact throughout.
+//!
+//! Window phases are jittered per `(seed, process)` so distinct seeds
+//! observe distinct schedules, while a fixed seed's schedule is immutable.
+//! The clean profile is **transparent**: every query returns the neutral
+//! value and the simulator takes today's exact code paths, so a
+//! `--faults clean` run is bit-identical to an un-faulted one (locked in
+//! `rust/tests/fault_property.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::hw::Ns;
+
+/// Perturbation parameters. All fields are plain numbers with neutral
+/// defaults, so the default profile is exactly the clean machine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProfile {
+    /// Probability a given NVMe read *attempt* transiently fails.
+    pub nvme_fail_prob: f64,
+    /// Probability a successful NVMe read is a latency spike.
+    pub nvme_slow_prob: f64,
+    /// Duration multiplier for a spiked read (>= 1).
+    pub nvme_slow_mult: f64,
+    /// Retry cap after the first failed attempt. A speculative transfer
+    /// whose `max_retries + 1` attempts all fail is aborted; a demand
+    /// transfer falls back to a final raw read that always succeeds.
+    pub max_retries: u32,
+    /// A failed attempt occupies the read lane for `timeout_mult` x the
+    /// clean read duration before it is declared stalled and retried.
+    pub timeout_mult: f64,
+    /// Backoff before retry `k` (1-based) is
+    /// `backoff_mult * 2^(k-1)` x the clean read duration — virtual-time
+    /// waiting that leaves the lane idle, not busy.
+    pub backoff_mult: f64,
+    /// PCIe degradation window: every `pcie_period` steps, `pcie_len`
+    /// steps run with transfers slowed by `pcie_mult`. 0 disables.
+    pub pcie_period: u64,
+    pub pcie_len: u64,
+    pub pcie_mult: f64,
+    /// GPU thermal-throttle window (same shape as the PCIe window).
+    pub gpu_period: u64,
+    pub gpu_len: u64,
+    pub gpu_mult: f64,
+    /// Host-RAM pressure window: every `ram_period` steps, for `ram_len`
+    /// steps, `ram_shrink_frac` of the host tier's slots are confiscated.
+    pub ram_period: u64,
+    pub ram_len: u64,
+    pub ram_shrink_frac: f64,
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile {
+            nvme_fail_prob: 0.0,
+            nvme_slow_prob: 0.0,
+            nvme_slow_mult: 1.0,
+            max_retries: 3,
+            timeout_mult: 3.0,
+            backoff_mult: 1.0,
+            pcie_period: 0,
+            pcie_len: 0,
+            pcie_mult: 1.0,
+            gpu_period: 0,
+            gpu_len: 0,
+            gpu_mult: 1.0,
+            ram_period: 0,
+            ram_len: 0,
+            ram_shrink_frac: 0.0,
+        }
+    }
+}
+
+impl FaultProfile {
+    /// The perfect machine — every query neutral, pipeline code paths
+    /// identical to an un-faulted run.
+    pub fn clean() -> Self {
+        FaultProfile::default()
+    }
+
+    /// Whether every perturbation process is disabled.
+    pub fn is_clean(&self) -> bool {
+        self.nvme_fail_prob <= 0.0
+            && self.nvme_slow_prob <= 0.0
+            && (self.pcie_period == 0 || self.pcie_len == 0 || self.pcie_mult <= 1.0)
+            && (self.gpu_period == 0 || self.gpu_len == 0 || self.gpu_mult <= 1.0)
+            && (self.ram_period == 0 || self.ram_len == 0 || self.ram_shrink_frac <= 0.0)
+    }
+
+    /// The built-in named profiles (mirrored in `configs/presets.json`
+    /// under `fault_profiles`; the config loader falls back here so the
+    /// names work without a presets file).
+    pub fn named(name: &str) -> Option<FaultProfile> {
+        match name {
+            "clean" => Some(FaultProfile::clean()),
+            // Consumer NVMe under sustained mixed load: transient command
+            // failures plus long-tail latency spikes.
+            "flaky-nvme" => Some(FaultProfile {
+                nvme_fail_prob: 0.08,
+                nvme_slow_prob: 0.20,
+                nvme_slow_mult: 4.0,
+                max_retries: 3,
+                timeout_mult: 3.0,
+                backoff_mult: 1.0,
+                ..FaultProfile::default()
+            }),
+            // Small-case thermal cycling: GPU clocks drop and the PCIe
+            // link renegotiates while the fans catch up.
+            "thermal" => Some(FaultProfile {
+                gpu_period: 24,
+                gpu_len: 10,
+                gpu_mult: 1.7,
+                pcie_period: 36,
+                pcie_len: 12,
+                pcie_mult: 1.8,
+                ..FaultProfile::default()
+            }),
+            // OS-level memory pressure: a third of the expert budget is
+            // reclaimed periodically, then handed back.
+            "ram-pressure" => Some(FaultProfile {
+                ram_period: 32,
+                ram_len: 12,
+                ram_shrink_frac: 0.35,
+                ..FaultProfile::default()
+            }),
+            _ => None,
+        }
+    }
+
+    /// Parse an inline `key=value,key=value` spec (keys are the field
+    /// names), starting from the clean profile. `dali run --faults` accepts
+    /// either a profile name or this form.
+    pub fn parse_spec(spec: &str) -> Result<FaultProfile> {
+        let mut p = FaultProfile::clean();
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (k, v) = match part.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("fault spec '{part}': expected key=value"),
+            };
+            let (k, v) = (k.trim(), v.trim());
+            let f = || -> Result<f64> {
+                v.parse::<f64>().map_err(|_| anyhow::anyhow!("fault spec {k}: bad number '{v}'"))
+            };
+            let u = || -> Result<u64> {
+                v.parse::<u64>().map_err(|_| anyhow::anyhow!("fault spec {k}: bad integer '{v}'"))
+            };
+            match k {
+                "nvme_fail_prob" => p.nvme_fail_prob = f()?,
+                "nvme_slow_prob" => p.nvme_slow_prob = f()?,
+                "nvme_slow_mult" => p.nvme_slow_mult = f()?,
+                "max_retries" => p.max_retries = u()? as u32,
+                "timeout_mult" => p.timeout_mult = f()?,
+                "backoff_mult" => p.backoff_mult = f()?,
+                "pcie_period" => p.pcie_period = u()?,
+                "pcie_len" => p.pcie_len = u()?,
+                "pcie_mult" => p.pcie_mult = f()?,
+                "gpu_period" => p.gpu_period = u()?,
+                "gpu_len" => p.gpu_len = u()?,
+                "gpu_mult" => p.gpu_mult = f()?,
+                "ram_period" => p.ram_period = u()?,
+                "ram_len" => p.ram_len = u()?,
+                "ram_shrink_frac" => p.ram_shrink_frac = f()?,
+                other => bail!("fault spec: unknown key '{other}'"),
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Reject degenerate parameterizations that would produce silent
+    /// nonsense (negative probabilities, shrink > whole budget, sub-unit
+    /// slowdowns posing as faults).
+    pub fn validate(&self) -> Result<()> {
+        let prob = |name: &str, v: f64| -> Result<()> {
+            if !(0.0..=1.0).contains(&v) {
+                bail!("fault profile: {name} must be in [0, 1], got {v}");
+            }
+            Ok(())
+        };
+        prob("nvme_fail_prob", self.nvme_fail_prob)?;
+        prob("nvme_slow_prob", self.nvme_slow_prob)?;
+        prob("ram_shrink_frac", self.ram_shrink_frac)?;
+        let mult = |name: &str, v: f64| -> Result<()> {
+            if !(v >= 1.0 && v.is_finite()) {
+                bail!("fault profile: {name} must be >= 1, got {v}");
+            }
+            Ok(())
+        };
+        mult("nvme_slow_mult", self.nvme_slow_mult)?;
+        mult("timeout_mult", self.timeout_mult)?;
+        mult("pcie_mult", self.pcie_mult)?;
+        mult("gpu_mult", self.gpu_mult)?;
+        if !(self.backoff_mult >= 0.0 && self.backoff_mult.is_finite()) {
+            bail!("fault profile: backoff_mult must be >= 0, got {}", self.backoff_mult);
+        }
+        let window = |name: &str, period: u64, len: u64| -> Result<()> {
+            if period > 0 && len > period {
+                bail!("fault profile: {name} window len {len} exceeds period {period}");
+            }
+            Ok(())
+        };
+        window("pcie", self.pcie_period, self.pcie_len)?;
+        window("gpu", self.gpu_period, self.gpu_len)?;
+        window("ram", self.ram_period, self.ram_len)?;
+        Ok(())
+    }
+}
+
+/// Outcome of the NVMe fault ledger for one read transfer: how many
+/// attempts fail before it either succeeds or (speculative only) aborts.
+/// Computed *synchronously at issue time* — the plan is pure, so the whole
+/// retry history of a transfer is a deterministic function of its identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadFaults {
+    /// Failed attempts charged before the outcome (each occupies the lane
+    /// for the timeout and backs off exponentially before the next).
+    pub failures: u32,
+    /// All `max_retries + 1` attempts failed. Speculative transfers abort;
+    /// demand transfers fall back to a final raw read that succeeds.
+    pub exhausted: bool,
+    /// Duration multiplier of the successful attempt (latency spike).
+    pub slow_mult: f64,
+}
+
+impl ReadFaults {
+    pub const NONE: ReadFaults = ReadFaults { failures: 0, exhausted: false, slow_mult: 1.0 };
+}
+
+/// A [`FaultProfile`] bound to a seed: the deterministic perturbation
+/// schedule. Cheap to copy; the store and the simulator each hold one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    profile: FaultProfile,
+    seed: u64,
+}
+
+/// splitmix64 finalizer — the same mixer `DetRng` builds on; full-period,
+/// platform-independent.
+#[inline]
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Draw a Bernoulli with exact-in-f64 53-bit resolution from one hash word.
+#[inline]
+fn hit(h: u64, prob: f64) -> bool {
+    prob > 0.0 && ((h >> 11) as f64) < prob * (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    pub fn new(profile: FaultProfile, seed: u64) -> Self {
+        FaultPlan { profile, seed }
+    }
+
+    pub fn profile(&self) -> &FaultProfile {
+        &self.profile
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Whether this plan perturbs anything at all.
+    pub fn is_clean(&self) -> bool {
+        self.profile.is_clean()
+    }
+
+    #[inline]
+    fn hash(&self, domain: u64, a: u64, b: u64, c: u64) -> u64 {
+        mix(self.seed ^ mix(domain ^ mix(a ^ mix(b ^ mix(c)))))
+    }
+
+    /// Step-periodic window test with a seed-jittered phase per process.
+    #[inline]
+    fn in_window(&self, domain: u64, step: u64, period: u64, len: u64) -> bool {
+        if period == 0 || len == 0 {
+            return false;
+        }
+        let phase = mix(self.seed ^ domain) % period;
+        (step.wrapping_add(phase)) % period < len
+    }
+
+    /// GPU compute-duration multiplier for `step` (1.0 = full clocks).
+    #[inline]
+    pub fn gpu_mult(&self, step: u64) -> f64 {
+        let p = &self.profile;
+        if p.gpu_mult > 1.0 && self.in_window(0x6770, step, p.gpu_period, p.gpu_len) {
+            p.gpu_mult
+        } else {
+            1.0
+        }
+    }
+
+    /// PCIe transfer-duration multiplier for `step` (1.0 = full link).
+    #[inline]
+    pub fn pcie_mult(&self, step: u64) -> f64 {
+        let p = &self.profile;
+        if p.pcie_mult > 1.0 && self.in_window(0x7063, step, p.pcie_period, p.pcie_len) {
+            p.pcie_mult
+        } else {
+            1.0
+        }
+    }
+
+    /// Host-tier slots confiscated at `step` out of a `host_slots` budget.
+    #[inline]
+    pub fn ram_reserved(&self, step: u64, host_slots: usize) -> usize {
+        let p = &self.profile;
+        if p.ram_shrink_frac <= 0.0 || !self.in_window(0x7261, step, p.ram_period, p.ram_len) {
+            return 0;
+        }
+        ((host_slots as f64) * p.ram_shrink_frac) as usize
+    }
+
+    /// The complete NVMe fault ledger for one read transfer identified by
+    /// `(step, layer, expert)`: per-attempt failure draws walked until the
+    /// first success or until all `max_retries + 1` attempts fail, plus the
+    /// latency-spike draw for the successful attempt.
+    pub fn read_faults(&self, step: u64, layer: usize, expert: usize) -> ReadFaults {
+        let p = &self.profile;
+        if p.nvme_fail_prob <= 0.0 && p.nvme_slow_prob <= 0.0 {
+            return ReadFaults::NONE;
+        }
+        let id = ((layer as u64) << 32) | expert as u64;
+        let attempts = p.max_retries + 1;
+        let mut failures = 0u32;
+        while failures < attempts {
+            let h = self.hash(0x6661, step, id, failures as u64);
+            if !hit(h, p.nvme_fail_prob) {
+                break;
+            }
+            failures += 1;
+        }
+        let exhausted = failures == attempts;
+        let slow = self.hash(0x736c, step, id, failures as u64);
+        let slow_mult =
+            if p.nvme_slow_mult > 1.0 && hit(slow, p.nvme_slow_prob) { p.nvme_slow_mult } else { 1.0 };
+        ReadFaults { failures, exhausted, slow_mult }
+    }
+
+    /// Lane time one failed attempt occupies (the per-transfer timeout).
+    #[inline]
+    pub fn timeout_ns(&self, read_dur: Ns) -> Ns {
+        scale_ns(read_dur, self.profile.timeout_mult)
+    }
+
+    /// Virtual-time backoff before retry `k` (1-based): exponential, priced
+    /// as lane-idle waiting.
+    #[inline]
+    pub fn backoff_ns(&self, read_dur: Ns, k: u32) -> Ns {
+        let base = scale_ns(read_dur, self.profile.backoff_mult);
+        base.saturating_mul(1u64 << (k.saturating_sub(1)).min(16))
+    }
+}
+
+/// Scale a virtual duration by a fault multiplier. Exactly identity at 1.0
+/// (the clean path stays bit-identical, not merely close).
+#[inline]
+pub fn scale_ns(d: Ns, mult: f64) -> Ns {
+    if mult == 1.0 {
+        d
+    } else {
+        (d as f64 * mult) as Ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_is_clean_and_named_profiles_resolve() {
+        assert!(FaultProfile::default().is_clean());
+        assert!(FaultProfile::named("clean").unwrap().is_clean());
+        for name in ["flaky-nvme", "thermal", "ram-pressure"] {
+            let p = FaultProfile::named(name).unwrap();
+            assert!(!p.is_clean(), "{name} must perturb something");
+            p.validate().unwrap();
+        }
+        assert!(FaultProfile::named("no-such-profile").is_none());
+    }
+
+    #[test]
+    fn plan_queries_are_pure_functions_of_identity() {
+        let p = FaultProfile::named("flaky-nvme").unwrap();
+        let a = FaultPlan::new(p, 17);
+        let b = FaultPlan::new(p, 17);
+        for step in 0..64u64 {
+            for e in 0..8usize {
+                assert_eq!(a.read_faults(step, 1, e), b.read_faults(step, 1, e));
+            }
+            assert_eq!(a.gpu_mult(step), b.gpu_mult(step));
+            assert_eq!(a.pcie_mult(step), b.pcie_mult(step));
+            assert_eq!(a.ram_reserved(step, 40), b.ram_reserved(step, 40));
+        }
+        // a different seed sees a different schedule
+        let c = FaultPlan::new(p, 18);
+        let differs = (0..256u64).any(|s| a.read_faults(s, 0, 0) != c.read_faults(s, 0, 0));
+        assert!(differs, "seeds must decorrelate the failure schedule");
+    }
+
+    #[test]
+    fn clean_plan_is_neutral_everywhere() {
+        let plan = FaultPlan::new(FaultProfile::clean(), 99);
+        assert!(plan.is_clean());
+        for step in 0..32u64 {
+            assert_eq!(plan.read_faults(step, 0, 3), ReadFaults::NONE);
+            assert_eq!(plan.gpu_mult(step), 1.0);
+            assert_eq!(plan.pcie_mult(step), 1.0);
+            assert_eq!(plan.ram_reserved(step, 100), 0);
+        }
+    }
+
+    #[test]
+    fn read_faults_respect_the_retry_cap() {
+        let mut p = FaultProfile::named("flaky-nvme").unwrap();
+        p.nvme_fail_prob = 1.0; // every attempt fails
+        let plan = FaultPlan::new(p, 1);
+        let r = plan.read_faults(0, 0, 0);
+        assert!(r.exhausted);
+        assert_eq!(r.failures, p.max_retries + 1);
+        p.nvme_fail_prob = 0.0;
+        let plan = FaultPlan::new(p, 1);
+        assert_eq!(plan.read_faults(0, 0, 0).failures, 0);
+    }
+
+    #[test]
+    fn failure_rate_tracks_the_configured_probability() {
+        let mut p = FaultProfile::clean();
+        p.nvme_fail_prob = 0.25;
+        p.max_retries = 0; // one attempt: failures is a plain Bernoulli
+        let plan = FaultPlan::new(p, 7);
+        let n = 4000u64;
+        let fails =
+            (0..n).filter(|&s| plan.read_faults(s, 0, 0).failures > 0).count() as f64 / n as f64;
+        assert!((fails - 0.25).abs() < 0.03, "observed failure rate {fails}");
+    }
+
+    #[test]
+    fn windows_cover_the_configured_fraction() {
+        let p = FaultProfile::named("thermal").unwrap();
+        let plan = FaultPlan::new(p, 3);
+        let n = p.gpu_period * 100;
+        let hot = (0..n).filter(|&s| plan.gpu_mult(s) > 1.0).count() as u64;
+        assert_eq!(hot, p.gpu_len * 100, "throttle duty cycle is exact");
+        // within one period the window is contiguous (mod wraparound)
+        let first: Vec<bool> = (0..p.gpu_period).map(|s| plan.gpu_mult(s) > 1.0).collect();
+        let edges = (0..first.len())
+            .filter(|&i| first[i] != first[(i + 1) % first.len()])
+            .count();
+        assert_eq!(edges, 2, "one contiguous window per period");
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_timeout_scales() {
+        let p = FaultProfile::named("flaky-nvme").unwrap();
+        let plan = FaultPlan::new(p, 5);
+        let d = 1_000_000;
+        assert_eq!(plan.timeout_ns(d), 3_000_000);
+        assert_eq!(plan.backoff_ns(d, 1), d);
+        assert_eq!(plan.backoff_ns(d, 2), 2 * d);
+        assert_eq!(plan.backoff_ns(d, 3), 4 * d);
+    }
+
+    #[test]
+    fn spec_parsing_round_trips_and_rejects_junk() {
+        let p = FaultProfile::parse_spec("nvme_fail_prob=0.1,max_retries=2,gpu_period=8,gpu_len=2,gpu_mult=1.5").unwrap();
+        assert_eq!(p.nvme_fail_prob, 0.1);
+        assert_eq!(p.max_retries, 2);
+        assert_eq!(p.gpu_mult, 1.5);
+        assert!(!p.is_clean());
+        assert!(FaultProfile::parse_spec("").unwrap().is_clean());
+        assert!(FaultProfile::parse_spec("bogus_key=1").is_err());
+        assert!(FaultProfile::parse_spec("nvme_fail_prob").is_err());
+        assert!(FaultProfile::parse_spec("nvme_fail_prob=2.0").is_err(), "prob > 1 rejected");
+        assert!(FaultProfile::parse_spec("gpu_mult=0.5").is_err(), "sub-unit mult rejected");
+        assert!(FaultProfile::parse_spec("ram_period=4,ram_len=9").is_err(), "len > period");
+    }
+
+    #[test]
+    fn scale_ns_is_identity_at_one() {
+        assert_eq!(scale_ns(12345, 1.0), 12345);
+        assert_eq!(scale_ns(1000, 2.5), 2500);
+        assert_eq!(scale_ns(0, 7.0), 0);
+    }
+}

@@ -198,6 +198,27 @@ impl CostModel {
     pub fn layer_fixed(&self) -> Ns {
         ns(2.0 * self.hw.gpu_kernel_launch_s)
     }
+
+    /// Fault-degraded view of this model: GPU compute slowed by `gpu_mult`
+    /// (thermal throttle — core and memory clocks both drop) and PCIe
+    /// transfers slowed by `pcie_mult` (link renegotiation). Identity
+    /// multipliers change nothing. CPU and NVMe costs are untouched — the
+    /// NVMe perturbations live in the store's read-fault ledger, and a
+    /// throttled GPU is exactly when the CPU becomes the better device,
+    /// which every assignment solver sees for free through a context built
+    /// on this view. Allocates (the hw preset owns a display name), so the
+    /// simulator builds its views once per fault plan, never per step.
+    pub fn degraded(&self, gpu_mult: f64, pcie_mult: f64) -> CostModel {
+        let mut d = self.clone();
+        if gpu_mult > 1.0 {
+            d.hw.gpu_flops /= gpu_mult;
+            d.hw.gpu_mem_bw /= gpu_mult;
+        }
+        if pcie_mult > 1.0 {
+            d.hw.pcie_bw /= pcie_mult;
+        }
+        d
+    }
 }
 
 #[cfg(test)]
@@ -331,6 +352,27 @@ mod tests {
         let c = cm("mixtral-sim");
         assert!(c.total_expert_bytes() > 80e9);
         assert!(c.total_expert_bytes() > 16e9);
+    }
+
+    #[test]
+    fn degraded_view_slows_gpu_and_pcie_only() {
+        let c = cm("mixtral-sim");
+        let d = c.degraded(2.0, 1.5);
+        assert!(d.t_gpu_compute(64) > c.t_gpu_compute(64));
+        assert!(d.attn_time(16, 256) > c.attn_time(16, 256));
+        assert!(d.trans_time() > c.trans_time());
+        assert_eq!(d.t_cpu(64), c.t_cpu(64), "the CPU is unaffected");
+        assert_eq!(d.nvme_read_time(), c.nvme_read_time(), "NVMe faults live in the store ledger");
+        assert_eq!(d.transcode_time(), c.transcode_time());
+        // identity multipliers reproduce the clean view exactly
+        let same = c.degraded(1.0, 1.0);
+        assert_eq!(same.t_gpu_compute(64), c.t_gpu_compute(64));
+        assert_eq!(same.trans_time(), c.trans_time());
+        assert_eq!(same.attn_time(16, 256), c.attn_time(16, 256));
+        // a throttled GPU shifts the CPU/GPU crossover toward the CPU
+        let heavy = c.degraded(8.0, 1.0);
+        assert!(heavy.t_gpu(64, true) > c.t_gpu(64, true));
+        assert_eq!(heavy.t_cpu(64), c.t_cpu(64));
     }
 
     #[test]

@@ -23,6 +23,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod expt;
+pub mod fault;
 pub mod hw;
 pub mod metrics;
 pub mod moe;
@@ -34,5 +35,6 @@ pub mod util;
 pub mod workload;
 
 pub use config::Presets;
+pub use fault::{FaultPlan, FaultProfile};
 pub use hw::CostModel;
 pub use store::{Tier, TieredStore};

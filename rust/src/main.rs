@@ -7,6 +7,7 @@
 //!   run --preset P [--framework dali] [--batch 8] [--steps 32]
 //!       [--solve-cost modeled|measured] [--placement auto|on|off]
 //!       [--trace out.jsonl] [--trace-digest] [--synthetic]
+//!       [--faults profile|spec] [--fault-seed N]
 //!                                 replay a decode benchmark and print metrics;
 //!                                 every run also prints a whole-run trace
 //!                                 digest (`trace_digest=0x…`). `--trace`
@@ -14,7 +15,10 @@
 //!                                 file, `--trace-digest` prints only the
 //!                                 audit line, `--synthetic` replays a
 //!                                 generated locality workload (no artifacts
-//!                                 needed — what CI uses)
+//!                                 needed — what CI uses), `--faults` installs
+//!                                 a deterministic fault plan (named profile
+//!                                 from presets.json / built-ins, or an inline
+//!                                 `key=value,...` spec — see README)
 //!   trace summarize FILE [--top 10]
 //!                                 aggregate a `--trace` capture: per-lane
 //!                                 utilization, prefetch/promote-ahead
@@ -35,7 +39,8 @@ use anyhow::{bail, Result};
 use dali::config::Presets;
 use dali::coordinator::assignment::SolveCost;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
-use dali::coordinator::simrun::{replay_decode_traced, Phase, StepSimulator};
+use dali::coordinator::simrun::{replay_decode_faulted, Phase, StepSimulator};
+use dali::fault::FaultPlan;
 use dali::hw::CostModel;
 use dali::store::{PlacementCfg, TieredStore};
 use dali::trace::{DigestSink, JsonSink, TraceSummary};
@@ -168,13 +173,25 @@ fn cmd_run(args: &Args) -> Result<()> {
     let seq_ids: Vec<usize> = (0..batch).collect();
     let store = TieredStore::for_model(hw, &cost, model.sim.layers, model.sim.n_routed);
     let tiered = !store.is_unlimited();
+    // `--faults profile|spec` installs a deterministic fault plan: a named
+    // profile from presets.json's `fault_profiles` (falling back to the
+    // built-ins), or an inline `key=value,...` spec. Same `(--fault-seed,
+    // profile)` ⇒ same trace digest; `--faults clean` is bit-identical to
+    // running without the flag.
+    let faults = match args.get("faults") {
+        Some(spec) => {
+            let profile = presets.fault_profile(spec)?;
+            Some(FaultPlan::new(profile, args.u64_or("fault-seed", 0xfa17)))
+        }
+        None => None,
+    };
     // Every run goes through a digest sink (allocation-free; the whole-run
     // audit line below is what CI's digest-stability check compares).
     // `--trace PATH` tees the same event stream into a JSONL file.
     let m = match args.get("trace") {
         Some(path) => {
             let file = std::fs::File::create(path)?;
-            let (m, (_digest, json)) = replay_decode_traced(
+            let (m, (_digest, json)) = replay_decode_faulted(
                 &trace,
                 &seq_ids,
                 steps,
@@ -183,6 +200,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 &freq,
                 model.sim.n_shared,
                 7,
+                faults,
                 Some(store),
                 (DigestSink::new(), JsonSink::new(file)),
             );
@@ -192,7 +210,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             m
         }
         None => {
-            replay_decode_traced(
+            replay_decode_faulted(
                 &trace,
                 &seq_ids,
                 steps,
@@ -201,6 +219,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 &freq,
                 model.sim.n_shared,
                 7,
+                faults,
                 Some(store),
                 DigestSink::new(),
             )
@@ -262,6 +281,22 @@ fn cmd_run(args: &Args) -> Result<()> {
             m.disk_bytes_saved as f64 / 1e9
         );
     }
+    if faults.is_some() {
+        println!(
+            "  faults            : {} retries (stall {}), {} aborts, ram pressure \
+             {} events / {} spills",
+            m.fault_retries,
+            fmt_ns(m.fault_stall_ns),
+            m.fault_aborts,
+            m.ram_pressure_events,
+            m.ram_pressure_spills
+        );
+        println!(
+            "  degraded windows  : gpu {} / pcie {}",
+            fmt_ns(m.degraded_gpu_ns),
+            fmt_ns(m.degraded_pcie_ns)
+        );
+    }
     if let Some(d) = m.trace_digest {
         println!("trace_digest=0x{d:016x}");
     }
@@ -317,8 +352,11 @@ struct BenchEntry {
 /// placement path (promote-ahead, score demotion, NVMe arrival tracking)
 /// is on both the perf trajectory and the `--strict` allocation gate;
 /// `mixtral-sim-ram16-q4` repeats it with the quantized on-disk format,
-/// putting the asymmetric read/transcode lanes under the same gate.
-/// Results go to stdout and to a machine-readable `BENCH_simrun.json`.
+/// putting the asymmetric read/transcode lanes under the same gate, and
+/// the `+flaky-nvme` tier repeats *that* under a deterministic fault plan
+/// so the retry/backoff ledger is held to the same zero-alloc,
+/// digest-stable standard. Results go to stdout and to a machine-readable
+/// `BENCH_simrun.json`.
 fn cmd_bench(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 256).max(32);
     let batch = args.usize_or("batch", 8);
@@ -329,9 +367,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     let presets = Presets::load_default()?;
     let mut entries: Vec<BenchEntry> = Vec::new();
-    for scenario in
-        ["deepseek-sim", "qwen-sim", "mixtral-sim", "mixtral-sim-ram16", "mixtral-sim-ram16-q4"]
-    {
+    for (scenario, fault_name) in [
+        ("deepseek-sim", None),
+        ("qwen-sim", None),
+        ("mixtral-sim", None),
+        ("mixtral-sim-ram16", None),
+        ("mixtral-sim-ram16-q4", None),
+        ("mixtral-sim-ram16-q4", Some("flaky-nvme")),
+    ] {
+        let label = match fault_name {
+            Some(f) => format!("{scenario}+{f}"),
+            None => scenario.to_string(),
+        };
+        let faults = match fault_name {
+            Some(f) => Some(FaultPlan::new(presets.fault_profile(f)?, 0xfa17)),
+            None => None,
+        };
         let (model, hw) = presets.scenario(scenario)?;
         let dims = &model.sim;
         let cost = CostModel::for_scenario(&presets, scenario)?;
@@ -349,6 +400,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
         let mut sim =
             StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7);
+        if let Some(plan) = faults {
+            sim = sim.with_faults(plan);
+        }
         if let Some(st) = mk_store() {
             sim = sim.with_store(st);
         }
@@ -385,7 +439,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let mut digest_drift = false;
         while t0.elapsed() < budget {
             let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
-            let (mm, _sink) = replay_decode_traced(
+            let (mm, _sink) = replay_decode_faulted(
                 &trace,
                 &ids,
                 steps,
@@ -394,6 +448,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 &freq,
                 dims.n_shared,
                 7,
+                faults,
                 mk_store(),
                 DigestSink::new(),
             );
@@ -408,7 +463,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let wall = t0.elapsed().as_secs_f64();
         let steps_per_s = decode_steps as f64 / wall;
         let entry = BenchEntry {
-            preset: scenario.to_string(),
+            preset: label.clone(),
             steps_per_s,
             layer_steps_per_s: steps_per_s * dims.layers as f64,
             replays,
@@ -419,7 +474,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             digest_drift,
         };
         println!(
-            "bench simrun/{scenario:<18} {:>10.0} steps/s  ({} replays, {} layers)  \
+            "bench simrun/{label:<31} {:>10.0} steps/s  ({} replays, {} layers)  \
              allocs/step {:.2}  frees/step {:.2}  digest 0x{:016x}{}",
             entry.steps_per_s,
             entry.replays,

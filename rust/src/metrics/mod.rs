@@ -89,6 +89,23 @@ pub struct RunMetrics {
     pub tokens_out: u64,
     pub layer_steps: u64,
 
+    // --- fault injection & degradation (see `crate::fault`) --------------------
+    /// Injected-fault NVMe read attempts that timed out and were retried.
+    pub fault_retries: u64,
+    /// Speculative transfers abandoned after exhausting their retries.
+    pub fault_aborts: u64,
+    /// NVMe read-lane time consumed by failed (timed-out) attempts — lane
+    /// occupancy that moved no usable bytes.
+    pub fault_stall_ns: u64,
+    /// Virtual time spent inside GPU thermal-throttle windows.
+    pub degraded_gpu_ns: u64,
+    /// Virtual time spent inside PCIe bandwidth-degradation windows.
+    pub degraded_pcie_ns: u64,
+    /// Host-RAM pressure transitions (shrink or restore edges) applied.
+    pub ram_pressure_events: u64,
+    /// Experts demoted under the workload-aware score to satisfy shrinks.
+    pub ram_pressure_spills: u64,
+
     // --- trace audit -----------------------------------------------------------
     /// Whole-run digest from the trace subsystem's digest sink: an FNV-1a
     /// hash over every emitted scheduling event, in order. `None` under
@@ -219,6 +236,13 @@ impl RunMetrics {
         self.tokens_in += o.tokens_in;
         self.tokens_out += o.tokens_out;
         self.layer_steps += o.layer_steps;
+        self.fault_retries += o.fault_retries;
+        self.fault_aborts += o.fault_aborts;
+        self.fault_stall_ns += o.fault_stall_ns;
+        self.degraded_gpu_ns += o.degraded_gpu_ns;
+        self.degraded_pcie_ns += o.degraded_pcie_ns;
+        self.ram_pressure_events += o.ram_pressure_events;
+        self.ram_pressure_spills += o.ram_pressure_spills;
         // Digests are stream hashes, not counters: concatenation order is
         // meaningless for merged runs, so two present digests combine as
         // an order-independent wrapping sum (commutative + associative —
@@ -357,6 +381,13 @@ mod tests {
             tokens_in: 35,
             tokens_out: 36,
             layer_steps: 37,
+            fault_retries: 38,
+            fault_aborts: 39,
+            fault_stall_ns: 40,
+            degraded_gpu_ns: 41,
+            degraded_pcie_ns: 42,
+            ram_pressure_events: 43,
+            ram_pressure_spills: 44,
             trace_digest: Some(0x1000),
         };
         let mut m = mk();
@@ -399,6 +430,13 @@ mod tests {
             tokens_in,
             tokens_out,
             layer_steps,
+            fault_retries,
+            fault_aborts,
+            fault_stall_ns,
+            degraded_gpu_ns,
+            degraded_pcie_ns,
+            ram_pressure_events,
+            ram_pressure_spills,
             trace_digest,
         } = m;
         for (i, v) in [
@@ -439,6 +477,13 @@ mod tests {
             tokens_in,
             tokens_out,
             layer_steps,
+            fault_retries,
+            fault_aborts,
+            fault_stall_ns,
+            degraded_gpu_ns,
+            degraded_pcie_ns,
+            ram_pressure_events,
+            ram_pressure_spills,
         ]
         .into_iter()
         .enumerate()

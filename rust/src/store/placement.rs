@@ -101,6 +101,13 @@ pub fn promote_ahead_layer_t<S: TraceSink>(
     cost: &CostModel,
     sink: &mut S,
 ) -> usize {
+    // graceful degradation: while the fault plan's RAM-pressure process
+    // holds host slots confiscated, the whole speculative walk is skipped —
+    // promotions would only thrash the shrunken tier (the per-expert
+    // promote-ahead gate refuses too; this just short-circuits the scan).
+    if store.under_pressure() {
+        return 0;
+    }
     let budget = store.placement().ahead;
     let mut issued = 0usize;
     for &e in ranked {

@@ -36,10 +36,18 @@ pub struct TransferScheduler {
     /// scenario stores experts compressed).
     pub read_bytes: u64,
     pub write_bytes: u64,
-    /// Operation counts per lane.
+    /// Operation counts per lane. `reads` counts *successful* reads only —
+    /// fault-injected attempts that time out are tracked separately so the
+    /// `reads == promotions` style conservation properties stay exact.
     pub reads: u64,
     pub writes: u64,
     pub transcodes: u64,
+    /// Fault injection: timed-out read attempts (lane occupied, no usable
+    /// bytes moved) and the lane time they consumed. `read_stall_ns` is a
+    /// subset of `read_busy` — the stream is genuinely busy while a
+    /// stalled command waits for its timeout.
+    pub read_stalls: u64,
+    pub read_stall_ns: Ns,
 }
 
 impl TransferScheduler {
@@ -72,6 +80,23 @@ impl TransferScheduler {
         self.read_busy += dur;
         self.read_bytes += bytes;
         self.reads += 1;
+        self.read_free
+    }
+
+    /// Schedule a *failed* read attempt at or after `now`: the stream is
+    /// occupied for the per-transfer timeout `dur`, then the command is
+    /// abandoned — no bytes arrive and `reads` does not advance. Returns
+    /// the instant the timeout fires (the earliest a retry may be
+    /// re-issued, before backoff). Fault-injection runs only.
+    pub fn schedule_read_stall(&mut self, now: Ns, dur: Ns) -> Ns {
+        let start = self.read_free.max(now);
+        if start > self.read_free {
+            self.read_run = start;
+        }
+        self.read_free = start + dur;
+        self.read_busy += dur;
+        self.read_stalls += 1;
+        self.read_stall_ns += dur;
         self.read_free
     }
 
@@ -162,6 +187,8 @@ impl TransferScheduler {
         self.reads = 0;
         self.writes = 0;
         self.transcodes = 0;
+        self.read_stalls = 0;
+        self.read_stall_ns = 0;
     }
 }
 
@@ -211,6 +238,27 @@ mod tests {
         // a busy transcode lane queues FIFO
         let t3 = s.schedule_transcode(0, 50);
         assert_eq!(t3, 280);
+    }
+
+    #[test]
+    fn stalled_attempts_occupy_the_lane_without_counting_as_reads() {
+        let mut s = TransferScheduler::new();
+        // a timed-out attempt, a backoff gap, then the successful retry
+        let t = s.schedule_read_stall(0, 300);
+        assert_eq!(t, 300);
+        let r = s.schedule_read(t + 100, 100, 8);
+        assert_eq!(r, 500, "retry honours the backoff gap (lane idle 300..400)");
+        assert_eq!(s.reads, 1, "only the successful attempt is a read");
+        assert_eq!(s.read_stalls, 1);
+        assert_eq!(s.read_stall_ns, 300);
+        assert_eq!(s.read_busy, 400, "stall time is genuine lane occupancy");
+        assert_eq!(s.read_bytes, 8, "failed attempts move no usable bytes");
+        // a later read queues FIFO behind the whole retry chain
+        assert_eq!(s.schedule_read(0, 50, 1), 550);
+        // rebase clears the stall counters with the rest
+        s.rebase_and_clear(550);
+        assert_eq!(s.read_stalls, 0);
+        assert_eq!(s.read_stall_ns, 0);
     }
 
     #[test]

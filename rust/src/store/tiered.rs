@@ -16,6 +16,7 @@
 //! wait for in-flight reads instead of pretending the weights teleported.
 
 use crate::config::HwConfig;
+use crate::fault::{FaultPlan, ReadFaults};
 use crate::hw::{CostModel, Ns};
 use crate::trace::{Event, Lane, NullSink, TraceSink};
 
@@ -91,6 +92,14 @@ pub struct TieredStore {
     /// placement is predictive).
     score: Vec<f64>,
     placement: PlacementCfg,
+    /// Deterministic perturbation schedule, when fault injection is on.
+    faults: Option<FaultPlan>,
+    /// Step index the fault processes are evaluated at (set once per step
+    /// by [`Self::apply_fault_step`]; monotonic across the whole run).
+    fault_step: u64,
+    /// Host slots currently confiscated by the RAM-pressure process. The
+    /// effective capacity shrinks by this much; restore hands them back.
+    pressure_reserved: usize,
     /// NVMe read/write virtual-time streams.
     pub xfer: TransferScheduler,
     /// Disk→host promotions (NVMe reads charged), demand + ahead.
@@ -117,6 +126,14 @@ pub struct TieredStore {
     /// bytes minus on-disk bytes, summed over promotions and write-back
     /// spills. Zero when experts are stored fp16 on disk.
     pub bytes_saved: u64,
+    /// Injected-fault bookkeeping: failed NVMe attempts re-tried, transfers
+    /// abandoned after exhausting retries, lane time the failed attempts
+    /// burned, and RAM-pressure transitions / forced demotions.
+    pub fault_retries: u64,
+    pub fault_aborts: u64,
+    pub fault_stall_ns: Ns,
+    pub ram_pressure_events: u64,
+    pub ram_pressure_spills: u64,
 }
 
 impl TieredStore {
@@ -163,6 +180,9 @@ impl TieredStore {
             ahead: vec![false; total],
             score: vec![0.0; total],
             placement: PlacementCfg::default(),
+            faults: None,
+            fault_step: 0,
+            pressure_reserved: 0,
             xfer: TransferScheduler::new(),
             promotions: 0,
             spills: 0,
@@ -174,6 +194,11 @@ impl TieredStore {
             demand_read_ns: 0,
             overlap_hidden_ns: 0,
             bytes_saved: 0,
+            fault_retries: 0,
+            fault_aborts: 0,
+            fault_stall_ns: 0,
+            ram_pressure_events: 0,
+            ram_pressure_spills: 0,
         }
     }
 
@@ -219,9 +244,89 @@ impl TieredStore {
     }
 
     /// Effective host capacity: the configured budget plus the seed
-    /// allowance.
+    /// allowance, minus whatever the RAM-pressure fault process currently
+    /// confiscates.
     fn effective_slots(&self) -> usize {
-        self.host_slots.saturating_add(self.seed_slack)
+        self.host_slots.saturating_add(self.seed_slack).saturating_sub(self.pressure_reserved)
+    }
+
+    /// Install (or clear) the deterministic fault plan. The simulator
+    /// propagates its plan when a store is attached; a `None` or clean plan
+    /// leaves every code path bit-identical to an un-faulted run.
+    pub fn set_faults(&mut self, plan: Option<FaultPlan>) {
+        self.faults = plan;
+    }
+
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    /// Host slots currently confiscated by RAM pressure (0 = no pressure).
+    pub fn pressure_reserved(&self) -> usize {
+        self.pressure_reserved
+    }
+
+    /// Whether the RAM-pressure process is currently shrinking the budget —
+    /// predictive placement pauses promote-ahead while this holds, so
+    /// speculation never fights the OS for reclaimed slots.
+    pub fn under_pressure(&self) -> bool {
+        self.pressure_reserved > 0
+    }
+
+    /// Evaluate the fault processes at `step` (called once per step by the
+    /// simulator, before any layer work): records the step for the NVMe
+    /// ledger and applies the RAM-pressure shrink/restore. A shrink demotes
+    /// host residents — coldest-first under the workload-aware score —
+    /// until the reduced budget holds; GPU-pinned staging copies set a hard
+    /// floor the reservation is clamped to. Restores are free (the slots
+    /// simply come back). Every transition emits `Event::RamPressure`.
+    pub fn apply_fault_step<S: TraceSink>(
+        &mut self,
+        step: u64,
+        now: Ns,
+        cost: &CostModel,
+        sink: &mut S,
+    ) {
+        self.fault_step = step;
+        let plan = match self.faults {
+            Some(p) => p,
+            None => return,
+        };
+        let target = plan.ram_reserved(step, self.host_slots);
+        if target == self.pressure_reserved {
+            return;
+        }
+        let mut spilled = 0u32;
+        if target > self.pressure_reserved {
+            self.pressure_reserved = target;
+            while self.host_used > self.effective_slots() {
+                match self.spill_victim(usize::MAX) {
+                    Some(v) => {
+                        self.spill_index(v, now, cost, sink);
+                        spilled += 1;
+                        self.ram_pressure_spills += 1;
+                    }
+                    None => break,
+                }
+            }
+            // only GPU-pinned copies remain below the target: they cannot
+            // be demoted by a host-budget shrink, so clamp the reservation
+            // to what the demotions actually achieved.
+            let base = self.host_slots.saturating_add(self.seed_slack);
+            if self.host_used > base.saturating_sub(self.pressure_reserved) {
+                self.pressure_reserved = base.saturating_sub(self.host_used);
+            }
+        } else {
+            self.pressure_reserved = target;
+        }
+        self.ram_pressure_events += 1;
+        if S::ENABLED {
+            sink.emit(&Event::RamPressure {
+                at: now,
+                reserved: self.pressure_reserved as u32,
+                spilled,
+            });
+        }
     }
 
     pub fn host_used(&self) -> usize {
@@ -362,6 +467,11 @@ impl TieredStore {
         self.demand_read_ns = 0;
         self.overlap_hidden_ns = 0;
         self.bytes_saved = 0;
+        self.fault_retries = 0;
+        self.fault_aborts = 0;
+        self.fault_stall_ns = 0;
+        self.ram_pressure_events = 0;
+        self.ram_pressure_spills = 0;
     }
 
     /// Metrics-period boundary: shift every virtual-time clock back by
@@ -438,19 +548,86 @@ impl TieredStore {
     /// transcode lane when the on-disk format is not fp16. Returns the
     /// instant the fp16 host copy is usable and books the bytes the
     /// quantized format kept off the NVMe link.
-    fn schedule_promotion<S: TraceSink>(&mut self, now: Ns, cost: &CostModel, sink: &mut S) -> Ns {
-        let bytes = self.disk_bytes_accounted(cost);
+    ///
+    /// Under an active fault plan the transfer first walks its NVMe fault
+    /// ledger (pure function of `(seed, step, layer, expert)`): each failed
+    /// attempt occupies the read lane for the profile's timeout, surfaces
+    /// as an `Event::FaultRetry`, and backs off exponentially in lane-idle
+    /// virtual time before the next attempt. When every attempt fails, an
+    /// `abortable` (promote-ahead speculative) transfer is abandoned —
+    /// `Event::FaultAbort`, `None` returned, no bytes moved — while a
+    /// committed transfer (demand fetch or an already-chained speculative
+    /// consumer) falls back to a final raw read that always succeeds, so
+    /// the execution path can never deadlock on injected failures.
+    fn schedule_promotion<S: TraceSink>(
+        &mut self,
+        layer: usize,
+        e: usize,
+        now: Ns,
+        cost: &CostModel,
+        abortable: bool,
+        sink: &mut S,
+    ) -> Option<Ns> {
         let read = cost.nvme_read_time();
-        let read_done = self.xfer.schedule_read(now, read, bytes);
+        let mut read_dur = read;
+        let mut issue_at = now;
+        let faults = match self.faults {
+            Some(plan) if !plan.is_clean() => plan.read_faults(self.fault_step, layer, e),
+            _ => ReadFaults::NONE,
+        };
+        if faults.failures > 0 {
+            let plan = self.faults.expect("fault ledger without a plan");
+            let mut last_end = now;
+            for k in 1..=faults.failures {
+                let stall = plan.timeout_ns(read);
+                let end = self.xfer.schedule_read_stall(issue_at, stall);
+                self.fault_retries += 1;
+                self.fault_stall_ns += stall;
+                if S::ENABLED {
+                    sink.emit(&Event::LaneBusy {
+                        lane: Lane::NvmeRead,
+                        start: end - stall,
+                        end,
+                    });
+                    sink.emit(&Event::FaultRetry {
+                        lane: Lane::NvmeRead,
+                        layer: layer as u32,
+                        expert: e as u32,
+                        attempt: k,
+                        at: end,
+                    });
+                }
+                last_end = end;
+                issue_at = end.saturating_add(plan.backoff_ns(read, k));
+            }
+            if faults.exhausted && abortable {
+                self.fault_aborts += 1;
+                if S::ENABLED {
+                    sink.emit(&Event::FaultAbort {
+                        lane: Lane::NvmeRead,
+                        layer: layer as u32,
+                        expert: e as u32,
+                        attempts: faults.failures,
+                        at: last_end,
+                    });
+                }
+                return None;
+            }
+        }
+        if !faults.exhausted {
+            read_dur = crate::fault::scale_ns(read, faults.slow_mult);
+        }
+        let bytes = self.disk_bytes_accounted(cost);
+        let read_done = self.xfer.schedule_read(issue_at, read_dur, bytes);
         if S::ENABLED {
             sink.emit(&Event::LaneBusy {
                 lane: Lane::NvmeRead,
-                start: read_done - read,
+                start: read_done - read_dur,
                 end: read_done,
             });
         }
         let transcode = cost.transcode_time();
-        if transcode == 0 {
+        Some(if transcode == 0 {
             read_done
         } else {
             let t_done = self.xfer.schedule_transcode(read_done, transcode);
@@ -462,7 +639,7 @@ impl TieredStore {
                 });
             }
             t_done
-        }
+        })
     }
 
     /// Unified arrival: touch, promote from disk if needed. `demand`
@@ -504,11 +681,21 @@ impl TieredStore {
             }
         }
         if self.host_used >= self.effective_slots() {
-            // every slot is pinned by a GPU-resident staging copy: those
-            // set a hard floor below which the budget cannot shrink — grow
-            // it and record the overcommit.
-            self.host_slots = (self.host_used + 1).saturating_sub(self.seed_slack);
-            self.overcommits += 1;
+            // every remaining slot is pinned by a GPU-resident staging
+            // copy: those set a hard floor below which the capacity cannot
+            // shrink. Any fault-injected RAM reservation yields first
+            // (pinned copies outrank the pressure process); only when the
+            // configured budget itself is the shortfall does it grow, and
+            // that is the overcommit the counter records.
+            let need = self.host_used + 1;
+            let base = self.host_slots.saturating_add(self.seed_slack);
+            if base >= need {
+                self.pressure_reserved = base - need;
+            } else {
+                self.pressure_reserved = 0;
+                self.host_slots = need.saturating_sub(self.seed_slack);
+                self.overcommits += 1;
+            }
         }
         self.tier[i] = Tier::Host;
         self.member_add(i);
@@ -517,7 +704,9 @@ impl TieredStore {
         if demand {
             self.demand_read_ns += cost.nvme_read_time();
         }
-        let arr = self.schedule_promotion(now, cost, sink);
+        let arr = self
+            .schedule_promotion(layer, e, now, cost, false, sink)
+            .expect("committed promotions never abort");
         self.host_ready[i] = arr;
         if S::ENABLED {
             sink.emit(&Event::Fetch {
@@ -620,6 +809,12 @@ impl TieredStore {
         if !self.placement.predictive {
             return false;
         }
+        // graceful degradation: while the RAM-pressure process holds slots
+        // confiscated, speculation pauses — promote-ahead would only fight
+        // the shrink for capacity and thrash the survivors out.
+        if self.under_pressure() {
+            return false;
+        }
         let i = self.idx(layer, e);
         if self.tier[i] != Tier::Disk {
             return false;
@@ -639,6 +834,15 @@ impl TieredStore {
             };
             self.spill_index(v, now, cost, sink);
         }
+        // speculative reads are abortable: when the fault ledger exhausts
+        // every retry the promotion is abandoned and the expert stays on
+        // disk (the victim spill above stands — the sick drive genuinely
+        // wasted that work). The lane time the failed attempts burned is
+        // already charged.
+        let arr = match self.schedule_promotion(layer, e, now, cost, true, sink) {
+            Some(arr) => arr,
+            None => return false,
+        };
         self.tier[i] = Tier::Host;
         self.member_add(i);
         self.host_used += 1;
@@ -646,7 +850,6 @@ impl TieredStore {
         self.ahead_issued += 1;
         self.ahead[i] = true;
         self.touch(layer, e);
-        let arr = self.schedule_promotion(now, cost, sink);
         self.host_ready[i] = arr;
         if S::ENABLED {
             sink.emit(&Event::AheadIssue { layer: layer as u32, expert: e as u32, arrival: arr });
@@ -842,8 +1045,14 @@ impl TieredStore {
         }
         if self.host_used > self.effective_slots() {
             return Err(format!(
-                "host over capacity: {} used > {} slots + {} seed slack",
-                self.host_used, self.host_slots, self.seed_slack
+                "host over capacity: {} used > {} slots + {} seed slack - {} reserved",
+                self.host_used, self.host_slots, self.seed_slack, self.pressure_reserved
+            ));
+        }
+        if self.pressure_reserved > self.host_slots.saturating_add(self.seed_slack) {
+            return Err(format!(
+                "RAM reservation exceeds the whole budget: {} > {} + {}",
+                self.pressure_reserved, self.host_slots, self.seed_slack
             ));
         }
         for (i, &a) in self.ahead.iter().enumerate() {
@@ -877,6 +1086,7 @@ impl TieredStore {
 mod tests {
     use super::*;
     use crate::config::Presets;
+    use crate::fault::FaultProfile;
 
     fn cost() -> CostModel {
         let p = Presets::load_default().unwrap();
@@ -1219,5 +1429,133 @@ mod tests {
         assert_eq!(arr, dur - dur / 2);
         assert_eq!(s.ahead_hits, 0, "hit accounting does not cross the reset");
         s.check_invariants().unwrap();
+    }
+
+    fn flaky(fail: f64, retries: u32) -> FaultPlan {
+        let p = FaultProfile {
+            nvme_fail_prob: fail,
+            max_retries: retries,
+            ..FaultProfile::default()
+        };
+        FaultPlan::new(p, 11)
+    }
+
+    #[test]
+    fn faulted_demand_promotion_retries_then_reads_raw() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        s.set_faults(Some(flaky(1.0, 1)));
+        let r = c.nvme_read_time();
+        // every attempt fails and max_retries = 1: two stalled attempts
+        // (3r each, timeout_mult 3) separated by exponential backoffs
+        // (r, then 2r), then the raw fallback read that must succeed
+        let arr = s.ensure_host(0, 2, 0, &c);
+        assert_eq!(arr, 10 * r);
+        assert_eq!(s.fault_retries, 2);
+        assert_eq!(s.fault_stall_ns, 6 * r);
+        assert_eq!(s.fault_aborts, 0, "demand fetches never abort");
+        assert_eq!(s.xfer.read_stalls, 2);
+        assert_eq!(s.xfer.reads, 1, "only the successful read counts");
+        assert_eq!(s.xfer.read_busy, 7 * r);
+        assert_eq!(s.demand_read_ns, r, "the demand charge stays the clean read");
+        assert_eq!(s.tier(0, 2), Tier::Host);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhausted_speculative_promotion_aborts_and_leaves_disk() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 3, ..Default::default() });
+        s.set_placement(PlacementCfg::predictive(1));
+        s.set_faults(Some(flaky(1.0, 0)));
+        s.note_predictions(0, &[0.0, 0.0, 0.0, 5.0]);
+        assert!(!s.promote_ahead(0, 3, 0, &c), "exhausted ledger aborts the ahead read");
+        assert_eq!(s.tier(0, 3), Tier::Disk);
+        assert_eq!(s.fault_aborts, 1);
+        assert_eq!(s.fault_retries, 1, "the one failed attempt stalled the lane");
+        assert_eq!(s.xfer.reads, 0, "no bytes moved");
+        assert_eq!(s.xfer.read_bytes, 0);
+        assert_eq!(s.promotions, 0);
+        assert_eq!(s.ahead_issued, 0);
+        assert_eq!(s.spills, 1, "the victim spill stands — work the sick drive wasted");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ram_pressure_shrinks_then_restores_the_host_budget() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 8, StoreCfg { host_slots: 4, ..Default::default() });
+        s.set_placement(PlacementCfg::predictive(1));
+        let p = FaultProfile {
+            ram_period: 8,
+            ram_len: 4,
+            ram_shrink_frac: 0.5,
+            ..FaultProfile::default()
+        };
+        let plan = FaultPlan::new(p, 21);
+        s.set_faults(Some(plan));
+        // the window phase is seed-jittered: locate one shrunken and one
+        // clear step instead of assuming which is which
+        let shrunk = (0..8).find(|&t| plan.ram_reserved(t, 4) == 2).unwrap();
+        let clear = (0..8).find(|&t| plan.ram_reserved(t, 4) == 0).unwrap();
+        s.apply_fault_step(shrunk, 0, &c, &mut NullSink);
+        assert!(s.under_pressure());
+        assert_eq!(s.pressure_reserved(), 2);
+        assert_eq!(s.host_used(), 2, "two residents demoted to satisfy the shrink");
+        assert_eq!(s.ram_pressure_spills, 2);
+        assert_eq!(s.ram_pressure_events, 1);
+        s.check_invariants().unwrap();
+        // speculation pauses while the budget is shrunken
+        s.note_predictions(0, &[0.0, 0.0, 0.0, 0.0, 0.0, 9.0, 0.0, 0.0]);
+        assert!(!s.promote_ahead(0, 5, 0, &c), "promote-ahead pauses under pressure");
+        s.apply_fault_step(clear, 100, &c, &mut NullSink);
+        assert!(!s.under_pressure());
+        assert_eq!(s.ram_pressure_events, 2, "the restore edge is an event too");
+        // restored capacity admits promotions again without overcommit
+        s.ensure_host(0, 6, 100, &c);
+        assert_eq!(s.overcommits, 0);
+        assert_eq!(s.host_used(), 3);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ram_pressure_clamps_at_the_gpu_pinned_floor() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        s.sync_layer(0, &[true, true, false, false]);
+        assert_eq!(s.host_used(), 2);
+        let p = FaultProfile {
+            ram_period: 4,
+            ram_len: 4, // len == period: every step is in-window
+            ram_shrink_frac: 1.0,
+            ..FaultProfile::default()
+        };
+        let plan = FaultPlan::new(p, 3);
+        s.set_faults(Some(plan));
+        assert_eq!(plan.ram_reserved(0, 2), 2);
+        s.apply_fault_step(0, 0, &c, &mut NullSink);
+        // both residents are GPU-pinned staging copies: nothing can spill
+        // and the reservation clamps down to the achievable zero
+        assert_eq!(s.pressure_reserved(), 0);
+        assert_eq!(s.ram_pressure_spills, 0);
+        assert_eq!(s.spills, 0);
+        assert_eq!(s.host_used(), 2);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn clean_fault_plan_is_transparent() {
+        let c = cost();
+        let mut a = TieredStore::new(2, 4, StoreCfg { host_slots: 2, ..Default::default() });
+        let mut b = a.clone();
+        b.set_faults(Some(FaultPlan::new(FaultProfile::clean(), 42)));
+        b.apply_fault_step(5, 0, &c, &mut NullSink);
+        for (l, e) in [(0, 2), (1, 3), (0, 3)] {
+            assert_eq!(a.ensure_host(l, e, 0, &c), b.ensure_host(l, e, 0, &c));
+        }
+        assert_eq!(a.xfer.read_busy, b.xfer.read_busy);
+        assert_eq!(b.fault_retries, 0);
+        assert_eq!(b.xfer.read_stalls, 0);
+        assert_eq!(b.ram_pressure_events, 0);
     }
 }

@@ -133,6 +133,17 @@ pub enum Event {
     /// One batch step retired. `end_ns` is the clock after the step (the
     /// final step's `end_ns` equals `RunMetrics::total_ns`).
     StepEnd { step: u64, decode: bool, end_ns: Ns, tokens: u32 },
+    /// An injected-fault transfer attempt failed and was retried:
+    /// `attempt` (1-based) timed out on `lane` at `at`, backing off before
+    /// the next try (fault-injection runs only).
+    FaultRetry { lane: Lane, layer: u32, expert: u32, attempt: u32, at: Ns },
+    /// A speculative transfer exhausted its retries and was abandoned
+    /// after `attempts` failed tries; the expert stays in its source tier.
+    FaultAbort { lane: Lane, layer: u32, expert: u32, attempts: u32, at: Ns },
+    /// Host-RAM budget pressure transition at `at`: `reserved` slots are
+    /// currently confiscated (0 = restored), `spilled` experts were demoted
+    /// under the workload-aware score to satisfy the shrink.
+    RamPressure { at: Ns, reserved: u32, spilled: u32 },
 }
 
 impl Event {
@@ -153,6 +164,9 @@ impl Event {
             Event::LaneBusy { .. } => "lane",
             Event::Reset { .. } => "reset",
             Event::StepEnd { .. } => "step",
+            Event::FaultRetry { .. } => "fault_retry",
+            Event::FaultAbort { .. } => "fault_abort",
+            Event::RamPressure { .. } => "ram_pressure",
         }
     }
 
@@ -242,6 +256,28 @@ impl Event {
                 f(end_ns);
                 f(tokens as u64);
             }
+            Event::FaultRetry { lane, layer, expert, attempt, at } => {
+                f(15);
+                f(lane.idx() as u64);
+                f(layer as u64);
+                f(expert as u64);
+                f(attempt as u64);
+                f(at);
+            }
+            Event::FaultAbort { lane, layer, expert, attempts, at } => {
+                f(16);
+                f(lane.idx() as u64);
+                f(layer as u64);
+                f(expert as u64);
+                f(attempts as u64);
+                f(at);
+            }
+            Event::RamPressure { at, reserved, spilled } => {
+                f(17);
+                f(at);
+                f(reserved as u64);
+                f(spilled as u64);
+            }
         }
     }
 
@@ -309,6 +345,28 @@ impl Event {
                 ("decode", Value::Bool(decode)),
                 ("end_ns", Value::num(end_ns as f64)),
                 ("tokens", Value::num(tokens as f64)),
+            ]),
+            Event::FaultRetry { lane, layer, expert, attempt, at } => Value::obj(vec![
+                ("ev", ev),
+                ("lane", Value::str(lane.name())),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("attempt", Value::num(attempt as f64)),
+                ("at", Value::num(at as f64)),
+            ]),
+            Event::FaultAbort { lane, layer, expert, attempts, at } => Value::obj(vec![
+                ("ev", ev),
+                ("lane", Value::str(lane.name())),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("attempts", Value::num(attempts as f64)),
+                ("at", Value::num(at as f64)),
+            ]),
+            Event::RamPressure { at, reserved, spilled } => Value::obj(vec![
+                ("ev", ev),
+                ("at", Value::num(at as f64)),
+                ("reserved", Value::num(reserved as f64)),
+                ("spilled", Value::num(spilled as f64)),
             ]),
         }
     }
@@ -379,6 +437,25 @@ impl Event {
                 end_ns: ns("end_ns")?,
                 tokens: le("tokens")?,
             },
+            "fault_retry" => Event::FaultRetry {
+                lane: Lane::from_name(v.get("lane")?.as_str()?)?,
+                layer: le("layer")?,
+                expert: le("expert")?,
+                attempt: le("attempt")?,
+                at: ns("at")?,
+            },
+            "fault_abort" => Event::FaultAbort {
+                lane: Lane::from_name(v.get("lane")?.as_str()?)?,
+                layer: le("layer")?,
+                expert: le("expert")?,
+                attempts: le("attempts")?,
+                at: ns("at")?,
+            },
+            "ram_pressure" => Event::RamPressure {
+                at: ns("at")?,
+                reserved: le("reserved")?,
+                spilled: le("spilled")?,
+            },
             other => bail!("unknown trace event '{other}'"),
         })
     }
@@ -407,6 +484,9 @@ impl Event {
             Event::LaneBusy { lane: Lane::Cpu, start: 0, end: 10 },
             Event::Reset { at: 1_000_000 },
             Event::StepEnd { step: 9, decode: true, end_ns: 2_000_000, tokens: 8 },
+            Event::FaultRetry { lane: Lane::NvmeRead, layer: 2, expert: 6, attempt: 1, at: 500 },
+            Event::FaultAbort { lane: Lane::NvmeRead, layer: 2, expert: 6, attempts: 4, at: 900 },
+            Event::RamPressure { at: 1_500, reserved: 12, spilled: 5 },
         ]
     }
 }

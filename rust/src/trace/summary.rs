@@ -55,6 +55,14 @@ pub struct TraceSummary {
     pub writeback_spills: u64,
     pub cache_admits: u64,
     pub cache_evicts: u64,
+    /// Injected-fault retries (timed-out transfer attempts re-issued).
+    pub fault_retries: u64,
+    /// Speculative transfers abandoned after exhausting their retries.
+    pub fault_aborts: u64,
+    /// RAM-pressure transitions observed (shrink or restore edges).
+    pub ram_pressure_events: u64,
+    /// Experts demoted to satisfy RAM-pressure shrinks.
+    pub ram_pressure_spills: u64,
     /// Wasted-prefetch count per (layer, expert), since the last reset.
     pub wasted_by_expert: BTreeMap<(u32, u32), u64>,
 }
@@ -117,6 +125,12 @@ impl TraceSummary {
                 }
                 self.tokens += tokens as u64;
                 self.end_ns = end_ns;
+            }
+            Event::FaultRetry { .. } => self.fault_retries += 1,
+            Event::FaultAbort { .. } => self.fault_aborts += 1,
+            Event::RamPressure { spilled, .. } => {
+                self.ram_pressure_events += 1;
+                self.ram_pressure_spills += spilled as u64;
             }
         }
     }
@@ -197,6 +211,15 @@ impl TraceSummary {
             "cache: admits {}  evicts {}\n",
             self.cache_admits, self.cache_evicts
         ));
+        if self.fault_retries + self.fault_aborts + self.ram_pressure_events > 0 {
+            out.push_str(&format!(
+                "faults: retries {}  aborts {}  ram-pressure events {} ({} spills)\n",
+                self.fault_retries,
+                self.fault_aborts,
+                self.ram_pressure_events,
+                self.ram_pressure_spills
+            ));
+        }
         let top = self.top_wasted(top_n);
         if !top.is_empty() {
             out.push_str(&format!("top-{} wasted prefetches (layer, expert, count):\n", top.len()));

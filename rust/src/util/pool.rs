@@ -6,6 +6,7 @@
 //! [`parallel_map`] preserves input order and cell-level determinism —
 //! `--jobs 4` and `--jobs 1` produce bit-identical results.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -18,25 +19,42 @@ pub fn resolve_jobs(requested: usize) -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Apply `f` to every item on up to `jobs` scoped worker threads and return
-/// the results in input order. Work is claimed from a shared atomic cursor,
-/// so long cells never serialize behind short ones. `jobs <= 1` degrades to
-/// a plain serial map with zero threading overhead.
-pub fn parallel_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+/// Render a caught panic payload as a human-readable message. `panic!`
+/// with a format string produces a `String`; a literal produces `&str`;
+/// anything else is opaque.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    match payload.downcast::<String>() {
+        Ok(s) => *s,
+        Err(payload) => match payload.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => "non-string panic payload".to_string(),
+        },
+    }
+}
+
+/// Like [`parallel_map`], but a panicking cell becomes `Err(message)`
+/// instead of tearing down the sweep: every other cell still runs to
+/// completion and its result is returned. Callers that can tolerate holes
+/// (the `expt` driver) inspect the `Err`s; callers that can't should use
+/// [`parallel_map`], which consolidates failures into one panic at the end.
+pub fn parallel_map_catch<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<Result<R, String>>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    let run = |item: T| -> Result<R, String> {
+        catch_unwind(AssertUnwindSafe(|| f(item))).map_err(panic_message)
+    };
     let n = items.len();
     let jobs = jobs.max(1).min(n.max(1));
     if jobs <= 1 {
-        return items.into_iter().map(f).collect();
+        return items.into_iter().map(run).collect();
     }
     // One slot per item: the input moves out as a worker claims it, the
     // result moves in when it finishes. Slot-level mutexes are uncontended
     // (each slot is touched by exactly one worker).
-    let slots: Vec<Mutex<(Option<T>, Option<R>)>> =
+    let slots: Vec<Mutex<(Option<T>, Option<Result<R, String>>)>> =
         items.into_iter().map(|t| Mutex::new((Some(t), None))).collect();
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|scope| {
@@ -47,7 +65,7 @@ where
                     break;
                 }
                 let item = slots[i].lock().unwrap().0.take().expect("slot claimed once");
-                let r = f(item);
+                let r = run(item);
                 slots[i].lock().unwrap().1 = Some(r);
             });
         }
@@ -56,6 +74,34 @@ where
         .into_iter()
         .map(|m| m.into_inner().unwrap().1.expect("worker filled slot"))
         .collect()
+}
+
+/// Apply `f` to every item on up to `jobs` scoped worker threads and return
+/// the results in input order. Work is claimed from a shared atomic cursor,
+/// so long cells never serialize behind short ones. `jobs <= 1` degrades to
+/// a plain serial map with zero threading overhead.
+///
+/// A panicking cell no longer aborts the sweep mid-flight: all remaining
+/// cells still run, then the failures are re-raised as a single panic that
+/// names every failed cell. Use [`parallel_map_catch`] to keep the partial
+/// results instead.
+pub fn parallel_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let results = parallel_map_catch(jobs, items, f);
+    let failed: Vec<String> = results
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.as_ref().err().map(|msg| format!("cell #{i}: {msg}")))
+        .collect();
+    if !failed.is_empty() {
+        panic!("{} of {} cells panicked:\n  {}", failed.len(), n, failed.join("\n  "));
+    }
+    results.into_iter().map(|r| r.expect("failures re-raised above")).collect()
 }
 
 #[cfg(test)]
@@ -88,6 +134,47 @@ mod tests {
         assert_eq!(parallel_map(0, vec![5, 6], |x| x * 2), vec![10, 12]);
         assert!(resolve_jobs(0) >= 1);
         assert_eq!(resolve_jobs(3), 3);
+    }
+
+    #[test]
+    fn panicking_cell_keeps_completed_results() {
+        for jobs in [1usize, 4] {
+            let out = parallel_map_catch(jobs, (0..16).collect::<Vec<usize>>(), |i| {
+                if i % 7 == 3 {
+                    panic!("cell {i} exploded");
+                }
+                i * 10
+            });
+            assert_eq!(out.len(), 16);
+            for (i, r) in out.iter().enumerate() {
+                if i % 7 == 3 {
+                    let msg = r.as_ref().unwrap_err();
+                    assert!(msg.contains("exploded"), "payload preserved: {msg}");
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i * 10, "completed cells survive");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_consolidates_panics_after_finishing_all_cells() {
+        let ran = AtomicUsize::new(0);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(2, vec![0usize, 1, 2, 3], |i| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                if i == 1 || i == 2 {
+                    panic!("boom {i}");
+                }
+                i
+            })
+        }));
+        // Every cell ran despite two failures, and the consolidated panic
+        // names each failed cell.
+        assert_eq!(ran.load(Ordering::SeqCst), 4, "no cell skipped");
+        let msg = panic_message(caught.unwrap_err());
+        assert!(msg.contains("2 of 4 cells panicked"), "summary line: {msg}");
+        assert!(msg.contains("cell #1: boom 1") && msg.contains("cell #2: boom 2"), "{msg}");
     }
 
     #[test]

@@ -17,6 +17,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 use dali::config::Presets;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
 use dali::coordinator::simrun::{Phase, StepSimulator};
+use dali::fault::FaultPlan;
 use dali::hw::CostModel;
 use dali::store::TieredStore;
 use dali::trace::DigestSink;
@@ -149,6 +150,61 @@ fn run_step_steady_state_is_allocation_free() {
         assert_eq!(
             allocs, 0,
             "{scenario}/dali+digest: traced run_step allocated {allocs} times (expected zero)"
+        );
+    }
+
+    // --- fault-injection pass: a flaky-nvme plan must not cost allocations -
+    // The degraded cost views are precomputed once at plan install, retry /
+    // backoff / stall pricing is pure arithmetic against the fault hash, and
+    // flaky-nvme opens no GPU/PCIe windows, so the steady-state step under
+    // injected read failures stays exactly as allocation-free as the clean
+    // run. (Satellite: mixtral-sim-ram16-q4 + flaky-nvme, zero-alloc.)
+    {
+        let scenario = "mixtral-sim-ram16-q4";
+        let (model, hw) = presets.scenario(scenario).unwrap();
+        let dims = &model.sim;
+        let cost = CostModel::for_scenario(&presets, scenario).unwrap();
+        let trace =
+            synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 96, 0xa11c);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+        let ids: Vec<usize> = (0..8).collect();
+        let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+        assert!(!store.is_unlimited());
+        let plan =
+            FaultPlan::new(presets.fault_profile("flaky-nvme").unwrap(), 0xfa17);
+        let mut sim = StepSimulator::new(
+            &cost,
+            bundle,
+            &freq,
+            dims.layers,
+            dims.n_routed,
+            dims.n_shared,
+            7,
+        )
+        .with_faults(plan)
+        .with_store(store);
+        let mut step = BatchStep::default();
+        trace.compose_prefill_into(&ids, &mut step);
+        sim.run_step(&step, 8, Phase::Prefill);
+        sim.reset_metrics();
+        let warmup = 32;
+        for s in 0..warmup {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+        }
+        let before = alloc_calls();
+        for s in warmup..trace.min_steps() {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+        }
+        let allocs = alloc_calls() - before;
+        let m = sim.finish();
+        assert!(m.tokens_out > 0, "faulted audit must actually decode");
+        assert_eq!(
+            allocs, 0,
+            "{scenario}/dali+flaky-nvme: faulted run_step allocated {allocs} times (expected zero)"
         );
     }
 }

@@ -1,0 +1,303 @@
+//! Chaos properties for the deterministic fault-injection subsystem.
+//!
+//! Randomized (but fully seeded) fault profiles are thrown at the tiered
+//! replay pipeline and the suite proves the graceful-degradation claims:
+//! every faulted run terminates with virtual time advancing (no deadlock —
+//! transfers either complete, retry, or abort with a ledger record),
+//! residency and budget conservation survive RAM-pressure shrink/restore
+//! cycles, latency amplification versus the clean run stays bounded, the
+//! same `(fault seed, profile)` pair reproduces the same whole-run trace
+//! digest, and a `clean` plan is bit-transparent.
+
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::{replay_decode_faulted, Phase, StepSimulator};
+use dali::fault::{FaultPlan, FaultProfile};
+use dali::hw::CostModel;
+use dali::metrics::RunMetrics;
+use dali::store::TieredStore;
+use dali::trace::DigestSink;
+use dali::util::DetRng;
+use dali::workload::trace::{synthetic_locality_trace, BatchStep};
+
+/// Run `f` over `n` seeded cases, reporting the failing seed.
+fn for_seeds(n: u64, f: impl Fn(u64)) {
+    for seed in 0..n {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if result.is_err() {
+            panic!("property failed at seed {seed}");
+        }
+    }
+}
+
+/// Build an arbitrary-but-valid profile from a seeded rng: every field
+/// stays inside `FaultProfile::validate`'s envelope by construction, and
+/// each fault class (read failures, slow reads, GPU/PCIe windows, RAM
+/// pressure) is independently present or absent so the conditional
+/// accounting checks exercise both sides.
+fn random_profile(rng: &mut DetRng) -> FaultProfile {
+    let mut p = FaultProfile::clean();
+    if rng.chance(0.7) {
+        p.nvme_fail_prob = rng.usize_below(61) as f64 / 100.0;
+        p.nvme_slow_prob = rng.usize_below(51) as f64 / 100.0;
+        p.nvme_slow_mult = 1.0 + rng.usize_below(4) as f64;
+        p.max_retries = rng.usize_below(4) as u32;
+        p.timeout_mult = 1.0 + rng.usize_below(3) as f64;
+        p.backoff_mult = rng.usize_below(3) as f64;
+    }
+    if rng.chance(0.5) {
+        p.gpu_period = 4 + rng.usize_below(24) as u64;
+        p.gpu_len = 1 + rng.usize_below(p.gpu_period as usize) as u64;
+        p.gpu_mult = 1.0 + (1 + rng.usize_below(30)) as f64 / 10.0;
+    }
+    if rng.chance(0.5) {
+        p.pcie_period = 4 + rng.usize_below(24) as u64;
+        p.pcie_len = 1 + rng.usize_below(p.pcie_period as usize) as u64;
+        p.pcie_mult = 1.0 + (1 + rng.usize_below(30)) as f64 / 10.0;
+    }
+    if rng.chance(0.5) {
+        p.ram_period = 4 + rng.usize_below(24) as u64;
+        p.ram_len = 1 + rng.usize_below(p.ram_period as usize) as u64;
+        p.ram_shrink_frac = (1 + rng.usize_below(8)) as f64 / 10.0;
+    }
+    p.validate().expect("generated profiles are valid by construction");
+    p
+}
+
+/// DALI replay on `mixtral-sim-ram16` (predictive placement, tiered store)
+/// under an optional fault plan, with a digest sink so the returned metrics
+/// carry the whole-run event-stream hash.
+fn ram16_faulted(faults: Option<FaultPlan>) -> RunMetrics {
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
+    let c = CostModel::new(model, hw);
+    let dims = &model.sim;
+    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48, 0x7157);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let cfg = FrameworkCfg::paper_default(dims);
+    let bundle = Framework::Dali.bundle(dims, &c, &freq, &cfg);
+    let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+    assert!(!store.is_unlimited());
+    let ids: Vec<usize> = (0..8).collect();
+    replay_decode_faulted(
+        &trace,
+        &ids,
+        32,
+        &c,
+        bundle,
+        &freq,
+        dims.n_shared,
+        7,
+        faults,
+        Some(store),
+        DigestSink::new(),
+    )
+    .0
+}
+
+#[test]
+fn prop_chaos_runs_terminate_with_conserved_residency() {
+    // Arbitrary valid profiles: the run always terminates with the full
+    // token count, the store's residency/budget invariants hold after
+    // every single step (shrink, spill, restore, retry, abort included),
+    // and the fault ledger never invents events a profile cannot cause.
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
+    let c = CostModel::new(model, hw);
+    let dims = &model.sim;
+    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 8, 32, 0x7157);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let cfg = FrameworkCfg::paper_default(dims);
+    let total = dims.layers * dims.n_routed;
+    for_seeds(40, |seed| {
+        let mut rng = DetRng::new(seed ^ 0xc4a0);
+        let profile = random_profile(&mut rng);
+        let plan = FaultPlan::new(profile, seed.wrapping_mul(0x9e37_79b9));
+        let bundle = Framework::Dali.bundle(dims, &c, &freq, &cfg);
+        let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+        let host_slots = store.host_slots();
+        let mut sim = StepSimulator::new(
+            &c,
+            bundle,
+            &freq,
+            dims.layers,
+            dims.n_routed,
+            dims.n_shared,
+            7,
+        )
+        .with_faults(plan)
+        .with_store(store);
+        let ids: Vec<usize> = (0..6).collect();
+        let mut step = BatchStep::default();
+        trace.compose_prefill_into(&ids, &mut step);
+        sim.run_step(&step, 8, Phase::Prefill);
+        sim.reset_metrics();
+        for s in 0..trace.min_steps().min(24) {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+            let st = sim.store().unwrap();
+            st.check_invariants().unwrap();
+            let (g, h, d) = st.counts();
+            assert_eq!(g + h + d, total, "residency must be conserved under faults");
+            assert!(g + h <= host_slots, "host budget exceeded under faults");
+            assert!(
+                st.pressure_reserved() <= host_slots,
+                "pressure reservation cannot exceed the budget"
+            );
+            assert_eq!(st.under_pressure(), st.pressure_reserved() > 0);
+        }
+        let m = sim.finish();
+        assert!(m.tokens_out > 0, "faulted run must still decode");
+        assert!(m.total_ns > 0, "virtual time must advance (no deadlock)");
+        // The ledger only records events the profile can actually cause.
+        if profile.nvme_fail_prob == 0.0 {
+            assert_eq!(m.fault_retries, 0, "no failure rate, no retries");
+            assert_eq!(m.fault_aborts, 0);
+            assert_eq!(m.fault_stall_ns, 0);
+        }
+        // an abort requires its whole retry budget (≥ 1 logged attempt)
+        assert!(m.fault_retries >= m.fault_aborts, "aborts without logged attempts");
+        if profile.ram_period == 0 {
+            assert_eq!(m.ram_pressure_events, 0);
+            assert_eq!(m.ram_pressure_spills, 0);
+        }
+        if profile.gpu_period == 0 {
+            assert_eq!(m.degraded_gpu_ns, 0);
+        }
+        if profile.pcie_period == 0 {
+            assert_eq!(m.degraded_pcie_ns, 0);
+        }
+    });
+}
+
+#[test]
+fn prop_ram_pressure_cycles_shrink_and_restore() {
+    // A periodic RAM-pressure profile with a 50% on-window must actually
+    // fire (the window schedule is pure step arithmetic, not hash-gated),
+    // spill down to the shrunken budget inside the window, and restore the
+    // full budget outside it — with conservation intact on every step.
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario("mixtral-sim-ram16").unwrap();
+    let c = CostModel::new(model, hw);
+    let dims = &model.sim;
+    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 8, 48, 0x7157);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let cfg = FrameworkCfg::paper_default(dims);
+    let total = dims.layers * dims.n_routed;
+    let mut profile = FaultProfile::clean();
+    profile.ram_period = 8;
+    profile.ram_len = 4;
+    profile.ram_shrink_frac = 0.5;
+    profile.validate().unwrap();
+    let bundle = Framework::Dali.bundle(dims, &c, &freq, &cfg);
+    let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+    let host_slots = store.host_slots();
+    let mut sim = StepSimulator::new(
+        &c,
+        bundle,
+        &freq,
+        dims.layers,
+        dims.n_routed,
+        dims.n_shared,
+        7,
+    )
+    .with_faults(FaultPlan::new(profile, 0xfa17))
+    .with_store(store);
+    let ids: Vec<usize> = (0..8).collect();
+    let mut step = BatchStep::default();
+    trace.compose_prefill_into(&ids, &mut step);
+    sim.run_step(&step, 8, Phase::Prefill);
+    sim.reset_metrics();
+    let mut saw_pressure = false;
+    let mut saw_restore = false;
+    for s in 0..trace.min_steps().min(40) {
+        trace.compose_decode_into(&ids, s, &mut step);
+        sim.run_step(&step, 16 + s, Phase::Decode);
+        let st = sim.store().unwrap();
+        st.check_invariants().unwrap();
+        let (g, h, d) = st.counts();
+        assert_eq!(g + h + d, total, "shrink/restore must conserve residency");
+        assert!(g + h <= host_slots);
+        if st.under_pressure() {
+            saw_pressure = true;
+            assert!(st.pressure_reserved() > 0 && st.pressure_reserved() < host_slots);
+        } else if saw_pressure {
+            saw_restore = true;
+            assert_eq!(st.pressure_reserved(), 0, "budget must restore after the window");
+        }
+    }
+    let m = sim.finish();
+    assert!(saw_pressure, "the 4-of-8 pressure window must fire");
+    assert!(saw_restore, "the budget must be observed restored between windows");
+    assert!(m.ram_pressure_events > 0, "pressure windows must be ledgered");
+}
+
+#[test]
+fn prop_same_seed_profile_reproduces_the_digest() {
+    // Same (profile, fault seed) → identical whole-run trace digest; for a
+    // hash-gated profile (read faults consult the seed), varying the fault
+    // seed perturbs the injected schedule and therefore the stream.
+    let mut boosted = FaultProfile::named("flaky-nvme").unwrap();
+    boosted.nvme_fail_prob = 0.5;
+    boosted.nvme_slow_prob = 0.5;
+    for profile in [
+        boosted,
+        FaultProfile::named("thermal").unwrap(),
+        FaultProfile::named("ram-pressure").unwrap(),
+    ] {
+        let a = ram16_faulted(Some(FaultPlan::new(profile, 0xfa17)));
+        let b = ram16_faulted(Some(FaultPlan::new(profile, 0xfa17)));
+        assert!(a.trace_digest.is_some());
+        assert_eq!(a, b, "same (seed, profile) must reproduce the run bit-for-bit");
+    }
+    let digests: Vec<Option<u64>> = (0..6u64)
+        .map(|s| ram16_faulted(Some(FaultPlan::new(boosted, s))).trace_digest)
+        .collect();
+    let mut uniq = digests.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert!(
+        uniq.len() >= 2,
+        "fault seeds must perturb the injected schedule: {digests:?}"
+    );
+}
+
+#[test]
+fn prop_latency_amplification_is_bounded() {
+    // Faults slow runs down but never unboundedly: each named profile's
+    // per-op amplification is capped (timeout ≤ timeout_mult × read, at
+    // most max_retries + 1 attempts, window mults ≤ 2, shrink ≤ 65%), so
+    // whole-run latency stays within a generous constant of clean — the
+    // "graceful" in graceful degradation. The lower bound guards against
+    // accounting bugs that would make a faulted run impossibly fast.
+    let p = Presets::load_default().unwrap();
+    let clean = ram16_faulted(None);
+    assert!(clean.total_ns > 0);
+    for name in ["flaky-nvme", "thermal", "ram-pressure"] {
+        let plan = FaultPlan::new(p.fault_profile(name).unwrap(), 0xfa17);
+        let faulted = ram16_faulted(Some(plan));
+        assert!(faulted.tokens_out == clean.tokens_out, "{name}: same work must complete");
+        let ratio = faulted.total_ns as f64 / clean.total_ns as f64;
+        assert!(
+            ratio <= 25.0,
+            "{name}: latency amplification must stay bounded, got {ratio:.2}x"
+        );
+        assert!(
+            ratio >= 0.5,
+            "{name}: faulted runs cannot be dramatically faster than clean, got {ratio:.2}x"
+        );
+    }
+}
+
+#[test]
+fn clean_plan_is_bit_transparent() {
+    // `--faults clean` must be indistinguishable — metrics and digest —
+    // from never installing a plan at all.
+    let unfaulted = ram16_faulted(None);
+    let clean = ram16_faulted(Some(FaultPlan::new(FaultProfile::clean(), 0xfa17)));
+    assert_eq!(clean, unfaulted, "clean plan must be bit-transparent");
+    assert_eq!(clean.fault_retries, 0);
+    assert_eq!(clean.ram_pressure_events, 0);
+    assert_eq!(clean.degraded_gpu_ns, 0);
+    assert_eq!(clean.degraded_pcie_ns, 0);
+}
