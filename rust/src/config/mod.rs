@@ -14,6 +14,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::fault::FaultProfile;
+use crate::serve::arrival::ArrivalSpec;
 use crate::util::json::Value;
 
 /// Scaled model dimensions — what PJRT actually computes.
@@ -252,6 +253,10 @@ pub struct Presets {
     /// Named fault-injection profiles (`fault_profiles` section), stored
     /// as the same `key=value` spec strings `dali run --faults` accepts.
     pub fault_profiles: BTreeMap<String, FaultProfile>,
+    /// Named request-arrival processes (`arrival` section) for the
+    /// serving simulation, stored as the same `key=value` spec strings
+    /// `dali serve --sim --arrival` accepts.
+    pub arrivals: BTreeMap<String, ArrivalSpec>,
 }
 
 impl Presets {
@@ -319,12 +324,21 @@ impl Presets {
                 fault_profiles.insert(name.clone(), prof);
             }
         }
+        let mut arrivals = BTreeMap::new();
+        if let Some(ar) = v.opt("arrival") {
+            for (name, spec) in ar.as_obj()? {
+                let s = ArrivalSpec::parse_spec(spec.as_str()?)
+                    .with_context(|| format!("arrival preset '{name}'"))?;
+                arrivals.insert(name.clone(), s);
+            }
+        }
         Ok(Presets {
             models,
             buckets: Buckets::from_json(v.get("buckets")?)?,
             hardware,
             scenarios,
             fault_profiles,
+            arrivals,
         })
     }
 
@@ -385,6 +399,26 @@ impl Presets {
                  clean, flaky-nvme, thermal, ram-pressure) and failed to parse as a \
                  key=value spec",
                 self.fault_profiles.keys().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Resolve `dali serve --sim --arrival <arg>` / `expt serve` arrival
+    /// names: the presets file's `arrival` section first, then the
+    /// built-in named processes (`steady`/`bursty`/`diurnal` work without
+    /// a presets file), then an inline `key=value,...` spec.
+    pub fn arrival(&self, name: &str) -> Result<ArrivalSpec> {
+        if let Some(s) = self.arrivals.get(name) {
+            return Ok(*s);
+        }
+        if let Some(s) = ArrivalSpec::named(name) {
+            return Ok(s);
+        }
+        ArrivalSpec::parse_spec(name).with_context(|| {
+            format!(
+                "'{name}' is not a named arrival preset (presets: [{}], built-ins: \
+                 steady, bursty, diurnal) and failed to parse as a key=value spec",
+                self.arrivals.keys().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
             )
         })
     }
@@ -543,6 +577,26 @@ mod tests {
         // garbage is a named error
         let err = p.fault_profile("no-such-profile").unwrap_err();
         assert!(format!("{err:#}").contains("no-such-profile"));
+    }
+
+    #[test]
+    fn arrival_presets_resolve_from_presets_builtins_and_specs() {
+        let p = Presets::load_default().unwrap();
+        // presets.json names the three paper-style processes
+        let steady = p.arrival("steady-poisson").unwrap();
+        assert_eq!(steady.kind, crate::serve::arrival::ArrivalKind::Poisson);
+        assert_eq!(p.arrival("bursty").unwrap().kind, crate::serve::arrival::ArrivalKind::Bursty);
+        assert_eq!(
+            p.arrival("diurnal").unwrap().kind,
+            crate::serve::arrival::ArrivalKind::Diurnal
+        );
+        // built-in fallback + inline spec fallback
+        assert!(p.arrival("steady").is_ok());
+        let inline = p.arrival("kind=poisson,rate=12").unwrap();
+        assert_eq!(inline.rate, 12.0);
+        // garbage is a named error listing the presets
+        let err = format!("{:#}", p.arrival("no-such-arrival").unwrap_err());
+        assert!(err.contains("no-such-arrival") && err.contains("steady-poisson"), "{err}");
     }
 
     #[test]

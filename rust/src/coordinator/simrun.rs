@@ -276,6 +276,23 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
         self.now
     }
 
+    /// Advance the virtual clock to `t` without doing work. No-op when `t`
+    /// is in the past. The serving simulator uses this to idle across the
+    /// gap to the next request arrival when the running batch is empty —
+    /// `run_step` itself never moves the clock for an empty step.
+    pub fn advance_to(&mut self, t: Ns) {
+        self.now = self.now.max(t);
+    }
+
+    /// Emit a caller-composed event through the run's sink, so layers
+    /// above the step loop (the serving simulator's request lifecycle) can
+    /// join the same digest/JSONL stream as the scheduling events.
+    pub fn note_event(&mut self, ev: Event) {
+        if S::ENABLED {
+            self.sink.emit(&ev);
+        }
+    }
+
     /// Host-RAM arrival for an execution-path access of (layer, e):
     /// counts the tier hit/miss and waits for (or issues) the promotion.
     /// Shared by the CPU-execution and GPU-demand-fetch paths so the tier

@@ -12,6 +12,7 @@ pub mod common;
 pub mod motivation;
 pub mod overall;
 pub mod sensitivity;
+pub mod serve;
 
 use anyhow::{bail, Result};
 
@@ -46,6 +47,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
             "ram",
             "RAM-budget sensitivity — decode speed vs host RAM, predictive vs LRU placement",
             sensitivity::ram_budget,
+        ),
+        (
+            "serve",
+            "Serving SLO curves — TTFT/TPOT p50/p99 vs load × RAM budget × policy",
+            serve::slo_curves,
         ),
         ("fig20", "Fig. 20 (A.1) — CPU/GPU balance HybriMoE vs DALI", appendix::fig20),
         ("fig21", "Fig. 21 (A.2) — beam search vs greedy vs optimal", appendix::fig21),

@@ -31,6 +31,19 @@
 //!                                 writes machine-readable JSON
 //!   serve --preset P [--port 8743] [--framework dali]
 //!                                 start the HTTP serving front-end
+//!   serve --sim [--scenario mixtral-sim-ram16] [--framework dali]
+//!         [--arrival steady-poisson|bursty|diurnal|spec] [--load R]
+//!         [--requests 32] [--max-batch 8] [--max-tokens 16] [--seed N]
+//!         [--faults profile|spec] [--fault-seed N] [--trace-digest]
+//!                                 multi-tenant continuous-batching serving
+//!                                 simulation in virtual time: seeded arrivals
+//!                                 share one pipeline (GPU cache, tiered
+//!                                 store, NVMe/PCIe/transcode lanes); prints
+//!                                 per-request TTFT/TPOT/queue p50/p99 and the
+//!                                 same greppable `trace_digest=0x…` audit
+//!                                 line as `run` (`--trace-digest` prints only
+//!                                 that line — what CI's serve determinism
+//!                                 check compares)
 //!
 //! Experiments (paper tables/figures) live in the separate `expt` binary.
 
@@ -42,6 +55,7 @@ use dali::coordinator::frameworks::{Framework, FrameworkCfg};
 use dali::coordinator::simrun::{replay_decode_faulted, Phase, StepSimulator};
 use dali::fault::FaultPlan;
 use dali::hw::CostModel;
+use dali::serve::{simulate_serve, ServeSim, ServeSimCfg};
 use dali::store::{PlacementCfg, TieredStore};
 use dali::trace::{DigestSink, JsonSink, TraceSummary};
 use dali::util::alloc_counter::{alloc_calls, dealloc_calls, CountingAlloc};
@@ -487,6 +501,93 @@ fn cmd_bench(args: &Args) -> Result<()> {
         entries.push(entry);
     }
 
+    // --- serve tier: the continuous-batching serving simulation under the
+    // same zero-alloc + digest-stability gates. The audit instance is built
+    // exactly like `simulate_serve` builds its cells, warmed until every
+    // request has been admitted (prefill steps done), then measured over
+    // the remaining pure-decode ticks; throughput replays the whole cell.
+    {
+        let scenario = "mixtral-sim-ram16";
+        let label = format!("serve/{scenario}");
+        let serve_cfg =
+            ServeSimCfg { n_requests: 32, max_batch: 8, max_tokens: 16, ..Default::default() };
+        let (model, hw) = presets.scenario(scenario)?;
+        let dims = &model.sim;
+        let cost = CostModel::for_scenario(&presets, scenario)?;
+        let trace = synthetic_locality_trace(
+            dims.layers,
+            dims.n_routed,
+            dims.top_k,
+            16,
+            serve_cfg.max_tokens.max(16),
+            serve_cfg.seed ^ 0x7ace,
+        );
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+        let mut sim = StepSimulator::new(
+            &cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7,
+        )
+        .with_sink(DigestSink::new());
+        let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+        if !store.is_unlimited() {
+            sim = sim.with_store(store);
+        }
+        let mut serve = ServeSim::new(sim, &trace, serve_cfg.clone())?;
+        while serve.admitted() < serve_cfg.n_requests && serve.tick() {}
+        let a0 = alloc_calls();
+        let d0 = dealloc_calls();
+        let mut audit_ticks = 0u64;
+        while serve.tick() {
+            audit_ticks += 1;
+        }
+        let allocs_per_step = (alloc_calls() - a0) as f64 / audit_ticks.max(1) as f64;
+        let deallocs_per_step = (dealloc_calls() - d0) as f64 / audit_ticks.max(1) as f64;
+        let audit_report = serve.finish();
+
+        let t0 = std::time::Instant::now();
+        let budget = std::time::Duration::from_millis(300);
+        let mut replays = 0u64;
+        let mut decode_steps = 0u64;
+        let mut run_digest = audit_report.run.trace_digest;
+        let mut digest_drift = false;
+        while t0.elapsed() < budget {
+            let r = simulate_serve(&presets, scenario, Framework::Dali, &serve_cfg, None)?;
+            match (run_digest, r.run.trace_digest) {
+                (None, d) => run_digest = d,
+                (Some(a), Some(b)) => digest_drift |= a != b,
+                (Some(_), None) => digest_drift = true,
+            }
+            decode_steps += r.run.layer_steps / dims.layers as u64;
+            replays += 1;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let steps_per_s = decode_steps as f64 / wall;
+        let entry = BenchEntry {
+            preset: label.clone(),
+            steps_per_s,
+            layer_steps_per_s: steps_per_s * dims.layers as f64,
+            replays,
+            allocs_per_step,
+            deallocs_per_step,
+            sim_tokens_per_s: audit_report.tokens_per_s(),
+            trace_digest: run_digest.unwrap_or(0),
+            digest_drift,
+        };
+        println!(
+            "bench simrun/{label:<31} {:>10.0} steps/s  ({} replays, {} layers)  \
+             allocs/step {:.2}  frees/step {:.2}  digest 0x{:016x}{}",
+            entry.steps_per_s,
+            entry.replays,
+            dims.layers,
+            allocs_per_step,
+            deallocs_per_step,
+            entry.trace_digest,
+            if entry.digest_drift { "  DRIFT" } else { "" }
+        );
+        entries.push(entry);
+    }
+
     // machine-readable trajectory record (schema kept flat on purpose)
     let mut json = String::from("{\n  \"bench\": \"simrun_replay\",\n  \"schema\": 1,\n");
     json.push_str(&format!("  \"batch\": {batch},\n  \"decode_steps\": {steps},\n"));
@@ -531,10 +632,97 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.bool("sim") {
+        return cmd_serve_sim(args);
+    }
     let preset = args.str_or("preset", "mixtral-sim");
     let port = args.usize_or("port", 8743) as u16;
     let fw = parse_framework(&args.str_or("framework", "dali"))?;
     dali::serve::server::serve_blocking(&preset, port, fw)
+}
+
+/// `dali serve --sim` — one multi-tenant continuous-batching serving
+/// cell in virtual time (no engine, no sockets): seeded arrivals, shared
+/// pipeline, per-request SLO percentiles, digest-locked.
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    let presets = Presets::load_default()?;
+    let scenario = args.str_or("scenario", "mixtral-sim-ram16");
+    let fw = parse_framework(&args.str_or("framework", "dali"))?;
+    // `--arrival` names a presets.json / built-in process or gives an
+    // inline `key=value,...` spec; `--load` overrides just its rate
+    let mut arrival = presets.arrival(&args.str_or("arrival", "steady-poisson"))?;
+    if let Some(load) = args.get("load") {
+        let rate: f64 = load.parse().map_err(|_| anyhow::anyhow!("bad --load '{load}'"))?;
+        arrival = arrival.with_rate(rate);
+    }
+    let cfg = ServeSimCfg {
+        arrival,
+        n_requests: args.usize_or("requests", 32),
+        max_batch: args.usize_or("max-batch", 8),
+        max_tokens: args.usize_or("max-tokens", 16),
+        seed: args.u64_or("seed", 0x5e11),
+    };
+    let faults = match args.get("faults") {
+        Some(spec) => Some(FaultPlan::new(
+            presets.fault_profile(spec)?,
+            args.u64_or("fault-seed", 0xfa17),
+        )),
+        None => None,
+    };
+    let r = simulate_serve(&presets, &scenario, fw, &cfg, faults)?;
+    if args.bool("trace-digest") {
+        if let Some(d) = r.run.trace_digest {
+            println!("trace_digest=0x{d:016x}");
+        }
+        return Ok(());
+    }
+    println!(
+        "serve-sim scenario={scenario} framework={} arrival={} rate={} requests={} \
+         slots={} max_tokens={}",
+        fw.name(),
+        cfg.arrival.kind.name(),
+        cfg.arrival.rate,
+        cfg.n_requests,
+        cfg.max_batch,
+        cfg.max_tokens
+    );
+    println!("  finished          : {} requests, {} tokens", r.requests, r.tokens_out);
+    println!("  makespan          : {}", fmt_ns(r.makespan_ns));
+    println!("  throughput        : {:.2} tokens/s (virtual)", r.tokens_per_s());
+    println!(
+        "  TTFT p50 / p99    : {} / {}",
+        fmt_ns(r.ttft_p50_ns),
+        fmt_ns(r.ttft_p99_ns)
+    );
+    println!(
+        "  TPOT p50 / p99    : {} / {}",
+        fmt_ns(r.tpot_p50_ns),
+        fmt_ns(r.tpot_p99_ns)
+    );
+    println!(
+        "  queue p50 / p99   : {} / {}",
+        fmt_ns(r.queue_p50_ns),
+        fmt_ns(r.queue_p99_ns)
+    );
+    println!("  cache hit rate    : {:.1}%", 100.0 * r.run.cache_hit_rate());
+    if r.run.tier_host_hits + r.run.tier_disk_misses > 0 {
+        println!(
+            "  tier hits         : {} gpu / {} host / {} disk",
+            r.run.tier_gpu_hits, r.run.tier_host_hits, r.run.tier_disk_misses
+        );
+    }
+    if faults.is_some() {
+        println!(
+            "  faults            : {} retries (stall {}), {} aborts",
+            r.run.fault_retries,
+            fmt_ns(r.run.fault_stall_ns),
+            r.run.fault_aborts
+        );
+    }
+    if let Some(d) = r.run.trace_digest {
+        println!("trace_digest=0x{d:016x}");
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {

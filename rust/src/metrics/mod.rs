@@ -1,6 +1,10 @@
 //! Run metrics: virtual-time breakdowns, PCIe traffic, cache/prefetch
 //! effectiveness. Every experiment in `expt/` reports through this.
 
+pub mod serve;
+
+pub use serve::{percentile_ns, RequestStat, ServeReport};
+
 /// Metrics for one inference run (prefill and/or decode).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunMetrics {

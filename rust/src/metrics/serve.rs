@@ -1,0 +1,179 @@
+//! Per-request serving metrics: TTFT / TPOT samples and their p50/p99
+//! aggregation over one serving-simulation run.
+//!
+//! [`RunMetrics`](super::RunMetrics) stays a flat counter bag for one
+//! replay; the serving layer wraps it in a [`ServeReport`] that adds the
+//! per-request view — time-to-first-token (arrival → first decode token,
+//! queueing and prefill included) and time-per-output-token (the decode
+//! cadence after the first token). All math is exact u64 ns, so same-seed
+//! reports are bit-identical, and percentiles use the nearest-rank
+//! definition (no interpolation — a reported p99 is always a latency some
+//! request actually saw).
+
+use crate::hw::Ns;
+
+use super::RunMetrics;
+
+/// Lifecycle timestamps of one simulated request (virtual ns).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestStat {
+    /// When the request entered the arrival queue.
+    pub arrival_ns: Ns,
+    /// When the continuous batcher admitted it into the running batch.
+    pub admit_ns: Ns,
+    /// When its first decode token completed.
+    pub first_token_ns: Ns,
+    /// When its last token completed and it left the batch.
+    pub finish_ns: Ns,
+    /// Decode tokens generated.
+    pub tokens: u64,
+}
+
+impl RequestStat {
+    /// Arrival-queue wait (arrival → admission).
+    pub fn queue_ns(&self) -> Ns {
+        self.admit_ns.saturating_sub(self.arrival_ns)
+    }
+
+    /// Time to first token: arrival → first decode token, queue + prefill
+    /// + first decode step included.
+    pub fn ttft_ns(&self) -> Ns {
+        self.first_token_ns.saturating_sub(self.arrival_ns)
+    }
+
+    /// Time per output token after the first: the steady decode cadence
+    /// (0 for single-token requests, which have no cadence to report).
+    pub fn tpot_ns(&self) -> Ns {
+        if self.tokens <= 1 {
+            return 0;
+        }
+        self.finish_ns.saturating_sub(self.first_token_ns) / (self.tokens - 1)
+    }
+}
+
+/// Nearest-rank percentile of an already-sorted sample (p in (0, 100]).
+/// Returns 0 for an empty sample.
+pub fn percentile_ns(sorted: &[Ns], p: f64) -> Ns {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// One serving run's report: per-request SLO aggregates on top of the
+/// underlying replay's [`RunMetrics`] (whose `trace_digest` — covering
+/// the request-lifecycle events too — is the determinism lock for serve
+/// cells).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeReport {
+    /// Requests that ran to completion (every request, in this sim).
+    pub requests: u64,
+    /// Decode tokens generated across all requests.
+    pub tokens_out: u64,
+    /// Virtual time from the run start to the last request's finish.
+    pub makespan_ns: Ns,
+    pub ttft_p50_ns: Ns,
+    pub ttft_p99_ns: Ns,
+    pub tpot_p50_ns: Ns,
+    pub tpot_p99_ns: Ns,
+    pub queue_p50_ns: Ns,
+    pub queue_p99_ns: Ns,
+    /// The shared-pipeline replay metrics (cache/store/lane counters and
+    /// the whole-run trace digest).
+    pub run: RunMetrics,
+}
+
+impl ServeReport {
+    /// Aggregate per-request stats (order-insensitive: samples are sorted
+    /// here) over the finished run's metrics.
+    pub fn from_stats(stats: &[RequestStat], run: RunMetrics) -> ServeReport {
+        let mut ttft: Vec<Ns> = stats.iter().map(|s| s.ttft_ns()).collect();
+        let mut tpot: Vec<Ns> =
+            stats.iter().filter(|s| s.tokens > 1).map(|s| s.tpot_ns()).collect();
+        let mut queue: Vec<Ns> = stats.iter().map(|s| s.queue_ns()).collect();
+        ttft.sort_unstable();
+        tpot.sort_unstable();
+        queue.sort_unstable();
+        ServeReport {
+            requests: stats.len() as u64,
+            tokens_out: stats.iter().map(|s| s.tokens).sum(),
+            makespan_ns: stats.iter().map(|s| s.finish_ns).max().unwrap_or(0),
+            ttft_p50_ns: percentile_ns(&ttft, 50.0),
+            ttft_p99_ns: percentile_ns(&ttft, 99.0),
+            tpot_p50_ns: percentile_ns(&tpot, 50.0),
+            tpot_p99_ns: percentile_ns(&tpot, 99.0),
+            queue_p50_ns: percentile_ns(&queue, 50.0),
+            queue_p99_ns: percentile_ns(&queue, 99.0),
+            run,
+        }
+    }
+
+    /// Serving throughput over the makespan (tokens per virtual second).
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / (self.makespan_ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles_are_exact() {
+        let xs = [10, 20, 30, 40];
+        assert_eq!(percentile_ns(&xs, 50.0), 20);
+        assert_eq!(percentile_ns(&xs, 75.0), 30);
+        assert_eq!(percentile_ns(&xs, 99.0), 40);
+        assert_eq!(percentile_ns(&xs, 100.0), 40);
+        assert_eq!(percentile_ns(&xs, 1.0), 10);
+        assert_eq!(percentile_ns(&[], 50.0), 0);
+        assert_eq!(percentile_ns(&[7], 99.0), 7);
+    }
+
+    #[test]
+    fn request_stat_derives_ttft_tpot_queue() {
+        let s = RequestStat {
+            arrival_ns: 100,
+            admit_ns: 150,
+            first_token_ns: 300,
+            finish_ns: 900,
+            tokens: 4,
+        };
+        assert_eq!(s.queue_ns(), 50);
+        assert_eq!(s.ttft_ns(), 200);
+        assert_eq!(s.tpot_ns(), 200); // (900-300)/3
+        let single = RequestStat { tokens: 1, ..s };
+        assert_eq!(single.tpot_ns(), 0);
+    }
+
+    #[test]
+    fn report_aggregates_hand_computed_samples() {
+        let mk = |arrival, admit, first, finish, tokens| RequestStat {
+            arrival_ns: arrival,
+            admit_ns: admit,
+            first_token_ns: first,
+            finish_ns: finish,
+            tokens,
+        };
+        let stats = [
+            mk(0, 0, 100, 400, 4),    // ttft 100, tpot 100, queue 0
+            mk(50, 100, 350, 950, 4), // ttft 300, tpot 200, queue 50
+            mk(60, 200, 260, 260, 1), // ttft 200, no tpot,  queue 140
+        ];
+        let r = ServeReport::from_stats(&stats, RunMetrics::default());
+        assert_eq!(r.requests, 3);
+        assert_eq!(r.tokens_out, 9);
+        assert_eq!(r.makespan_ns, 950);
+        assert_eq!(r.ttft_p50_ns, 200);
+        assert_eq!(r.ttft_p99_ns, 300);
+        assert_eq!(r.tpot_p50_ns, 100); // nearest-rank over {100, 200}
+        assert_eq!(r.tpot_p99_ns, 200);
+        assert_eq!(r.queue_p50_ns, 50);
+        assert_eq!(r.queue_p99_ns, 140);
+        assert!((r.tokens_per_s() - 9.0 / (950.0 / 1e9)).abs() < 1e-6);
+    }
+}

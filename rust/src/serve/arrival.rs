@@ -1,0 +1,259 @@
+//! Seeded request-arrival processes for the serving simulation.
+//!
+//! An [`ArrivalSpec`] describes *when* requests reach the server in
+//! virtual time: steady Poisson traffic, bursty traffic (Poisson burst
+//! heads with several requests landing together), or a diurnal rate
+//! modulated over a cycle. Generation is driven by a [`DetRng`] stream,
+//! so the same (spec, seed) pair always yields the same arrival script —
+//! the serving sweep's bit-identical-cells guarantee starts here.
+//!
+//! Named presets live in the `arrival` section of `configs/presets.json`
+//! (resolved through [`crate::config::Presets::arrival`], with the same
+//! presets → built-ins → inline-spec fallback chain as fault profiles).
+
+use anyhow::{bail, Result};
+
+use crate::hw::Ns;
+use crate::util::DetRng;
+
+/// The shape of the arrival process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at a constant mean rate.
+    Poisson,
+    /// Poisson burst heads; each head brings a small pack of requests
+    /// spaced 100 µs apart (a client fanning out, a retry storm).
+    Bursty,
+    /// Poisson thinned by a cosine day/night cycle: the instantaneous
+    /// rate swings between `rate * (1 - depth)` and `rate`.
+    Diurnal,
+}
+
+impl ArrivalKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// A parsed arrival process: kind + rate knobs. `Copy`, validated at
+/// parse time, and renderable back to the `key=value` spec form.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalSpec {
+    pub kind: ArrivalKind,
+    /// Mean request rate (requests per virtual second) at the peak; the
+    /// long-run mean for poisson/bursty, the cycle peak for diurnal.
+    pub rate: f64,
+    /// Bursty only: mean requests per burst (>= 1).
+    pub burst: f64,
+    /// Diurnal only: cycle period in virtual seconds.
+    pub period_s: f64,
+    /// Diurnal only: modulation depth in [0, 1) — 0 degenerates to
+    /// Poisson, 0.9 means the trough runs at 10% of the peak rate.
+    pub depth: f64,
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate: 4.0,
+            burst: 4.0,
+            period_s: 2.0,
+            depth: 0.8,
+        }
+    }
+}
+
+impl ArrivalSpec {
+    /// Built-in named processes (work without a presets file, and are
+    /// mirrored by the `arrival` section of `configs/presets.json`).
+    pub fn named(name: &str) -> Option<ArrivalSpec> {
+        match name {
+            "steady" | "poisson" => {
+                Some(ArrivalSpec { kind: ArrivalKind::Poisson, ..Default::default() })
+            }
+            "bursty" => Some(ArrivalSpec {
+                kind: ArrivalKind::Bursty,
+                rate: 8.0,
+                ..Default::default()
+            }),
+            "diurnal" => {
+                Some(ArrivalSpec { kind: ArrivalKind::Diurnal, ..Default::default() })
+            }
+            _ => None,
+        }
+    }
+
+    /// Parse a `key=value,...` spec, e.g. `kind=bursty,rate=8,burst=4`.
+    /// Unknown keys are errors (a typo must not silently mean defaults).
+    pub fn parse_spec(spec: &str) -> Result<ArrivalSpec> {
+        let mut s = ArrivalSpec::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = match part.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("arrival spec entry '{part}' is not key=value"),
+            };
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "kind" => {
+                    s.kind = match v {
+                        "poisson" => ArrivalKind::Poisson,
+                        "bursty" => ArrivalKind::Bursty,
+                        "diurnal" => ArrivalKind::Diurnal,
+                        _ => bail!("unknown arrival kind '{v}' (poisson|bursty|diurnal)"),
+                    }
+                }
+                "rate" => s.rate = v.parse()?,
+                "burst" => s.burst = v.parse()?,
+                "period_s" => s.period_s = v.parse()?,
+                "depth" => s.depth = v.parse()?,
+                _ => bail!("unknown arrival spec key '{k}'"),
+            }
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.rate > 0.0 && self.rate.is_finite()) {
+            bail!("arrival rate must be positive, got {}", self.rate);
+        }
+        if !(self.burst >= 1.0 && self.burst.is_finite()) {
+            bail!("arrival burst must be >= 1, got {}", self.burst);
+        }
+        if !(self.period_s > 0.0 && self.period_s.is_finite()) {
+            bail!("arrival period_s must be positive, got {}", self.period_s);
+        }
+        if !(0.0..1.0).contains(&self.depth) {
+            bail!("arrival depth must be in [0, 1), got {}", self.depth);
+        }
+        Ok(())
+    }
+
+    /// Same spec with the mean rate replaced — the load axis of the
+    /// `expt serve` sweep.
+    pub fn with_rate(mut self, rate: f64) -> Self {
+        self.rate = rate;
+        self
+    }
+
+    /// Generate `n` arrival instants (virtual ns, non-decreasing) into
+    /// `out`, deterministically from `seed`.
+    pub fn generate_into(&self, n: usize, seed: u64, out: &mut Vec<Ns>) {
+        out.clear();
+        out.reserve(n);
+        let mut rng = DetRng::new(seed ^ 0xa221_7a1e);
+        // exponential inter-arrival with mean 1/rate (u in [0,1) so the
+        // log argument stays strictly positive)
+        let exp_gap =
+            |rng: &mut DetRng, rate: f64| -> f64 { -(1.0 - rng.f64()).ln() / rate };
+        let mut t = 0.0f64;
+        match self.kind {
+            ArrivalKind::Poisson => {
+                while out.len() < n {
+                    t += exp_gap(&mut rng, self.rate);
+                    out.push((t * 1e9) as Ns);
+                }
+            }
+            ArrivalKind::Bursty => {
+                // burst heads at rate/burst keep the long-run mean at
+                // `rate`; burst sizes are uniform on [1, 2*burst] (mean
+                // ~burst), members 100 µs apart
+                let head_rate = self.rate / self.burst;
+                while out.len() < n {
+                    t += exp_gap(&mut rng, head_rate);
+                    let span = (2.0 * self.burst) as usize;
+                    let size = 1 + rng.usize_below(span.max(1));
+                    for i in 0..size {
+                        if out.len() < n {
+                            out.push(((t + i as f64 * 100e-6) * 1e9) as Ns);
+                        }
+                    }
+                }
+            }
+            ArrivalKind::Diurnal => {
+                // thinning: homogeneous arrivals at the peak rate,
+                // accepted with probability lambda(t)/rate; lambda dips
+                // to rate*(1-depth) at the start of each cycle
+                while out.len() < n {
+                    t += exp_gap(&mut rng, self.rate);
+                    let phase = (t / self.period_s) * 2.0 * std::f64::consts::PI;
+                    let lambda_frac = 1.0 - self.depth * 0.5 * (1.0 + phase.cos());
+                    if rng.chance(lambda_frac) {
+                        out.push((t * 1e9) as Ns);
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`Self::generate_into`] returning a fresh vec.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<Ns> {
+        let mut v = Vec::new();
+        self.generate_into(n, seed, &mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_knobs() {
+        let s = ArrivalSpec::parse_spec("kind=bursty,rate=8,burst=4").unwrap();
+        assert_eq!(s.kind, ArrivalKind::Bursty);
+        assert_eq!(s.rate, 8.0);
+        assert_eq!(s.burst, 4.0);
+        let d = ArrivalSpec::parse_spec("kind=diurnal,rate=2,period_s=5,depth=0.5").unwrap();
+        assert_eq!(d.kind, ArrivalKind::Diurnal);
+        assert_eq!(d.period_s, 5.0);
+        assert!(ArrivalSpec::parse_spec("kind=warp").is_err());
+        assert!(ArrivalSpec::parse_spec("rate=-1").is_err());
+        assert!(ArrivalSpec::parse_spec("depth=1.5,kind=diurnal").is_err());
+        assert!(ArrivalSpec::parse_spec("frobnicate=1").is_err());
+    }
+
+    #[test]
+    fn named_processes_exist() {
+        assert_eq!(ArrivalSpec::named("steady").unwrap().kind, ArrivalKind::Poisson);
+        assert_eq!(ArrivalSpec::named("bursty").unwrap().kind, ArrivalKind::Bursty);
+        assert_eq!(ArrivalSpec::named("diurnal").unwrap().kind, ArrivalKind::Diurnal);
+        assert!(ArrivalSpec::named("no-such").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        for name in ["steady", "bursty", "diurnal"] {
+            let spec = ArrivalSpec::named(name).unwrap();
+            let a = spec.generate(64, 0x5eed);
+            let b = spec.generate(64, 0x5eed);
+            assert_eq!(a, b, "{name}: same seed, same script");
+            assert_eq!(a.len(), 64);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{name}: non-decreasing");
+            let c = spec.generate(64, 0x5eee);
+            assert_ne!(a, c, "{name}: different seed, different script");
+        }
+    }
+
+    #[test]
+    fn mean_rate_is_roughly_honoured() {
+        let spec = ArrivalSpec::named("steady").unwrap().with_rate(10.0);
+        let a = spec.generate(1000, 7);
+        let span_s = *a.last().unwrap() as f64 / 1e9;
+        let rate = 1000.0 / span_s;
+        assert!((5.0..20.0).contains(&rate), "poisson observed rate {rate}");
+        // bursty arrivals cluster: many gaps are tiny, some are long
+        let b = ArrivalSpec::named("bursty").unwrap().generate(1000, 7);
+        let tiny = b.windows(2).filter(|w| w[1] - w[0] <= 100_000).count();
+        assert!(tiny > 200, "bursty must cluster ({tiny} tight gaps)");
+    }
+}

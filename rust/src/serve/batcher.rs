@@ -2,23 +2,39 @@
 //!
 //! Requests are grouped by (prompt length, max_tokens); a group is
 //! dispatched when it reaches `max_batch` or its oldest request has waited
-//! `max_wait`. The worker thread owns the live engine and a fresh
-//! [`StepSimulator`] per batch, so each response carries the simulated
-//! local-PC latency alongside the wall-clock numbers.
+//! `max_wait`. The worker thread sleeps on a condvar between dispatches
+//! (woken by `submit` and timed out at the oldest request's deadline — no
+//! polling), owns the live engine, and runs a fresh [`StepSimulator`] per
+//! batch, so each response carries the simulated local-PC latency
+//! alongside the wall-clock numbers.
+//!
+//! Latency is reported in two explicit components, both per request:
+//! `queue_ms` (enqueue → batch dispatch) and `exec_ms` (dispatch →
+//! response, shared by the whole batch). `wall_ms` is always their sum,
+//! and `/metrics` accumulates the same two components — one definition,
+//! used everywhere.
+//!
+//! The engine side is abstracted behind [`BatchRunner`] so the batching,
+//! shutdown, and accounting logic is testable without PJRT; the real
+//! [`InferenceEngine`] (holding `Rc` PJRT handles, so `!Send`) is
+//! constructed by a factory *inside* the worker thread, with readiness
+//! signalled back so `start` fails fast on load errors.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::Presets;
+use crate::config::{ModelDims, Presets};
 use crate::coordinator::engine::InferenceEngine;
 use crate::coordinator::frameworks::{Framework, FrameworkCfg};
 use crate::coordinator::simrun::{Phase, StepSimulator};
 use crate::hw::CostModel;
 use crate::workload::prep;
+use crate::workload::trace::BatchStep;
 
 #[derive(Debug, Clone)]
 pub struct GenRequest {
@@ -29,7 +45,13 @@ pub struct GenRequest {
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub tokens: Vec<i32>,
-    /// Wall-clock time this request spent queued + executing.
+    /// Wall-clock time this request waited in the arrival queue
+    /// (enqueue → batch dispatch).
+    pub queue_ms: f64,
+    /// Wall-clock execution time of the batch that served this request
+    /// (dispatch → response).
+    pub exec_ms: f64,
+    /// Total wall-clock latency: always `queue_ms + exec_ms`.
     pub wall_ms: f64,
     /// Simulated local-PC time for the batch that served this request.
     pub sim_ms: f64,
@@ -43,11 +65,18 @@ pub struct BatcherCfg {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub framework: Framework,
+    /// Hardware preset timing the virtual pass (a `Presets::hw` name).
+    pub hw: String,
 }
 
 impl Default for BatcherCfg {
     fn default() -> Self {
-        BatcherCfg { max_batch: 8, max_wait: Duration::from_millis(50), framework: Framework::Dali }
+        BatcherCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            framework: Framework::Dali,
+            hw: "local-pc".to_string(),
+        }
     }
 }
 
@@ -57,73 +86,171 @@ struct Pending {
     enqueued: Instant,
 }
 
-/// Aggregate serving metrics (exposed at `/metrics`).
+/// Aggregate serving metrics (exposed at `/metrics`). Queue and exec
+/// sums are per-request, matching the per-response split exactly:
+/// `queue_ms_sum + exec_ms_sum` over `requests` is the mean wall latency.
 #[derive(Debug, Default, Clone)]
 pub struct ServeMetrics {
     pub requests: u64,
     pub batches: u64,
+    /// Tokens actually generated (not the requested budget).
     pub tokens_out: u64,
-    pub wall_ms_sum: f64,
+    pub queue_ms_sum: f64,
+    pub exec_ms_sum: f64,
     pub sim_ms_sum: f64,
     pub errors: u64,
+}
+
+/// Outcome of one executed batch, as produced by a [`BatchRunner`].
+pub struct BatchOutcome {
+    pub generated: Vec<Vec<i32>>,
+    pub sim_ms: f64,
+    pub sim_tokens_per_s: f64,
+}
+
+/// The engine-facing half of the batcher: run one batch of prompts and
+/// report what was generated plus the simulated timing. Implemented by
+/// the live-engine runner and by in-test fakes.
+pub trait BatchRunner {
+    fn run(&mut self, prompts: &[Vec<i32>], max_tokens: usize) -> Result<BatchOutcome, String>;
+}
+
+/// Live numerics + virtual-time replay. Owns one reused [`BatchStep`]
+/// and compose buffers across batches; the replay covers each sequence
+/// for exactly the decode steps it actually generated (so the simulated
+/// pass and the token accounting describe the same work).
+struct EngineRunner {
+    engine: InferenceEngine,
+    cost: CostModel,
+    calib_freq: Vec<Vec<f64>>,
+    fwcfg: FrameworkCfg,
+    dims: ModelDims,
+    framework: Framework,
+    step: BatchStep,
+    ids: Vec<usize>,
+    active: Vec<(usize, usize)>,
+}
+
+impl BatchRunner for EngineRunner {
+    fn run(&mut self, prompts: &[Vec<i32>], max_tokens: usize) -> Result<BatchOutcome, String> {
+        // live numerics (record a trace so the simulator can time it)
+        let out = self
+            .engine
+            .run_batch(prompts, max_tokens, true)
+            .map_err(|e| format!("engine error: {e:#}"))?;
+        let trace = out.trace.as_ref().expect("trace requested");
+        let nb = prompts.len();
+        let bundle = self.framework.bundle(&self.dims, &self.cost, &self.calib_freq, &self.fwcfg);
+        let mut sim = StepSimulator::new(
+            &self.cost,
+            bundle,
+            &self.calib_freq,
+            self.dims.layers,
+            self.dims.n_routed,
+            self.dims.n_shared,
+            42,
+        );
+        self.ids.clear();
+        self.ids.extend(0..nb);
+        trace.compose_prefill_into(&self.ids, &mut self.step);
+        sim.run_step(&self.step, prompts[0].len() / 2, Phase::Prefill);
+        // replay every decode step any sequence actually ran: sequences
+        // that stopped early drop out of the composed step (and the token
+        // count) together
+        let longest = out.generated.iter().map(|g| g.len()).max().unwrap_or(0);
+        for s in 0..longest {
+            self.active.clear();
+            self.active.extend((0..nb).map(|i| (i, s)));
+            trace.compose_multi_into(&self.active, &mut self.step);
+            sim.run_step(&self.step, prompts[0].len() + s, Phase::Decode);
+        }
+        let metrics = sim.finish();
+        Ok(BatchOutcome {
+            generated: out.generated,
+            sim_ms: metrics.total_ns as f64 / 1e6,
+            sim_tokens_per_s: metrics.tokens_per_s(),
+        })
+    }
+}
+
+struct QueueInner {
+    groups: BTreeMap<(usize, usize), Vec<Pending>>,
+    stop: bool,
 }
 
 /// The batching router. Handles enqueue from any thread; a single worker
 /// thread drains groups into the engine.
 pub struct Batcher {
-    queue: Arc<Mutex<BTreeMap<(usize, usize), Vec<Pending>>>>,
+    queue: Arc<(Mutex<QueueInner>, Condvar)>,
     pub metrics: Arc<Mutex<ServeMetrics>>,
     cfg: BatcherCfg,
-    stop: Arc<Mutex<bool>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Batcher {
-    /// Start the worker thread for `preset`. Blocks until the engine has
-    /// loaded (so the server only accepts once ready).
+    /// Start the live-engine worker for `preset`, timing the virtual pass
+    /// with the hardware preset named by `cfg.hw`. Blocks until the
+    /// engine has loaded (so the server only accepts once ready).
     pub fn start(preset: &str, cfg: BatcherCfg) -> Result<Arc<Batcher>> {
         let presets = Presets::load_default()?;
         let model = presets.model(preset)?;
-        let hw = presets.hw("local-pc")?;
+        let hw = presets.hw(&cfg.hw)?;
         let cost = CostModel::new(model, hw);
         let calib = prep::ensure_calib(preset)?;
         let dims = model.sim.clone();
+        let framework = cfg.framework;
+        let preset = preset.to_string();
+        Self::start_with(cfg, move || {
+            // the engine holds PJRT handles (Rc, not Send): created and
+            // owned entirely inside the worker thread
+            let engine = InferenceEngine::new(&preset).map_err(|e| format!("{e:#}"))?;
+            let fwcfg = FrameworkCfg::paper_default(&dims);
+            Ok(Box::new(EngineRunner {
+                engine,
+                cost,
+                calib_freq: calib.freq,
+                fwcfg,
+                dims,
+                framework,
+                step: BatchStep::default(),
+                ids: Vec::new(),
+                active: Vec::new(),
+            }) as Box<dyn BatchRunner>)
+        })
+    }
+
+    /// Start a worker around any [`BatchRunner`] factory (run inside the
+    /// worker thread, so the runner itself need not be `Send`). Blocks
+    /// until the factory reports ready or fails.
+    pub fn start_with<F>(cfg: BatcherCfg, factory: F) -> Result<Arc<Batcher>>
+    where
+        F: FnOnce() -> Result<Box<dyn BatchRunner>, String> + Send + 'static,
+    {
         let b = Arc::new(Batcher {
-            queue: Arc::new(Mutex::new(BTreeMap::new())),
+            queue: Arc::new((
+                Mutex::new(QueueInner { groups: BTreeMap::new(), stop: false }),
+                Condvar::new(),
+            )),
             metrics: Arc::new(Mutex::new(ServeMetrics::default())),
             cfg: cfg.clone(),
-            stop: Arc::new(Mutex::new(false)),
+            worker: Mutex::new(None),
         });
         let bw = b.clone();
-        let preset = preset.to_string();
-        // The engine holds PJRT handles (Rc, not Send): it is created and
-        // owned entirely inside the worker thread; readiness is signalled
-        // back so start() fails fast on load errors.
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        std::thread::spawn(move || {
-            let engine = match InferenceEngine::new(&preset) {
-                Ok(e) => {
+        let handle = std::thread::spawn(move || {
+            let mut runner = match factory() {
+                Ok(r) => {
                     let _ = ready_tx.send(Ok(()));
-                    e
+                    r
                 }
                 Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
-            let fwcfg = FrameworkCfg::paper_default(&dims);
-            loop {
-                if *bw.stop.lock().unwrap() {
-                    break;
-                }
-                let batch = bw.take_ready_batch();
-                match batch {
-                    None => std::thread::sleep(Duration::from_millis(2)),
-                    Some(group) => {
-                        bw.run_group(&engine, &cost, &calib.freq, &fwcfg, &dims, group);
-                    }
-                }
-            }
+            bw.worker_loop(runner.as_mut());
         });
+        *b.worker.lock().unwrap() = Some(handle);
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(b),
             Ok(Err(e)) => anyhow::bail!("engine load failed: {e}"),
@@ -131,106 +258,252 @@ impl Batcher {
         }
     }
 
+    /// Stop the worker and wait for it to exit. Every request still
+    /// queued gets an explicit "server shutting down" error (nothing is
+    /// silently dropped), and an in-flight batch finishes normally first.
+    /// Idempotent.
     pub fn shutdown(&self) {
-        *self.stop.lock().unwrap() = true;
+        let (lock, cv) = &*self.queue;
+        lock.lock().unwrap().stop = true;
+        cv.notify_all();
+        let handle = self.worker.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
     }
 
-    /// Enqueue a request; returns a receiver for the response.
+    /// Enqueue a request; returns a receiver for the response. After
+    /// shutdown the receiver yields an immediate error.
     pub fn submit(&self, req: GenRequest) -> Receiver<Result<GenResponse, String>> {
         let (tx, rx) = channel();
         let key = (req.prompt.len(), req.max_tokens);
-        self.queue
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_default()
-            .push(Pending { req, resp_tx: tx, enqueued: Instant::now() });
+        let (lock, cv) = &*self.queue;
+        let mut q = lock.lock().unwrap();
+        if q.stop {
+            let _ = tx.send(Err("server shutting down".to_string()));
+            return rx;
+        }
+        q.groups.entry(key).or_default().push(Pending {
+            req,
+            resp_tx: tx,
+            enqueued: Instant::now(),
+        });
+        cv.notify_one();
         rx
     }
 
-    fn take_ready_batch(&self) -> Option<Vec<Pending>> {
-        let mut q = self.queue.lock().unwrap();
-        let key = q
-            .iter()
-            .filter(|(_, v)| !v.is_empty())
-            .find(|(_, v)| {
-                v.len() >= self.cfg.max_batch
-                    || v.iter().any(|p| p.enqueued.elapsed() >= self.cfg.max_wait)
-            })
-            .map(|(k, _)| *k)?;
-        let v = q.get_mut(&key).unwrap();
-        let n = v.len().min(self.cfg.max_batch);
-        let group: Vec<Pending> = v.drain(..n).collect();
-        if v.is_empty() {
-            q.remove(&key);
+    fn worker_loop(&self, runner: &mut dyn BatchRunner) {
+        loop {
+            let group = {
+                let (lock, cv) = &*self.queue;
+                let mut q = lock.lock().unwrap();
+                loop {
+                    if q.stop {
+                        for (_, pendings) in std::mem::take(&mut q.groups) {
+                            for p in pendings {
+                                let _ =
+                                    p.resp_tx.send(Err("server shutting down".to_string()));
+                            }
+                        }
+                        return;
+                    }
+                    if let Some(g) =
+                        take_ready(&mut q.groups, self.cfg.max_batch, self.cfg.max_wait)
+                    {
+                        break g;
+                    }
+                    // sleep until woken by submit/shutdown, or until the
+                    // oldest pending request's dispatch deadline
+                    q = match earliest_deadline(&q.groups, self.cfg.max_wait) {
+                        None => cv.wait(q).unwrap(),
+                        Some(deadline) => {
+                            let wait = deadline.saturating_duration_since(Instant::now());
+                            cv.wait_timeout(q, wait).unwrap().0
+                        }
+                    };
+                }
+            };
+            self.run_group(runner, group);
         }
-        Some(group)
     }
 
-    fn run_group(
-        &self,
-        engine: &InferenceEngine,
-        cost: &CostModel,
-        calib_freq: &[Vec<f64>],
-        fwcfg: &FrameworkCfg,
-        dims: &crate::config::ModelDims,
-        group: Vec<Pending>,
-    ) {
+    fn run_group(&self, runner: &mut dyn BatchRunner, group: Vec<Pending>) {
         let t0 = Instant::now();
         let prompts: Vec<Vec<i32>> = group.iter().map(|p| p.req.prompt.clone()).collect();
-        let steps = group[0].req.max_tokens;
+        let max_tokens = group[0].req.max_tokens;
         let nb = group.len();
-        // live numerics (record a trace so the simulator can time it)
-        let result = engine.run_batch(&prompts, steps, true);
-        match result {
+        match runner.run(&prompts, max_tokens) {
             Err(e) => {
-                let mut m = self.metrics.lock().unwrap();
-                m.errors += group.len() as u64;
-                drop(m);
+                self.metrics.lock().unwrap().errors += nb as u64;
                 for p in group {
-                    let _ = p.resp_tx.send(Err(format!("engine error: {e:#}")));
+                    let _ = p.resp_tx.send(Err(e.clone()));
                 }
             }
             Ok(out) => {
-                // virtual-time pass over the recorded routing
-                let trace = out.trace.as_ref().expect("trace requested");
-                let bundle = self.cfg.framework.bundle(dims, cost, calib_freq, fwcfg);
-                let mut sim = StepSimulator::new(
-                    cost,
-                    bundle,
-                    calib_freq,
-                    dims.layers,
-                    dims.n_routed,
-                    dims.n_shared,
-                    42,
-                );
-                let ids: Vec<usize> = (0..nb).collect();
-                sim.run_step(&trace.compose_prefill(&ids), prompts[0].len() / 2, Phase::Prefill);
-                for s in 0..trace.min_steps() {
-                    sim.run_step(&trace.compose_decode(&ids, s), prompts[0].len() + s, Phase::Decode);
-                }
-                let metrics = sim.finish();
-                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-                let sim_ms = metrics.total_ns as f64 / 1e6;
-                let tps = metrics.tokens_per_s();
+                let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let queue_ms: Vec<f64> = group
+                    .iter()
+                    .map(|p| t0.duration_since(p.enqueued).as_secs_f64() * 1e3)
+                    .collect();
+                let tokens_out: u64 = out.generated.iter().map(|g| g.len() as u64).sum();
                 {
                     let mut m = self.metrics.lock().unwrap();
                     m.requests += nb as u64;
                     m.batches += 1;
-                    m.tokens_out += (steps * nb) as u64;
-                    m.wall_ms_sum += wall_ms;
-                    m.sim_ms_sum += sim_ms;
+                    m.tokens_out += tokens_out;
+                    m.queue_ms_sum += queue_ms.iter().sum::<f64>();
+                    m.exec_ms_sum += exec_ms * nb as f64;
+                    m.sim_ms_sum += out.sim_ms;
                 }
-                for (i, p) in group.into_iter().enumerate() {
+                for ((i, p), q_ms) in group.into_iter().enumerate().zip(queue_ms) {
                     let _ = p.resp_tx.send(Ok(GenResponse {
                         tokens: out.generated[i].clone(),
-                        wall_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
-                        sim_ms,
-                        sim_tokens_per_s: tps,
+                        queue_ms: q_ms,
+                        exec_ms,
+                        wall_ms: q_ms + exec_ms,
+                        sim_ms: out.sim_ms,
+                        sim_tokens_per_s: out.sim_tokens_per_s,
                         batch_size: nb,
                     }));
                 }
             }
         }
+    }
+}
+
+fn take_ready(
+    groups: &mut BTreeMap<(usize, usize), Vec<Pending>>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<Pending>> {
+    let key = groups
+        .iter()
+        .filter(|(_, v)| !v.is_empty())
+        .find(|(_, v)| {
+            v.len() >= max_batch || v.iter().any(|p| p.enqueued.elapsed() >= max_wait)
+        })
+        .map(|(k, _)| *k)?;
+    let v = groups.get_mut(&key).unwrap();
+    let n = v.len().min(max_batch);
+    let group: Vec<Pending> = v.drain(..n).collect();
+    if v.is_empty() {
+        groups.remove(&key);
+    }
+    Some(group)
+}
+
+fn earliest_deadline(
+    groups: &BTreeMap<(usize, usize), Vec<Pending>>,
+    max_wait: Duration,
+) -> Option<Instant> {
+    groups.values().flatten().map(|p| p.enqueued + max_wait).min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Engine-free runner: echoes `max_tokens` tokens per prompt, except
+    /// every odd-indexed prompt stops one token early (exercising
+    /// actual-vs-requested accounting).
+    struct EchoRunner;
+
+    impl BatchRunner for EchoRunner {
+        fn run(
+            &mut self,
+            prompts: &[Vec<i32>],
+            max_tokens: usize,
+        ) -> Result<BatchOutcome, String> {
+            Ok(BatchOutcome {
+                generated: prompts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| vec![7; max_tokens - (i % 2)])
+                    .collect(),
+                sim_ms: 1.0,
+                sim_tokens_per_s: 100.0,
+            })
+        }
+    }
+
+    struct FailRunner;
+
+    impl BatchRunner for FailRunner {
+        fn run(&mut self, _: &[Vec<i32>], _: usize) -> Result<BatchOutcome, String> {
+            Err("boom".to_string())
+        }
+    }
+
+    fn echo_batcher(max_batch: usize, max_wait: Duration) -> Arc<Batcher> {
+        let cfg = BatcherCfg { max_batch, max_wait, ..Default::default() };
+        Batcher::start_with(cfg, || Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>)).unwrap()
+    }
+
+    #[test]
+    fn tokens_out_counts_generated_not_requested() {
+        let b = echo_batcher(2, Duration::from_secs(10));
+        let rx0 = b.submit(GenRequest { prompt: vec![1, 2], max_tokens: 4 });
+        let rx1 = b.submit(GenRequest { prompt: vec![3, 4], max_tokens: 4 });
+        let r0 = rx0.recv().unwrap().unwrap();
+        let r1 = rx1.recv().unwrap().unwrap();
+        assert_eq!(r0.tokens.len(), 4);
+        assert_eq!(r1.tokens.len(), 3, "odd request stops one token early");
+        let m = b.metrics.lock().unwrap().clone();
+        assert_eq!(m.tokens_out, 7, "bill what was produced, not steps * batch");
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.batches, 1);
+        b.shutdown();
+    }
+
+    #[test]
+    fn latency_split_is_consistent_between_response_and_metrics() {
+        let b = echo_batcher(1, Duration::from_secs(10));
+        let rx = b.submit(GenRequest { prompt: vec![1], max_tokens: 2 });
+        let r = rx.recv().unwrap().unwrap();
+        assert!((r.wall_ms - (r.queue_ms + r.exec_ms)).abs() < 1e-9);
+        let m = b.metrics.lock().unwrap().clone();
+        assert!((m.queue_ms_sum - r.queue_ms).abs() < 1e-9);
+        assert!((m.exec_ms_sum - r.exec_ms).abs() < 1e-9);
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_and_drains_pending_with_errors() {
+        // nothing dispatches: batch threshold and wait are both out of reach
+        let b = echo_batcher(8, Duration::from_secs(3600));
+        let rx0 = b.submit(GenRequest { prompt: vec![1], max_tokens: 4 });
+        let rx1 = b.submit(GenRequest { prompt: vec![1, 2], max_tokens: 4 });
+        b.shutdown();
+        for rx in [rx0, rx1] {
+            let err = rx.recv().expect("drained, not dropped").unwrap_err();
+            assert!(err.contains("shutting down"), "got: {err}");
+        }
+        // post-shutdown submits fail immediately instead of hanging
+        let rx = b.submit(GenRequest { prompt: vec![1], max_tokens: 4 });
+        assert!(rx.recv().unwrap().is_err());
+        b.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn runner_errors_propagate_to_every_request_in_the_batch() {
+        let cfg = BatcherCfg {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10),
+            ..Default::default()
+        };
+        let b = Batcher::start_with(cfg, || Ok(Box::new(FailRunner) as Box<dyn BatchRunner>))
+            .unwrap();
+        let rx0 = b.submit(GenRequest { prompt: vec![1], max_tokens: 4 });
+        let rx1 = b.submit(GenRequest { prompt: vec![2], max_tokens: 4 });
+        assert!(rx0.recv().unwrap().is_err());
+        assert!(rx1.recv().unwrap().is_err());
+        assert_eq!(b.metrics.lock().unwrap().errors, 2);
+        b.shutdown();
+    }
+
+    #[test]
+    fn factory_failure_surfaces_from_start_with() {
+        let r = Batcher::start_with(BatcherCfg::default(), || Err("no engine".to_string()));
+        assert!(r.unwrap_err().to_string().contains("no engine"));
     }
 }

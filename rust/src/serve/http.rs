@@ -1,9 +1,24 @@
 //! Minimal HTTP/1.1 request/response handling over std::net.
+//!
+//! Parsing is defensive: the request head is read through a byte-capped
+//! reader (so an endless header stream cannot grow memory), header count
+//! and line length are bounded, and the body allocation is capped at
+//! [`MAX_BODY_BYTES`] *before* trusting Content-Length — a hostile
+//! `Content-Length: 99999999999` gets a 413, not a multi-GB `vec!`.
+//! Parse failures carry their HTTP status so the server can answer with
+//! the right code instead of dropping the connection.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
+
+/// Largest request body accepted (larger gets 413 Payload Too Large).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Most header lines accepted (more gets 431).
+pub const MAX_HEADER_LINES: usize = 64;
+/// Longest single header (or request) line accepted (longer gets 431).
+pub const MAX_HEADER_LINE_BYTES: usize = 8 * 1024;
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -12,34 +27,86 @@ pub struct Request {
     pub body: Vec<u8>,
 }
 
+/// A request-reading failure with the HTTP status the client should see.
+#[derive(Debug, Clone)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.status, self.msg)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+fn err(status: u16, msg: impl Into<String>) -> HttpError {
+    HttpError { status, msg: msg.into() }
+}
+
 /// Read one HTTP request from a stream (supports Content-Length bodies).
-pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
-    let mut reader = BufReader::new(stream.try_clone()?);
+/// Bounded: header bytes/lines and body size are all capped; see the
+/// module doc.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, HttpError> {
+    let reader = BufReader::new(
+        stream.try_clone().map_err(|e| err(500, format!("stream clone: {e}")))?,
+    );
+    // cap the whole head: even a stream that never sends a newline can
+    // only make read_line buffer this many bytes
+    let mut head = reader.take(((MAX_HEADER_LINES + 1) * MAX_HEADER_LINE_BYTES) as u64);
     let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
+    head.read_line(&mut line).map_err(|e| err(400, format!("reading request line: {e}")))?;
+    if line.len() > MAX_HEADER_LINE_BYTES {
+        return Err(err(431, "request line too long"));
+    }
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
     if method.is_empty() || path.is_empty() {
-        bail!("malformed request line: {line:?}");
+        return Err(err(400, format!("malformed request line: {line:?}")));
     }
     let mut content_length = 0usize;
+    let mut n_headers = 0usize;
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h)?;
+        let n = head.read_line(&mut h).map_err(|e| err(400, format!("reading header: {e}")))?;
+        if n == 0 {
+            // EOF (or the head cap) before the blank line ending headers
+            return Err(err(431, "request head too large or truncated"));
+        }
+        if h.len() > MAX_HEADER_LINE_BYTES {
+            return Err(err(431, "header line too long"));
+        }
         let h = h.trim();
         if h.is_empty() {
             break;
         }
+        n_headers += 1;
+        if n_headers > MAX_HEADER_LINES {
+            return Err(err(431, "too many headers"));
+        }
         if let Some((k, v)) = h.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| err(400, format!("bad content-length: {:?}", v.trim())))?;
             }
         }
     }
+    if content_length > MAX_BODY_BYTES {
+        return Err(err(
+            413,
+            format!("body of {content_length} bytes exceeds cap of {MAX_BODY_BYTES}"),
+        ));
+    }
     let mut body = vec![0u8; content_length];
     if content_length > 0 {
-        reader.read_exact(&mut body).context("reading body")?;
+        head.into_inner()
+            .read_exact(&mut body)
+            .map_err(|e| err(400, format!("reading body: {e}")))?;
     }
     Ok(Request { method, path, body })
 }
@@ -50,7 +117,10 @@ pub fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, b
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     };
     let head = format!(
@@ -76,4 +146,75 @@ pub fn http_call(addr: &str, method: &str, path: &str, body: Option<&str>) -> Re
     BufReader::new(stream).read_to_string(&mut buf)?;
     let idx = buf.find("\r\n\r\n").context("no header/body separator")?;
     Ok(buf[idx + 4..].to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Run `read_request` against raw bytes sent over a real loopback
+    /// socket pair.
+    fn parse_raw(raw: &[u8]) -> Result<Request, HttpError> {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let r = read_request(&mut stream);
+        writer.join().unwrap();
+        r
+    }
+
+    #[test]
+    fn well_formed_request_parses() {
+        let r = parse_raw(b"POST /generate HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd").unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/generate");
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn hostile_content_length_is_rejected_not_allocated() {
+        let e = parse_raw(b"POST /generate HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n")
+            .unwrap_err();
+        assert_eq!(e.status, 413, "{e}");
+    }
+
+    #[test]
+    fn unparseable_content_length_is_a_400() {
+        let e = parse_raw(b"POST / HTTP/1.1\r\nContent-Length: lots\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400, "{e}");
+    }
+
+    #[test]
+    fn header_count_is_bounded() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..(MAX_HEADER_LINES + 1) {
+            raw.extend_from_slice(format!("X-H{i}: v\r\n").as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        let e = parse_raw(&raw).unwrap_err();
+        assert_eq!(e.status, 431, "{e}");
+    }
+
+    #[test]
+    fn header_line_length_is_bounded() {
+        let mut raw = b"GET / HTTP/1.1\r\nX-Big: ".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(MAX_HEADER_LINE_BYTES + 16));
+        raw.extend_from_slice(b"\r\n\r\n");
+        let e = parse_raw(&raw).unwrap_err();
+        assert_eq!(e.status, 431, "{e}");
+    }
+
+    #[test]
+    fn truncated_head_is_an_error_not_a_hang() {
+        // no terminating blank line and the peer closes: parser must
+        // return, not loop
+        let e = parse_raw(b"GET / HTTP/1.1\r\nX-H: v\r\n").unwrap_err();
+        assert_eq!(e.status, 431, "{e}");
+    }
 }

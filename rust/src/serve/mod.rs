@@ -1,18 +1,34 @@
-//! Serving front-end: request router + dynamic batcher + HTTP server.
+//! Serving layer: virtual-time serving *simulation* plus the wall-clock
+//! HTTP front-end.
 //!
-//! The paper's system is an inference *server* for local PCs; this module
-//! is the deployment wrapper around the engine: requests arrive over HTTP,
-//! are bucketed by prompt length and dynamically batched (vLLM-router
-//! style), executed by a dedicated engine worker thread (real PJRT
-//! numerics + DALI-scheduled virtual timing), and answered with generated
-//! tokens plus both wall-clock and simulated-platform latencies.
+//! Two halves, one request model:
 //!
-//! The offline build has no tokio; the server is a small, dependency-free
-//! threaded HTTP/1.1 implementation (`http.rs`) — connection-per-thread is
-//! entirely adequate for a local-PC serving frontend.
+//! - **Simulation** (`arrival.rs`, `sim.rs`) — the paper-facing path.
+//!   Seeded arrival processes (Poisson / bursty / diurnal) feed a
+//!   continuous batcher that admits and retires requests per decode step
+//!   in virtual time; every stream contends for one shared
+//!   [`StepSimulator`](crate::coordinator::simrun::StepSimulator)
+//!   pipeline (GPU cache, tiered store, NVMe/PCIe/transcode lanes), so
+//!   cross-request expert locality and thrash are modeled. Reports are
+//!   per-request TTFT/TPOT/queue percentiles
+//!   ([`ServeReport`](crate::metrics::ServeReport)), digest-locked and
+//!   bit-identical for the same seed.
+//!
+//! - **Front-end** (`batcher.rs`, `http.rs`, `server.rs`) — the
+//!   deployment wrapper around the engine: requests arrive over HTTP, are
+//!   bucketed by shape and dynamically batched, executed by a dedicated
+//!   engine worker thread (real PJRT numerics + DALI-scheduled virtual
+//!   timing), and answered with generated tokens plus explicit queue and
+//!   execution latencies. No tokio: a small, dependency-free threaded
+//!   HTTP/1.1 implementation is entirely adequate for a local-PC serving
+//!   frontend.
 
+pub mod arrival;
 pub mod batcher;
 pub mod http;
 pub mod server;
+pub mod sim;
 
+pub use arrival::{ArrivalKind, ArrivalSpec};
 pub use batcher::{Batcher, BatcherCfg, GenRequest, GenResponse};
+pub use sim::{simulate_serve, ServeSim, ServeSimCfg};

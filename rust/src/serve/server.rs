@@ -4,8 +4,8 @@
 //! * `GET /health` — liveness + preset info;
 //! * `GET /metrics` — aggregate serving counters (JSON);
 //! * `POST /generate` — `{"prompt": [int token ids], "max_tokens": n}` →
-//!   `{"tokens": [...], "wall_ms": ..., "sim_ms": ..., "sim_tokens_per_s":
-//!   ..., "batch_size": ...}`.
+//!   `{"tokens": [...], "queue_ms": ..., "exec_ms": ..., "wall_ms":
+//!   queue+exec, "sim_ms": ..., "sim_tokens_per_s": ..., "batch_size": ...}`.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
@@ -18,7 +18,16 @@ use crate::coordinator::frameworks::Framework;
 use crate::util::json::Value;
 
 fn handle(batcher: &Arc<Batcher>, preset: &str, stream: &mut TcpStream) -> Result<()> {
-    let req = read_request(stream)?;
+    let req = match read_request(stream) {
+        Ok(r) => r,
+        Err(e) => {
+            // bounded-parse failures (413 oversized body, 431 header
+            // limits, 400 malformed) answer with their status instead of
+            // dropping the connection
+            return write_response(stream, e.status, "application/json",
+                &Value::obj(vec![("error", Value::str(e.msg))]).to_json());
+        }
+    };
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => {
             let body = Value::obj(vec![
@@ -34,7 +43,9 @@ fn handle(batcher: &Arc<Batcher>, preset: &str, stream: &mut TcpStream) -> Resul
                 ("batches", Value::num(m.batches as f64)),
                 ("tokens_out", Value::num(m.tokens_out as f64)),
                 ("errors", Value::num(m.errors as f64)),
-                ("wall_ms_sum", Value::num(m.wall_ms_sum)),
+                ("queue_ms_sum", Value::num(m.queue_ms_sum)),
+                ("exec_ms_sum", Value::num(m.exec_ms_sum)),
+                ("wall_ms_sum", Value::num(m.queue_ms_sum + m.exec_ms_sum)),
                 ("sim_ms_sum", Value::num(m.sim_ms_sum)),
                 (
                     "avg_batch",
@@ -72,6 +83,8 @@ fn handle(batcher: &Arc<Batcher>, preset: &str, stream: &mut TcpStream) -> Resul
                             "tokens",
                             Value::arr(resp.tokens.iter().map(|&t| Value::num(t as f64)).collect()),
                         ),
+                        ("queue_ms", Value::num(resp.queue_ms)),
+                        ("exec_ms", Value::num(resp.exec_ms)),
                         ("wall_ms", Value::num(resp.wall_ms)),
                         ("sim_ms", Value::num(resp.sim_ms)),
                         ("sim_tokens_per_s", Value::num(resp.sim_tokens_per_s)),

@@ -1,0 +1,394 @@
+//! Multi-tenant continuous-batching serving simulation in virtual time.
+//!
+//! Seeded arrival processes ([`ArrivalSpec`]) generate many concurrent
+//! request streams; a continuous batcher admits queued requests into free
+//! batch slots and retires finished ones *per decode step*; every stream
+//! contends for **one shared** [`StepSimulator`] pipeline — one GPU
+//! cache, one tiered store, one set of NVMe/PCIe/transcode lanes — so
+//! cross-request expert locality (or thrash) is actually modeled instead
+//! of assumed away. This is the subsystem the wall-clock [`Batcher`]
+//! (`serve/batcher.rs`) cannot be: deterministic, artifact-free, and
+//! aware of the memory hierarchy.
+//!
+//! Request lifecycle joins the trace stream (`request_arrive` /
+//! `request_admit` / `request_first_token` / `request_finish` events), so
+//! one FNV digest locks scheduling *and* SLO accounting: same-seed serve
+//! cells are bit-identical, which `rust/tests/serve_sim.rs` and the CI
+//! serve-determinism check enforce.
+//!
+//! The tick loop is allocation-free in steady state (audited alongside
+//! `run_step`): requests, stats, and compose buffers are preallocated at
+//! construction, and the one shared [`BatchStep`] is reused for prefill
+//! and decode composition alike.
+//!
+//! [`Batcher`]: super::batcher::Batcher
+
+use anyhow::{bail, Result};
+
+use crate::config::Presets;
+use crate::coordinator::frameworks::{Framework, FrameworkCfg};
+use crate::coordinator::simrun::{Phase, StepSimulator};
+use crate::fault::FaultPlan;
+use crate::hw::{CostModel, Ns};
+use crate::metrics::{RequestStat, ServeReport};
+use crate::store::TieredStore;
+use crate::trace::{DigestSink, Event, TraceSink};
+use crate::workload::trace::{synthetic_locality_trace, BatchStep};
+use crate::workload::Trace;
+
+use super::arrival::ArrivalSpec;
+
+/// Configuration of one serving-simulation run.
+#[derive(Debug, Clone)]
+pub struct ServeSimCfg {
+    /// Arrival process generating the request script.
+    pub arrival: ArrivalSpec,
+    /// Total requests to serve (the run ends when all have finished).
+    pub n_requests: usize,
+    /// Continuous-batching slot budget: max requests decoding at once.
+    pub max_batch: usize,
+    /// Decode tokens requested per request (clamped to the backing
+    /// stream's recorded length).
+    pub max_tokens: usize,
+    /// Seed for the arrival script and the simulator's own RNG stream.
+    pub seed: u64,
+}
+
+impl Default for ServeSimCfg {
+    fn default() -> Self {
+        ServeSimCfg {
+            arrival: ArrivalSpec::default(),
+            n_requests: 32,
+            max_batch: 8,
+            max_tokens: 16,
+            seed: 0x5e11,
+        }
+    }
+}
+
+/// One request currently holding a batch slot.
+#[derive(Debug, Clone, Copy)]
+struct Active {
+    req: usize,
+    /// Decode tokens generated so far (== this stream's next step index).
+    generated: usize,
+    /// Tokens this request will generate before leaving the batch.
+    decode_len: usize,
+    prompt_len: usize,
+}
+
+/// The continuous-batching serving simulator: an arrival queue + a
+/// running set, ticked in virtual time over one shared [`StepSimulator`].
+pub struct ServeSim<'a, S: TraceSink> {
+    sim: StepSimulator<'a, S>,
+    trace: &'a Trace,
+    cfg: ServeSimCfg,
+    /// Sorted arrival instants, one per request (request id = index).
+    arrivals: Vec<Ns>,
+    /// Next not-yet-admitted request id.
+    next_arrival: usize,
+    running: Vec<Active>,
+    /// Request ids admitted this tick (prefill batch composition).
+    admit_buf: Vec<usize>,
+    /// `(seq_id, stream step)` pairs for multi-stream decode composition.
+    active_buf: Vec<(usize, usize)>,
+    /// The one reused compose buffer (prefill and decode alike).
+    step: BatchStep,
+    stats: Vec<RequestStat>,
+    finished: usize,
+}
+
+impl<'a, S: TraceSink> ServeSim<'a, S> {
+    /// Build a serving run over an already-configured simulator (sink,
+    /// store, and faults installed by the caller). Preallocates every
+    /// tick-loop buffer.
+    pub fn new(
+        sim: StepSimulator<'a, S>,
+        trace: &'a Trace,
+        cfg: ServeSimCfg,
+    ) -> Result<Self> {
+        if cfg.n_requests == 0 || cfg.max_batch == 0 || cfg.max_tokens == 0 {
+            bail!(
+                "serve sim needs n_requests/max_batch/max_tokens >= 1 \
+                 (got {}/{}/{})",
+                cfg.n_requests,
+                cfg.max_batch,
+                cfg.max_tokens
+            );
+        }
+        if trace.seqs.is_empty() || trace.min_steps() == 0 {
+            bail!("serve sim needs a non-empty trace pool with decode steps");
+        }
+        let mut arrivals = Vec::new();
+        cfg.arrival.generate_into(cfg.n_requests, cfg.seed, &mut arrivals);
+        let stats = vec![RequestStat::default(); cfg.n_requests];
+        Ok(ServeSim {
+            sim,
+            trace,
+            arrivals,
+            next_arrival: 0,
+            running: Vec::with_capacity(cfg.max_batch),
+            admit_buf: Vec::with_capacity(cfg.max_batch),
+            active_buf: Vec::with_capacity(cfg.max_batch),
+            step: BatchStep::default(),
+            stats,
+            finished: 0,
+            cfg,
+        })
+    }
+
+    /// Requests that have run to completion so far.
+    pub fn finished(&self) -> usize {
+        self.finished
+    }
+
+    /// Requests admitted into the batch so far (arrivals consumed).
+    /// Once this reaches `n_requests`, remaining ticks are pure decode —
+    /// the window the allocation audit measures.
+    pub fn admitted(&self) -> usize {
+        self.next_arrival
+    }
+
+    /// One continuous-batching tick: admit due arrivals into free slots
+    /// (prefilling the newcomers as one batch step), then advance every
+    /// running stream by one decode step on the shared pipeline, retiring
+    /// first-token and finish edges at the post-step clock. Returns
+    /// `false` once every request has finished.
+    pub fn tick(&mut self) -> bool {
+        if self.finished == self.cfg.n_requests {
+            return false;
+        }
+        // an empty batch idles the pipeline forward to the next arrival —
+        // run_step never moves the clock for an empty step
+        if self.running.is_empty() {
+            self.sim.advance_to(self.arrivals[self.next_arrival]);
+        }
+        // admission: due arrivals fill free batch slots in arrival order
+        self.admit_buf.clear();
+        while self.running.len() < self.cfg.max_batch
+            && self.next_arrival < self.cfg.n_requests
+            && self.arrivals[self.next_arrival] <= self.sim.now()
+        {
+            let req = self.next_arrival;
+            self.next_arrival += 1;
+            let arrival = self.arrivals[req];
+            let now = self.sim.now();
+            let prompt_len = self.trace.prompt_len(req);
+            let decode_len = self.cfg.max_tokens.min(self.trace.decode_len(req)).max(1);
+            self.stats[req].arrival_ns = arrival;
+            self.stats[req].admit_ns = now;
+            self.sim.note_event(Event::RequestArrive {
+                req: req as u32,
+                at: arrival,
+                prompt_len: prompt_len as u32,
+                max_tokens: decode_len as u32,
+            });
+            self.sim.note_event(Event::RequestAdmit {
+                req: req as u32,
+                at: now,
+                queue_ns: now.saturating_sub(arrival),
+            });
+            self.running.push(Active { req, generated: 0, decode_len, prompt_len });
+            self.admit_buf.push(req);
+        }
+        // prefill the newcomers as one batch step on the shared pipeline
+        // (continuous batching without chunked prefill: the prefill step
+        // briefly stalls ongoing decodes, which TPOT then reflects)
+        if !self.admit_buf.is_empty() {
+            self.trace.compose_prefill_into(&self.admit_buf, &mut self.step);
+            let kv = self
+                .admit_buf
+                .iter()
+                .map(|&r| self.trace.prompt_len(r))
+                .sum::<usize>()
+                / (2 * self.admit_buf.len());
+            self.sim.run_step(&self.step, kv.max(1), Phase::Prefill);
+        }
+        // one decode step over every running stream, each at its own
+        // per-request offset
+        self.active_buf.clear();
+        let mut kv_sum = 0usize;
+        for a in &self.running {
+            self.active_buf.push((a.req, a.generated));
+            kv_sum += a.prompt_len + a.generated;
+        }
+        self.trace.compose_multi_into(&self.active_buf, &mut self.step);
+        let kv = (kv_sum / self.running.len().max(1)).max(1);
+        self.sim.run_step(&self.step, kv, Phase::Decode);
+        let now = self.sim.now();
+        // retire first-token and finish edges at the post-step clock
+        let mut i = 0;
+        while i < self.running.len() {
+            self.running[i].generated += 1;
+            let Active { req, generated, decode_len, .. } = self.running[i];
+            if generated == 1 {
+                self.stats[req].first_token_ns = now;
+                let ttft = now.saturating_sub(self.stats[req].arrival_ns);
+                self.sim.note_event(Event::RequestFirstToken {
+                    req: req as u32,
+                    at: now,
+                    ttft_ns: ttft,
+                });
+            }
+            if generated >= decode_len {
+                self.stats[req].finish_ns = now;
+                self.stats[req].tokens = generated as u64;
+                self.sim.note_event(Event::RequestFinish {
+                    req: req as u32,
+                    at: now,
+                    tokens: generated as u32,
+                });
+                self.finished += 1;
+                self.running.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        self.finished < self.cfg.n_requests
+    }
+
+    /// Drive the run to completion.
+    pub fn run(&mut self) {
+        while self.tick() {}
+    }
+
+    /// Finish: per-request SLO aggregation over the underlying replay's
+    /// metrics (call after [`Self::run`]; unfinished requests would
+    /// report zero timestamps).
+    pub fn finish(self) -> ServeReport {
+        ServeReport::from_stats(&self.stats, self.sim.finish())
+    }
+
+    /// [`Self::finish`] that also hands back the sink.
+    pub fn finish_with_sink(self) -> (ServeReport, S) {
+        let (run, sink) = self.sim.finish_with_sink();
+        (ServeReport::from_stats(&self.stats, run), sink)
+    }
+}
+
+/// One self-contained serving cell: build the scenario's cost model,
+/// synthetic stream pool, and policy bundle, attach the shared tiered
+/// store (when the scenario is memory-limited) and an optional fault
+/// plan, serve every request, and report — with the whole-run digest
+/// covering scheduling and request lifecycle alike. This is the unit the
+/// `expt serve` sweep, `dali serve --sim`, and the serve bench tier all
+/// share.
+pub fn simulate_serve(
+    presets: &Presets,
+    scenario: &str,
+    fw: Framework,
+    cfg: &ServeSimCfg,
+    faults: Option<FaultPlan>,
+) -> Result<ServeReport> {
+    let (model, hw) = presets.scenario(scenario)?;
+    let dims = &model.sim;
+    let cost = CostModel::for_scenario(presets, scenario)?;
+    // stream pool: 16 synthetic locality streams, long enough that no
+    // request is clamped below its requested max_tokens
+    let trace = synthetic_locality_trace(
+        dims.layers,
+        dims.n_routed,
+        dims.top_k,
+        16,
+        cfg.max_tokens.max(16),
+        cfg.seed ^ 0x7ace,
+    );
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let fwcfg = FrameworkCfg::paper_default(dims);
+    let bundle = fw.bundle(dims, &cost, &freq, &fwcfg);
+    let mut sim =
+        StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7)
+            .with_sink(DigestSink::new());
+    if let Some(plan) = faults {
+        sim = sim.with_faults(plan);
+    }
+    let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+    if !store.is_unlimited() {
+        sim = sim.with_store(store);
+    }
+    let mut serve = ServeSim::new(sim, &trace, cfg.clone())?;
+    serve.run();
+    Ok(serve.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_sim(cfg: &ServeSimCfg) -> ServeReport {
+        let presets = Presets::load_default().unwrap();
+        simulate_serve(&presets, "mixtral-sim-ram16", Framework::Dali, cfg, None).unwrap()
+    }
+
+    #[test]
+    fn every_request_finishes_with_sane_lifecycle() {
+        let cfg = ServeSimCfg { n_requests: 12, max_batch: 4, max_tokens: 8, ..Default::default() };
+        let r = mk_sim(&cfg);
+        assert_eq!(r.requests, 12);
+        assert_eq!(r.tokens_out, 12 * 8, "every request generates its full budget");
+        assert!(r.makespan_ns > 0);
+        assert!(r.ttft_p50_ns > 0 && r.ttft_p99_ns >= r.ttft_p50_ns);
+        assert!(r.tpot_p50_ns > 0 && r.tpot_p99_ns >= r.tpot_p50_ns);
+        assert!(r.run.trace_digest.is_some(), "serve cells are digest-locked");
+        assert_eq!(r.run.tokens_out, r.tokens_out, "sim and SLO views agree on tokens");
+    }
+
+    #[test]
+    fn same_seed_cells_are_bit_identical() {
+        let cfg = ServeSimCfg { n_requests: 10, max_batch: 4, ..Default::default() };
+        let a = mk_sim(&cfg);
+        let b = mk_sim(&cfg);
+        assert_eq!(a, b, "same-seed serve cells must be bit-identical");
+        let c = mk_sim(&ServeSimCfg { seed: cfg.seed + 1, ..cfg });
+        assert_ne!(a.run.trace_digest, c.run.trace_digest, "seed must matter");
+    }
+
+    #[test]
+    fn higher_load_does_not_improve_tail_ttft() {
+        let base = ServeSimCfg { n_requests: 24, max_batch: 4, max_tokens: 8, ..Default::default() };
+        let light = mk_sim(&ServeSimCfg { arrival: base.arrival.with_rate(1.0), ..base.clone() });
+        let heavy = mk_sim(&ServeSimCfg { arrival: base.arrival.with_rate(512.0), ..base });
+        assert!(
+            heavy.ttft_p99_ns >= light.ttft_p99_ns,
+            "overload must not beat light load on tail TTFT: {} < {}",
+            heavy.ttft_p99_ns,
+            light.ttft_p99_ns
+        );
+        assert!(heavy.queue_p99_ns >= light.queue_p99_ns);
+    }
+
+    #[test]
+    fn batch_slots_are_respected_and_queue_drains_in_order() {
+        // a single-slot server serializes everything: makespan is at
+        // least the sum of any one request's span, and queueing shows up
+        let presets = Presets::load_default().unwrap();
+        let cfg = ServeSimCfg {
+            arrival: ArrivalSpec::default().with_rate(1000.0),
+            n_requests: 6,
+            max_batch: 1,
+            max_tokens: 4,
+            ..Default::default()
+        };
+        let r =
+            simulate_serve(&presets, "mixtral-sim", Framework::Dali, &cfg, None).unwrap();
+        assert_eq!(r.requests, 6);
+        assert!(r.queue_p99_ns > 0, "slot contention must produce queueing");
+    }
+
+    #[test]
+    fn serve_sim_rejects_degenerate_configs() {
+        let presets = Presets::load_default().unwrap();
+        let (model, _) = presets.scenario("mixtral-sim").unwrap();
+        let dims = &model.sim;
+        let cost = CostModel::for_scenario(&presets, "mixtral-sim").unwrap();
+        let trace =
+            synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 4, 16, 1);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let fwcfg = FrameworkCfg::paper_default(dims);
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &fwcfg);
+        let sim =
+            StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7);
+        let bad = ServeSimCfg { max_batch: 0, ..Default::default() };
+        assert!(ServeSim::new(sim, &trace, bad).is_err());
+    }
+}

@@ -144,6 +144,18 @@ pub enum Event {
     /// currently confiscated (0 = restored), `spilled` experts were demoted
     /// under the workload-aware score to satisfy the shrink.
     RamPressure { at: Ns, reserved: u32, spilled: u32 },
+    /// A serving-simulation request entered the arrival queue at `at`
+    /// (virtual time; serving runs only).
+    RequestArrive { req: u32, at: Ns, prompt_len: u32, max_tokens: u32 },
+    /// The continuous batcher admitted a queued request into the running
+    /// batch; `queue_ns` is its time spent waiting in the arrival queue.
+    RequestAdmit { req: u32, at: Ns, queue_ns: Ns },
+    /// A request produced its first decoded token; `ttft_ns` is the
+    /// arrival→first-token latency (the TTFT sample this request reports).
+    RequestFirstToken { req: u32, at: Ns, ttft_ns: Ns },
+    /// A request finished and left the batch after generating `tokens`
+    /// decode tokens.
+    RequestFinish { req: u32, at: Ns, tokens: u32 },
 }
 
 impl Event {
@@ -167,6 +179,10 @@ impl Event {
             Event::FaultRetry { .. } => "fault_retry",
             Event::FaultAbort { .. } => "fault_abort",
             Event::RamPressure { .. } => "ram_pressure",
+            Event::RequestArrive { .. } => "request_arrive",
+            Event::RequestAdmit { .. } => "request_admit",
+            Event::RequestFirstToken { .. } => "request_first_token",
+            Event::RequestFinish { .. } => "request_finish",
         }
     }
 
@@ -278,6 +294,31 @@ impl Event {
                 f(reserved as u64);
                 f(spilled as u64);
             }
+            Event::RequestArrive { req, at, prompt_len, max_tokens } => {
+                f(18);
+                f(req as u64);
+                f(at);
+                f(prompt_len as u64);
+                f(max_tokens as u64);
+            }
+            Event::RequestAdmit { req, at, queue_ns } => {
+                f(19);
+                f(req as u64);
+                f(at);
+                f(queue_ns);
+            }
+            Event::RequestFirstToken { req, at, ttft_ns } => {
+                f(20);
+                f(req as u64);
+                f(at);
+                f(ttft_ns);
+            }
+            Event::RequestFinish { req, at, tokens } => {
+                f(21);
+                f(req as u64);
+                f(at);
+                f(tokens as u64);
+            }
         }
     }
 
@@ -368,6 +409,31 @@ impl Event {
                 ("reserved", Value::num(reserved as f64)),
                 ("spilled", Value::num(spilled as f64)),
             ]),
+            Event::RequestArrive { req, at, prompt_len, max_tokens } => Value::obj(vec![
+                ("ev", ev),
+                ("req", Value::num(req as f64)),
+                ("at", Value::num(at as f64)),
+                ("prompt_len", Value::num(prompt_len as f64)),
+                ("max_tokens", Value::num(max_tokens as f64)),
+            ]),
+            Event::RequestAdmit { req, at, queue_ns } => Value::obj(vec![
+                ("ev", ev),
+                ("req", Value::num(req as f64)),
+                ("at", Value::num(at as f64)),
+                ("queue_ns", Value::num(queue_ns as f64)),
+            ]),
+            Event::RequestFirstToken { req, at, ttft_ns } => Value::obj(vec![
+                ("ev", ev),
+                ("req", Value::num(req as f64)),
+                ("at", Value::num(at as f64)),
+                ("ttft_ns", Value::num(ttft_ns as f64)),
+            ]),
+            Event::RequestFinish { req, at, tokens } => Value::obj(vec![
+                ("ev", ev),
+                ("req", Value::num(req as f64)),
+                ("at", Value::num(at as f64)),
+                ("tokens", Value::num(tokens as f64)),
+            ]),
         }
     }
 
@@ -456,6 +522,27 @@ impl Event {
                 reserved: le("reserved")?,
                 spilled: le("spilled")?,
             },
+            "request_arrive" => Event::RequestArrive {
+                req: le("req")?,
+                at: ns("at")?,
+                prompt_len: le("prompt_len")?,
+                max_tokens: le("max_tokens")?,
+            },
+            "request_admit" => Event::RequestAdmit {
+                req: le("req")?,
+                at: ns("at")?,
+                queue_ns: ns("queue_ns")?,
+            },
+            "request_first_token" => Event::RequestFirstToken {
+                req: le("req")?,
+                at: ns("at")?,
+                ttft_ns: ns("ttft_ns")?,
+            },
+            "request_finish" => Event::RequestFinish {
+                req: le("req")?,
+                at: ns("at")?,
+                tokens: le("tokens")?,
+            },
             other => bail!("unknown trace event '{other}'"),
         })
     }
@@ -487,6 +574,10 @@ impl Event {
             Event::FaultRetry { lane: Lane::NvmeRead, layer: 2, expert: 6, attempt: 1, at: 500 },
             Event::FaultAbort { lane: Lane::NvmeRead, layer: 2, expert: 6, attempts: 4, at: 900 },
             Event::RamPressure { at: 1_500, reserved: 12, spilled: 5 },
+            Event::RequestArrive { req: 0, at: 2_000, prompt_len: 8, max_tokens: 16 },
+            Event::RequestAdmit { req: 0, at: 2_500, queue_ns: 500 },
+            Event::RequestFirstToken { req: 0, at: 3_000, ttft_ns: 1_000 },
+            Event::RequestFinish { req: 0, at: 9_000, tokens: 16 },
         ]
     }
 }

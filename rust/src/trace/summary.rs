@@ -63,6 +63,16 @@ pub struct TraceSummary {
     pub ram_pressure_events: u64,
     /// Experts demoted to satisfy RAM-pressure shrinks.
     pub ram_pressure_spills: u64,
+    /// Serving-simulation request arrivals observed.
+    pub request_arrivals: u64,
+    /// Requests admitted into the running batch.
+    pub request_admits: u64,
+    /// Requests that produced at least one decode token.
+    pub request_first_tokens: u64,
+    /// Requests that finished and left the batch.
+    pub request_finishes: u64,
+    /// Tokens generated across finished requests.
+    pub request_tokens: u64,
     /// Wasted-prefetch count per (layer, expert), since the last reset.
     pub wasted_by_expert: BTreeMap<(u32, u32), u64>,
 }
@@ -131,6 +141,13 @@ impl TraceSummary {
             Event::RamPressure { spilled, .. } => {
                 self.ram_pressure_events += 1;
                 self.ram_pressure_spills += spilled as u64;
+            }
+            Event::RequestArrive { .. } => self.request_arrivals += 1,
+            Event::RequestAdmit { .. } => self.request_admits += 1,
+            Event::RequestFirstToken { .. } => self.request_first_tokens += 1,
+            Event::RequestFinish { tokens, .. } => {
+                self.request_finishes += 1;
+                self.request_tokens += tokens as u64;
             }
         }
     }
@@ -218,6 +235,16 @@ impl TraceSummary {
                 self.fault_aborts,
                 self.ram_pressure_events,
                 self.ram_pressure_spills
+            ));
+        }
+        if self.request_arrivals > 0 {
+            out.push_str(&format!(
+                "serving: arrivals {}  admits {}  first-tokens {}  finished {} ({} tokens)\n",
+                self.request_arrivals,
+                self.request_admits,
+                self.request_first_tokens,
+                self.request_finishes,
+                self.request_tokens
             ));
         }
         let top = self.top_wasted(top_n);

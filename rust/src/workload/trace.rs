@@ -228,9 +228,21 @@ impl Trace {
         Ok(Trace { preset, task, n_routed, top_k, layers, seqs })
     }
 
-    /// Max decode steps available across the pool.
+    /// Decode steps guaranteed for *every* sequence: the minimum step
+    /// count across the pool (0 for an empty pool). Replays that bill a
+    /// fixed step count clamp to this so no sequence runs dry mid-replay.
     pub fn min_steps(&self) -> usize {
         self.seqs.iter().map(|s| s.steps.len()).min().unwrap_or(0)
+    }
+
+    /// Decode steps recorded for the stream backing `sid` (pool-wrapped).
+    pub fn decode_len(&self, sid: usize) -> usize {
+        self.seqs[sid % self.seqs.len()].steps.len()
+    }
+
+    /// Prompt length of the stream backing `sid` (pool-wrapped).
+    pub fn prompt_len(&self, sid: usize) -> usize {
+        self.seqs[sid % self.seqs.len()].prompt_len
     }
 }
 
@@ -296,6 +308,38 @@ impl Trace {
     pub fn compose_decode_into(&self, seq_ids: &[usize], step: usize, out: &mut BatchStep) {
         out.reset(self.layers, self.n_routed);
         for &sid in seq_ids {
+            let seq = &self.seqs[sid % self.seqs.len()];
+            if step >= seq.steps.len() {
+                continue;
+            }
+            out.tokens += 1;
+            for (l, rec) in seq.steps[step].iter().enumerate() {
+                let dst = &mut out.layers[l];
+                for (i, &e) in rec.topk.iter().enumerate() {
+                    dst.workloads[e as usize] += 1;
+                    dst.gate_scores[e as usize] += rec.topk_scores[i];
+                }
+                for &e in &rec.pred_raw {
+                    dst.pred_raw[e as usize] += 1;
+                }
+                for &e in &rec.pred_res {
+                    dst.pred_res[e as usize] += 1;
+                }
+            }
+        }
+    }
+
+    /// Compose one decode step from many concurrent streams, each at its
+    /// own per-stream offset: `active[i] = (seq_id, step)`. The serving
+    /// simulator's continuous batcher admits requests at different virtual
+    /// times, so a single batch step mixes stream positions — unlike
+    /// [`Self::compose_decode_into`], which marches every stream in
+    /// lockstep. Streams whose `step` is past their recorded length
+    /// contribute nothing (same finished-sequence rule as lockstep
+    /// composition). Allocation-free once `out` has the trace's shape.
+    pub fn compose_multi_into(&self, active: &[(usize, usize)], out: &mut BatchStep) {
+        out.reset(self.layers, self.n_routed);
+        for &(sid, step) in active {
             let seq = &self.seqs[sid % self.seqs.len()];
             if step >= seq.steps.len() {
                 continue;
@@ -475,6 +519,31 @@ mod tests {
     fn compose_decode_skips_finished_seqs() {
         let t = tiny_trace();
         let step = t.compose_decode(&[0, 1], 1); // seq 1 has only 1 step
+        assert_eq!(step.tokens, 1);
+        assert_eq!(step.layers[0].workloads, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn compose_multi_matches_lockstep_at_equal_offsets() {
+        let t = tiny_trace();
+        let mut multi = BatchStep::default();
+        t.compose_multi_into(&[(0, 0), (1, 0)], &mut multi);
+        let lock = t.compose_decode(&[0, 1], 0);
+        assert_eq!(multi.tokens, lock.tokens);
+        assert_eq!(multi.layers[0].workloads, lock.layers[0].workloads);
+        assert_eq!(multi.layers[0].pred_res, lock.layers[0].pred_res);
+    }
+
+    #[test]
+    fn compose_multi_mixes_per_stream_offsets() {
+        let t = tiny_trace();
+        let mut step = BatchStep::default();
+        // seq 0 at its step 1 ({1,2}) + seq 1 at its step 0 ({0,3})
+        t.compose_multi_into(&[(0, 1), (1, 0)], &mut step);
+        assert_eq!(step.tokens, 2);
+        assert_eq!(step.layers[0].workloads, vec![1, 1, 1, 1]);
+        // an exhausted stream contributes nothing
+        t.compose_multi_into(&[(0, 1), (1, 7)], &mut step);
         assert_eq!(step.tokens, 1);
         assert_eq!(step.layers[0].workloads, vec![0, 1, 1, 0]);
     }

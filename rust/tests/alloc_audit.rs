@@ -19,6 +19,7 @@ use dali::coordinator::frameworks::{Framework, FrameworkCfg};
 use dali::coordinator::simrun::{Phase, StepSimulator};
 use dali::fault::FaultPlan;
 use dali::hw::CostModel;
+use dali::serve::{ServeSim, ServeSimCfg};
 use dali::store::TieredStore;
 use dali::trace::DigestSink;
 use dali::workload::trace::{synthetic_locality_trace, BatchStep};
@@ -205,6 +206,64 @@ fn run_step_steady_state_is_allocation_free() {
         assert_eq!(
             allocs, 0,
             "{scenario}/dali+flaky-nvme: faulted run_step allocated {allocs} times (expected zero)"
+        );
+    }
+
+    // --- serving pass: the continuous-batching tick loop is zero-alloc ----
+    // Same construction as `simulate_serve` (digest sink, shared tiered
+    // store), hand-built so we can split the run: warm until every request
+    // has been admitted (prefill steps all behind us), then require the
+    // remaining pure-decode ticks — admission checks, multi-stream compose,
+    // retirement edges, lifecycle events and all — to allocate nothing.
+    {
+        let scenario = "mixtral-sim-ram16";
+        let (model, hw) = presets.scenario(scenario).unwrap();
+        let dims = &model.sim;
+        let cost = CostModel::for_scenario(&presets, scenario).unwrap();
+        let serve_cfg = ServeSimCfg { n_requests: 24, max_batch: 8, max_tokens: 16, ..Default::default() };
+        let trace = synthetic_locality_trace(
+            dims.layers,
+            dims.n_routed,
+            dims.top_k,
+            16,
+            serve_cfg.max_tokens.max(16),
+            serve_cfg.seed ^ 0x7ace,
+        );
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+        let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+        assert!(!store.is_unlimited());
+        let sim = StepSimulator::new(
+            &cost,
+            bundle,
+            &freq,
+            dims.layers,
+            dims.n_routed,
+            dims.n_shared,
+            7,
+        )
+        .with_sink(DigestSink::new())
+        .with_store(store);
+        let mut serve = ServeSim::new(sim, &trace, serve_cfg.clone()).unwrap();
+        while serve.admitted() < serve_cfg.n_requests && serve.tick() {}
+        let before = alloc_calls();
+        let mut ticks = 0u64;
+        while serve.tick() {
+            ticks += 1;
+        }
+        let allocs = alloc_calls() - before;
+        let report = serve.finish();
+        assert!(ticks > 0, "audit window must cover pure-decode ticks");
+        assert_eq!(report.requests, serve_cfg.n_requests as u64);
+        assert_eq!(
+            report.tokens_out,
+            (serve_cfg.n_requests * serve_cfg.max_tokens) as u64
+        );
+        assert_eq!(
+            allocs, 0,
+            "{scenario}/serve: steady-state serving tick allocated {allocs} times \
+             across {ticks} ticks (expected zero)"
         );
     }
 }
