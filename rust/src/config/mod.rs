@@ -15,6 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::fault::FaultProfile;
 use crate::serve::arrival::ArrivalSpec;
+use crate::serve::slo::SloSpec;
 use crate::util::json::Value;
 
 /// Scaled model dimensions — what PJRT actually computes.
@@ -257,6 +258,10 @@ pub struct Presets {
     /// serving simulation, stored as the same `key=value` spec strings
     /// `dali serve --sim --arrival` accepts.
     pub arrivals: BTreeMap<String, ArrivalSpec>,
+    /// Named SLO policies (`slo` section) for the serving simulation,
+    /// stored as the same `key=value` spec strings
+    /// `dali serve --sim --slo` accepts.
+    pub slos: BTreeMap<String, SloSpec>,
 }
 
 impl Presets {
@@ -332,6 +337,14 @@ impl Presets {
                 arrivals.insert(name.clone(), s);
             }
         }
+        let mut slos = BTreeMap::new();
+        if let Some(sl) = v.opt("slo") {
+            for (name, spec) in sl.as_obj()? {
+                let s = SloSpec::parse_spec(spec.as_str()?)
+                    .with_context(|| format!("slo preset '{name}'"))?;
+                slos.insert(name.clone(), s);
+            }
+        }
         Ok(Presets {
             models,
             buckets: Buckets::from_json(v.get("buckets")?)?,
@@ -339,6 +352,7 @@ impl Presets {
             scenarios,
             fault_profiles,
             arrivals,
+            slos,
         })
     }
 
@@ -419,6 +433,27 @@ impl Presets {
                 "'{name}' is not a named arrival preset (presets: [{}], built-ins: \
                  steady, bursty, diurnal) and failed to parse as a key=value spec",
                 self.arrivals.keys().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Resolve `dali serve --sim --slo <arg>` / `expt serve` SLO-policy
+    /// names: the presets file's `slo` section first, then the built-in
+    /// named policies (`unlimited`/`tight`/`lenient`/`observe` work
+    /// without a presets file), then an inline `key=value,...` spec.
+    pub fn slo(&self, name: &str) -> Result<SloSpec> {
+        if let Some(s) = self.slos.get(name) {
+            return Ok(*s);
+        }
+        if let Some(s) = SloSpec::named(name) {
+            return Ok(s);
+        }
+        SloSpec::parse_spec(name).with_context(|| {
+            format!(
+                "'{name}' is not a named SLO preset (presets: [{}], built-ins: \
+                 unlimited, tight, lenient, observe) and failed to parse as a \
+                 key=value spec",
+                self.slos.keys().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
             )
         })
     }
@@ -597,6 +632,31 @@ mod tests {
         // garbage is a named error listing the presets
         let err = format!("{:#}", p.arrival("no-such-arrival").unwrap_err());
         assert!(err.contains("no-such-arrival") && err.contains("steady-poisson"), "{err}");
+        // the overload-sweep mixed-length process ships in presets.json
+        let mixed = p.arrival("bursty-mixed").unwrap();
+        assert!(mixed.has_lengths() && mixed.len_min >= 1 && mixed.len_max > mixed.len_min);
+    }
+
+    #[test]
+    fn slo_presets_resolve_from_presets_builtins_and_specs() {
+        let p = Presets::load_default().unwrap();
+        // presets.json names the four shipped policies, and every named
+        // entry parses into a valid spec (the CI preset-sanity invariant)
+        for name in ["unlimited", "tight", "lenient", "observe"] {
+            let s = p.slo(name).unwrap();
+            s.validate().unwrap();
+        }
+        let tight = p.slo("tight").unwrap();
+        assert!(tight.is_guarded() && tight.ttft_ms > 0.0);
+        assert!(!p.slo("unlimited").unwrap().is_guarded());
+        let observe = p.slo("observe").unwrap();
+        assert!(!observe.enforce && observe.ttft_ms > 0.0, "observe scores but never acts");
+        // inline spec fallback
+        let inline = p.slo("ttft_ms=100,queue_cap=8").unwrap();
+        assert_eq!((inline.ttft_ms, inline.queue_cap), (100.0, 8));
+        // garbage is a named error listing the built-ins
+        let err = format!("{:#}", p.slo("no-such-slo").unwrap_err());
+        assert!(err.contains("no-such-slo") && err.contains("tight"), "{err}");
     }
 
     #[test]

@@ -164,6 +164,15 @@ pub struct StepSimulator<'a, S: TraceSink = NullSink> {
     /// is installed (`CostModel::degraded` clones, and the step loop must
     /// stay allocation-free), empty without an active non-clean plan.
     fault_costs: Vec<CostModel>,
+    /// Pre-built CPU-shifted cost view for the overload ladder's top rung
+    /// (`None` until [`Self::install_degraded_assign_view`]). Like
+    /// `fault_costs`, built once so toggling it per step never allocates.
+    degrade_cost: Option<Box<CostModel>>,
+    /// Overload rung 3: price *assignment* through `degrade_cost` so
+    /// Greedy sheds marginal experts CPU-ward; execution keeps true costs.
+    degrade_assign: bool,
+    /// Overload rung >= 2: skip predictive NVMe→host promote-ahead.
+    promote_paused: bool,
     sink: S,
 }
 
@@ -196,6 +205,9 @@ impl<'a> StepSimulator<'a> {
             steps_done: 0,
             faults: None,
             fault_costs: Vec::new(),
+            degrade_cost: None,
+            degrade_assign: false,
+            promote_paused: false,
             sink: NullSink,
         }
     }
@@ -225,6 +237,9 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             steps_done: self.steps_done,
             faults: self.faults,
             fault_costs: self.fault_costs,
+            degrade_cost: self.degrade_cost,
+            degrade_assign: self.degrade_assign,
+            promote_paused: self.promote_paused,
             sink,
         }
     }
@@ -291,6 +306,28 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
         if S::ENABLED {
             self.sink.emit(&ev);
         }
+    }
+
+    /// Pre-build the degraded (CPU-shifted) assignment cost view the
+    /// overload ladder's top rung toggles. One clone up front — the same
+    /// allocate-at-install discipline as the fault views — so
+    /// [`Self::set_degraded_assign`] is free inside the tick loop.
+    pub fn install_degraded_assign_view(&mut self, gpu_mult: f64, pcie_mult: f64) {
+        self.degrade_cost = Some(Box::new(self.cost.degraded(gpu_mult, pcie_mult)));
+    }
+
+    /// Toggle overload rung 3: price assignment through the degraded view
+    /// (no-op until [`Self::install_degraded_assign_view`]). Execution
+    /// still runs at true costs — the view only biases the GPU-vs-CPU
+    /// choice, never the modeled time of the chosen side.
+    pub fn set_degraded_assign(&mut self, on: bool) {
+        self.degrade_assign = on;
+    }
+
+    /// Toggle overload rung 2: pause predictive promote-ahead so the NVMe
+    /// read lane serves demand traffic only.
+    pub fn set_promote_paused(&mut self, paused: bool) {
+        self.promote_paused = paused;
     }
 
     /// Host-RAM arrival for an execution-path access of (layer, e):
@@ -383,6 +420,16 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             &fault_costs[(gpu_hot as usize) | ((pcie_hot as usize) << 1)]
         } else {
             self.cost
+        };
+        // Overload rung 3 prices *assignment only* through the degraded
+        // view (execution keeps `cost`): the GPU/PCIe sides look slower to
+        // the solver, so Greedy sheds marginal experts CPU-ward without
+        // the modeled time of any chosen side ever getting worse. A live
+        // fault window takes precedence — its view is already CPU-shifted.
+        let degrade_cost = std::mem::take(&mut self.degrade_cost);
+        let assign_cost: &CostModel = match degrade_cost.as_deref() {
+            Some(view) if self.degrade_assign && !(gpu_hot || pcie_hot) => view,
+            _ => cost,
         };
         if self.faults.is_some() {
             if let Some(st) = self.store.as_mut() {
@@ -477,7 +524,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                 resident,
                 tiers: tiers_snapshot,
                 host_wait: wait_snapshot,
-                cost,
+                cost: assign_cost,
                 gpu_free_slots: self.policy.gpu_free_slots.saturating_sub(wasted_staging),
                 layer: l,
                 layers: self.layers,
@@ -505,9 +552,9 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                     }
                     let gpu = assignment.to_gpu[e];
                     let cost_ns = if gpu {
-                        cost.t_gpu_compute(w as usize)
+                        assign_cost.t_gpu_compute(w as usize)
                     } else {
-                        (cost.t_cpu(w as usize) as f64 / self.policy.cpu_eff) as Ns
+                        (assign_cost.t_cpu(w as usize) as f64 / self.policy.cpu_eff) as Ns
                     };
                     self.sink.emit(&Event::Assign {
                         layer: l as u32,
@@ -788,7 +835,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
                 // lane just fetched are host-resident by now and skipped)
                 // and a promotion can only be consumed in a later instant,
                 // with genuinely hidden NVMe time.
-                if placement_on {
+                if placement_on && !self.promote_paused {
                     if let Some(st) = self.store.as_mut() {
                         placement::promote_ahead_layer_t(
                             st,
@@ -864,6 +911,7 @@ impl<'a, S: TraceSink> StepSimulator<'a, S> {
             self.metrics.degraded_pcie_ns += self.now - step_start;
         }
         self.fault_costs = fault_costs;
+        self.degrade_cost = degrade_cost;
 
         match phase {
             Phase::Prefill => self.metrics.tokens_in += step.tokens as u64,

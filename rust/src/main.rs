@@ -34,16 +34,20 @@
 //!   serve --sim [--scenario mixtral-sim-ram16] [--framework dali]
 //!         [--arrival steady-poisson|bursty|diurnal|spec] [--load R]
 //!         [--requests 32] [--max-batch 8] [--max-tokens 16] [--seed N]
+//!         [--slo unlimited|tight|lenient|observe|spec]
 //!         [--faults profile|spec] [--fault-seed N] [--trace-digest]
 //!                                 multi-tenant continuous-batching serving
 //!                                 simulation in virtual time: seeded arrivals
 //!                                 share one pipeline (GPU cache, tiered
-//!                                 store, NVMe/PCIe/transcode lanes); prints
-//!                                 per-request TTFT/TPOT/queue p50/p99 and the
+//!                                 store, NVMe/PCIe/transcode lanes); `--slo`
+//!                                 arms deadline admission control, load
+//!                                 shedding, and the adaptive degradation
+//!                                 ladder; prints per-request TTFT/TPOT/queue
+//!                                 p50/p99 plus SLO attainment/goodput and the
 //!                                 same greppable `trace_digest=0x…` audit
 //!                                 line as `run` (`--trace-digest` prints only
 //!                                 that line — what CI's serve determinism
-//!                                 check compares)
+//!                                 and overload checks compare)
 //!
 //! Experiments (paper tables/figures) live in the separate `expt` binary.
 
@@ -655,11 +659,16 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         let rate: f64 = load.parse().map_err(|_| anyhow::anyhow!("bad --load '{load}'"))?;
         arrival = arrival.with_rate(rate);
     }
+    // `--slo` names a presets.json / built-in policy or gives an inline
+    // `key=value,...` spec; the default is digest-transparent
+    let slo_name = args.str_or("slo", "unlimited");
+    let slo = presets.slo(&slo_name)?;
     let cfg = ServeSimCfg {
         arrival,
         n_requests: args.usize_or("requests", 32),
         max_batch: args.usize_or("max-batch", 8),
         max_tokens: args.usize_or("max-tokens", 16),
+        slo,
         seed: args.u64_or("seed", 0x5e11),
     };
     let faults = match args.get("faults") {
@@ -678,7 +687,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     }
     println!(
         "serve-sim scenario={scenario} framework={} arrival={} rate={} requests={} \
-         slots={} max_tokens={}",
+         slots={} max_tokens={} slo={slo_name}",
         fw.name(),
         cfg.arrival.kind.name(),
         cfg.arrival.rate,
@@ -686,7 +695,11 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         cfg.max_batch,
         cfg.max_tokens
     );
-    println!("  finished          : {} requests, {} tokens", r.requests, r.tokens_out);
+    println!(
+        "  resolved          : {} finished / {} rejected / {} evicted of {} requests, \
+         {} tokens",
+        r.finished, r.rejected, r.evicted, r.requests, r.tokens_out
+    );
     println!("  makespan          : {}", fmt_ns(r.makespan_ns));
     println!("  throughput        : {:.2} tokens/s (virtual)", r.tokens_per_s());
     println!(
@@ -704,6 +717,26 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         fmt_ns(r.queue_p50_ns),
         fmt_ns(r.queue_p99_ns)
     );
+    if !cfg.slo.is_unlimited() {
+        println!(
+            "  SLO attainment    : {:.1}% ({} of {} requests within deadlines)",
+            100.0 * r.slo_attainment(),
+            r.slo_attained,
+            r.requests
+        );
+        println!(
+            "  goodput           : {} tokens ({:.2} tokens/s within-SLO)",
+            r.goodput_tokens,
+            r.goodput_per_s()
+        );
+        if r.degraded_ns > 0 {
+            println!(
+                "  degraded mode     : {} ({:.1}% of makespan)",
+                fmt_ns(r.degraded_ns),
+                100.0 * r.degraded_ns as f64 / r.makespan_ns.max(1) as f64
+            );
+        }
+    }
     println!("  cache hit rate    : {:.1}%", 100.0 * r.run.cache_hit_rate());
     if r.run.tier_host_hits + r.run.tier_disk_misses > 0 {
         println!(

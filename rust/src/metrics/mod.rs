@@ -3,7 +3,7 @@
 
 pub mod serve;
 
-pub use serve::{percentile_ns, RequestStat, ServeReport};
+pub use serve::{percentile_ns, RequestOutcome, RequestStat, ServeReport};
 
 /// Metrics for one inference run (prefill and/or decode).
 #[derive(Debug, Clone, Default, PartialEq)]

@@ -14,8 +14,30 @@ use crate::hw::Ns;
 
 use super::RunMetrics;
 
-/// Lifecycle timestamps of one simulated request (virtual ns).
+/// How one simulated request left the server.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Generated its full decode budget and retired normally.
+    #[default]
+    Finished,
+    /// Turned away by admission control (never held a batch slot).
+    Rejected,
+    /// Evicted mid-decode by deadline load-shedding.
+    Evicted,
+}
+
+impl RequestOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestOutcome::Finished => "finished",
+            RequestOutcome::Rejected => "rejected",
+            RequestOutcome::Evicted => "evicted",
+        }
+    }
+}
+
+/// Lifecycle timestamps of one simulated request (virtual ns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RequestStat {
     /// When the request entered the arrival queue.
     pub arrival_ns: Ns,
@@ -23,10 +45,34 @@ pub struct RequestStat {
     pub admit_ns: Ns,
     /// When its first decode token completed.
     pub first_token_ns: Ns,
-    /// When its last token completed and it left the batch.
+    /// When its last token completed and it left the batch (for rejected
+    /// or evicted requests: when it left, period).
     pub finish_ns: Ns,
     /// Decode tokens generated.
     pub tokens: u64,
+    /// Absolute TTFT deadline (`Ns::MAX` = unlimited).
+    pub ttft_deadline_ns: Ns,
+    /// Absolute completion deadline (`Ns::MAX` = unlimited).
+    pub deadline_ns: Ns,
+    /// How the request left the server.
+    pub outcome: RequestOutcome,
+}
+
+impl Default for RequestStat {
+    /// Zero timestamps, *unlimited* deadlines: a run that never installs
+    /// deadlines scores every finished request as SLO-attained.
+    fn default() -> Self {
+        RequestStat {
+            arrival_ns: 0,
+            admit_ns: 0,
+            first_token_ns: 0,
+            finish_ns: 0,
+            tokens: 0,
+            ttft_deadline_ns: Ns::MAX,
+            deadline_ns: Ns::MAX,
+            outcome: RequestOutcome::Finished,
+        }
+    }
 }
 
 impl RequestStat {
@@ -49,9 +95,18 @@ impl RequestStat {
         }
         self.finish_ns.saturating_sub(self.first_token_ns) / (self.tokens - 1)
     }
+
+    /// SLO attainment: finished normally *and* met both deadlines.
+    /// Unlimited deadlines (`Ns::MAX`) are trivially met.
+    pub fn attained(&self) -> bool {
+        self.outcome == RequestOutcome::Finished
+            && self.first_token_ns <= self.ttft_deadline_ns
+            && self.finish_ns <= self.deadline_ns
+    }
 }
 
-/// Nearest-rank percentile of an already-sorted sample (p in (0, 100]).
+/// Nearest-rank percentile of an already-sorted sample (p in [0, 100];
+/// p = 0 degenerates to the minimum, p = 100 is the maximum).
 /// Returns 0 for an empty sample.
 pub fn percentile_ns(sorted: &[Ns], p: f64) -> Ns {
     if sorted.is_empty() {
@@ -67,12 +122,31 @@ pub fn percentile_ns(sorted: &[Ns], p: f64) -> Ns {
 /// cells).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServeReport {
-    /// Requests that ran to completion (every request, in this sim).
+    /// Every request the arrival script produced (finished + rejected +
+    /// evicted).
     pub requests: u64,
-    /// Decode tokens generated across all requests.
+    /// Requests that generated their full budget and retired normally.
+    pub finished: u64,
+    /// Requests turned away by admission control.
+    pub rejected: u64,
+    /// Running requests evicted by deadline load-shedding.
+    pub evicted: u64,
+    /// Finished requests that also met both of their deadlines.
+    pub slo_attained: u64,
+    /// Decode tokens generated across all requests (evicted requests'
+    /// partial output included).
     pub tokens_out: u64,
-    /// Virtual time from the run start to the last request's finish.
+    /// Decode tokens from SLO-attained requests only — the tokens a
+    /// deadline-bound client actually got value from.
+    pub goodput_tokens: u64,
+    /// Virtual time spent with the degradation ladder above rung 0.
+    pub degraded_ns: Ns,
+    /// Virtual time from the run start to the last request's exit.
     pub makespan_ns: Ns,
+    /// Percentiles are over *finished* requests (a rejected request has
+    /// no TTFT; an evicted one never produced the latency a client saw
+    /// to completion) — identical to the historical all-requests values
+    /// whenever nothing is rejected or evicted.
     pub ttft_p50_ns: Ns,
     pub ttft_p99_ns: Ns,
     pub tpot_p50_ns: Ns,
@@ -88,16 +162,29 @@ impl ServeReport {
     /// Aggregate per-request stats (order-insensitive: samples are sorted
     /// here) over the finished run's metrics.
     pub fn from_stats(stats: &[RequestStat], run: RunMetrics) -> ServeReport {
-        let mut ttft: Vec<Ns> = stats.iter().map(|s| s.ttft_ns()).collect();
-        let mut tpot: Vec<Ns> =
-            stats.iter().filter(|s| s.tokens > 1).map(|s| s.tpot_ns()).collect();
-        let mut queue: Vec<Ns> = stats.iter().map(|s| s.queue_ns()).collect();
+        let fin = |s: &&RequestStat| s.outcome == RequestOutcome::Finished;
+        let mut ttft: Vec<Ns> = stats.iter().filter(fin).map(|s| s.ttft_ns()).collect();
+        let mut tpot: Vec<Ns> = stats
+            .iter()
+            .filter(fin)
+            .filter(|s| s.tokens > 1)
+            .map(|s| s.tpot_ns())
+            .collect();
+        let mut queue: Vec<Ns> = stats.iter().filter(fin).map(|s| s.queue_ns()).collect();
         ttft.sort_unstable();
         tpot.sort_unstable();
         queue.sort_unstable();
         ServeReport {
             requests: stats.len() as u64,
+            finished: stats.iter().filter(fin).count() as u64,
+            rejected: stats.iter().filter(|s| s.outcome == RequestOutcome::Rejected).count()
+                as u64,
+            evicted: stats.iter().filter(|s| s.outcome == RequestOutcome::Evicted).count()
+                as u64,
+            slo_attained: stats.iter().filter(|s| s.attained()).count() as u64,
             tokens_out: stats.iter().map(|s| s.tokens).sum(),
+            goodput_tokens: stats.iter().filter(|s| s.attained()).map(|s| s.tokens).sum(),
+            degraded_ns: 0,
             makespan_ns: stats.iter().map(|s| s.finish_ns).max().unwrap_or(0),
             ttft_p50_ns: percentile_ns(&ttft, 50.0),
             ttft_p99_ns: percentile_ns(&ttft, 99.0),
@@ -115,6 +202,25 @@ impl ServeReport {
             return 0.0;
         }
         self.tokens_out as f64 / (self.makespan_ns as f64 / 1e9)
+    }
+
+    /// Fraction of *all* requests that finished within their deadlines —
+    /// rejections and evictions count against it, so shedding load only
+    /// pays off when it actually rescues the survivors.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.slo_attained as f64 / self.requests as f64
+    }
+
+    /// Goodput over the makespan: deadline-respecting tokens per virtual
+    /// second.
+    pub fn goodput_per_s(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            return 0.0;
+        }
+        self.goodput_tokens as f64 / (self.makespan_ns as f64 / 1e9)
     }
 }
 
@@ -142,12 +248,23 @@ mod tests {
             first_token_ns: 300,
             finish_ns: 900,
             tokens: 4,
+            ..RequestStat::default()
         };
         assert_eq!(s.queue_ns(), 50);
         assert_eq!(s.ttft_ns(), 200);
         assert_eq!(s.tpot_ns(), 200); // (900-300)/3
+        assert!(s.attained(), "unlimited deadlines are trivially met");
         let single = RequestStat { tokens: 1, ..s };
         assert_eq!(single.tpot_ns(), 0);
+        // deadlines bite exactly at the boundary (<= attains, > misses)
+        let tight = RequestStat { ttft_deadline_ns: 300, deadline_ns: 900, ..s };
+        assert!(tight.attained());
+        let late = RequestStat { ttft_deadline_ns: 299, ..tight };
+        assert!(!late.attained());
+        let over = RequestStat { deadline_ns: 899, ..tight };
+        assert!(!over.attained());
+        let evicted = RequestStat { outcome: RequestOutcome::Evicted, ..tight };
+        assert!(!evicted.attained(), "evicted requests never attain");
     }
 
     #[test]
@@ -158,6 +275,7 @@ mod tests {
             first_token_ns: first,
             finish_ns: finish,
             tokens,
+            ..RequestStat::default()
         };
         let stats = [
             mk(0, 0, 100, 400, 4),    // ttft 100, tpot 100, queue 0
@@ -166,6 +284,7 @@ mod tests {
         ];
         let r = ServeReport::from_stats(&stats, RunMetrics::default());
         assert_eq!(r.requests, 3);
+        assert_eq!((r.finished, r.rejected, r.evicted), (3, 0, 0));
         assert_eq!(r.tokens_out, 9);
         assert_eq!(r.makespan_ns, 950);
         assert_eq!(r.ttft_p50_ns, 200);
@@ -175,5 +294,72 @@ mod tests {
         assert_eq!(r.queue_p50_ns, 50);
         assert_eq!(r.queue_p99_ns, 140);
         assert!((r.tokens_per_s() - 9.0 / (950.0 / 1e9)).abs() < 1e-6);
+        // no deadlines installed: everything attains, goodput == output
+        assert_eq!(r.slo_attained, 3);
+        assert_eq!(r.goodput_tokens, 9);
+        assert!((r.slo_attainment() - 1.0).abs() < 1e-12);
+        assert!((r.goodput_per_s() - r.tokens_per_s()).abs() < 1e-6);
+    }
+
+    // --- satellite: percentile edges -------------------------------------
+
+    #[test]
+    fn percentile_edges_n1_p0_p100_and_ties() {
+        // n = 1: every percentile is the single sample
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile_ns(&[42], p), 42, "n=1 at p={p}");
+        }
+        let xs = [10, 20, 30, 40, 50];
+        // p = 0 degenerates to the minimum (rank clamps up to 1)
+        assert_eq!(percentile_ns(&xs, 0.0), 10);
+        // p = 100 is exactly the maximum, never out of bounds
+        assert_eq!(percentile_ns(&xs, 100.0), 50);
+        // duplicate-value ties: the rank lands inside the tied run and
+        // must report the tied value, not a neighbour
+        let ties = [5, 5, 5, 5, 9];
+        assert_eq!(percentile_ns(&ties, 50.0), 5);
+        assert_eq!(percentile_ns(&ties, 80.0), 5);
+        assert_eq!(percentile_ns(&ties, 81.0), 9);
+        let all_same = [7; 100];
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile_ns(&all_same, p), 7);
+        }
+        // empty stays 0 at every p (no panic, no NaN-driven rank)
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(percentile_ns(&[], p), 0);
+        }
+    }
+
+    // --- satellite: an all-rejected run reports cleanly ------------------
+
+    #[test]
+    fn all_rejected_report_has_no_nan_or_underflow() {
+        let stats = [
+            RequestStat {
+                arrival_ns: 100,
+                finish_ns: 100,
+                outcome: RequestOutcome::Rejected,
+                ..RequestStat::default()
+            },
+            RequestStat {
+                arrival_ns: 250,
+                finish_ns: 250,
+                outcome: RequestOutcome::Rejected,
+                ..RequestStat::default()
+            },
+        ];
+        let r = ServeReport::from_stats(&stats, RunMetrics::default());
+        assert_eq!(r.requests, 2);
+        assert_eq!((r.finished, r.rejected, r.evicted), (0, 2, 0));
+        assert_eq!((r.slo_attained, r.tokens_out, r.goodput_tokens), (0, 0, 0));
+        // percentile samples are empty, not zero-stuffed
+        for v in [r.ttft_p50_ns, r.ttft_p99_ns, r.tpot_p50_ns, r.tpot_p99_ns, r.queue_p50_ns, r.queue_p99_ns]
+        {
+            assert_eq!(v, 0);
+        }
+        assert_eq!(r.makespan_ns, 250, "makespan covers the last exit");
+        assert_eq!(r.slo_attainment(), 0.0);
+        assert!(r.goodput_per_s() == 0.0 && r.tokens_per_s() == 0.0);
+        assert!(r.slo_attainment().is_finite() && r.goodput_per_s().is_finite());
     }
 }

@@ -54,6 +54,14 @@ pub struct ArrivalSpec {
     /// Diurnal only: modulation depth in [0, 1) — 0 degenerates to
     /// Poisson, 0.9 means the trough runs at 10% of the peak rate.
     pub depth: f64,
+    /// Heterogeneous per-request decode lengths: lower bound of the
+    /// seeded uniform draw. 0 (with `len_max` 0) disables the
+    /// distribution — every request then uses the run's flat
+    /// `max_tokens`, and existing digests are untouched.
+    pub len_min: usize,
+    /// Upper bound (inclusive) of the per-request length draw; 0
+    /// disables.
+    pub len_max: usize,
 }
 
 impl Default for ArrivalSpec {
@@ -64,6 +72,8 @@ impl Default for ArrivalSpec {
             burst: 4.0,
             period_s: 2.0,
             depth: 0.8,
+            len_min: 0,
+            len_max: 0,
         }
     }
 }
@@ -84,6 +94,13 @@ impl ArrivalSpec {
             "diurnal" => {
                 Some(ArrivalSpec { kind: ArrivalKind::Diurnal, ..Default::default() })
             }
+            // bursty traffic with heterogeneous request lengths — the
+            // overload sweep's mixed-workload cell
+            "bursty-mixed" => Some(ArrivalSpec {
+                len_min: 4,
+                len_max: 32,
+                ..ArrivalSpec::named("bursty").unwrap()
+            }),
             _ => None,
         }
     }
@@ -115,6 +132,8 @@ impl ArrivalSpec {
                 "burst" => s.burst = v.parse()?,
                 "period_s" => s.period_s = v.parse()?,
                 "depth" => s.depth = v.parse()?,
+                "len_min" => s.len_min = v.parse()?,
+                "len_max" => s.len_max = v.parse()?,
                 _ => bail!("unknown arrival spec key '{k}'"),
             }
         }
@@ -135,7 +154,22 @@ impl ArrivalSpec {
         if !(0.0..1.0).contains(&self.depth) {
             bail!("arrival depth must be in [0, 1), got {}", self.depth);
         }
+        if (self.len_min != 0 || self.len_max != 0)
+            && !(1 <= self.len_min && self.len_min <= self.len_max)
+        {
+            bail!(
+                "arrival lengths need 1 <= len_min <= len_max (got {}..{}); \
+                 both 0 disables the distribution",
+                self.len_min,
+                self.len_max
+            );
+        }
         Ok(())
+    }
+
+    /// True when the per-request length distribution is enabled.
+    pub fn has_lengths(&self) -> bool {
+        self.len_max > 0
     }
 
     /// Same spec with the mean rate replaced — the load axis of the
@@ -201,6 +235,24 @@ impl ArrivalSpec {
         self.generate_into(n, seed, &mut v);
         v
     }
+
+    /// Per-request decode lengths, uniform on `[len_min, len_max]`, drawn
+    /// from an RNG stream *independent* of the arrival-instant stream (so
+    /// enabling lengths never perturbs arrival times). `out` stays empty
+    /// when the distribution is disabled — the caller falls back to its
+    /// flat `max_tokens` and existing digests are untouched.
+    pub fn lengths_into(&self, n: usize, seed: u64, out: &mut Vec<usize>) {
+        out.clear();
+        if !self.has_lengths() {
+            return;
+        }
+        out.reserve(n);
+        let mut rng = DetRng::new(seed ^ 0x1e57_71e5);
+        let span = self.len_max - self.len_min + 1;
+        for _ in 0..n {
+            out.push(self.len_min + rng.usize_below(span));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +272,12 @@ mod tests {
         assert!(ArrivalSpec::parse_spec("rate=-1").is_err());
         assert!(ArrivalSpec::parse_spec("depth=1.5,kind=diurnal").is_err());
         assert!(ArrivalSpec::parse_spec("frobnicate=1").is_err());
+        let lens = ArrivalSpec::parse_spec("kind=bursty,len_min=4,len_max=32").unwrap();
+        assert_eq!((lens.len_min, lens.len_max), (4, 32));
+        assert!(lens.has_lengths());
+        assert!(ArrivalSpec::parse_spec("len_min=8,len_max=4").is_err());
+        assert!(ArrivalSpec::parse_spec("len_max=4").is_err(), "len_min 0 with len_max set");
+        assert!(ArrivalSpec::parse_spec("len_min=4").is_err(), "len_max 0 with len_min set");
     }
 
     #[test]
@@ -227,7 +285,35 @@ mod tests {
         assert_eq!(ArrivalSpec::named("steady").unwrap().kind, ArrivalKind::Poisson);
         assert_eq!(ArrivalSpec::named("bursty").unwrap().kind, ArrivalKind::Bursty);
         assert_eq!(ArrivalSpec::named("diurnal").unwrap().kind, ArrivalKind::Diurnal);
+        let mixed = ArrivalSpec::named("bursty-mixed").unwrap();
+        assert_eq!(mixed.kind, ArrivalKind::Bursty);
+        assert!(mixed.has_lengths() && mixed.len_min == 4 && mixed.len_max == 32);
         assert!(ArrivalSpec::named("no-such").is_none());
+    }
+
+    #[test]
+    fn length_draws_are_seeded_bounded_and_off_by_default() {
+        // disabled (the default): the out vec stays empty, signalling the
+        // caller to use its flat max_tokens — digest-transparent
+        let mut lens = vec![99; 4];
+        ArrivalSpec::default().lengths_into(16, 7, &mut lens);
+        assert!(lens.is_empty(), "disabled distribution must clear the buffer");
+        let spec = ArrivalSpec::named("bursty-mixed").unwrap();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        spec.lengths_into(256, 0x5eed, &mut a);
+        spec.lengths_into(256, 0x5eed, &mut b);
+        assert_eq!(a, b, "same seed, same lengths");
+        assert_eq!(a.len(), 256);
+        assert!(a.iter().all(|&l| (4..=32).contains(&l)), "draws stay in [len_min, len_max]");
+        assert!(a.iter().any(|&l| l != a[0]), "the distribution actually varies");
+        let mut c = Vec::new();
+        spec.lengths_into(256, 0x5eee, &mut c);
+        assert_ne!(a, c, "seed must matter");
+        // the length stream is independent of the arrival stream: enabling
+        // it must not move a single arrival instant
+        let plain = ArrivalSpec::named("bursty").unwrap();
+        assert_eq!(spec.generate(64, 9), plain.generate(64, 9));
     }
 
     #[test]

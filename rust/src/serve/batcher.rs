@@ -67,6 +67,12 @@ pub struct BatcherCfg {
     pub framework: Framework,
     /// Hardware preset timing the virtual pass (a `Presets::hw` name).
     pub hw: String,
+    /// Admission control: max requests pending across all groups before
+    /// `submit` rejects (503). 0 = unbounded — the pre-SLO behavior.
+    pub queue_cap: usize,
+    /// Load shedding: a request that waited in the queue longer than
+    /// this is rejected at dispatch instead of run. ZERO = off.
+    pub queue_deadline: Duration,
 }
 
 impl Default for BatcherCfg {
@@ -76,6 +82,8 @@ impl Default for BatcherCfg {
             max_wait: Duration::from_millis(50),
             framework: Framework::Dali,
             hw: "local-pc".to_string(),
+            queue_cap: 0,
+            queue_deadline: Duration::ZERO,
         }
     }
 }
@@ -99,6 +107,10 @@ pub struct ServeMetrics {
     pub exec_ms_sum: f64,
     pub sim_ms_sum: f64,
     pub errors: u64,
+    /// Requests turned away by overload protection (queue cap at submit,
+    /// queue deadline at dispatch) — distinct from `errors`, which
+    /// counts engine failures on work that was admitted.
+    pub rejected: u64,
 }
 
 /// Outcome of one executed batch, as produced by a [`BatchRunner`].
@@ -283,6 +295,20 @@ impl Batcher {
             let _ = tx.send(Err("server shutting down".to_string()));
             return rx;
         }
+        // admission control: bounded queue across all groups. Reject at
+        // the door — cheaper for everyone than queueing a request that
+        // will blow its deadline anyway.
+        if self.cfg.queue_cap > 0 {
+            let depth: usize = q.groups.values().map(|v| v.len()).sum();
+            if depth >= self.cfg.queue_cap {
+                self.metrics.lock().unwrap().rejected += 1;
+                let _ = tx.send(Err(format!(
+                    "queue full ({depth} pending, cap {})",
+                    self.cfg.queue_cap
+                )));
+                return rx;
+            }
+        }
         q.groups.entry(key).or_default().push(Pending {
             req,
             resp_tx: tx,
@@ -327,8 +353,35 @@ impl Batcher {
         }
     }
 
-    fn run_group(&self, runner: &mut dyn BatchRunner, group: Vec<Pending>) {
+    fn run_group(&self, runner: &mut dyn BatchRunner, mut group: Vec<Pending>) {
         let t0 = Instant::now();
+        // load shedding: requests that already overstayed their queue
+        // deadline are rejected at dispatch instead of holding the
+        // engine for an answer nobody is waiting for anymore
+        if self.cfg.queue_deadline > Duration::ZERO {
+            let deadline = self.cfg.queue_deadline;
+            let mut shed = 0u64;
+            group.retain(|p| {
+                let waited = t0.duration_since(p.enqueued);
+                if waited >= deadline {
+                    shed += 1;
+                    let _ = p.resp_tx.send(Err(format!(
+                        "queue deadline exceeded ({:.1} ms waited, budget {:.1} ms)",
+                        waited.as_secs_f64() * 1e3,
+                        deadline.as_secs_f64() * 1e3
+                    )));
+                    false
+                } else {
+                    true
+                }
+            });
+            if shed > 0 {
+                self.metrics.lock().unwrap().rejected += shed;
+            }
+            if group.is_empty() {
+                return;
+            }
+        }
         let prompts: Vec<Vec<i32>> = group.iter().map(|p| p.req.prompt.clone()).collect();
         let max_tokens = group[0].req.max_tokens;
         let nb = group.len();
@@ -498,6 +551,55 @@ mod tests {
         assert!(rx0.recv().unwrap().is_err());
         assert!(rx1.recv().unwrap().is_err());
         assert_eq!(b.metrics.lock().unwrap().errors, 2);
+        b.shutdown();
+    }
+
+    #[test]
+    fn bounded_queue_rejects_at_submit_with_503_semantics() {
+        // nothing ever dispatches (threshold and wait out of reach), so
+        // the first submit parks in the queue and the second hits the cap
+        let cfg = BatcherCfg {
+            max_batch: 8,
+            max_wait: Duration::from_secs(3600),
+            queue_cap: 1,
+            ..Default::default()
+        };
+        let b = Batcher::start_with(cfg, || Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>))
+            .unwrap();
+        let rx0 = b.submit(GenRequest { prompt: vec![1], max_tokens: 4 });
+        let rx1 = b.submit(GenRequest { prompt: vec![2], max_tokens: 4 });
+        let err = rx1.recv().expect("rejection is an immediate reply").unwrap_err();
+        assert!(err.contains("queue full"), "got: {err}");
+        assert_eq!(b.metrics.lock().unwrap().rejected, 1);
+        // the parked request is drained with an explicit shutdown error,
+        // not silently dropped, and is not double-counted as rejected
+        b.shutdown();
+        assert!(rx0.recv().unwrap().unwrap_err().contains("shutting down"));
+        assert_eq!(b.metrics.lock().unwrap().rejected, 1);
+    }
+
+    #[test]
+    fn queue_deadline_sheds_stale_requests_at_dispatch() {
+        // dispatch happens via the max_wait timeout (~5 ms), far past the
+        // 1 ns queue deadline: every request in the group is shed
+        let cfg = BatcherCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_deadline: Duration::from_nanos(1),
+            ..Default::default()
+        };
+        let b = Batcher::start_with(cfg, || Ok(Box::new(EchoRunner) as Box<dyn BatchRunner>))
+            .unwrap();
+        let rx0 = b.submit(GenRequest { prompt: vec![1], max_tokens: 4 });
+        let rx1 = b.submit(GenRequest { prompt: vec![2], max_tokens: 4 });
+        for rx in [rx0, rx1] {
+            let err = rx.recv().unwrap().unwrap_err();
+            assert!(err.contains("deadline"), "got: {err}");
+        }
+        let m = b.metrics.lock().unwrap().clone();
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.requests, 0, "shed requests never reach the runner");
+        assert_eq!(m.batches, 0);
         b.shutdown();
     }
 

@@ -28,7 +28,9 @@ pub mod batcher;
 pub mod http;
 pub mod server;
 pub mod sim;
+pub mod slo;
 
 pub use arrival::{ArrivalKind, ArrivalSpec};
 pub use batcher::{Batcher, BatcherCfg, GenRequest, GenResponse};
 pub use sim::{simulate_serve, ServeSim, ServeSimCfg};
+pub use slo::{OverloadController, SloSpec};

@@ -10,15 +10,41 @@
 //! (`serve/batcher.rs`) cannot be: deterministic, artifact-free, and
 //! aware of the memory hierarchy.
 //!
+//! On top of the PR 8 tick loop sits **SLO-guarded overload protection**
+//! ([`SloSpec`], `serve/slo.rs`), three independent mechanisms with one
+//! policy knob:
+//!
+//! - **Admission control** — the pending queue is bounded
+//!   (`queue_cap`), and a request whose jittered TTFT/completion
+//!   deadline is already blown — or predicted blown, using the rolling
+//!   step-latency estimate — at slot-grant time is rejected instead of
+//!   burning a slot (`request_reject`).
+//! - **Load shedding** — after each tick, the running request with the
+//!   most-blown completion deadline is evicted (at most one per tick),
+//!   freeing its batch slot and its share of the compose workload
+//!   (`request_evict`).
+//! - **Degradation ladder** — a hysteretic [`OverloadController`]
+//!   watches queue depth and rolling step latency and climbs
+//!   shrink-prefetch → pause-promote-ahead → degraded (CPU-shifted)
+//!   assignment costs, de-escalating with dwell hysteresis
+//!   (`degrade_enter` / `degrade_exit`).
+//!
+//! The whole layer is digest-transparent when disarmed: an unlimited
+//! spec (the default) takes none of the guarded branches, so reports are
+//! bit-identical to the unguarded simulator, and an `enforce=false` spec
+//! *scores* deadlines in the report while leaving the digest untouched —
+//! the fair baseline for guarded-vs-unguarded comparisons.
+//!
 //! Request lifecycle joins the trace stream (`request_arrive` /
-//! `request_admit` / `request_first_token` / `request_finish` events), so
-//! one FNV digest locks scheduling *and* SLO accounting: same-seed serve
-//! cells are bit-identical, which `rust/tests/serve_sim.rs` and the CI
-//! serve-determinism check enforce.
+//! `request_admit` / `request_first_token` / `request_finish` plus the
+//! overload events above), so one FNV digest locks scheduling *and* SLO
+//! accounting: same-seed serve cells are bit-identical, which
+//! `rust/tests/serve_sim.rs` and the CI serve-determinism check enforce.
 //!
 //! The tick loop is allocation-free in steady state (audited alongside
-//! `run_step`): requests, stats, and compose buffers are preallocated at
-//! construction, and the one shared [`BatchStep`] is reused for prefill
+//! `run_step`): requests, stats, deadlines, and compose buffers are
+//! preallocated at construction, the degraded cost view is cloned once
+//! at install, and the one shared [`BatchStep`] is reused for prefill
 //! and decode composition alike.
 //!
 //! [`Batcher`]: super::batcher::Batcher
@@ -30,27 +56,49 @@ use crate::coordinator::frameworks::{Framework, FrameworkCfg};
 use crate::coordinator::simrun::{Phase, StepSimulator};
 use crate::fault::FaultPlan;
 use crate::hw::{CostModel, Ns};
-use crate::metrics::{RequestStat, ServeReport};
+use crate::metrics::{RequestOutcome, RequestStat, ServeReport};
 use crate::store::TieredStore;
 use crate::trace::{DigestSink, Event, TraceSink};
 use crate::workload::trace::{synthetic_locality_trace, BatchStep};
 use crate::workload::Trace;
 
 use super::arrival::ArrivalSpec;
+use super::slo::{OverloadController, SloSpec};
+
+/// GPU-cost multiplier of the degraded assignment view the ladder's top
+/// rung prices through (PCIe below). Mild on purpose: the view only has
+/// to tip marginal GPU-vs-CPU choices, not caricature the hardware.
+const DEGRADE_GPU_MULT: f64 = 1.5;
+const DEGRADE_PCIE_MULT: f64 = 2.0;
+
+/// `request_reject` reason: deadline already blown at slot-grant time.
+pub const REJECT_DEADLINE_BLOWN: u32 = 0;
+/// `request_reject` reason: pending queue at capacity on arrival.
+pub const REJECT_QUEUE_FULL: u32 = 1;
+/// `request_reject` reason: predicted TTFT exceeds the deadline.
+pub const REJECT_PREDICTED_TTFT: u32 = 2;
 
 /// Configuration of one serving-simulation run.
 #[derive(Debug, Clone)]
 pub struct ServeSimCfg {
-    /// Arrival process generating the request script.
+    /// Arrival process generating the request script (and, when enabled,
+    /// the per-request decode-length distribution).
     pub arrival: ArrivalSpec,
-    /// Total requests to serve (the run ends when all have finished).
+    /// Total requests to serve (the run ends when all are resolved —
+    /// finished, rejected, or evicted).
     pub n_requests: usize,
     /// Continuous-batching slot budget: max requests decoding at once.
     pub max_batch: usize,
     /// Decode tokens requested per request (clamped to the backing
-    /// stream's recorded length).
+    /// stream's recorded length; overridden per request when the arrival
+    /// spec carries a length distribution).
     pub max_tokens: usize,
-    /// Seed for the arrival script and the simulator's own RNG stream.
+    /// SLO policy: deadlines, admission control, and the degradation
+    /// ladder. The default (unlimited) leaves the run bit-identical to
+    /// an unguarded simulation.
+    pub slo: SloSpec,
+    /// Seed for the arrival script, deadline jitter, and the simulator's
+    /// own RNG stream.
     pub seed: u64,
 }
 
@@ -61,6 +109,7 @@ impl Default for ServeSimCfg {
             n_requests: 32,
             max_batch: 8,
             max_tokens: 16,
+            slo: SloSpec::default(),
             seed: 0x5e11,
         }
     }
@@ -85,8 +134,15 @@ pub struct ServeSim<'a, S: TraceSink> {
     cfg: ServeSimCfg,
     /// Sorted arrival instants, one per request (request id = index).
     arrivals: Vec<Ns>,
-    /// Next not-yet-admitted request id.
+    /// Per-request decode lengths (empty = flat `cfg.max_tokens`).
+    lengths: Vec<usize>,
+    /// Next not-yet-drained arrival index.
     next_arrival: usize,
+    /// Arrived-but-not-admitted request ids, FIFO: `pending[pending_head..]`
+    /// is the live queue (preallocated; the head cursor replaces pop-front
+    /// so the tick loop never shifts or reallocates).
+    pending: Vec<u32>,
+    pending_head: usize,
     running: Vec<Active>,
     /// Request ids admitted this tick (prefill batch composition).
     admit_buf: Vec<usize>,
@@ -95,15 +151,30 @@ pub struct ServeSim<'a, S: TraceSink> {
     /// The one reused compose buffer (prefill and decode alike).
     step: BatchStep,
     stats: Vec<RequestStat>,
+    /// True when the SLO spec actually intervenes (enforced and not
+    /// unlimited). False takes none of the guarded branches — the
+    /// digest-transparency invariant.
+    guarded: bool,
+    ctrl: OverloadController,
+    /// The bundle's prefetch window before any ladder shrink.
+    base_prefetch: usize,
+    /// Virtual time spent with the ladder above rung 0.
+    degraded_ns: Ns,
+    admitted: usize,
+    rejected: usize,
+    evicted: usize,
     finished: usize,
+    /// finished + rejected + evicted — the run ends at `n_requests`.
+    done: usize,
 }
 
 impl<'a, S: TraceSink> ServeSim<'a, S> {
     /// Build a serving run over an already-configured simulator (sink,
     /// store, and faults installed by the caller). Preallocates every
-    /// tick-loop buffer.
+    /// tick-loop buffer and, when the spec is guarded, the degraded
+    /// assignment cost view.
     pub fn new(
-        sim: StepSimulator<'a, S>,
+        mut sim: StepSimulator<'a, S>,
         trace: &'a Trace,
         cfg: ServeSimCfg,
     ) -> Result<Self> {
@@ -119,62 +190,192 @@ impl<'a, S: TraceSink> ServeSim<'a, S> {
         if trace.seqs.is_empty() || trace.min_steps() == 0 {
             bail!("serve sim needs a non-empty trace pool with decode steps");
         }
+        cfg.slo.validate()?;
         let mut arrivals = Vec::new();
         cfg.arrival.generate_into(cfg.n_requests, cfg.seed, &mut arrivals);
-        let stats = vec![RequestStat::default(); cfg.n_requests];
+        let mut lengths = Vec::new();
+        cfg.arrival.lengths_into(cfg.n_requests, cfg.seed, &mut lengths);
+        let mut stats = vec![RequestStat::default(); cfg.n_requests];
+        // Deadlines are stamped whenever budgets exist — enforced or not —
+        // so observe-mode runs score attainment over identical traffic.
+        if !cfg.slo.is_unlimited() {
+            for (req, s) in stats.iter_mut().enumerate() {
+                let (ttft, total) = cfg.slo.deadlines(cfg.seed, req, arrivals[req]);
+                s.ttft_deadline_ns = ttft;
+                s.deadline_ns = total;
+            }
+        }
+        let guarded = cfg.slo.is_guarded();
+        if guarded {
+            sim.install_degraded_assign_view(DEGRADE_GPU_MULT, DEGRADE_PCIE_MULT);
+        }
+        let base_prefetch = sim.policy.prefetch_size;
         Ok(ServeSim {
-            sim,
             trace,
             arrivals,
+            lengths,
             next_arrival: 0,
+            pending: Vec::with_capacity(cfg.n_requests),
+            pending_head: 0,
             running: Vec::with_capacity(cfg.max_batch),
             admit_buf: Vec::with_capacity(cfg.max_batch),
             active_buf: Vec::with_capacity(cfg.max_batch),
             step: BatchStep::default(),
             stats,
+            guarded,
+            ctrl: OverloadController::new(cfg.slo),
+            base_prefetch,
+            degraded_ns: 0,
+            admitted: 0,
+            rejected: 0,
+            evicted: 0,
             finished: 0,
+            done: 0,
+            sim,
             cfg,
         })
     }
 
-    /// Requests that have run to completion so far.
+    /// Requests that ran to completion so far.
     pub fn finished(&self) -> usize {
         self.finished
     }
 
-    /// Requests admitted into the batch so far (arrivals consumed).
-    /// Once this reaches `n_requests`, remaining ticks are pure decode —
-    /// the window the allocation audit measures.
+    /// Requests admitted into the batch so far. Once `admitted() +
+    /// rejected()` reaches `n_requests`, remaining ticks are pure decode
+    /// — the window the allocation audit measures.
     pub fn admitted(&self) -> usize {
-        self.next_arrival
+        self.admitted
     }
 
-    /// One continuous-batching tick: admit due arrivals into free slots
-    /// (prefilling the newcomers as one batch step), then advance every
-    /// running stream by one decode step on the shared pipeline, retiring
-    /// first-token and finish edges at the post-step clock. Returns
-    /// `false` once every request has finished.
+    /// Requests turned away by admission control so far.
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Running requests evicted by deadline load-shedding so far.
+    pub fn evicted(&self) -> usize {
+        self.evicted
+    }
+
+    /// Current degradation rung (0 = healthy).
+    pub fn rung(&self) -> u8 {
+        self.ctrl.rung()
+    }
+
+    /// Per-request lifecycle stats (index = request id). Timestamps are
+    /// only final once the run is over.
+    pub fn stats(&self) -> &[RequestStat] {
+        &self.stats
+    }
+
+    /// The decode budget request `req` would be admitted with.
+    fn decode_len(&self, req: usize) -> usize {
+        let want =
+            if self.lengths.is_empty() { self.cfg.max_tokens } else { self.lengths[req] };
+        want.min(self.trace.decode_len(req)).max(1)
+    }
+
+    /// Admission control turned `req` away: stamp its terminal stats and
+    /// emit its (arrive, reject) lifecycle pair.
+    fn reject(&mut self, req: usize, reason: u32) {
+        let arrival = self.arrivals[req];
+        let now = self.sim.now();
+        self.stats[req].arrival_ns = arrival;
+        self.stats[req].finish_ns = now;
+        self.stats[req].outcome = RequestOutcome::Rejected;
+        self.sim.note_event(Event::RequestArrive {
+            req: req as u32,
+            at: arrival,
+            prompt_len: self.trace.prompt_len(req) as u32,
+            max_tokens: self.decode_len(req) as u32,
+        });
+        self.sim.note_event(Event::RequestReject { req: req as u32, at: now, reason });
+        self.rejected += 1;
+        self.done += 1;
+    }
+
+    /// Apply one ladder rung's cumulative interventions to the pipeline.
+    fn apply_rung(&mut self, r: u8) {
+        // rung >= 1: halve the speculative prefetch window (floor 1 so a
+        // bundle that prefetches at all keeps its pipeline shape)
+        self.sim.policy.prefetch_size = if r >= 1 && self.base_prefetch > 0 {
+            (self.base_prefetch / 2).max(1)
+        } else {
+            self.base_prefetch
+        };
+        // rung >= 2: stop predictive NVMe→host promote-ahead
+        self.sim.set_promote_paused(r >= 2);
+        // rung 3: price assignment through the CPU-shifted cost view
+        self.sim.set_degraded_assign(r >= 3);
+    }
+
+    /// One continuous-batching tick: drain due arrivals into the pending
+    /// queue (bounded when guarded), admit from the queue head into free
+    /// slots (rejecting hopeless deadlines when guarded), let the
+    /// overload controller move the degradation ladder, prefill the
+    /// newcomers, advance every running stream by one decode step on the
+    /// shared pipeline, retire first-token/finish edges, and — when
+    /// guarded — evict the most-blown running request. Returns `false`
+    /// once every request is resolved.
     pub fn tick(&mut self) -> bool {
-        if self.finished == self.cfg.n_requests {
+        if self.done == self.cfg.n_requests {
             return false;
         }
-        // an empty batch idles the pipeline forward to the next arrival —
-        // run_step never moves the clock for an empty step
-        if self.running.is_empty() {
+        // an empty pipeline idles forward to the next arrival — run_step
+        // never moves the clock for an empty step
+        if self.running.is_empty()
+            && self.pending_head == self.pending.len()
+            && self.next_arrival < self.cfg.n_requests
+        {
             self.sim.advance_to(self.arrivals[self.next_arrival]);
         }
-        // admission: due arrivals fill free batch slots in arrival order
-        self.admit_buf.clear();
-        while self.running.len() < self.cfg.max_batch
-            && self.next_arrival < self.cfg.n_requests
+        let tick_start = self.sim.now();
+        // drain due arrivals into the pending queue, in arrival order;
+        // a guarded run bounds the queue and 503s the overflow
+        while self.next_arrival < self.cfg.n_requests
             && self.arrivals[self.next_arrival] <= self.sim.now()
         {
             let req = self.next_arrival;
             self.next_arrival += 1;
-            let arrival = self.arrivals[req];
+            if self.guarded
+                && self.cfg.slo.queue_cap > 0
+                && self.pending.len() - self.pending_head >= self.cfg.slo.queue_cap
+            {
+                self.reject(req, REJECT_QUEUE_FULL);
+                continue;
+            }
+            self.pending.push(req as u32);
+        }
+        // admission: the queue head fills free batch slots in arrival
+        // order; a guarded run skips requests whose deadline is blown
+        // (satellite bugfix: such requests must not burn a slot) or
+        // predicted blown by the rolling step-latency estimate
+        self.admit_buf.clear();
+        while self.running.len() < self.cfg.max_batch
+            && self.pending_head < self.pending.len()
+        {
+            let req = self.pending[self.pending_head] as usize;
+            self.pending_head += 1;
             let now = self.sim.now();
+            if self.guarded {
+                let st = &self.stats[req];
+                if now >= st.ttft_deadline_ns || now >= st.deadline_ns {
+                    self.reject(req, REJECT_DEADLINE_BLOWN);
+                    continue;
+                }
+                // one-tick lookahead: an admitted request's first token
+                // lands at the end of its admission tick, so one rolling
+                // step span is the whole remaining TTFT estimate
+                let predicted = now.saturating_add(self.ctrl.ewma_step_ns());
+                if self.ctrl.ewma_step_ns() > 0 && predicted > st.ttft_deadline_ns {
+                    self.reject(req, REJECT_PREDICTED_TTFT);
+                    continue;
+                }
+            }
+            let arrival = self.arrivals[req];
             let prompt_len = self.trace.prompt_len(req);
-            let decode_len = self.cfg.max_tokens.min(self.trace.decode_len(req)).max(1);
+            let decode_len = self.decode_len(req);
             self.stats[req].arrival_ns = arrival;
             self.stats[req].admit_ns = now;
             self.sim.note_event(Event::RequestArrive {
@@ -190,6 +391,22 @@ impl<'a, S: TraceSink> ServeSim<'a, S> {
             });
             self.running.push(Active { req, generated: 0, decode_len, prompt_len });
             self.admit_buf.push(req);
+            self.admitted += 1;
+        }
+        // overload controller: one observation per tick on the post-
+        // admission backlog; at most one rung transition, hysteretic
+        if self.guarded {
+            let depth = self.pending.len() - self.pending_head;
+            if let Some((from, to)) = self.ctrl.observe(depth) {
+                let at = self.sim.now();
+                let (from, to, queue_depth) = (from as u32, to as u32, depth as u32);
+                self.sim.note_event(if to > from {
+                    Event::DegradeEnter { at, from, to, queue_depth }
+                } else {
+                    Event::DegradeExit { at, from, to, queue_depth }
+                });
+                self.apply_rung(self.ctrl.rung());
+            }
         }
         // prefill the newcomers as one batch step on the shared pipeline
         // (continuous batching without chunked prefill: the prefill step
@@ -205,7 +422,8 @@ impl<'a, S: TraceSink> ServeSim<'a, S> {
             self.sim.run_step(&self.step, kv.max(1), Phase::Prefill);
         }
         // one decode step over every running stream, each at its own
-        // per-request offset
+        // per-request offset (an all-rejected tick composes an empty
+        // step, which run_step ignores without moving the clock)
         self.active_buf.clear();
         let mut kv_sum = 0usize;
         for a in &self.running {
@@ -239,12 +457,48 @@ impl<'a, S: TraceSink> ServeSim<'a, S> {
                     tokens: generated as u32,
                 });
                 self.finished += 1;
+                self.done += 1;
                 self.running.swap_remove(i);
             } else {
                 i += 1;
             }
         }
-        self.finished < self.cfg.n_requests
+        if self.guarded {
+            // feed the rolling step-latency estimate (idle gaps excluded:
+            // tick_start is taken after the idle advance)
+            if now > tick_start {
+                self.ctrl.note_step(now - tick_start);
+                if self.ctrl.rung() > 0 {
+                    self.degraded_ns += now - tick_start;
+                }
+            }
+            // load shedding: evict the running request with the most-
+            // blown completion deadline (at most one per tick), freeing
+            // its slot and its share of the compose workload
+            let mut worst: Option<(usize, Ns)> = None;
+            for (i, a) in self.running.iter().enumerate() {
+                let over = now.saturating_sub(self.stats[a.req].deadline_ns);
+                if over > 0 && worst.map(|(_, w)| over > w).unwrap_or(true) {
+                    worst = Some((i, over));
+                }
+            }
+            if let Some((i, over)) = worst {
+                let a = self.running[i];
+                self.stats[a.req].finish_ns = now;
+                self.stats[a.req].tokens = a.generated as u64;
+                self.stats[a.req].outcome = RequestOutcome::Evicted;
+                self.sim.note_event(Event::RequestEvict {
+                    req: a.req as u32,
+                    at: now,
+                    generated: a.generated as u32,
+                    overdue_ns: over,
+                });
+                self.evicted += 1;
+                self.done += 1;
+                self.running.swap_remove(i);
+            }
+        }
+        self.done < self.cfg.n_requests
     }
 
     /// Drive the run to completion.
@@ -253,24 +507,29 @@ impl<'a, S: TraceSink> ServeSim<'a, S> {
     }
 
     /// Finish: per-request SLO aggregation over the underlying replay's
-    /// metrics (call after [`Self::run`]; unfinished requests would
+    /// metrics (call after [`Self::run`]; unresolved requests would
     /// report zero timestamps).
     pub fn finish(self) -> ServeReport {
-        ServeReport::from_stats(&self.stats, self.sim.finish())
+        let mut r = ServeReport::from_stats(&self.stats, self.sim.finish());
+        r.degraded_ns = self.degraded_ns;
+        r
     }
 
     /// [`Self::finish`] that also hands back the sink.
     pub fn finish_with_sink(self) -> (ServeReport, S) {
         let (run, sink) = self.sim.finish_with_sink();
-        (ServeReport::from_stats(&self.stats, run), sink)
+        let mut r = ServeReport::from_stats(&self.stats, run);
+        r.degraded_ns = self.degraded_ns;
+        (r, sink)
     }
 }
 
 /// One self-contained serving cell: build the scenario's cost model,
 /// synthetic stream pool, and policy bundle, attach the shared tiered
 /// store (when the scenario is memory-limited) and an optional fault
-/// plan, serve every request, and report — with the whole-run digest
-/// covering scheduling and request lifecycle alike. This is the unit the
+/// plan, serve every request under the configured SLO policy, and report
+/// — with the whole-run digest covering scheduling, request lifecycle,
+/// and overload-protection decisions alike. This is the unit the
 /// `expt serve` sweep, `dali serve --sim`, and the serve bench tier all
 /// share.
 pub fn simulate_serve(
@@ -284,13 +543,14 @@ pub fn simulate_serve(
     let dims = &model.sim;
     let cost = CostModel::for_scenario(presets, scenario)?;
     // stream pool: 16 synthetic locality streams, long enough that no
-    // request is clamped below its requested max_tokens
+    // request is clamped below its requested max_tokens (heterogeneous
+    // length draws included)
     let trace = synthetic_locality_trace(
         dims.layers,
         dims.n_routed,
         dims.top_k,
         16,
-        cfg.max_tokens.max(16),
+        cfg.max_tokens.max(cfg.arrival.len_max).max(16),
         cfg.seed ^ 0x7ace,
     );
     let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
@@ -320,17 +580,35 @@ mod tests {
         simulate_serve(&presets, "mixtral-sim-ram16", Framework::Dali, cfg, None).unwrap()
     }
 
+    /// A bursty cell hot enough that a tight SLO policy has real work to
+    /// do: every slot contended, deep queue, long waits.
+    fn overload_cfg() -> ServeSimCfg {
+        ServeSimCfg {
+            arrival: ArrivalSpec::parse_spec("kind=bursty,rate=256,burst=8").unwrap(),
+            n_requests: 24,
+            max_batch: 4,
+            max_tokens: 8,
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn every_request_finishes_with_sane_lifecycle() {
         let cfg = ServeSimCfg { n_requests: 12, max_batch: 4, max_tokens: 8, ..Default::default() };
         let r = mk_sim(&cfg);
         assert_eq!(r.requests, 12);
+        assert_eq!(r.finished, 12, "unguarded runs resolve everything as finished");
+        assert_eq!((r.rejected, r.evicted), (0, 0));
         assert_eq!(r.tokens_out, 12 * 8, "every request generates its full budget");
         assert!(r.makespan_ns > 0);
         assert!(r.ttft_p50_ns > 0 && r.ttft_p99_ns >= r.ttft_p50_ns);
         assert!(r.tpot_p50_ns > 0 && r.tpot_p99_ns >= r.tpot_p50_ns);
         assert!(r.run.trace_digest.is_some(), "serve cells are digest-locked");
         assert_eq!(r.run.tokens_out, r.tokens_out, "sim and SLO views agree on tokens");
+        // no deadlines installed: everything trivially attains
+        assert_eq!(r.slo_attained, 12);
+        assert_eq!(r.goodput_tokens, r.tokens_out);
+        assert_eq!(r.degraded_ns, 0);
     }
 
     #[test]
@@ -390,5 +668,137 @@ mod tests {
             StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7);
         let bad = ServeSimCfg { max_batch: 0, ..Default::default() };
         assert!(ServeSim::new(sim, &trace, bad).is_err());
+        // an invalid SLO spec is rejected at construction too
+        let presets2 = Presets::load_default().unwrap();
+        let bad_slo = ServeSimCfg {
+            slo: SloSpec { jitter: 2.0, ..SloSpec::default() },
+            ..Default::default()
+        };
+        assert!(
+            simulate_serve(&presets2, "mixtral-sim", Framework::Dali, &bad_slo, None).is_err()
+        );
+    }
+
+    // --- overload protection -------------------------------------------
+
+    #[test]
+    fn unlimited_and_observe_specs_are_digest_transparent() {
+        let cfg = overload_cfg();
+        let base = mk_sim(&cfg);
+        // the unlimited named spec is the default — same report, bit for bit
+        let unlimited = mk_sim(&ServeSimCfg {
+            slo: SloSpec::named("unlimited").unwrap(),
+            ..cfg.clone()
+        });
+        assert_eq!(base, unlimited, "unlimited SLO must be a no-op");
+        // observe mode scores tight deadlines without acting: identical
+        // digest, but attainment now reflects the missed budgets
+        let observe =
+            mk_sim(&ServeSimCfg { slo: SloSpec::named("observe").unwrap(), ..cfg.clone() });
+        assert_eq!(
+            observe.run.trace_digest, base.run.trace_digest,
+            "observe mode must not change a single event"
+        );
+        assert_eq!(observe.finished, base.finished);
+        assert_eq!((observe.rejected, observe.evicted), (0, 0));
+        assert!(
+            observe.slo_attained < observe.finished,
+            "a tight budget on an overloaded cell must show misses \
+             ({} attained of {})",
+            observe.slo_attained,
+            observe.finished
+        );
+    }
+
+    #[test]
+    fn blown_deadline_at_admit_is_rejected_not_admitted() {
+        // Regression (satellite): the PR 8 admission loop filled free
+        // slots in arrival order even when a request's deadline had
+        // already passed at admit time. With a microscopic TTFT budget,
+        // every queued request is blown by the time a slot frees up —
+        // admission must reject them, not let them burn slots.
+        let spec = SloSpec {
+            ttft_ms: 0.01, // 10 µs: only an instant admission could meet it
+            jitter: 0.0,
+            ..SloSpec::default()
+        };
+        let r = mk_sim(&ServeSimCfg { slo: spec, ..overload_cfg() });
+        assert_eq!(
+            r.finished + r.rejected + r.evicted,
+            r.requests,
+            "every request resolves exactly once"
+        );
+        assert!(r.rejected > 0, "queued-past-deadline requests must be rejected");
+        // rejected requests never produced tokens and never held a slot
+        assert!(r.tokens_out <= (r.finished + r.evicted) * 8);
+    }
+
+    #[test]
+    fn guarded_overload_cell_rejects_and_conserves() {
+        let r = mk_sim(&ServeSimCfg {
+            slo: SloSpec::named("tight").unwrap(),
+            ..overload_cfg()
+        });
+        assert_eq!(r.finished + r.rejected + r.evicted, r.requests);
+        assert!(r.rejected > 0, "a tight policy on an overload cell must shed");
+        assert!(r.slo_attained <= r.finished);
+        assert!(r.goodput_tokens <= r.tokens_out);
+        let att = r.slo_attainment();
+        assert!((0.0..=1.0).contains(&att) && att.is_finite());
+        // determinism holds with the full guard stack active
+        let again = mk_sim(&ServeSimCfg {
+            slo: SloSpec::named("tight").unwrap(),
+            ..overload_cfg()
+        });
+        assert_eq!(r, again, "guarded cells stay bit-identical");
+    }
+
+    #[test]
+    fn eviction_frees_slots_for_blown_completion_deadlines() {
+        // completion budget only (TTFT unlimited): nothing is rejected
+        // for TTFT, but long-running requests blow the completion
+        // deadline mid-decode and must be evicted with partial output.
+        let base = mk_sim(&overload_cfg());
+        let spec = SloSpec {
+            total_ms: (base.makespan_ns / 4).max(1) as f64 / 1e6,
+            jitter: 0.0,
+            ..SloSpec::default()
+        };
+        let r = mk_sim(&ServeSimCfg { slo: spec, ..overload_cfg() });
+        assert_eq!(r.finished + r.rejected + r.evicted, r.requests);
+        assert!(
+            r.evicted > 0 || r.rejected > 0,
+            "a quarter-makespan completion budget must shed load \
+             (finished {} rejected {} evicted {})",
+            r.finished,
+            r.rejected,
+            r.evicted
+        );
+        // evicted requests surrender their slot but keep partial tokens
+        assert!(r.tokens_out > 0);
+    }
+
+    #[test]
+    fn heterogeneous_lengths_change_tokens_only_when_enabled() {
+        let uniform = mk_sim(&ServeSimCfg { n_requests: 12, max_batch: 4, ..Default::default() });
+        assert_eq!(uniform.tokens_out, 12 * 16, "flat budget without a length distribution");
+        let mixed = mk_sim(&ServeSimCfg {
+            arrival: ArrivalSpec::parse_spec("len_min=2,len_max=24").unwrap(),
+            n_requests: 12,
+            max_batch: 4,
+            ..Default::default()
+        });
+        assert_eq!(mixed.finished, 12);
+        assert_ne!(
+            mixed.tokens_out,
+            12 * 16,
+            "a 2..=24 draw over 12 requests landing exactly on 192 tokens \
+             would be a one-in-many coincidence worth investigating"
+        );
+        assert!(mixed.tokens_out >= 12 * 2 && mixed.tokens_out <= 12 * 24);
+        assert_ne!(
+            mixed.run.trace_digest, uniform.run.trace_digest,
+            "length draws legitimately change the schedule"
+        );
     }
 }

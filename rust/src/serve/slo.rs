@@ -1,0 +1,498 @@
+//! Per-request SLO specifications and the hysteretic overload controller.
+//!
+//! An [`SloSpec`] carries two families of knobs:
+//!
+//! - **Deadlines** — per-request TTFT and completion budgets (ms), spread
+//!   deterministically around the nominal value by a seeded jitter factor,
+//!   plus a pending-queue capacity. These drive *admission control*
+//!   (reject a request whose deadline is already hopeless) and *load
+//!   shedding* (evict the running request with the most-blown deadline).
+//! - **Watermarks** — queue-depth and rolling step-latency thresholds
+//!   with dwell counters that drive the [`OverloadController`]'s
+//!   degradation ladder.
+//!
+//! Everything is `Copy`, parsed from the same `key=value,...` spec form
+//! as [`ArrivalSpec`](super::ArrivalSpec), named in the `slo` section of
+//! `configs/presets.json`, and — critically — *inert by default*: the
+//! unlimited spec leaves the serving simulation bit-identical to an
+//! unguarded run (the transparency lock in `rust/tests/serve_sim.rs`).
+//!
+//! The controller is a small hysteretic state machine over rungs
+//! `0..=3` (healthy → shrink-prefetch → pause-promote-ahead → degraded
+//! assignment costs). Escalation needs `dwell_up` consecutive hot
+//! observations, de-escalation `dwell_down` consecutive cool ones, and
+//! the band between the watermarks resets both counters — so a load
+//! hovering at the threshold holds the current rung instead of
+//! oscillating. At most one rung transition happens per tick.
+
+use anyhow::{bail, Result};
+
+use crate::hw::Ns;
+
+/// splitmix64-style finalizer: the same stateless mixer the fault plans
+/// use, so per-request deadline jitter is a pure function of
+/// `(seed, request id)` — no RNG stream to keep in sync with arrivals.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// An SLO policy: per-request deadline budgets + overload watermarks.
+/// `Copy`, validated at parse time, zero values switch each knob off.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Nominal time-to-first-token budget in ms (0 = unlimited).
+    pub ttft_ms: f64,
+    /// Nominal completion budget in ms from arrival (0 = unlimited).
+    pub total_ms: f64,
+    /// Deadline spread in [0, 1): each request's budgets are scaled by a
+    /// deterministic factor in `[1 - jitter, 1 + jitter)`.
+    pub jitter: f64,
+    /// Pending-queue capacity; arrivals beyond it are rejected
+    /// (0 = unbounded).
+    pub queue_cap: usize,
+    /// `false` = observe-only: deadlines are scored in the report but
+    /// nothing is rejected, evicted, or degraded — the digest stays
+    /// identical to the unguarded run (the fair comparison baseline).
+    pub enforce: bool,
+    /// Queue depth at or above which a tick counts as hot (0 = axis off).
+    pub hi_queue: usize,
+    /// Queue depth at or below which a tick can count as cool.
+    pub lo_queue: usize,
+    /// Rolling (EWMA) step latency in ms above which a tick counts as
+    /// hot (0 = axis off).
+    pub hi_step_ms: f64,
+    /// Rolling step latency in ms below which a tick can count as cool.
+    pub lo_step_ms: f64,
+    /// Consecutive hot ticks required to escalate one rung (>= 1).
+    pub dwell_up: u32,
+    /// Consecutive cool ticks required to de-escalate one rung (>= 1).
+    pub dwell_down: u32,
+}
+
+impl Default for SloSpec {
+    /// The unlimited policy: no deadlines, no queue bound, no ladder.
+    fn default() -> Self {
+        SloSpec {
+            ttft_ms: 0.0,
+            total_ms: 0.0,
+            jitter: 0.0,
+            queue_cap: 0,
+            enforce: true,
+            hi_queue: 0,
+            lo_queue: 0,
+            hi_step_ms: 0.0,
+            lo_step_ms: 0.0,
+            dwell_up: 2,
+            dwell_down: 4,
+        }
+    }
+}
+
+impl SloSpec {
+    /// True when every protective knob is off — the spec that must leave
+    /// the serving digest bit-identical to an unguarded run.
+    pub fn is_unlimited(&self) -> bool {
+        self.ttft_ms == 0.0
+            && self.total_ms == 0.0
+            && self.queue_cap == 0
+            && self.hi_queue == 0
+            && self.hi_step_ms == 0.0
+    }
+
+    /// True when the spec actually changes serving behavior (deadlines
+    /// or ladder active *and* enforcement on).
+    pub fn is_guarded(&self) -> bool {
+        self.enforce && !self.is_unlimited()
+    }
+
+    /// Built-in named policies (work without a presets file; mirrored by
+    /// the `slo` section of `configs/presets.json`).
+    pub fn named(name: &str) -> Option<SloSpec> {
+        match name {
+            "unlimited" | "none" | "off" => Some(SloSpec::default()),
+            "tight" => Some(SloSpec {
+                ttft_ms: 50.0,
+                total_ms: 400.0,
+                jitter: 0.25,
+                queue_cap: 16,
+                enforce: true,
+                hi_queue: 8,
+                lo_queue: 2,
+                hi_step_ms: 20.0,
+                lo_step_ms: 5.0,
+                dwell_up: 2,
+                dwell_down: 4,
+            }),
+            "lenient" => Some(SloSpec {
+                ttft_ms: 500.0,
+                total_ms: 5000.0,
+                jitter: 0.25,
+                queue_cap: 64,
+                enforce: true,
+                hi_queue: 24,
+                lo_queue: 6,
+                hi_step_ms: 50.0,
+                lo_step_ms: 10.0,
+                dwell_up: 3,
+                dwell_down: 6,
+            }),
+            // same budgets as `tight`, but scored without acting — the
+            // digest-identical baseline for guarded-vs-unguarded tables
+            "observe" => Some(SloSpec { enforce: false, ..SloSpec::named("tight").unwrap() }),
+            _ => None,
+        }
+    }
+
+    /// Parse a `key=value,...` spec, e.g.
+    /// `ttft_ms=50,total_ms=400,queue_cap=16,hi_queue=8`. The empty
+    /// string parses to the unlimited default; unknown keys are errors.
+    pub fn parse_spec(spec: &str) -> Result<SloSpec> {
+        let mut s = SloSpec::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = match part.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("slo spec entry '{part}' is not key=value"),
+            };
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "ttft_ms" => s.ttft_ms = v.parse()?,
+                "total_ms" => s.total_ms = v.parse()?,
+                "jitter" => s.jitter = v.parse()?,
+                "queue_cap" => s.queue_cap = v.parse()?,
+                "enforce" => {
+                    s.enforce = match v {
+                        "1" | "true" => true,
+                        "0" | "false" => false,
+                        _ => bail!("slo enforce must be 0/1/true/false, got '{v}'"),
+                    }
+                }
+                "hi_queue" => s.hi_queue = v.parse()?,
+                "lo_queue" => s.lo_queue = v.parse()?,
+                "hi_step_ms" => s.hi_step_ms = v.parse()?,
+                "lo_step_ms" => s.lo_step_ms = v.parse()?,
+                "dwell_up" => s.dwell_up = v.parse()?,
+                "dwell_down" => s.dwell_down = v.parse()?,
+                _ => bail!("unknown slo spec key '{k}'"),
+            }
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("ttft_ms", self.ttft_ms),
+            ("total_ms", self.total_ms),
+            ("hi_step_ms", self.hi_step_ms),
+            ("lo_step_ms", self.lo_step_ms),
+        ] {
+            if !(v >= 0.0 && v.is_finite()) {
+                bail!("slo {name} must be finite and >= 0, got {v}");
+            }
+        }
+        if !(0.0..1.0).contains(&self.jitter) {
+            bail!("slo jitter must be in [0, 1), got {}", self.jitter);
+        }
+        if self.dwell_up == 0 || self.dwell_down == 0 {
+            bail!("slo dwell_up/dwell_down must be >= 1");
+        }
+        if self.hi_queue > 0 && self.lo_queue > self.hi_queue {
+            bail!(
+                "slo lo_queue ({}) must not exceed hi_queue ({})",
+                self.lo_queue,
+                self.hi_queue
+            );
+        }
+        if self.hi_step_ms > 0.0 && self.lo_step_ms > self.hi_step_ms {
+            bail!(
+                "slo lo_step_ms ({}) must not exceed hi_step_ms ({})",
+                self.lo_step_ms,
+                self.hi_step_ms
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-request absolute deadlines `(ttft_deadline, finish_deadline)`
+    /// in virtual ns, jittered deterministically from `(seed, req)`.
+    /// An unlimited budget maps to `Ns::MAX`.
+    pub fn deadlines(&self, seed: u64, req: usize, arrival: Ns) -> (Ns, Ns) {
+        let h = mix(seed ^ 0x51_0dea_d1 ^ (req as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        // 53 uniform mantissa bits -> u in [0, 1)
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let factor = 1.0 + self.jitter * (2.0 * u - 1.0);
+        let budget = |ms: f64| -> Ns {
+            if ms <= 0.0 {
+                Ns::MAX
+            } else {
+                arrival.saturating_add((ms * factor * 1e6) as Ns)
+            }
+        };
+        (budget(self.ttft_ms), budget(self.total_ms))
+    }
+}
+
+/// The degradation rungs, top of the ladder last. Kept as plain `u8`
+/// values in the hot path; this enum documents what each rung means.
+pub mod rung {
+    /// Fully healthy: no intervention.
+    pub const HEALTHY: u8 = 0;
+    /// Prefetch window halved — less speculative NVMe/PCIe pressure.
+    pub const SHRINK_PREFETCH: u8 = 1;
+    /// Promote-ahead paused on top of rung 1 — the tiered store stops
+    /// issuing predictive NVMe→host promotions.
+    pub const PAUSE_PROMOTE: u8 = 2;
+    /// Assignment priced through the degraded (CPU-shifted) cost view on
+    /// top of rungs 1+2 — Greedy sheds marginal experts CPU-ward.
+    pub const DEGRADED_ASSIGN: u8 = 3;
+}
+
+/// Hysteretic overload controller: observes queue depth and rolling step
+/// latency once per tick, escalates/de-escalates the degradation rung
+/// with dwell counters. Pure arithmetic — no allocation, ever.
+#[derive(Debug, Clone, Copy)]
+pub struct OverloadController {
+    spec: SloSpec,
+    current: u8,
+    hot: u32,
+    cool: u32,
+    ewma_step_ns: Ns,
+}
+
+impl OverloadController {
+    pub const MAX_RUNG: u8 = rung::DEGRADED_ASSIGN;
+
+    pub fn new(spec: SloSpec) -> Self {
+        OverloadController { spec, current: rung::HEALTHY, hot: 0, cool: 0, ewma_step_ns: 0 }
+    }
+
+    /// Current degradation rung (0 = healthy).
+    pub fn rung(&self) -> u8 {
+        self.current
+    }
+
+    /// Rolling step-latency estimate (0 until the first sample).
+    pub fn ewma_step_ns(&self) -> Ns {
+        self.ewma_step_ns
+    }
+
+    /// Fold one tick's wall (virtual) duration into the rolling
+    /// step-latency estimate. The first sample seeds the EWMA directly.
+    pub fn note_step(&mut self, dur_ns: Ns) {
+        self.ewma_step_ns = if self.ewma_step_ns == 0 {
+            dur_ns
+        } else {
+            (self.ewma_step_ns.saturating_mul(3).saturating_add(dur_ns)) / 4
+        };
+    }
+
+    /// One controller observation. Returns `Some((from, to))` when the
+    /// rung changes (at most one step per tick), `None` otherwise.
+    ///
+    /// Hot when *either* axis is above its high watermark; cool only
+    /// when *every* enabled axis is below its low watermark; the band in
+    /// between resets both dwell counters (the hysteresis hold).
+    pub fn observe(&mut self, queue_depth: usize) -> Option<(u8, u8)> {
+        let s = &self.spec;
+        let q_axis = s.hi_queue > 0;
+        let l_axis = s.hi_step_ms > 0.0;
+        if !q_axis && !l_axis {
+            return None;
+        }
+        let step_ms = self.ewma_step_ns as f64 / 1e6;
+        let hot = (q_axis && queue_depth >= s.hi_queue)
+            || (l_axis && step_ms > s.hi_step_ms);
+        let cool = (!q_axis || queue_depth <= s.lo_queue)
+            && (!l_axis || step_ms < s.lo_step_ms);
+        if hot {
+            self.cool = 0;
+            self.hot = self.hot.saturating_add(1);
+            if self.hot >= s.dwell_up && self.current < Self::MAX_RUNG {
+                self.hot = 0;
+                let from = self.current;
+                self.current += 1;
+                return Some((from, self.current));
+            }
+        } else if cool {
+            self.hot = 0;
+            self.cool = self.cool.saturating_add(1);
+            if self.cool >= s.dwell_down && self.current > rung::HEALTHY {
+                self.cool = 0;
+                let from = self.current;
+                self.current -= 1;
+                return Some((from, self.current));
+            }
+        } else {
+            self.hot = 0;
+            self.cool = 0;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_knobs() {
+        let s = SloSpec::parse_spec(
+            "ttft_ms=50,total_ms=400,jitter=0.25,queue_cap=16,hi_queue=8,lo_queue=2,\
+             hi_step_ms=20,lo_step_ms=5,dwell_up=2,dwell_down=4",
+        )
+        .unwrap();
+        assert_eq!(s, SloSpec::named("tight").unwrap());
+        assert!(s.is_guarded());
+        let obs = SloSpec::parse_spec("ttft_ms=50,enforce=false").unwrap();
+        assert!(!obs.enforce && !obs.is_guarded() && !obs.is_unlimited());
+        // the empty spec is the unlimited default
+        let empty = SloSpec::parse_spec("").unwrap();
+        assert_eq!(empty, SloSpec::default());
+        assert!(empty.is_unlimited() && !empty.is_guarded());
+        assert!(SloSpec::parse_spec("jitter=1.5").is_err());
+        assert!(SloSpec::parse_spec("ttft_ms=-1").is_err());
+        assert!(SloSpec::parse_spec("dwell_up=0").is_err());
+        assert!(SloSpec::parse_spec("hi_queue=4,lo_queue=8").is_err());
+        assert!(SloSpec::parse_spec("hi_step_ms=5,lo_step_ms=10").is_err());
+        assert!(SloSpec::parse_spec("frobnicate=1").is_err());
+        assert!(SloSpec::parse_spec("ttft_ms").is_err());
+    }
+
+    #[test]
+    fn named_policies_exist() {
+        assert!(SloSpec::named("unlimited").unwrap().is_unlimited());
+        assert!(SloSpec::named("tight").unwrap().is_guarded());
+        assert!(SloSpec::named("lenient").unwrap().is_guarded());
+        let obs = SloSpec::named("observe").unwrap();
+        assert!(!obs.is_guarded() && !obs.is_unlimited());
+        assert_eq!(
+            SloSpec { enforce: true, ..obs },
+            SloSpec::named("tight").unwrap(),
+            "observe must score exactly the tight budgets"
+        );
+        assert!(SloSpec::named("no-such").is_none());
+        for name in ["unlimited", "tight", "lenient", "observe"] {
+            SloSpec::named(name).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn deadlines_are_deterministic_and_jitter_bounded() {
+        let s = SloSpec::named("tight").unwrap();
+        for req in 0..64 {
+            let (t1, d1) = s.deadlines(7, req, 1_000_000);
+            let (t2, d2) = s.deadlines(7, req, 1_000_000);
+            assert_eq!((t1, d1), (t2, d2), "deadlines are a pure function");
+            // budgets stay within the +/- 25% jitter band of nominal
+            let ttft_budget = (t1 - 1_000_000) as f64 / 1e6;
+            let total_budget = (d1 - 1_000_000) as f64 / 1e6;
+            assert!(
+                (37.5..62.5).contains(&ttft_budget),
+                "req {req}: ttft budget {ttft_budget}ms outside jitter band"
+            );
+            assert!(
+                (300.0..500.0).contains(&total_budget),
+                "req {req}: total budget {total_budget}ms outside jitter band"
+            );
+        }
+        // jitter actually spreads: not every request gets the same budget
+        let spread: std::collections::BTreeSet<u64> =
+            (0..64).map(|r| s.deadlines(7, r, 0).0).collect();
+        assert!(spread.len() > 32, "jitter must spread deadlines");
+        // a different seed moves the draw
+        assert_ne!(s.deadlines(7, 0, 0), s.deadlines(8, 0, 0));
+        // unlimited budgets map to Ns::MAX and never saturate into a real
+        // deadline, whatever the arrival instant
+        let unlim = SloSpec::default();
+        assert_eq!(unlim.deadlines(7, 3, u64::MAX - 5), (Ns::MAX, Ns::MAX));
+    }
+
+    #[test]
+    fn controller_escalates_and_deescalates_with_dwell() {
+        let spec = SloSpec::named("tight").unwrap(); // dwell_up 2, dwell_down 4
+        let mut c = OverloadController::new(spec);
+        assert_eq!(c.rung(), rung::HEALTHY);
+        // constant overload: one rung per dwell_up ticks, capped at 3
+        let mut transitions = Vec::new();
+        for _ in 0..12 {
+            if let Some(t) = c.observe(100) {
+                transitions.push(t);
+            }
+        }
+        assert_eq!(transitions, vec![(0, 1), (1, 2), (2, 3)], "monotone ladder up");
+        assert_eq!(c.rung(), OverloadController::MAX_RUNG);
+        // constant calm: one rung down per dwell_down ticks, floor at 0
+        let mut down = Vec::new();
+        for _ in 0..24 {
+            if let Some(t) = c.observe(0) {
+                down.push(t);
+            }
+        }
+        assert_eq!(down, vec![(3, 2), (2, 1), (1, 0)], "monotone ladder down");
+        assert_eq!(c.rung(), rung::HEALTHY);
+    }
+
+    #[test]
+    fn hold_band_prevents_oscillation() {
+        let spec = SloSpec::named("tight").unwrap(); // hi_queue 8, lo_queue 2
+        let mut c = OverloadController::new(spec);
+        for _ in 0..4 {
+            c.observe(100);
+        }
+        let r = c.rung();
+        assert!(r > 0, "warm-up must have escalated");
+        // depth 5 sits between the watermarks: the controller holds its
+        // rung forever instead of flapping
+        for _ in 0..64 {
+            assert_eq!(c.observe(5), None, "hold band must not transition");
+        }
+        assert_eq!(c.rung(), r);
+        // a single hot tick after a long hold must not instantly escalate
+        // (dwell counters were reset by the hold band)
+        assert_eq!(c.observe(100), None);
+    }
+
+    #[test]
+    fn disabled_ladder_never_transitions() {
+        let mut c = OverloadController::new(SloSpec::default());
+        for depth in [0usize, 5, 1000] {
+            for _ in 0..16 {
+                c.note_step(50_000_000);
+                assert_eq!(c.observe(depth), None);
+            }
+        }
+        assert_eq!(c.rung(), rung::HEALTHY);
+    }
+
+    #[test]
+    fn ewma_tracks_step_latency() {
+        let mut c = OverloadController::new(SloSpec::named("tight").unwrap());
+        assert_eq!(c.ewma_step_ns(), 0);
+        c.note_step(1000);
+        assert_eq!(c.ewma_step_ns(), 1000, "first sample seeds the estimate");
+        c.note_step(2000);
+        assert_eq!(c.ewma_step_ns(), 1250, "(3*1000 + 2000) / 4");
+        for _ in 0..64 {
+            c.note_step(2000);
+        }
+        assert!(c.ewma_step_ns() > 1900, "estimate converges to the plateau");
+        // the latency axis alone can drive the ladder
+        let mut l = OverloadController::new(SloSpec {
+            hi_queue: 0,
+            lo_queue: 0,
+            ..SloSpec::named("tight").unwrap()
+        });
+        for _ in 0..8 {
+            l.note_step(100_000_000); // 100ms >> hi_step_ms=20
+            l.observe(0);
+        }
+        assert!(l.rung() > 0, "latency axis must escalate on its own");
+    }
+}

@@ -156,6 +156,20 @@ pub enum Event {
     /// A request finished and left the batch after generating `tokens`
     /// decode tokens.
     RequestFinish { req: u32, at: Ns, tokens: u32 },
+    /// Admission control turned a request away at `at`. `reason`:
+    /// 0 = deadline already blown at admit time, 1 = pending queue at
+    /// capacity on arrival, 2 = predicted TTFT exceeds the deadline.
+    RequestReject { req: u32, at: Ns, reason: u32 },
+    /// Load shedding evicted a running request whose completion deadline
+    /// was blown by `overdue_ns`, freeing its slot after `generated`
+    /// decode tokens.
+    RequestEvict { req: u32, at: Ns, generated: u32, overdue_ns: Ns },
+    /// The overload controller escalated the degradation ladder
+    /// (`from` → `to`, one rung) with `queue_depth` requests pending.
+    DegradeEnter { at: Ns, from: u32, to: u32, queue_depth: u32 },
+    /// The overload controller de-escalated the degradation ladder
+    /// (`from` → `to`, one rung) with `queue_depth` requests pending.
+    DegradeExit { at: Ns, from: u32, to: u32, queue_depth: u32 },
 }
 
 impl Event {
@@ -183,6 +197,10 @@ impl Event {
             Event::RequestAdmit { .. } => "request_admit",
             Event::RequestFirstToken { .. } => "request_first_token",
             Event::RequestFinish { .. } => "request_finish",
+            Event::RequestReject { .. } => "request_reject",
+            Event::RequestEvict { .. } => "request_evict",
+            Event::DegradeEnter { .. } => "degrade_enter",
+            Event::DegradeExit { .. } => "degrade_exit",
         }
     }
 
@@ -319,6 +337,33 @@ impl Event {
                 f(at);
                 f(tokens as u64);
             }
+            Event::RequestReject { req, at, reason } => {
+                f(22);
+                f(req as u64);
+                f(at);
+                f(reason as u64);
+            }
+            Event::RequestEvict { req, at, generated, overdue_ns } => {
+                f(23);
+                f(req as u64);
+                f(at);
+                f(generated as u64);
+                f(overdue_ns);
+            }
+            Event::DegradeEnter { at, from, to, queue_depth } => {
+                f(24);
+                f(at);
+                f(from as u64);
+                f(to as u64);
+                f(queue_depth as u64);
+            }
+            Event::DegradeExit { at, from, to, queue_depth } => {
+                f(25);
+                f(at);
+                f(from as u64);
+                f(to as u64);
+                f(queue_depth as u64);
+            }
         }
     }
 
@@ -434,6 +479,27 @@ impl Event {
                 ("at", Value::num(at as f64)),
                 ("tokens", Value::num(tokens as f64)),
             ]),
+            Event::RequestReject { req, at, reason } => Value::obj(vec![
+                ("ev", ev),
+                ("req", Value::num(req as f64)),
+                ("at", Value::num(at as f64)),
+                ("reason", Value::num(reason as f64)),
+            ]),
+            Event::RequestEvict { req, at, generated, overdue_ns } => Value::obj(vec![
+                ("ev", ev),
+                ("req", Value::num(req as f64)),
+                ("at", Value::num(at as f64)),
+                ("generated", Value::num(generated as f64)),
+                ("overdue_ns", Value::num(overdue_ns as f64)),
+            ]),
+            Event::DegradeEnter { at, from, to, queue_depth }
+            | Event::DegradeExit { at, from, to, queue_depth } => Value::obj(vec![
+                ("ev", ev),
+                ("at", Value::num(at as f64)),
+                ("from", Value::num(from as f64)),
+                ("to", Value::num(to as f64)),
+                ("queue_depth", Value::num(queue_depth as f64)),
+            ]),
         }
     }
 
@@ -543,6 +609,29 @@ impl Event {
                 at: ns("at")?,
                 tokens: le("tokens")?,
             },
+            "request_reject" => Event::RequestReject {
+                req: le("req")?,
+                at: ns("at")?,
+                reason: le("reason")?,
+            },
+            "request_evict" => Event::RequestEvict {
+                req: le("req")?,
+                at: ns("at")?,
+                generated: le("generated")?,
+                overdue_ns: ns("overdue_ns")?,
+            },
+            "degrade_enter" => Event::DegradeEnter {
+                at: ns("at")?,
+                from: le("from")?,
+                to: le("to")?,
+                queue_depth: le("queue_depth")?,
+            },
+            "degrade_exit" => Event::DegradeExit {
+                at: ns("at")?,
+                from: le("from")?,
+                to: le("to")?,
+                queue_depth: le("queue_depth")?,
+            },
             other => bail!("unknown trace event '{other}'"),
         })
     }
@@ -578,6 +667,10 @@ impl Event {
             Event::RequestAdmit { req: 0, at: 2_500, queue_ns: 500 },
             Event::RequestFirstToken { req: 0, at: 3_000, ttft_ns: 1_000 },
             Event::RequestFinish { req: 0, at: 9_000, tokens: 16 },
+            Event::RequestReject { req: 1, at: 2_100, reason: 2 },
+            Event::RequestEvict { req: 2, at: 8_000, generated: 5, overdue_ns: 3_000 },
+            Event::DegradeEnter { at: 4_000, from: 0, to: 1, queue_depth: 9 },
+            Event::DegradeExit { at: 7_000, from: 1, to: 0, queue_depth: 1 },
         ]
     }
 }

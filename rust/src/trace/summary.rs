@@ -73,6 +73,14 @@ pub struct TraceSummary {
     pub request_finishes: u64,
     /// Tokens generated across finished requests.
     pub request_tokens: u64,
+    /// Requests turned away by admission control.
+    pub request_rejects: u64,
+    /// Running requests evicted by deadline load-shedding.
+    pub request_evicts: u64,
+    /// Degradation-ladder escalations (rung went up).
+    pub degrade_enters: u64,
+    /// Degradation-ladder de-escalations (rung went down).
+    pub degrade_exits: u64,
     /// Wasted-prefetch count per (layer, expert), since the last reset.
     pub wasted_by_expert: BTreeMap<(u32, u32), u64>,
 }
@@ -149,6 +157,10 @@ impl TraceSummary {
                 self.request_finishes += 1;
                 self.request_tokens += tokens as u64;
             }
+            Event::RequestReject { .. } => self.request_rejects += 1,
+            Event::RequestEvict { .. } => self.request_evicts += 1,
+            Event::DegradeEnter { .. } => self.degrade_enters += 1,
+            Event::DegradeExit { .. } => self.degrade_exits += 1,
         }
     }
 
@@ -245,6 +257,17 @@ impl TraceSummary {
                 self.request_first_tokens,
                 self.request_finishes,
                 self.request_tokens
+            ));
+        }
+        if self.request_rejects + self.request_evicts + self.degrade_enters + self.degrade_exits
+            > 0
+        {
+            out.push_str(&format!(
+                "overload: rejected {}  evicted {}  degrade enters {}  exits {}\n",
+                self.request_rejects,
+                self.request_evicts,
+                self.degrade_enters,
+                self.degrade_exits
             ));
         }
         let top = self.top_wasted(top_n);

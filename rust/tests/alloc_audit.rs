@@ -19,7 +19,7 @@ use dali::coordinator::frameworks::{Framework, FrameworkCfg};
 use dali::coordinator::simrun::{Phase, StepSimulator};
 use dali::fault::FaultPlan;
 use dali::hw::CostModel;
-use dali::serve::{ServeSim, ServeSimCfg};
+use dali::serve::{ArrivalSpec, ServeSim, ServeSimCfg, SloSpec};
 use dali::store::TieredStore;
 use dali::trace::DigestSink;
 use dali::workload::trace::{synthetic_locality_trace, BatchStep};
@@ -263,6 +263,77 @@ fn run_step_steady_state_is_allocation_free() {
         assert_eq!(
             allocs, 0,
             "{scenario}/serve: steady-state serving tick allocated {allocs} times \
+             across {ticks} ticks (expected zero)"
+        );
+    }
+
+    // --- guarded-overload pass: the full SLO stack is zero-alloc too ------
+    // Tight SLO policy on a bursty overload cell: deadline checks, queue
+    // bounds, predicted-TTFT rejection, the hysteretic controller, rung
+    // switches (prefetch shrink / promote pause / degraded cost view), and
+    // deadline eviction all run inside the tick. Warm until admission
+    // control has resolved every arrival (admitted or rejected — the
+    // pending queue is drained for good), then the remaining guarded
+    // decode/evict ticks must allocate nothing.
+    {
+        let scenario = "mixtral-sim-ram16";
+        let (model, hw) = presets.scenario(scenario).unwrap();
+        let dims = &model.sim;
+        let cost = CostModel::for_scenario(&presets, scenario).unwrap();
+        let serve_cfg = ServeSimCfg {
+            arrival: ArrivalSpec::parse_spec("kind=bursty,rate=256,burst=8").unwrap(),
+            n_requests: 24,
+            max_batch: 4,
+            max_tokens: 16,
+            slo: SloSpec::named("tight").unwrap(),
+            ..Default::default()
+        };
+        let trace = synthetic_locality_trace(
+            dims.layers,
+            dims.n_routed,
+            dims.top_k,
+            16,
+            serve_cfg.max_tokens.max(16),
+            serve_cfg.seed ^ 0x7ace,
+        );
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+        let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+        assert!(!store.is_unlimited());
+        let sim = StepSimulator::new(
+            &cost,
+            bundle,
+            &freq,
+            dims.layers,
+            dims.n_routed,
+            dims.n_shared,
+            7,
+        )
+        .with_sink(DigestSink::new())
+        .with_store(store);
+        let mut serve = ServeSim::new(sim, &trace, serve_cfg.clone()).unwrap();
+        while serve.admitted() + serve.rejected() < serve_cfg.n_requests && serve.tick() {}
+        let before = alloc_calls();
+        let mut ticks = 0u64;
+        while serve.tick() {
+            ticks += 1;
+        }
+        let allocs = alloc_calls() - before;
+        let report = serve.finish();
+        assert!(ticks > 0, "guarded audit window must cover post-admission ticks");
+        assert_eq!(
+            report.finished + report.rejected + report.evicted,
+            report.requests,
+            "guarded audit cell must resolve every request"
+        );
+        assert!(
+            report.rejected + report.evicted > 0,
+            "tight SLO on an overload cell must exercise the guarded paths"
+        );
+        assert_eq!(
+            allocs, 0,
+            "{scenario}/serve+slo: guarded overload tick allocated {allocs} times \
              across {ticks} ticks (expected zero)"
         );
     }

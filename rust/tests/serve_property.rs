@@ -1,0 +1,243 @@
+//! Chaos-composition properties for SLO-guarded serving: randomized (but
+//! fully seeded) bursty arrival processes × fault profiles × SLO policies
+//! thrown at the continuous-batching simulation. The suite proves the
+//! overload-protection claims compositionally: every guarded run
+//! terminates within a bounded tick budget, every request resolves
+//! exactly once (finished + rejected + evicted == n), attainment and
+//! goodput never exceed what was actually served, the same seed
+//! reproduces the same digest with the full guard stack active, an
+//! unlimited/observe spec is bit-transparent even under faults, and the
+//! degradation ladder only ever moves one rung at a time.
+
+use dali::config::Presets;
+use dali::coordinator::frameworks::{Framework, FrameworkCfg};
+use dali::coordinator::simrun::StepSimulator;
+use dali::fault::{FaultPlan, FaultProfile};
+use dali::hw::CostModel;
+use dali::metrics::ServeReport;
+use dali::serve::{ArrivalSpec, OverloadController, ServeSim, ServeSimCfg, SloSpec};
+use dali::store::TieredStore;
+use dali::trace::DigestSink;
+use dali::util::DetRng;
+use dali::workload::trace::synthetic_locality_trace;
+
+/// Run `f` over `n` seeded cases, reporting the failing seed.
+fn for_seeds(n: u64, f: impl Fn(u64)) {
+    for seed in 0..n {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if result.is_err() {
+            panic!("property failed at seed {seed}");
+        }
+    }
+}
+
+/// An arbitrary-but-valid guarded SLO spec: every field stays inside
+/// `SloSpec::validate`'s envelope by construction, and each protection
+/// axis (TTFT budget, completion budget, queue bound, ladder) is
+/// independently present or absent so their compositions are exercised.
+fn random_slo(rng: &mut DetRng) -> SloSpec {
+    let mut s = SloSpec::default();
+    if rng.chance(0.7) {
+        s.ttft_ms = (1 + rng.usize_below(400)) as f64 / 10.0; // 0.1..40 ms
+    }
+    if rng.chance(0.6) {
+        s.total_ms = (5 + rng.usize_below(1000)) as f64 / 10.0; // 0.5..100 ms
+    }
+    s.jitter = rng.usize_below(50) as f64 / 100.0; // [0, 0.5)
+    if rng.chance(0.5) {
+        s.queue_cap = 1 + rng.usize_below(16);
+    }
+    if rng.chance(0.5) {
+        s.hi_queue = 2 + rng.usize_below(9);
+        s.lo_queue = rng.usize_below(s.hi_queue);
+        s.hi_step_ms = (1 + rng.usize_below(300)) as f64 / 10.0;
+        s.lo_step_ms = s.hi_step_ms / (2 + rng.usize_below(4)) as f64;
+        s.dwell_up = 1 + rng.usize_below(3) as u32;
+        s.dwell_down = 1 + rng.usize_below(4) as u32;
+    }
+    s.validate().expect("generated specs are valid by construction");
+    s
+}
+
+/// An arbitrary bursty arrival process, sometimes with a heterogeneous
+/// per-request length distribution.
+fn random_arrival(rng: &mut DetRng) -> ArrivalSpec {
+    let rate = [4.0, 64.0, 512.0][rng.usize_below(3)];
+    let burst = 2 + rng.usize_below(7);
+    let mut spec = format!("kind=bursty,rate={rate},burst={burst}");
+    if rng.chance(0.5) {
+        let len_min = 1 + rng.usize_below(4);
+        let len_max = len_min + rng.usize_below(12);
+        spec.push_str(&format!(",len_min={len_min},len_max={len_max}"));
+    }
+    ArrivalSpec::parse_spec(&spec).expect("generated arrivals are valid by construction")
+}
+
+/// One serving cell on the memory-limited scenario (tiered store +
+/// digest sink, mirroring `simulate_serve`), driven tick by tick under a
+/// hard termination bound instead of `run()`'s open loop.
+fn run_cell(cfg: &ServeSimCfg, faults: Option<FaultPlan>, max_ticks: u64) -> ServeReport {
+    let p = Presets::load_default().unwrap();
+    let scenario = "mixtral-sim-ram16";
+    let (model, hw) = p.scenario(scenario).unwrap();
+    let dims = &model.sim;
+    let cost = CostModel::for_scenario(&p, scenario).unwrap();
+    let trace = synthetic_locality_trace(
+        dims.layers,
+        dims.n_routed,
+        dims.top_k,
+        16,
+        cfg.max_tokens.max(cfg.arrival.len_max).max(16),
+        cfg.seed ^ 0x7ace,
+    );
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let fwcfg = FrameworkCfg::paper_default(dims);
+    let bundle = Framework::Dali.bundle(dims, &cost, &freq, &fwcfg);
+    let mut sim =
+        StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7)
+            .with_sink(DigestSink::new());
+    if let Some(plan) = faults {
+        sim = sim.with_faults(plan);
+    }
+    let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+    if !store.is_unlimited() {
+        sim = sim.with_store(store);
+    }
+    let mut serve = ServeSim::new(sim, &trace, cfg.clone()).unwrap();
+    let mut ticks = 0u64;
+    while serve.tick() {
+        ticks += 1;
+        assert!(
+            ticks < max_ticks,
+            "serving run failed to terminate within {max_ticks} ticks \
+             (rung {}, admitted {}, rejected {}, evicted {})",
+            serve.rung(),
+            serve.admitted(),
+            serve.rejected(),
+            serve.evicted()
+        );
+    }
+    serve.finish()
+}
+
+#[test]
+fn prop_guarded_chaos_cells_terminate_and_conserve_requests() {
+    // Random (arrival, faults, SLO) compositions: the run terminates
+    // within a generous tick bound, every request resolves exactly once,
+    // and the SLO accounting never overcounts.
+    for_seeds(14, |seed| {
+        let mut rng = DetRng::new(seed ^ 0x510c_4a05);
+        let arrival = random_arrival(&mut rng);
+        let slo = random_slo(&mut rng);
+        let faults = if rng.chance(0.5) {
+            Some(FaultPlan::new(FaultProfile::named("flaky-nvme").unwrap(), seed ^ 0xfa17))
+        } else {
+            None
+        };
+        let cfg = ServeSimCfg {
+            arrival,
+            n_requests: 16,
+            max_batch: 4,
+            max_tokens: 6,
+            slo,
+            seed: seed.wrapping_mul(0x9e37_79b9).wrapping_add(0x5e11),
+        };
+        // every tick resolves at least nothing but makes progress through
+        // arrivals/admissions; 64 ticks per request is far beyond any
+        // legitimate schedule for 6-token decodes
+        let r = run_cell(&cfg, faults, 64 * cfg.n_requests as u64);
+        assert_eq!(
+            r.finished + r.rejected + r.evicted,
+            r.requests,
+            "every request must resolve exactly once (spec {slo:?})"
+        );
+        assert!(r.slo_attained <= r.finished, "only finished requests can attain");
+        assert!(r.goodput_tokens <= r.tokens_out, "goodput cannot exceed tokens served");
+        assert!(r.makespan_ns > 0 || r.finished == 0);
+        let att = r.slo_attainment();
+        assert!(att.is_finite() && (0.0..=1.0).contains(&att));
+        // same composition, same seed: bit-identical digest
+        let again = run_cell(&cfg, faults, 64 * cfg.n_requests as u64);
+        assert_eq!(r, again, "guarded chaos cells must reproduce bit-for-bit");
+    });
+}
+
+#[test]
+fn prop_disarmed_specs_are_bit_transparent_even_under_faults() {
+    // A spec with enforcement off — whatever its budgets — and the
+    // unlimited default must leave the event stream untouched, faults
+    // included. Attainment may differ (observe mode scores deadlines);
+    // the digest may not.
+    for_seeds(10, |seed| {
+        let mut rng = DetRng::new(seed ^ 0x0b5e_12ce);
+        let arrival = random_arrival(&mut rng);
+        let faults = if rng.chance(0.5) {
+            Some(FaultPlan::new(FaultProfile::named("flaky-nvme").unwrap(), seed ^ 0xfa17))
+        } else {
+            None
+        };
+        let base_cfg = ServeSimCfg {
+            arrival,
+            n_requests: 12,
+            max_batch: 4,
+            max_tokens: 6,
+            seed: seed.wrapping_add(0xd1_5a_12),
+            ..Default::default()
+        };
+        let base = run_cell(&base_cfg, faults, 4096);
+        let observe = SloSpec { enforce: false, ..random_slo(&mut rng) };
+        let obs =
+            run_cell(&ServeSimCfg { slo: observe, ..base_cfg.clone() }, faults, 4096);
+        assert_eq!(
+            obs.run.trace_digest, base.run.trace_digest,
+            "observe-only spec {observe:?} must not change a single event"
+        );
+        assert_eq!((obs.rejected, obs.evicted, obs.degraded_ns), (0, 0, 0));
+        let unlimited =
+            run_cell(&ServeSimCfg { slo: SloSpec::default(), ..base_cfg }, faults, 4096);
+        assert_eq!(unlimited, base, "the unlimited spec is the unguarded run, bit for bit");
+    });
+}
+
+#[test]
+fn prop_controller_moves_one_rung_at_a_time_within_bounds() {
+    // Whatever the observation sequence, the ladder is monotone per
+    // transition: |to - from| == 1, `to` always matches the controller's
+    // rung, and the rung stays within [0, 3].
+    for_seeds(25, |seed| {
+        let mut rng = DetRng::new(seed ^ 0x1add_e2);
+        let mut spec = random_slo(&mut rng);
+        // force the queue axis on with a short escalation dwell: the
+        // depth distribution below straddles the watermark roughly half
+        // the time, so a dwell_up-run of hot ticks is certain within 300
+        // observations and the "ladder engaged" assertion is structural,
+        // not tuned
+        spec.hi_queue = 2 + rng.usize_below(6);
+        spec.lo_queue = rng.usize_below(spec.hi_queue);
+        spec.dwell_up = 1 + rng.usize_below(2) as u32;
+        spec.validate().unwrap();
+        let mut ctrl = OverloadController::new(spec);
+        let mut transitions = 0;
+        for _ in 0..300 {
+            if rng.chance(0.7) {
+                ctrl.note_step(1 + rng.usize_below(60_000_000) as u64);
+            }
+            let depth = rng.usize_below(2 * spec.hi_queue.max(4));
+            let before = ctrl.rung();
+            if let Some((from, to)) = ctrl.observe(depth) {
+                transitions += 1;
+                assert_eq!(from, before, "transition must start at the current rung");
+                assert_eq!(to, ctrl.rung(), "transition must land at the new rung");
+                assert_eq!(
+                    from.abs_diff(to),
+                    1,
+                    "the ladder moves exactly one rung per tick"
+                );
+            }
+            assert!(ctrl.rung() <= 3, "rung escaped the ladder");
+        }
+        // the depth distribution straddles the watermarks, so a live
+        // ladder axis should move at least once over 300 ticks
+        assert!(transitions > 0, "ladder never engaged for spec {spec:?}");
+    });
+}
