@@ -35,6 +35,7 @@ fn main() {
             gpu_free_slots: n,
             layer: 0,
             layers: model.sim.layers,
+            devices: None,
         };
         bench(&format!("greedy/{preset}/N{n}"), || {
             black_box(GreedyAssigner::new().assign(&ctx));

@@ -132,7 +132,18 @@ pub struct HwConfig {
     pub cpu_cores: usize,
     pub pcie_bw: f64,
     pub pcie_latency_s: f64,
+    /// Number of GPU device tiers (1..= [`crate::store::MAX_DEVICES`]).
+    /// The device-count source of truth for the whole stack: per-device
+    /// caches, PCIe lanes, fault windows and metrics all size from it.
     pub num_gpus: usize,
+    /// Optional per-device VRAM budgets (heterogeneous boxes). Empty =
+    /// every device gets `gpu_mem_bytes`; when present the length must
+    /// equal `num_gpus` and every entry must be positive.
+    pub gpu_mem_bytes_dev: Vec<f64>,
+    /// Inter-GPU P2P/NVLink bandwidth (multi-GPU boxes; unused at 1 GPU).
+    pub p2p_bw: f64,
+    /// Per-copy P2P latency (fabric command overhead).
+    pub p2p_latency_s: f64,
     /// Host RAM budget for expert weights; 0 = unlimited (two-tier mode).
     pub host_ram_bytes: f64,
     /// NVMe sequential read bandwidth (disk → host promotions).
@@ -161,6 +172,15 @@ impl HwConfig {
             pcie_bw: v.get("pcie_bw")?.as_f64()?,
             pcie_latency_s: v.get("pcie_latency_s")?.as_f64()?,
             num_gpus: v.opt("num_gpus").map(|x| x.as_usize()).transpose()?.unwrap_or(1),
+            gpu_mem_bytes_dev: v
+                .opt("gpu_mem_bytes_dev")
+                .map(|x| x.as_f64_vec())
+                .transpose()?
+                .unwrap_or_default(),
+            // NVLink-class fabric default; a PCIe-P2P box should override
+            // this down to its measured peer-to-peer rate.
+            p2p_bw: opt_f64("p2p_bw", 50e9)?,
+            p2p_latency_s: opt_f64("p2p_latency_s", 5e-6)?,
             host_ram_bytes: opt_f64("host_ram_bytes", 0.0)?,
             nvme_read_bw: opt_f64("nvme_read_bw", 6e9)?,
             nvme_write_bw: opt_f64("nvme_write_bw", 3e9)?,
@@ -172,6 +192,17 @@ impl HwConfig {
     /// tiered store must spill cold experts to NVMe.
     pub fn is_memory_limited(&self, paper: &PaperDims) -> bool {
         self.host_ram_bytes > 0.0 && self.host_ram_bytes < paper.total_expert_bytes()
+    }
+
+    /// VRAM budget of device `d`: the per-device override when present,
+    /// else the uniform `gpu_mem_bytes`.
+    pub fn gpu_mem_bytes_for(&self, d: usize) -> f64 {
+        self.gpu_mem_bytes_dev.get(d).copied().unwrap_or(self.gpu_mem_bytes)
+    }
+
+    /// Total VRAM across all device tiers.
+    pub fn total_gpu_mem_bytes(&self) -> f64 {
+        (0..self.num_gpus).map(|d| self.gpu_mem_bytes_for(d)).sum()
     }
 
     /// Reject degenerate platform parameters at load time instead of
@@ -189,6 +220,7 @@ impl HwConfig {
             ("pcie_bw", self.pcie_bw),
             ("nvme_read_bw", self.nvme_read_bw),
             ("nvme_write_bw", self.nvme_write_bw),
+            ("p2p_bw", self.p2p_bw),
         ] {
             if !(v > 0.0 && v.is_finite()) {
                 bail!("hardware preset '{name}': {field} must be positive, got {v}");
@@ -199,6 +231,31 @@ impl HwConfig {
                 "hardware preset '{name}': host_ram_bytes must be >= 0 (0 = unlimited), got {}",
                 self.host_ram_bytes
             );
+        }
+        // The device count was dead weight for nine PRs (nothing read it,
+        // so 0-GPU presets loaded fine); now the whole stack sizes from it.
+        if self.num_gpus == 0 || self.num_gpus > crate::store::MAX_DEVICES {
+            bail!(
+                "hardware preset '{name}': num_gpus must be in 1..={}, got {}",
+                crate::store::MAX_DEVICES,
+                self.num_gpus
+            );
+        }
+        if !self.gpu_mem_bytes_dev.is_empty() {
+            if self.gpu_mem_bytes_dev.len() != self.num_gpus {
+                bail!(
+                    "hardware preset '{name}': gpu_mem_bytes_dev has {} entries for {} GPUs",
+                    self.gpu_mem_bytes_dev.len(),
+                    self.num_gpus
+                );
+            }
+            for (d, &b) in self.gpu_mem_bytes_dev.iter().enumerate() {
+                if !(b > 0.0 && b.is_finite()) {
+                    bail!(
+                        "hardware preset '{name}': gpu_mem_bytes_dev[{d}] must be positive, got {b}"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -568,6 +625,49 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_device_counts_are_rejected_by_name() {
+        let p = Presets::load_default().unwrap();
+        let hw = p.hw("local-pc").unwrap();
+        // the PR 10 bugfix: num_gpus = 0 used to load silently (nothing
+        // read the field); now it is the device-count source of truth
+        let mut bad = hw.clone();
+        bad.num_gpus = 0;
+        let err = bad.validate("no-gpus").unwrap_err().to_string();
+        assert!(err.contains("no-gpus") && err.contains("num_gpus"), "{err}");
+        let mut bad = hw.clone();
+        bad.num_gpus = crate::store::MAX_DEVICES + 1;
+        assert!(bad.validate("too-many").unwrap_err().to_string().contains("num_gpus"));
+        let mut bad = hw.clone();
+        bad.p2p_bw = 0.0;
+        assert!(bad.validate("dead-fabric").unwrap_err().to_string().contains("p2p_bw"));
+        // per-device budgets must match the device count and be positive
+        let mut bad = hw.clone();
+        bad.num_gpus = 2;
+        bad.gpu_mem_bytes_dev = vec![24e9];
+        let err = bad.validate("short-dev").unwrap_err().to_string();
+        assert!(err.contains("gpu_mem_bytes_dev") && err.contains("2 GPUs"), "{err}");
+        let mut bad = hw.clone();
+        bad.num_gpus = 2;
+        bad.gpu_mem_bytes_dev = vec![24e9, 0.0];
+        assert!(bad
+            .validate("zero-dev")
+            .unwrap_err()
+            .to_string()
+            .contains("gpu_mem_bytes_dev[1]"));
+        // a heterogeneous pair validates and resolves per device
+        let mut good = hw.clone();
+        good.num_gpus = 2;
+        good.gpu_mem_bytes_dev = vec![24e9, 16e9];
+        good.validate("hetero").unwrap();
+        assert_eq!(good.gpu_mem_bytes_for(0), 24e9);
+        assert_eq!(good.gpu_mem_bytes_for(1), 16e9);
+        assert_eq!(good.total_gpu_mem_bytes(), 40e9);
+        // uniform fallback when no override is present
+        assert_eq!(hw.gpu_mem_bytes_for(0), hw.gpu_mem_bytes);
+        assert_eq!(hw.total_gpu_mem_bytes(), hw.gpu_mem_bytes);
+    }
+
+    #[test]
     fn zero_slot_scenarios_fail_to_load() {
         // a RAM budget smaller than one expert is a zero-slot host tier
         let text = r#"{
@@ -669,5 +769,33 @@ mod tests {
         assert!(hw.gpu_mem_bytes <= 24e9 * 1.01);
         let two = p.hw("local-pc-2gpu").unwrap();
         assert_eq!(two.num_gpus, 2);
+        assert!(two.p2p_bw > two.pcie_bw, "P2P fabric beats host PCIe");
+        let four = p.hw("local-pc-4gpu").unwrap();
+        assert_eq!(four.num_gpus, 4);
+    }
+
+    #[test]
+    fn deepseek_v3_scenarios_stay_memory_limited_even_multi_gpu() {
+        // the whole point of the -2gpu/-4gpu cells: DeepSeek-V3's 256
+        // routed experts × 61 layers at q4 still dwarf 2–4 × 24 GB VRAM +
+        // host RAM, so every tier of the hierarchy stays active
+        let p = Presets::load_default().unwrap();
+        for name in ["deepseek-v3-sim-1gpu", "deepseek-v3-sim-2gpu", "deepseek-v3-sim-4gpu"] {
+            let (m, hw) = p.scenario(name).unwrap();
+            assert_eq!(m.paper.n_routed, 256, "{name}");
+            assert!(hw.is_memory_limited(&m.paper), "{name} must need the NVMe tier");
+            let q4 = p.quant_ratio(name);
+            assert!(q4 > 0.0 && q4 < 0.5, "{name} ships a q4 on-disk format");
+            // even the on-disk q4 footprint exceeds all VRAM + host RAM
+            let footprint = m.paper.total_expert_bytes() * q4;
+            assert!(
+                footprint > hw.total_gpu_mem_bytes() + hw.host_ram_bytes,
+                "{name}: q4 footprint must exceed VRAM + RAM"
+            );
+        }
+        let (_, hw2) = p.scenario("deepseek-v3-sim-2gpu").unwrap();
+        assert_eq!(hw2.num_gpus, 2);
+        let (_, hw4) = p.scenario("deepseek-v3-sim-4gpu").unwrap();
+        assert_eq!(hw4.num_gpus, 4);
     }
 }

@@ -52,6 +52,7 @@ mod tests {
             gpu_free_slots: 8,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = AllCpuAssigner::new().assign(&ctx);
         assert_eq!(a.to_cpu, vec![true, false, true]);

@@ -110,6 +110,7 @@ mod tests {
                 gpu_free_slots: n,
                 layer: 0,
                 layers: 4,
+                devices: None,
             };
             let b = BeamAssigner::new(2).assign(&ctx);
             assert!(b.satisfies_constraints(&ctx));
@@ -150,6 +151,7 @@ mod tests {
             gpu_free_slots: 3,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = BeamAssigner::new(1).assign(&ctx);
         assert!(a.satisfies_constraints(&ctx));
@@ -169,6 +171,7 @@ mod tests {
             gpu_free_slots: 2,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = BeamAssigner::new(3).assign(&ctx);
         assert!(a.satisfies_constraints(&ctx));

@@ -115,6 +115,7 @@ mod tests {
                 gpu_free_slots: n,
                 layer: 0,
                 layers: 4,
+                devices: None,
             };
             let enumed = EnumerateAssigner::new().assign(&ctx);
             let bnb = OptimalAssigner::new().assign(&ctx);
@@ -138,6 +139,7 @@ mod tests {
             gpu_free_slots: 16,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let t0 = std::time::Instant::now();
         for _ in 0..10 {
@@ -166,6 +168,7 @@ mod tests {
             gpu_free_slots: 32,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = EnumerateAssigner::new().assign(&ctx);
         assert!(a.satisfies_constraints(&ctx));

@@ -1,19 +1,28 @@
-//! The paper's Greedy Assignment strategy (Algorithm 1).
+//! The paper's Greedy Assignment strategy (Algorithm 1), generalized to N
+//! GPU device tiers.
 //!
 //! Experts are visited in descending `|t_gpu - t_cpu|` order — place the
 //! experts whose device choice matters most first — and each is put on
-//! whichever device yields the lower cumulative finish time. Near-optimal
-//! (≥ ~92 % of Opt_plan in the paper's Table 4) at a tiny solve cost.
+//! whichever device yields the lower cumulative finish time: greedy over
+//! (expert, device) pairs, where the GPU side of the comparison is the
+//! least-loaded eligible device and the CPU side is the shared CPU queue.
+//! On a single-GPU context this is exactly the paper's Algorithm 1
+//! (near-optimal, ≥ ~92 % of Opt_plan in Table 4) at a tiny solve cost.
 
 use super::{solve_model, AssignCtx, Assigner, Assignment};
 use crate::hw::Ns;
+use crate::store::MAX_DEVICES;
 
 /// The scratch vectors make repeated solves allocation-free — this is the
-/// solver on the simulator's per-layer hot path.
+/// solver on the simulator's per-layer hot path. `t_gpu` is device-major
+/// (`n_devices × n_experts`); the per-device running totals and slot
+/// counters are fixed-size stack arrays, so multi-device solves allocate
+/// nothing either.
 #[derive(Debug, Default, Clone)]
 pub struct GreedyAssigner {
     t_gpu: Vec<u64>,
     t_cpu: Vec<u64>,
+    best: Vec<u64>,
     order: Vec<usize>,
 }
 
@@ -30,46 +39,75 @@ impl Assigner for GreedyAssigner {
 
     fn assign_into(&mut self, ctx: &AssignCtx, out: &mut Assignment) {
         let n = ctx.workloads.len();
+        let nd = ctx.n_devices();
         out.reset(n);
-        let GreedyAssigner { t_gpu, t_cpu, order } = self;
-        // Alg. 1 lines 1-4: per-expert device costs.
+        let GreedyAssigner { t_gpu, t_cpu, best, order } = self;
+        // Alg. 1 lines 1-4: per-(device, expert) and per-expert costs.
         t_gpu.clear();
-        t_gpu.extend((0..n).map(|e| ctx.t_gpu(e)));
+        for d in 0..nd {
+            t_gpu.extend((0..n).map(|e| ctx.t_gpu_dev(e, d)));
+        }
         t_cpu.clear();
         t_cpu.extend((0..n).map(|e| ctx.t_cpu(e)));
+        // the sort sees each expert at its best-device cost — on one device
+        // this is t_gpu(e) verbatim
+        best.clear();
+        best.extend((0..n).map(|e| (0..nd).map(|d| t_gpu[d * n + e]).min().unwrap_or(0)));
         // line 5: sort by |t_gpu - t_cpu| descending (index tiebreak keeps
         // the order — and hence the metrics — fully deterministic).
         order.clear();
         order.extend(0..n);
-        order.sort_unstable_by_key(|&e| (std::cmp::Reverse(t_gpu[e].abs_diff(t_cpu[e])), e));
-        let mut total_gpu: u64 = 0;
+        order.sort_unstable_by_key(|&e| (std::cmp::Reverse(best[e].abs_diff(t_cpu[e])), e));
+        let mut total_dev = [0u64; MAX_DEVICES];
         let mut total_cpu: u64 = 0;
-        let mut free_slots = ctx.gpu_free_slots;
+        let mut free_slots = [0usize; MAX_DEVICES];
+        for (d, slot) in free_slots.iter_mut().enumerate().take(nd) {
+            *slot = ctx.free_slots_on(d);
+        }
         for &e in order.iter() {
             // lines 9-10: skip inactive experts.
             if ctx.workloads[e] == 0 {
                 continue;
             }
-            // Eq. 9 memory guard: a non-resident expert needs a staging slot.
-            let needs_slot = !ctx.resident[e];
-            let gpu_ok = !needs_slot || free_slots > 0;
-            // lines 12-17: lower cumulative finish time wins.
-            if gpu_ok && total_gpu + t_gpu[e] <= total_cpu + t_cpu[e] {
-                out.to_gpu[e] = true;
-                total_gpu += t_gpu[e];
-                if needs_slot {
-                    free_slots -= 1;
+            // Eq. 9 memory guard per device: a device not holding the
+            // expert needs a staging slot there. Among eligible devices,
+            // the lowest cumulative finish wins (lowest index on ties —
+            // determinism).
+            let mut pick: Option<(u64, usize)> = None;
+            for d in 0..nd {
+                if !ctx.resident_on(e, d) && free_slots[d] == 0 {
+                    continue;
                 }
-            } else {
-                out.to_cpu[e] = true;
-                total_cpu += t_cpu[e];
+                let finish = total_dev[d] + t_gpu[d * n + e];
+                if pick.map_or(true, |(f, _)| finish < f) {
+                    pick = Some((finish, d));
+                }
+            }
+            // lines 12-17: lower cumulative finish time wins.
+            match pick {
+                Some((finish, d)) if finish <= total_cpu + t_cpu[e] => {
+                    out.to_gpu[e] = true;
+                    out.device[e] = d as u8;
+                    total_dev[d] += t_gpu[d * n + e];
+                    if !ctx.resident_on(e, d) {
+                        free_slots[d] -= 1;
+                    }
+                }
+                _ => {
+                    out.to_cpu[e] = true;
+                    total_cpu += t_cpu[e];
+                }
             }
         }
     }
 
     fn modeled_solve_ns(&self, ctx: &AssignCtx) -> Ns {
-        // cost tables + one sort + one linear placement pass
-        solve_model::nlogn(ctx.active_count(), 28)
+        // cost tables (one per device) + one sort + one placement pass
+        solve_model::nlogn(ctx.active_count(), 28 * ctx.n_devices() as u64)
+    }
+
+    fn device_aware(&self) -> bool {
+        true
     }
 }
 
@@ -93,6 +131,7 @@ mod tests {
             gpu_free_slots: 2,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = GreedyAssigner::new().assign(&ctx);
         assert!(a.satisfies_constraints(&ctx));
@@ -115,6 +154,7 @@ mod tests {
             gpu_free_slots: 8,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = GreedyAssigner::new().assign(&ctx);
         assert!(a.to_gpu[0], "cached 64-token expert must run on GPU");
@@ -143,6 +183,7 @@ mod tests {
                 gpu_free_slots: n,
                 layer: 0,
                 layers: 4,
+                devices: None,
             };
             let a = GreedyAssigner::new().assign(&ctx);
             assert!(a.satisfies_constraints(&ctx));
@@ -171,11 +212,134 @@ mod tests {
             gpu_free_slots: 1,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = GreedyAssigner::new().assign(&ctx);
         let staged = (0..3).filter(|&e| a.to_gpu[e]).count();
         assert!(staged <= 1);
         assert!(a.satisfies_constraints(&ctx));
+    }
+
+    #[test]
+    fn multi_device_greedy_balances_load_across_devices() {
+        use super::super::DeviceView;
+        let cm = cost("mixtral-sim");
+        // four heavy uncached experts, plenty of slots on two devices: the
+        // cumulative-finish rule must spread them instead of piling on one
+        let workloads = vec![64u32, 64, 64, 64];
+        let resident = vec![false; 4];
+        let dev_resident = vec![false; 8];
+        let free = vec![4usize, 4];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: None,
+            host_wait: None,
+            cost: &cm,
+            gpu_free_slots: 8,
+            layer: 0,
+            layers: 4,
+            devices: Some(DeviceView { n: 2, resident: &dev_resident, free_slots: &free }),
+        };
+        let a = GreedyAssigner::new().assign(&ctx);
+        assert!(a.satisfies_constraints(&ctx));
+        let gpu_assigned: Vec<usize> = (0..4).filter(|&e| a.to_gpu[e]).collect();
+        assert!(gpu_assigned.len() >= 2, "64-token experts belong on the GPUs");
+        let on0 = gpu_assigned.iter().filter(|&&e| a.device_of(e) == 0).count();
+        let on1 = gpu_assigned.iter().filter(|&&e| a.device_of(e) == 1).count();
+        assert!(on0 > 0 && on1 > 0, "load must spread: {on0} vs {on1}");
+        assert!(on0.abs_diff(on1) <= 1, "near-even split: {on0} vs {on1}");
+    }
+
+    #[test]
+    fn multi_device_greedy_prefers_the_caching_device() {
+        use super::super::DeviceView;
+        let cm = cost("mixtral-sim");
+        let workloads = vec![32u32];
+        let resident = vec![false];
+        // cached on device 1 only: running there is free of transfer
+        let dev_resident = vec![false, true];
+        let free = vec![4usize, 4];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: None,
+            host_wait: None,
+            cost: &cm,
+            gpu_free_slots: 8,
+            layer: 0,
+            layers: 4,
+            devices: Some(DeviceView { n: 2, resident: &dev_resident, free_slots: &free }),
+        };
+        let a = GreedyAssigner::new().assign(&ctx);
+        assert!(a.to_gpu[0]);
+        assert_eq!(a.device_of(0), 1, "the caching device wins the tie");
+    }
+
+    #[test]
+    fn per_device_slot_exhaustion_redirects_not_rejects() {
+        use super::super::DeviceView;
+        let cm = cost("mixtral-sim");
+        let workloads = vec![60u32, 60, 60];
+        let resident = vec![false; 3];
+        let dev_resident = vec![false; 6];
+        // device 0 has no slots at all: everything GPU-bound lands on 1
+        let free = vec![0usize, 2];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: None,
+            host_wait: None,
+            cost: &cm,
+            gpu_free_slots: 2,
+            layer: 0,
+            layers: 4,
+            devices: Some(DeviceView { n: 2, resident: &dev_resident, free_slots: &free }),
+        };
+        let a = GreedyAssigner::new().assign(&ctx);
+        assert!(a.satisfies_constraints(&ctx));
+        for e in 0..3 {
+            if a.to_gpu[e] {
+                assert_eq!(a.device_of(e), 1, "slotless device 0 must get nothing");
+            }
+        }
+        assert!((0..3).filter(|&e| a.to_gpu[e]).count() <= 2);
+    }
+
+    #[test]
+    fn single_device_view_reproduces_the_scalar_solve() {
+        // A DeviceView with n = 1 must produce the bit-identical assignment
+        // the scalar context does — the digest-backcompat anchor for the
+        // solver layer.
+        use super::super::DeviceView;
+        let cm = cost("deepseek-sim");
+        let mut rng = DetRng::new(7);
+        for _ in 0..40 {
+            let n = 10;
+            let workloads: Vec<u32> =
+                (0..n).map(|_| if rng.chance(0.3) { 0 } else { rng.usize_below(40) as u32 }).collect();
+            let resident: Vec<bool> = (0..n).map(|_| rng.chance(0.4)).collect();
+            let slots = rng.usize_below(n + 1);
+            let free = vec![slots];
+            let base = AssignCtx {
+                workloads: &workloads,
+                resident: &resident,
+                tiers: None,
+                host_wait: None,
+                cost: &cm,
+                gpu_free_slots: slots,
+                layer: 0,
+                layers: 4,
+                devices: None,
+            };
+            let viewed = AssignCtx {
+                devices: Some(DeviceView { n: 1, resident: &resident, free_slots: &free }),
+                ..base
+            };
+            let a = GreedyAssigner::new().assign(&base);
+            let b = GreedyAssigner::new().assign(&viewed);
+            assert_eq!(a, b, "n=1 view must not perturb the solve");
+        }
     }
 
     #[test]
@@ -192,6 +356,7 @@ mod tests {
             gpu_free_slots: 8,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = GreedyAssigner::new().assign(&ctx);
         assert_eq!(a, Assignment::none(8));

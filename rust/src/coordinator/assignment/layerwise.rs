@@ -59,6 +59,7 @@ mod tests {
             gpu_free_slots: 8,
             layer,
             layers: 4,
+            devices: None,
         };
         let mut a = LayerWiseAssigner::new(2);
         assert!(a.assign(&mk(0)).to_cpu.iter().all(|&c| c));

@@ -32,7 +32,23 @@ pub use resident_only::ResidentOnlyAssigner;
 pub use static_threshold::StaticThresholdAssigner;
 
 use crate::hw::{CostModel, Ns};
-use crate::store::Tier;
+use crate::store::{Tier, MAX_DEVICES};
+
+/// Per-device residency and capacity view for multi-GPU assignment. Absent
+/// (`AssignCtx::devices == None`) the context is single-device: the plain
+/// `resident` / `gpu_free_slots` fields describe device 0, exactly the
+/// pre-multi-GPU behaviour every baseline solver was written against.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceView<'a> {
+    /// Device count (1..=[`MAX_DEVICES`]).
+    pub n: usize,
+    /// Device-major residency: `resident[d * n_experts + e]` — whether
+    /// expert `e` is cached on device `d`. Single-copy sharding means at
+    /// most one device holds any expert, but the view does not assume it.
+    pub resident: &'a [bool],
+    /// Eq. 9 staging slots per device (free VRAM / expert size on `d`).
+    pub free_slots: &'a [usize],
+}
 
 /// Everything an assigner may look at for one MoE layer step.
 pub struct AssignCtx<'a> {
@@ -62,6 +78,10 @@ pub struct AssignCtx<'a> {
     pub layer: usize,
     /// Total MoE layers.
     pub layers: usize,
+    /// Per-device residency/capacity for multi-GPU boxes. `None` = one
+    /// device, described by `resident` / `gpu_free_slots` (the pre-refactor
+    /// view — every existing construction site keeps its semantics).
+    pub devices: Option<DeviceView<'a>>,
 }
 
 impl AssignCtx<'_> {
@@ -94,15 +114,82 @@ impl AssignCtx<'_> {
         }
     }
 
+    /// Number of GPU device tiers this context prices (1 without a
+    /// [`DeviceView`]).
+    pub fn n_devices(&self) -> usize {
+        self.devices.map(|d| d.n).unwrap_or(1)
+    }
+
+    /// Whether expert `e` is cached on device `d`. Without a device view
+    /// the plain `resident` slice describes device 0 and no other device
+    /// exists.
+    pub fn resident_on(&self, e: usize, d: usize) -> bool {
+        match self.devices {
+            Some(v) => v.resident[d * self.workloads.len() + e],
+            None => d == 0 && self.resident[e],
+        }
+    }
+
+    /// Eq. 9 staging slots on device `d`.
+    pub fn free_slots_on(&self, d: usize) -> usize {
+        match self.devices {
+            Some(v) => v.free_slots[d],
+            None => {
+                if d == 0 {
+                    self.gpu_free_slots
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
     /// Eq. 5 estimate used by all solvers: `t_gpu(w)` with residency,
     /// extended tier-aware — a disk-resident (or still-in-flight) expert's
     /// transfer chains NVMe-read → transcode → PCIe before compute can
-    /// overlap it.
+    /// overlap it. Multi-device contexts price the expert on its *best*
+    /// device (min over device tiers), so every single-choice solver sees
+    /// the cheapest-device cost for free; [`Self::t_gpu_dev`] prices one
+    /// specific device.
     pub fn t_gpu(&self, e: usize) -> Ns {
         let w = self.workloads[e] as usize;
         if w == 0 {
             return 0;
         }
+        match self.devices {
+            None => self.t_gpu_fallback(e, w),
+            Some(v) => (0..v.n).map(|d| self.t_gpu_dev(e, d)).min().unwrap_or(0),
+        }
+    }
+
+    /// Eq. 5 priced on one explicit device: residency on `d` makes the
+    /// transfer free; residency on a *peer* device costs a P2P hop; no GPU
+    /// residency pays the full host→device PCIe chain.
+    pub fn t_gpu_dev(&self, e: usize, d: usize) -> Ns {
+        let w = self.workloads[e] as usize;
+        if w == 0 {
+            return 0;
+        }
+        if self.devices.is_none() {
+            debug_assert_eq!(d, 0);
+            return self.t_gpu_fallback(e, w);
+        }
+        if self.resident_on(e, d) {
+            return self.cost.t_gpu_compute(w);
+        }
+        let n = self.n_devices();
+        let on_peer = (0..n).any(|p| p != d && self.resident_on(e, p));
+        let trans = if on_peer {
+            self.cost.p2p_time()
+        } else {
+            self.cost.trans_time() + self.host_wait_ns(e)
+        };
+        self.cost.t_gpu_compute(w).max(trans)
+    }
+
+    /// The pre-multi-GPU single-device estimate — the `devices == None`
+    /// path, kept verbatim so store-less contexts price bit-identically.
+    fn t_gpu_fallback(&self, e: usize, w: usize) -> Ns {
         if self.resident[e] {
             return self.cost.t_gpu_compute(w);
         }
@@ -173,16 +260,22 @@ pub mod solve_model {
     }
 }
 
-/// Result: the C/G indicator vectors of the paper.
+/// Result: the C/G indicator vectors of the paper, plus the chosen device
+/// per GPU-assigned expert.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Assignment {
     pub to_gpu: Vec<bool>,
     pub to_cpu: Vec<bool>,
+    /// GPU device index per expert — meaningful only where `to_gpu[e]`
+    /// holds; 0 everywhere else (and everywhere on single-GPU contexts, so
+    /// baseline solvers that never write it keep today's behaviour on
+    /// device 0).
+    pub device: Vec<u8>,
 }
 
 impl Assignment {
     pub fn none(n: usize) -> Self {
-        Assignment { to_gpu: vec![false; n], to_cpu: vec![false; n] }
+        Assignment { to_gpu: vec![false; n], to_cpu: vec![false; n], device: vec![0; n] }
     }
 
     /// Clear to an all-unassigned state of width `n`, reusing capacity.
@@ -191,6 +284,8 @@ impl Assignment {
         self.to_gpu.resize(n, false);
         self.to_cpu.clear();
         self.to_cpu.resize(n, false);
+        self.device.clear();
+        self.device.resize(n, 0);
     }
 
     /// Copy `src` into `self` without allocating (capacity permitting).
@@ -199,25 +294,61 @@ impl Assignment {
         self.to_gpu.extend_from_slice(&src.to_gpu);
         self.to_cpu.clear();
         self.to_cpu.extend_from_slice(&src.to_cpu);
+        self.device.clear();
+        self.device.extend_from_slice(&src.device);
     }
 
-    /// Eq. 4/5 objective value of this assignment under `ctx`'s estimates.
+    /// The device expert `e` runs on (0 unless a multi-device solver or
+    /// [`Self::align_devices`] chose otherwise).
+    pub fn device_of(&self, e: usize) -> u8 {
+        self.device.get(e).copied().unwrap_or(0)
+    }
+
+    /// Post-pass for single-device solvers on a multi-device context: pin
+    /// each GPU-assigned expert to the device that already caches it (the
+    /// transfer the solver priced as free is only free *there*), else to
+    /// its round-robin home device `e % n` — the same striping the store
+    /// and caches shard by, so staged uploads spread across every PCIe
+    /// link deterministically. No-op without a device view.
+    pub fn align_devices(&mut self, ctx: &AssignCtx) {
+        let n = ctx.n_devices();
+        if ctx.devices.is_none() || n <= 1 {
+            return;
+        }
+        for e in 0..self.to_gpu.len() {
+            if !self.to_gpu[e] {
+                self.device[e] = 0;
+                continue;
+            }
+            self.device[e] = match (0..n).find(|&d| ctx.resident_on(e, d)) {
+                Some(d) => d as u8,
+                None => (e % n) as u8,
+            };
+        }
+    }
+
+    /// Eq. 4/5 objective value of this assignment under `ctx`'s estimates:
+    /// the slowest device finishes last — CPU or any GPU tier (per-device
+    /// sums; a single-device context reduces to the paper's two-term max).
     pub fn makespan_estimate(&self, ctx: &AssignCtx) -> Ns {
         let mut t_cpu = 0;
-        let mut t_gpu = 0;
+        let mut t_dev = [0 as Ns; MAX_DEVICES];
         for e in 0..self.to_gpu.len() {
             if self.to_gpu[e] {
-                t_gpu += ctx.t_gpu(e);
+                let d = (self.device_of(e) as usize).min(ctx.n_devices() - 1);
+                t_dev[d] += ctx.t_gpu_dev(e, d);
             } else if self.to_cpu[e] {
                 t_cpu += ctx.t_cpu(e);
             }
         }
-        t_cpu.max(t_gpu)
+        t_cpu.max(t_dev.into_iter().max().unwrap_or(0))
     }
 
-    /// Check Eqs. 7–9 (activation, mutual exclusion, memory).
+    /// Check Eqs. 7–9 (activation, mutual exclusion, memory — the memory
+    /// budget per device tier).
     pub fn satisfies_constraints(&self, ctx: &AssignCtx) -> bool {
-        let mut staged = 0;
+        let n = ctx.n_devices();
+        let mut staged = [0usize; MAX_DEVICES];
         for e in 0..self.to_gpu.len() {
             let active = ctx.workloads[e] > 0;
             if active != (self.to_gpu[e] ^ self.to_cpu[e]) {
@@ -229,11 +360,17 @@ impl Assignment {
             if self.to_gpu[e] && self.to_cpu[e] {
                 return false;
             }
-            if self.to_gpu[e] && !ctx.resident[e] {
-                staged += 1;
+            if self.to_gpu[e] {
+                let d = self.device_of(e) as usize;
+                if d >= n {
+                    return false;
+                }
+                if !ctx.resident_on(e, d) {
+                    staged[d] += 1;
+                }
             }
         }
-        staged <= ctx.gpu_free_slots
+        (0..n).all(|d| staged[d] <= ctx.free_slots_on(d))
     }
 }
 
@@ -261,6 +398,14 @@ pub trait Assigner: Send {
     fn modeled_solve_ns(&self, ctx: &AssignCtx) -> Ns {
         solve_model::linear(ctx.active_count(), 10)
     }
+
+    /// True when the solver fills [`Assignment::device`] itself on
+    /// multi-device contexts. Single-GPU baselines keep the default: the
+    /// simulator runs [`Assignment::align_devices`] after the solve to pin
+    /// their GPU picks onto concrete devices.
+    fn device_aware(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]
@@ -283,6 +428,7 @@ mod tier_tests {
             gpu_free_slots: 2,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         // host expert matches the two-tier estimates exactly
         assert_eq!(ctx.t_gpu(0), cm.t_gpu(4, false));
@@ -314,6 +460,7 @@ mod tier_tests {
             gpu_free_slots: 2,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         assert_eq!(ctx.host_wait_ns(0), 0);
         assert_eq!(ctx.host_wait_ns(1), 77_000);
@@ -351,6 +498,7 @@ mod tier_tests {
             gpu_free_slots: 2,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let (cq, cf) = (mk(&q4), mk(&fp16));
         assert_eq!(cq.host_wait_ns(1), q4.nvme_fetch_time());
@@ -378,10 +526,144 @@ mod tier_tests {
             gpu_free_slots: 1,
             layer: 0,
             layers: 1,
+            devices: None,
         };
         assert_eq!(ctx.tier(0), Tier::Host);
         assert_eq!(ctx.t_gpu(0), cm.t_gpu(7, false));
         assert_eq!(ctx.t_cpu(0), cm.t_cpu(7));
+    }
+}
+
+#[cfg(test)]
+mod device_tests {
+    use super::test_util::cost;
+    use super::*;
+
+    #[test]
+    fn device_view_prices_each_expert_on_every_device() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![4u32, 4, 4];
+        let resident = vec![false, true, false];
+        // device-major: e1 cached on device 0, e2 cached on device 1
+        let dev_resident = vec![false, true, false, false, false, true];
+        let free = vec![1usize, 1];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: None,
+            host_wait: None,
+            cost: &cm,
+            gpu_free_slots: 2,
+            layer: 0,
+            layers: 4,
+            devices: Some(DeviceView { n: 2, resident: &dev_resident, free_slots: &free }),
+        };
+        assert_eq!(ctx.n_devices(), 2);
+        assert!(ctx.resident_on(1, 0) && !ctx.resident_on(1, 1));
+        assert!(ctx.resident_on(2, 1) && !ctx.resident_on(2, 0));
+        assert_eq!(ctx.free_slots_on(0), 1);
+        // residency on the priced device: compute only
+        assert_eq!(ctx.t_gpu_dev(1, 0), cm.t_gpu_compute(4));
+        // residency on a peer: a P2P hop, cheaper than the PCIe chain
+        assert_eq!(ctx.t_gpu_dev(1, 1), cm.t_gpu_compute(4).max(cm.p2p_time()));
+        assert!(ctx.t_gpu_dev(1, 1) <= ctx.t_gpu_dev(0, 1), "peer hop beats host staging");
+        // no residency anywhere: the full host→device transfer
+        assert_eq!(ctx.t_gpu_dev(0, 0), cm.t_gpu_compute(4).max(cm.trans_time()));
+        // the single-choice view is the best device
+        assert_eq!(ctx.t_gpu(1), ctx.t_gpu_dev(1, 0).min(ctx.t_gpu_dev(1, 1)));
+    }
+
+    #[test]
+    fn single_device_view_matches_the_fallback_exactly() {
+        // devices: Some(n=1) and devices: None must price identically —
+        // the num_gpus = 1 digest lock rides on this
+        let cm = cost("deepseek-sim");
+        let workloads = vec![3u32, 5, 0, 2];
+        let resident = vec![true, false, false, false];
+        let free = vec![2usize];
+        let base = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: None,
+            host_wait: None,
+            cost: &cm,
+            gpu_free_slots: 2,
+            layer: 0,
+            layers: 4,
+            devices: None,
+        };
+        let viewed = AssignCtx {
+            devices: Some(DeviceView { n: 1, resident: &resident, free_slots: &free }),
+            ..base
+        };
+        for e in 0..4 {
+            assert_eq!(base.t_gpu(e), viewed.t_gpu(e));
+            assert_eq!(base.t_gpu_dev(e, 0), viewed.t_gpu_dev(e, 0));
+            assert_eq!(base.t_cpu(e), viewed.t_cpu(e));
+        }
+        assert_eq!(viewed.n_devices(), 1);
+        assert_eq!(base.free_slots_on(0), viewed.free_slots_on(0));
+    }
+
+    #[test]
+    fn align_devices_pins_residents_and_stripes_the_rest() {
+        let cm = cost("mixtral-sim");
+        let workloads = vec![4u32, 4, 4, 4];
+        let resident = vec![false; 4];
+        // e1 cached on device 1 (off-home: 1 % 2 == 1, so also home here);
+        // e3 cached on device 0 (off its home device 1)
+        let dev_resident = vec![false, false, false, true, false, true, false, false];
+        let free = vec![4usize, 4];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: None,
+            host_wait: None,
+            cost: &cm,
+            gpu_free_slots: 8,
+            layer: 0,
+            layers: 4,
+            devices: Some(DeviceView { n: 2, resident: &dev_resident, free_slots: &free }),
+        };
+        let mut a = Assignment::none(4);
+        a.to_gpu = vec![true, true, true, true];
+        a.device = vec![9, 9, 9, 9]; // garbage the pass must overwrite
+        a.align_devices(&ctx);
+        assert_eq!(a.device, vec![0, 1, 0, 0], "residents pinned, rest striped by home");
+        // constraint check is per-device: e0 and e2 both stage on device 0,
+        // overflowing a 1-slot budget there even though 3 total slots exist
+        let tight = vec![1usize, 2];
+        let ctx2 = AssignCtx {
+            devices: Some(DeviceView { n: 2, resident: &dev_resident, free_slots: &tight }),
+            ..ctx
+        };
+        assert!(!a.satisfies_constraints(&ctx2), "per-device staging budget binds");
+        // makespan is the max over per-device sums, not the global sum
+        let per_dev_max = a.makespan_estimate(&ctx);
+        let sum: Ns = (0..4).map(|e| ctx.t_gpu_dev(e, a.device_of(e) as usize)).sum();
+        assert!(per_dev_max < sum, "two devices overlap their work");
+    }
+
+    #[test]
+    fn align_devices_is_a_no_op_on_single_device_contexts() {
+        let cm = cost("deepseek-sim");
+        let workloads = vec![2u32, 2];
+        let resident = vec![false, false];
+        let ctx = AssignCtx {
+            workloads: &workloads,
+            resident: &resident,
+            tiers: None,
+            host_wait: None,
+            cost: &cm,
+            gpu_free_slots: 2,
+            layer: 0,
+            layers: 1,
+            devices: None,
+        };
+        let mut a = Assignment::none(2);
+        a.to_gpu = vec![true, true];
+        a.align_devices(&ctx);
+        assert_eq!(a.device, vec![0, 0]);
     }
 }
 
@@ -400,6 +682,7 @@ mod solve_cost_tests {
             gpu_free_slots: workloads.len(),
             layer: 0,
             layers: 4,
+            devices: None,
         }
     }
 

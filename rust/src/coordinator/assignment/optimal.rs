@@ -150,6 +150,7 @@ mod tests {
                 gpu_free_slots: slots,
                 layer: 0,
                 layers: 4,
+                devices: None,
             };
             let a = OptimalAssigner::new().assign(&ctx);
             assert!(a.satisfies_constraints(&ctx), "trial {trial}");
@@ -175,6 +176,7 @@ mod tests {
                 gpu_free_slots: n,
                 layer: 0,
                 layers: 4,
+                devices: None,
             };
             let g = GreedyAssigner::new().assign(&ctx).makespan_estimate(&ctx);
             let o = OptimalAssigner::new().assign(&ctx).makespan_estimate(&ctx);
@@ -196,6 +198,7 @@ mod tests {
             gpu_free_slots: 8,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = OptimalAssigner::new().assign(&ctx);
         assert_eq!(a, Assignment::none(8));

@@ -64,6 +64,7 @@ mod tests {
             gpu_free_slots: 0,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = ResidentOnlyAssigner::new().assign(&ctx);
         assert_eq!(a.to_gpu, vec![true, false, false, false]);

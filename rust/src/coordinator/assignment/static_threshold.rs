@@ -110,6 +110,7 @@ mod tests {
             gpu_free_slots: 4,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = StaticThresholdAssigner::new().assign(&ctx);
         assert!(a.to_gpu[0], "above-threshold expert goes to GPU");
@@ -132,6 +133,7 @@ mod tests {
             gpu_free_slots: 8,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = StaticThresholdAssigner::new().assign(&ctx);
         assert!(a.to_gpu[0] && a.to_gpu[1] && a.to_gpu[2] && a.to_gpu[3]);
@@ -156,6 +158,7 @@ mod tests {
             gpu_free_slots: 8,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = StaticThresholdAssigner::new().assign(&ctx);
         assert!(a.to_cpu[0] && a.to_cpu[1]);
@@ -175,6 +178,7 @@ mod tests {
             gpu_free_slots: 8,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = StaticThresholdAssigner::new().assign(&ctx);
         assert!(a.to_gpu[0]);

@@ -324,11 +324,34 @@ impl FaultPlan {
         (step.wrapping_add(phase)) % period < len
     }
 
+    /// Salt a window domain with a GPU device index. Device 0 uses the
+    /// base domain **unchanged** — its schedule is bit-identical to the
+    /// pre-multi-GPU single-device schedule, which the `num_gpus = 1`
+    /// digest-backcompat lock depends on. Higher devices shift the salt
+    /// into bits the base domains (16-bit ASCII tags) never occupy, so
+    /// each device observes an independently-phased window.
+    #[inline]
+    fn dev_domain(domain: u64, device: u8) -> u64 {
+        domain ^ ((device as u64) << 16)
+    }
+
     /// GPU compute-duration multiplier for `step` (1.0 = full clocks).
+    /// Single-device view: equals [`Self::gpu_mult_dev`] on device 0.
     #[inline]
     pub fn gpu_mult(&self, step: u64) -> f64 {
+        self.gpu_mult_dev(step, 0)
+    }
+
+    /// GPU compute-duration multiplier for `step` on GPU `device`. Thermal
+    /// throttle is per-card (airflow, silicon lottery), so each device gets
+    /// its own seed-jittered window phase; device 0 reproduces the
+    /// pre-refactor single-GPU schedule exactly.
+    #[inline]
+    pub fn gpu_mult_dev(&self, step: u64, device: u8) -> f64 {
         let p = &self.profile;
-        if p.gpu_mult > 1.0 && self.in_window(0x6770, step, p.gpu_period, p.gpu_len) {
+        if p.gpu_mult > 1.0
+            && self.in_window(Self::dev_domain(0x6770, device), step, p.gpu_period, p.gpu_len)
+        {
             p.gpu_mult
         } else {
             1.0
@@ -336,10 +359,22 @@ impl FaultPlan {
     }
 
     /// PCIe transfer-duration multiplier for `step` (1.0 = full link).
+    /// Single-device view: equals [`Self::pcie_mult_dev`] on device 0.
     #[inline]
     pub fn pcie_mult(&self, step: u64) -> f64 {
+        self.pcie_mult_dev(step, 0)
+    }
+
+    /// PCIe transfer-duration multiplier for `step` on the link feeding GPU
+    /// `device` (each card sits on its own root-port link, so degradation
+    /// windows are per-device). Device 0 reproduces the pre-refactor
+    /// single-link schedule exactly.
+    #[inline]
+    pub fn pcie_mult_dev(&self, step: u64, device: u8) -> f64 {
         let p = &self.profile;
-        if p.pcie_mult > 1.0 && self.in_window(0x7063, step, p.pcie_period, p.pcie_len) {
+        if p.pcie_mult > 1.0
+            && self.in_window(Self::dev_domain(0x7063, device), step, p.pcie_period, p.pcie_len)
+        {
             p.pcie_mult
         } else {
             1.0
@@ -493,6 +528,37 @@ mod tests {
             .filter(|&i| first[i] != first[(i + 1) % first.len()])
             .count();
         assert_eq!(edges, 2, "one contiguous window per period");
+    }
+
+    #[test]
+    fn device_windows_decorrelate_but_device_zero_matches_the_scalar_view() {
+        let p = FaultProfile::named("thermal").unwrap();
+        let plan = FaultPlan::new(p, 11);
+        for step in 0..(p.gpu_period * 4) {
+            // the scalar queries are exactly the device-0 views — the
+            // num_gpus = 1 digest lock rides on this identity
+            assert_eq!(plan.gpu_mult(step), plan.gpu_mult_dev(step, 0));
+            assert_eq!(plan.pcie_mult(step), plan.pcie_mult_dev(step, 0));
+        }
+        // each device keeps the exact duty cycle but on its own phase
+        let n = p.gpu_period * 100;
+        for d in 0..4u8 {
+            let hot = (0..n).filter(|&s| plan.gpu_mult_dev(s, d) > 1.0).count() as u64;
+            assert_eq!(hot, p.gpu_len * 100, "device {d} duty cycle is exact");
+        }
+        let decorrelated = (0..n).any(|s| {
+            (plan.gpu_mult_dev(s, 0) > 1.0) != (plan.gpu_mult_dev(s, 1) > 1.0)
+                || (plan.pcie_mult_dev(s, 0) > 1.0) != (plan.pcie_mult_dev(s, 2) > 1.0)
+        });
+        assert!(decorrelated, "devices must not throttle in lockstep");
+        // purity holds per device too
+        let again = FaultPlan::new(p, 11);
+        for s in 0..64u64 {
+            for d in 0..4u8 {
+                assert_eq!(plan.gpu_mult_dev(s, d), again.gpu_mult_dev(s, d));
+                assert_eq!(plan.pcie_mult_dev(s, d), again.pcie_mult_dev(s, d));
+            }
+        }
     }
 
     #[test]

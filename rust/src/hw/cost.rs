@@ -108,6 +108,13 @@ impl CostModel {
         ns(self.expert_bytes() / self.hw.pcie_bw + self.hw.pcie_latency_s)
     }
 
+    /// Inter-GPU P2P/NVLink copy time for one expert's fp16 weights
+    /// (device `a` → device `b` on the shared fabric lane). Only multi-GPU
+    /// runs ever charge this: at `num_gpus = 1` no P2P copy is issued.
+    pub fn p2p_time(&self) -> Ns {
+        ns(self.expert_bytes() / self.hw.p2p_bw + self.hw.p2p_latency_s)
+    }
+
     /// NVMe read time for one expert (disk → host promotion in the tiered
     /// store), computed from the *on-disk* bytes — a quantized format
     /// makes the read proportionally cheaper. This is the third-tier
@@ -294,6 +301,22 @@ mod tests {
             assert!(c.nvme_read_time() > c.trans_time(), "{m}: NVMe read must cost more");
             assert!(c.nvme_write_time() >= c.nvme_read_time(), "{m}: writes are slower");
         }
+    }
+
+    #[test]
+    fn p2p_fabric_beats_host_pcie() {
+        // The economics of the multi-GPU exec path: pulling a cached
+        // expert from a peer device over NVLink-class fabric must cost
+        // less than re-staging it from host RAM over PCIe, or the P2P
+        // branch in simrun would never win.
+        for m in ["mixtral-sim", "deepseek-sim", "qwen-sim"] {
+            let c = cm(m);
+            assert!(c.p2p_time() > 0, "{m}: a P2P copy is never free");
+            assert!(c.p2p_time() < c.trans_time(), "{m}: P2P must beat PCIe");
+        }
+        // quantization doesn't touch P2P: both ends hold fp16
+        let q4 = cm("mixtral-sim").with_quant_ratio(0.28);
+        assert_eq!(q4.p2p_time(), cm("mixtral-sim").p2p_time());
     }
 
     #[test]

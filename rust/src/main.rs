@@ -5,7 +5,7 @@
 //!   calibrate --preset P          compute residual vectors + activation stats
 //!   prepare [--preset P]          calibrate + generate all standard trace pools
 //!   run --preset P [--framework dali] [--batch 8] [--steps 32]
-//!       [--solve-cost modeled|measured] [--placement auto|on|off]
+//!       [--gpus N] [--solve-cost modeled|measured] [--placement auto|on|off]
 //!       [--trace out.jsonl] [--trace-digest] [--synthetic]
 //!       [--faults profile|spec] [--fault-seed N]
 //!                                 replay a decode benchmark and print metrics;
@@ -18,7 +18,10 @@
 //!                                 needed — what CI uses), `--faults` installs
 //!                                 a deterministic fault plan (named profile
 //!                                 from presets.json / built-ins, or an inline
-//!                                 `key=value,...` spec — see README)
+//!                                 `key=value,...` spec — see README), and
+//!                                 `--gpus N` overrides the hardware preset's
+//!                                 device count (expert-parallel sharding
+//!                                 across N GPU tiers joined by a P2P fabric)
 //!   trace summarize FILE [--top 10]
 //!                                 aggregate a `--trace` capture: per-lane
 //!                                 utilization, prefetch/promote-ahead
@@ -56,11 +59,11 @@ use anyhow::{bail, Result};
 use dali::config::Presets;
 use dali::coordinator::assignment::SolveCost;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
-use dali::coordinator::simrun::{replay_decode_faulted, Phase, StepSimulator};
+use dali::coordinator::simrun::{replay_decode_gpus, Phase, StepSimulator};
 use dali::fault::FaultPlan;
 use dali::hw::CostModel;
 use dali::serve::{simulate_serve, ServeSim, ServeSimCfg};
-use dali::store::{PlacementCfg, TieredStore};
+use dali::store::{PlacementCfg, TieredStore, MAX_DEVICES};
 use dali::trace::{DigestSink, JsonSink, TraceSummary};
 use dali::util::alloc_counter::{alloc_calls, dealloc_calls, CountingAlloc};
 use dali::util::{fmt_ns, repo_root, Args};
@@ -152,6 +155,19 @@ fn cmd_run(args: &Args) -> Result<()> {
     // the scenario itself.
     let quant = presets.quant_ratio(&preset);
     let cost = CostModel::new(model, hw).with_quant_ratio(quant);
+    // Device count: the hardware preset's `num_gpus` is the source of
+    // truth; `--gpus N` overrides it (e.g. to replay a 2-GPU scenario on
+    // one device for an ablation). Same validation as HwConfig::validate.
+    let n_gpus = match args.get("gpus") {
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| anyhow::anyhow!("bad --gpus '{v}'"))?;
+            if !(1..=MAX_DEVICES).contains(&n) {
+                bail!("--gpus must be in 1..={MAX_DEVICES}, got {n}");
+            }
+            n
+        }
+        None => hw.num_gpus,
+    };
     // `--synthetic` replays a generated locality workload with a cold
     // frequency prior instead of the calibrated trace pools — no artifacts
     // required, so a clean checkout (read: CI) can exercise the full
@@ -209,7 +225,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let m = match args.get("trace") {
         Some(path) => {
             let file = std::fs::File::create(path)?;
-            let (m, (_digest, json)) = replay_decode_faulted(
+            let (m, (_digest, json)) = replay_decode_gpus(
                 &trace,
                 &seq_ids,
                 steps,
@@ -218,6 +234,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 &freq,
                 model.sim.n_shared,
                 7,
+                n_gpus,
                 faults,
                 Some(store),
                 (DigestSink::new(), JsonSink::new(file)),
@@ -228,7 +245,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             m
         }
         None => {
-            replay_decode_faulted(
+            replay_decode_gpus(
                 &trace,
                 &seq_ids,
                 steps,
@@ -237,6 +254,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 &freq,
                 model.sim.n_shared,
                 7,
+                n_gpus,
                 faults,
                 Some(store),
                 DigestSink::new(),
@@ -251,7 +269,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    println!("preset={preset} framework={} batch={batch} steps={steps}", fw.name());
+    println!(
+        "preset={preset} framework={} batch={batch} steps={steps} gpus={n_gpus}",
+        fw.name()
+    );
     println!("  decode speed      : {:.2} tokens/s (simulated)", m.tokens_per_s());
     println!("  virtual time      : {}", fmt_ns(m.total_ns));
     println!("  MoE time          : {}", fmt_ns(m.moe_ns));
@@ -269,6 +290,23 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("  cache hit rate    : {:.1}%", 100.0 * m.cache_hit_rate());
     println!("  prefetch accuracy : {:.1}%", 100.0 * m.prefetch_accuracy());
     println!("  sched overhead    : {:.2}%", 100.0 * m.sched_share());
+    if n_gpus > 1 {
+        for d in 0..n_gpus {
+            println!(
+                "  gpu[{d}]            : compute {} / copy {} / {} cache hits",
+                fmt_ns(m.dev_compute_busy_ns[d]),
+                fmt_ns(m.dev_copy_busy_ns[d]),
+                m.dev_cache_hits[d]
+            );
+        }
+        println!(
+            "  P2P fabric        : {} copies ({} re-homes), {:.2} GB, busy {}",
+            m.p2p_copies,
+            m.p2p_migrations,
+            m.p2p_bytes as f64 / 1e9,
+            fmt_ns(m.p2p_busy_ns)
+        );
+    }
     if tiered {
         println!(
             "  tier hits         : {} gpu / {} host / {} disk (miss rate {:.1}%)",
@@ -392,6 +430,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ("mixtral-sim-ram16", None),
         ("mixtral-sim-ram16-q4", None),
         ("mixtral-sim-ram16-q4", Some("flaky-nvme")),
+        ("deepseek-v3-sim-2gpu", None),
     ] {
         let label = match fault_name {
             Some(f) => format!("{scenario}+{f}"),
@@ -403,6 +442,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         };
         let (model, hw) = presets.scenario(scenario)?;
         let dims = &model.sim;
+        // Multi-GPU scenarios (hw num_gpus > 1) run the expert-parallel
+        // sharded pipeline — the P2P fabric and per-device lanes sit under
+        // the same zero-alloc + digest gates as the single-device tiers.
+        let n_gpus = hw.num_gpus;
         let cost = CostModel::for_scenario(&presets, scenario)?;
         let trace =
             synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, steps, 0xbe7c);
@@ -417,7 +460,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         // --- (b) steady-state allocation audit ------------------------------
         let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
         let mut sim =
-            StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7);
+            StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7)
+                .with_gpus(n_gpus);
         if let Some(plan) = faults {
             sim = sim.with_faults(plan);
         }
@@ -457,7 +501,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let mut digest_drift = false;
         while t0.elapsed() < budget {
             let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
-            let (mm, _sink) = replay_decode_faulted(
+            let (mm, _sink) = replay_decode_gpus(
                 &trace,
                 &ids,
                 steps,
@@ -466,6 +510,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 &freq,
                 dims.n_shared,
                 7,
+                n_gpus,
                 faults,
                 mk_store(),
                 DigestSink::new(),

@@ -110,6 +110,22 @@ pub struct RunMetrics {
     /// Experts demoted under the workload-aware score to satisfy shrinks.
     pub ram_pressure_spills: u64,
 
+    // --- multi-GPU (per device tier; slots past `num_gpus` stay zero) ----------
+    /// Expert-cache hits served by each GPU device.
+    pub dev_cache_hits: [u64; crate::store::MAX_DEVICES],
+    /// GPU compute-stream busy time per device.
+    pub dev_compute_busy_ns: [u64; crate::store::MAX_DEVICES],
+    /// Demand-path PCIe copy time per device's link.
+    pub dev_copy_busy_ns: [u64; crate::store::MAX_DEVICES],
+    /// Inter-GPU P2P fabric copies (execution hops + re-homing).
+    pub p2p_copies: u64,
+    /// Bytes moved over the P2P fabric.
+    pub p2p_bytes: u64,
+    /// P2P fabric busy time.
+    pub p2p_busy_ns: u64,
+    /// Store-initiated cross-device expert migrations.
+    pub p2p_migrations: u64,
+
     // --- trace audit -----------------------------------------------------------
     /// Whole-run digest from the trace subsystem's digest sink: an FNV-1a
     /// hash over every emitted scheduling event, in order. `None` under
@@ -247,6 +263,15 @@ impl RunMetrics {
         self.degraded_pcie_ns += o.degraded_pcie_ns;
         self.ram_pressure_events += o.ram_pressure_events;
         self.ram_pressure_spills += o.ram_pressure_spills;
+        for d in 0..crate::store::MAX_DEVICES {
+            self.dev_cache_hits[d] += o.dev_cache_hits[d];
+            self.dev_compute_busy_ns[d] += o.dev_compute_busy_ns[d];
+            self.dev_copy_busy_ns[d] += o.dev_copy_busy_ns[d];
+        }
+        self.p2p_copies += o.p2p_copies;
+        self.p2p_bytes += o.p2p_bytes;
+        self.p2p_busy_ns += o.p2p_busy_ns;
+        self.p2p_migrations += o.p2p_migrations;
         // Digests are stream hashes, not counters: concatenation order is
         // meaningless for merged runs, so two present digests combine as
         // an order-independent wrapping sum (commutative + associative —
@@ -392,6 +417,13 @@ mod tests {
             degraded_pcie_ns: 42,
             ram_pressure_events: 43,
             ram_pressure_spills: 44,
+            dev_cache_hits: [45; crate::store::MAX_DEVICES],
+            dev_compute_busy_ns: [46; crate::store::MAX_DEVICES],
+            dev_copy_busy_ns: [47; crate::store::MAX_DEVICES],
+            p2p_copies: 48,
+            p2p_bytes: 49,
+            p2p_busy_ns: 50,
+            p2p_migrations: 51,
             trace_digest: Some(0x1000),
         };
         let mut m = mk();
@@ -441,6 +473,13 @@ mod tests {
             degraded_pcie_ns,
             ram_pressure_events,
             ram_pressure_spills,
+            dev_cache_hits,
+            dev_compute_busy_ns,
+            dev_copy_busy_ns,
+            p2p_copies,
+            p2p_bytes,
+            p2p_busy_ns,
+            p2p_migrations,
             trace_digest,
         } = m;
         for (i, v) in [
@@ -494,6 +533,13 @@ mod tests {
         {
             assert_eq!(v, 2 * (i as u64 + 1), "field #{i} must merge additively");
         }
+        assert_eq!(dev_cache_hits, [2 * 45; crate::store::MAX_DEVICES]);
+        assert_eq!(dev_compute_busy_ns, [2 * 46; crate::store::MAX_DEVICES]);
+        assert_eq!(dev_copy_busy_ns, [2 * 47; crate::store::MAX_DEVICES]);
+        assert_eq!(p2p_copies, 2 * 48);
+        assert_eq!(p2p_bytes, 2 * 49);
+        assert_eq!(p2p_busy_ns, 2 * 50);
+        assert_eq!(p2p_migrations, 2 * 51);
         assert_eq!(trace_digest, Some(0x2000), "digests mix as a wrapping sum");
     }
 

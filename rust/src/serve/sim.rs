@@ -556,8 +556,11 @@ pub fn simulate_serve(
     let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
     let fwcfg = FrameworkCfg::paper_default(dims);
     let bundle = fw.bundle(dims, &cost, &freq, &fwcfg);
+    // honor the scenario's device count: multi-GPU hardware presets serve
+    // with expert-parallel sharded pipelines (num_gpus = 1 is unchanged)
     let mut sim =
         StepSimulator::new(&cost, bundle, &freq, dims.layers, dims.n_routed, dims.n_shared, 7)
+            .with_gpus(hw.num_gpus)
             .with_sink(DigestSink::new());
     if let Some(plan) = faults {
         sim = sim.with_faults(plan);

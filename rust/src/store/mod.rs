@@ -47,5 +47,5 @@ mod tiered;
 
 pub use placement::PlacementCfg;
 pub use scheduler::TransferScheduler;
-pub use tier::Tier;
+pub use tier::{Tier, MAX_DEVICES};
 pub use tiered::{StoreCfg, TieredStore};

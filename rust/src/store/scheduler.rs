@@ -13,12 +13,13 @@
 
 use crate::hw::Ns;
 
-/// Three independent virtual-time lanes plus traffic counters.
+/// Four independent virtual-time lanes plus traffic counters.
 #[derive(Debug, Clone, Default)]
 pub struct TransferScheduler {
     read_free: Ns,
     write_free: Ns,
     transcode_free: Ns,
+    p2p_free: Ns,
     /// Start of the contiguous busy run ending at each lane's free
     /// pointer — lets [`Self::rebase_and_clear`] carry the residual busy
     /// time of in-flight work across a metrics reset instead of dropping
@@ -26,6 +27,7 @@ pub struct TransferScheduler {
     read_run: Ns,
     write_run: Ns,
     transcode_run: Ns,
+    p2p_run: Ns,
     /// Busy-time integrals per lane.
     pub read_busy: Ns,
     pub write_busy: Ns,
@@ -48,6 +50,13 @@ pub struct TransferScheduler {
     /// stalled command waits for its timeout.
     pub read_stalls: u64,
     pub read_stall_ns: Ns,
+    /// Inter-GPU P2P/NVLink lane: busy integral, bytes moved (fp16 — the
+    /// executable format the device tiers hold), and copy count. One
+    /// shared lane models the NVLink/PCIe-P2P fabric; single-GPU runs
+    /// never touch it, so all three stay 0 there.
+    pub p2p_busy: Ns,
+    pub p2p_bytes: u64,
+    pub p2p_copies: u64,
 }
 
 impl TransferScheduler {
@@ -113,6 +122,27 @@ impl TransferScheduler {
         self.write_free
     }
 
+    /// Next instant the inter-GPU P2P lane is free.
+    pub fn p2p_free_at(&self) -> Ns {
+        self.p2p_free
+    }
+
+    /// Schedule one inter-GPU P2P/NVLink copy at or after `now`; returns
+    /// its arrival on the destination device. FIFO on the shared fabric
+    /// lane — concurrent device pairs serialize, the conservative model —
+    /// and fully overlapped with every NVMe/PCIe/compute lane.
+    pub fn schedule_p2p(&mut self, now: Ns, dur: Ns, bytes: u64) -> Ns {
+        let start = self.p2p_free.max(now);
+        if start > self.p2p_free {
+            self.p2p_run = start;
+        }
+        self.p2p_free = start + dur;
+        self.p2p_busy += dur;
+        self.p2p_bytes += bytes;
+        self.p2p_copies += 1;
+        self.p2p_free
+    }
+
     /// Schedule the CPU transcode (dequantize) of one promoted expert at
     /// or after `after` (its NVMe read completion); returns the instant
     /// the fp16 host copy is usable. FIFO on its own lane, so transcodes
@@ -176,12 +206,15 @@ impl TransferScheduler {
         self.read_busy = residual(self.read_free, self.read_run, base);
         self.write_busy = residual(self.write_free, self.write_run, base);
         self.transcode_busy = residual(self.transcode_free, self.transcode_run, base);
+        self.p2p_busy = residual(self.p2p_free, self.p2p_run, base);
         self.read_free = self.read_free.saturating_sub(base);
         self.write_free = self.write_free.saturating_sub(base);
         self.transcode_free = self.transcode_free.saturating_sub(base);
+        self.p2p_free = self.p2p_free.saturating_sub(base);
         self.read_run = self.read_run.saturating_sub(base);
         self.write_run = self.write_run.saturating_sub(base);
         self.transcode_run = self.transcode_run.saturating_sub(base);
+        self.p2p_run = self.p2p_run.saturating_sub(base);
         self.read_bytes = 0;
         self.write_bytes = 0;
         self.reads = 0;
@@ -189,6 +222,8 @@ impl TransferScheduler {
         self.transcodes = 0;
         self.read_stalls = 0;
         self.read_stall_ns = 0;
+        self.p2p_bytes = 0;
+        self.p2p_copies = 0;
     }
 }
 
@@ -306,6 +341,47 @@ mod tests {
         assert_eq!(s.transcode_busy, 40, "in-flight transcode keeps its residual");
         assert_eq!(s.transcode_free_at(), 40);
         assert_eq!(s.transcodes, 0);
+    }
+
+    #[test]
+    fn p2p_lane_is_fifo_and_overlaps_every_other_lane() {
+        let mut s = TransferScheduler::new();
+        // P2P copies never queue behind NVMe traffic…
+        s.schedule_read(0, 1000, 8);
+        assert_eq!(s.schedule_p2p(0, 100, 4), 100);
+        // …but serialize FIFO on the shared fabric lane
+        assert_eq!(s.schedule_p2p(0, 50, 4), 150);
+        assert_eq!(s.schedule_p2p(400, 50, 4), 450, "respects now after idle gap");
+        assert_eq!(s.p2p_busy, 200);
+        assert_eq!(s.p2p_bytes, 12);
+        assert_eq!(s.p2p_copies, 3);
+        assert_eq!(s.read_busy, 1000, "NVMe lane untouched by P2P traffic");
+    }
+
+    #[test]
+    fn rebase_carries_p2p_residual_like_the_nvme_lanes() {
+        // the same residual-busy carry rule as read/write/transcode: the
+        // portion of the current run extending past the reset survives,
+        // bytes and copy counts belong to the issuing period
+        let mut s = TransferScheduler::new();
+        s.schedule_p2p(0, 1000, 8);
+        s.rebase_and_clear(400);
+        assert_eq!(s.p2p_free_at(), 600);
+        assert_eq!(s.p2p_busy, 600, "in-flight P2P copy keeps its residual");
+        assert_eq!(s.p2p_bytes, 0);
+        assert_eq!(s.p2p_copies, 0);
+        // a fully-landed copy leaves no residual
+        let mut s2 = TransferScheduler::new();
+        s2.schedule_p2p(0, 100, 8);
+        s2.rebase_and_clear(700);
+        assert_eq!(s2.p2p_busy, 0);
+        assert_eq!(s2.p2p_free_at(), 0);
+        // pre-gap busy time is not carried — only the current run counts
+        let mut s3 = TransferScheduler::new();
+        s3.schedule_p2p(0, 100, 1); // run 0..100
+        s3.schedule_p2p(500, 100, 1); // idle gap, run 500..600
+        s3.rebase_and_clear(550);
+        assert_eq!(s3.p2p_busy, 50, "residual = portion of the run past the reset");
     }
 
     #[test]

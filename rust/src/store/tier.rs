@@ -1,7 +1,20 @@
-//! The three-level residency lattice.
+//! The three-level residency lattice, device-indexed at the top.
+
+/// Hard cap on the number of GPU device tiers one run may address. Keeps
+/// the per-device metrics arrays fixed-size (`Copy`, exhaustively
+/// destructurable) and bounds the `u8` device index with room to spare;
+/// `HwConfig::validate` rejects presets asking for more.
+pub const MAX_DEVICES: usize = 8;
 
 /// Where an expert's weights primarily live. Ordered coldest-first so
-/// `Tier::Disk < Tier::Host < Tier::Gpu` reads as "promotion moves up".
+/// `Tier::Disk < Tier::Host < Tier::Gpu(d)` reads as "promotion moves up".
+///
+/// The GPU tier is device-indexed: an N-GPU box has N distinct top tiers.
+/// The derived ordering ranks `Gpu(0) < Gpu(1) < …` — that cross-device
+/// order carries **no thermal meaning** (no device is "hotter" than
+/// another); it exists only so sorts and victim tiebreaks over mixed tiers
+/// stay fully deterministic. Use [`Tier::is_gpu`] / [`Tier::device`] when
+/// the question is "on a GPU at all" vs "on which GPU".
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Tier {
     /// NVMe-resident: must be read into host RAM before any device can
@@ -9,8 +22,9 @@ pub enum Tier {
     Disk,
     /// Host-DRAM-resident: the paper's baseline assumption for all experts.
     Host,
-    /// GPU-cache-resident (the host keeps the pinned staging copy).
-    Gpu,
+    /// GPU-cache-resident on device `d` (the host keeps the pinned staging
+    /// copy). Single-GPU runs use `Gpu(0)` everywhere.
+    Gpu(u8),
 }
 
 impl Tier {
@@ -18,7 +32,20 @@ impl Tier {
         match self {
             Tier::Disk => "disk",
             Tier::Host => "host",
-            Tier::Gpu => "gpu",
+            Tier::Gpu(_) => "gpu",
+        }
+    }
+
+    /// Whether the expert is on any GPU device.
+    pub fn is_gpu(&self) -> bool {
+        matches!(self, Tier::Gpu(_))
+    }
+
+    /// The GPU device index, if on a GPU tier.
+    pub fn device(&self) -> Option<u8> {
+        match self {
+            Tier::Gpu(d) => Some(*d),
+            _ => None,
         }
     }
 }
@@ -30,7 +57,28 @@ mod tests {
     #[test]
     fn lattice_orders_coldest_first() {
         assert!(Tier::Disk < Tier::Host);
-        assert!(Tier::Host < Tier::Gpu);
-        assert_eq!(Tier::Gpu.name(), "gpu");
+        assert!(Tier::Host < Tier::Gpu(0));
+        assert_eq!(Tier::Gpu(0).name(), "gpu");
+    }
+
+    #[test]
+    fn device_tiers_order_deterministically_above_host() {
+        // every device tier sits above Host/Disk; the cross-device order is
+        // a documented determinism tiebreak, not a thermal ranking
+        for d in 0..MAX_DEVICES as u8 {
+            assert!(Tier::Host < Tier::Gpu(d));
+            assert!(Tier::Disk < Tier::Gpu(d));
+        }
+        assert!(Tier::Gpu(0) < Tier::Gpu(1));
+        assert!(Tier::Gpu(1) < Tier::Gpu(7));
+    }
+
+    #[test]
+    fn device_accessors() {
+        assert!(Tier::Gpu(3).is_gpu());
+        assert!(!Tier::Host.is_gpu() && !Tier::Disk.is_gpu());
+        assert_eq!(Tier::Gpu(3).device(), Some(3));
+        assert_eq!(Tier::Host.device(), None);
+        assert_eq!(Tier::Disk.device(), None);
     }
 }

@@ -22,7 +22,7 @@ use crate::trace::{Event, Lane, NullSink, TraceSink};
 
 use super::placement::PlacementCfg;
 use super::scheduler::TransferScheduler;
-use super::tier::Tier;
+use super::tier::{Tier, MAX_DEVICES};
 
 /// Store configuration.
 #[derive(Debug, Clone)]
@@ -70,6 +70,17 @@ pub struct TieredStore {
     /// guards the one `admit_to_gpu` path allowed to claim a slot for a
     /// disk-resident expert.
     syncing: bool,
+    /// Number of GPU device tiers admissions may target
+    /// (1..=[`MAX_DEVICES`]; 1 = the pre-multi-GPU behaviour).
+    n_devices: usize,
+    /// Experts whose primary tier is `Gpu(d)`, per device. Each one pins a
+    /// host staging slot, so this doubles as the per-device staging-pin
+    /// count the host-budget floor is built from.
+    gpu_used: [usize; MAX_DEVICES],
+    /// Optional per-device GPU residency budgets in experts
+    /// (`usize::MAX` = the cache layer is the sole capacity authority —
+    /// the single-GPU behaviour). Enforced by `check_invariants`.
+    gpu_slots: [usize; MAX_DEVICES],
     spill_writeback: bool,
     /// LRU clock for host-victim selection.
     clock: u64,
@@ -134,6 +145,8 @@ pub struct TieredStore {
     pub fault_stall_ns: Ns,
     pub ram_pressure_events: u64,
     pub ram_pressure_spills: u64,
+    /// Inter-GPU residency migrations charged to the P2P fabric lane.
+    pub p2p_migrations: u64,
 }
 
 impl TieredStore {
@@ -170,6 +183,9 @@ impl TieredStore {
             host_slots: cfg.host_slots,
             seed_slack: 0,
             syncing: false,
+            n_devices: 1,
+            gpu_used: [0; MAX_DEVICES],
+            gpu_slots: [usize::MAX; MAX_DEVICES],
             spill_writeback: cfg.spill_writeback,
             clock: 0,
             last_use: vec![0; total],
@@ -199,6 +215,7 @@ impl TieredStore {
             fault_stall_ns: 0,
             ram_pressure_events: 0,
             ram_pressure_spills: 0,
+            p2p_migrations: 0,
         }
     }
 
@@ -227,6 +244,44 @@ impl TieredStore {
 
     pub fn n_experts(&self) -> usize {
         self.n_experts
+    }
+
+    /// Number of GPU device tiers this store addresses.
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// Size the store for `n` GPU device tiers. Must be called before any
+    /// GPU admission (the simulator sets it at construction); shrinking a
+    /// store that already holds device residents would orphan them.
+    pub fn set_n_devices(&mut self, n: usize) {
+        assert!(n >= 1 && n <= MAX_DEVICES, "n_devices must be in 1..={MAX_DEVICES}, got {n}");
+        assert!(
+            self.gpu_used.iter().all(|&u| u == 0),
+            "set_n_devices after GPU admissions would orphan residents"
+        );
+        self.n_devices = n;
+    }
+
+    /// The device expert `e`'s GPU-cache residency is sharded to: experts
+    /// are striped round-robin across devices, so each device's cache holds
+    /// a disjoint ~1/N slice of the expert grid (the expert-parallel
+    /// layout). At `n_devices = 1` every expert is homed on device 0.
+    pub fn home_device(&self, e: usize) -> u8 {
+        (e % self.n_devices) as u8
+    }
+
+    /// Experts currently GPU-resident on device `d` — also that device's
+    /// host staging-pin count (each GPU resident pins a host copy).
+    pub fn gpu_used_dev(&self, d: usize) -> usize {
+        self.gpu_used[d]
+    }
+
+    /// Install an expert-count residency budget for device `d`
+    /// (`usize::MAX` = uncapped; the cache layer enforces its own
+    /// capacity either way — this is the store-side conservation check).
+    pub fn set_gpu_slots(&mut self, d: usize, slots: usize) {
+        self.gpu_slots[d] = slots;
     }
 
     /// The configured host budget. Never inflated by initial placement —
@@ -472,6 +527,7 @@ impl TieredStore {
         self.fault_stall_ns = 0;
         self.ram_pressure_events = 0;
         self.ram_pressure_spills = 0;
+        self.p2p_migrations = 0;
     }
 
     /// Metrics-period boundary: shift every virtual-time clock back by
@@ -586,6 +642,7 @@ impl TieredStore {
                 if S::ENABLED {
                     sink.emit(&Event::LaneBusy {
                         lane: Lane::NvmeRead,
+                        device: 0,
                         start: end - stall,
                         end,
                     });
@@ -622,6 +679,7 @@ impl TieredStore {
         if S::ENABLED {
             sink.emit(&Event::LaneBusy {
                 lane: Lane::NvmeRead,
+                device: 0,
                 start: read_done - read_dur,
                 end: read_done,
             });
@@ -634,6 +692,7 @@ impl TieredStore {
             if S::ENABLED {
                 sink.emit(&Event::LaneBusy {
                     lane: Lane::Transcode,
+                    device: 0,
                     start: t_done - transcode,
                     end: t_done,
                 });
@@ -922,6 +981,7 @@ impl TieredStore {
             if S::ENABLED && t > 0 {
                 sink.emit(&Event::LaneBusy {
                     lane: Lane::Transcode,
+                    device: 0,
                     start: encoded - t,
                     end: encoded,
                 });
@@ -931,6 +991,7 @@ impl TieredStore {
             if S::ENABLED && write > 0 {
                 sink.emit(&Event::LaneBusy {
                     lane: Lane::NvmeWrite,
+                    device: 0,
                     start: w_done - write,
                     end: w_done,
                 });
@@ -938,12 +999,25 @@ impl TieredStore {
         }
     }
 
-    /// Mark `e` of `layer` GPU-resident (cache admission / swap load). The
-    /// caller is responsible for having made it host-resident first
-    /// (`ensure_host`) and for charging the PCIe upload; a disk-resident
-    /// expert is tolerated only for free initial placement and claims its
-    /// host slot without NVMe traffic.
+    /// Mark `e` of `layer` GPU-resident on its home device (cache
+    /// admission / swap load). The caller is responsible for having made
+    /// it host-resident first (`ensure_host`) and for charging the PCIe
+    /// upload; a disk-resident expert is tolerated only for free initial
+    /// placement and claims its host slot without NVMe traffic.
     pub fn admit_to_gpu(&mut self, layer: usize, e: usize) {
+        self.admit_to_gpu_dev(layer, e, self.home_device(e));
+    }
+
+    /// [`Self::admit_to_gpu`] targeting an explicit device tier. Admitting
+    /// an expert already resident on another device *moves* it (residency
+    /// stays single-copy); the caller charges the P2P copy — or uses
+    /// [`Self::migrate_gpu_dev`], which does both.
+    pub fn admit_to_gpu_dev(&mut self, layer: usize, e: usize, device: u8) {
+        assert!(
+            (device as usize) < self.n_devices,
+            "admission to device {device} of {}",
+            self.n_devices
+        );
         let i = self.idx(layer, e);
         self.touch(layer, e);
         match self.tier[i] {
@@ -966,20 +1040,56 @@ impl TieredStore {
                 }
             }
             Tier::Host => self.member_remove(i),
-            Tier::Gpu => {}
+            // already on a GPU: release the old device's count; the shared
+            // increment below re-books it (net no-op when prev == device)
+            Tier::Gpu(prev) => self.gpu_used[prev as usize] -= 1,
         }
-        self.tier[i] = Tier::Gpu;
+        self.tier[i] = Tier::Gpu(device);
+        self.gpu_used[device as usize] += 1;
     }
 
     /// Fold a GPU cache eviction into the store: the expert's primary tier
-    /// drops to Host (free — the pinned host copy still exists).
+    /// drops to Host (free — the pinned host copy still exists). Works for
+    /// any device tier.
     pub fn demote_gpu(&mut self, layer: usize, e: usize) {
         let i = self.idx(layer, e);
-        if self.tier[i] == Tier::Gpu {
+        if let Tier::Gpu(d) = self.tier[i] {
+            self.gpu_used[d as usize] -= 1;
             self.tier[i] = Tier::Host;
             self.member_add(i);
             self.gpu_demotions += 1;
         }
+    }
+
+    /// Move a GPU-resident expert to device `to` over the inter-GPU P2P
+    /// fabric lane, charging one expert of fp16 bytes (both ends hold the
+    /// execution format — quantization never touches P2P). Returns the
+    /// copy's completion instant; a same-device "move" is free and moves
+    /// nothing. Residency stays single-copy: retiring the source device's
+    /// cache entry is the caller's job.
+    pub fn migrate_gpu_dev(
+        &mut self,
+        layer: usize,
+        e: usize,
+        to: u8,
+        now: Ns,
+        cost: &CostModel,
+    ) -> Ns {
+        assert!((to as usize) < self.n_devices, "migration to device {to} of {}", self.n_devices);
+        let i = self.idx(layer, e);
+        let from = match self.tier[i] {
+            Tier::Gpu(d) => d,
+            t => panic!("P2P migration of non-GPU-resident expert (tier {t:?})"),
+        };
+        if from == to {
+            return now;
+        }
+        self.touch(layer, e);
+        self.gpu_used[from as usize] -= 1;
+        self.gpu_used[to as usize] += 1;
+        self.tier[i] = Tier::Gpu(to);
+        self.p2p_migrations += 1;
+        self.xfer.schedule_p2p(now, cost.p2p_time(), cost.expert_bytes() as u64)
     }
 
     /// One-time reconciliation of a layer's initial cache residency (the
@@ -993,19 +1103,22 @@ impl TieredStore {
         self.syncing = true;
         for e in 0..self.n_experts.min(gpu_mask.len()) {
             let i = self.idx(layer, e);
-            if gpu_mask[e] && self.tier[i] != Tier::Gpu {
-                self.admit_to_gpu(layer, e);
+            if gpu_mask[e] && !self.tier[i].is_gpu() {
+                // seeds land on the expert's home device — the sharded
+                // layout the per-device caches mirror
+                self.admit_to_gpu_dev(layer, e, self.home_device(e));
             }
         }
         self.syncing = false;
     }
 
-    /// (gpu, host, disk) expert counts across the whole grid.
+    /// (gpu, host, disk) expert counts across the whole grid (GPU summed
+    /// over every device tier; see [`Self::gpu_used_dev`] for one device).
     pub fn counts(&self) -> (usize, usize, usize) {
         let mut c = (0, 0, 0);
         for t in &self.tier {
             match t {
-                Tier::Gpu => c.0 += 1,
+                Tier::Gpu(_) => c.0 += 1,
                 Tier::Host => c.1 += 1,
                 Tier::Disk => c.2 += 1,
             }
@@ -1013,10 +1126,11 @@ impl TieredStore {
         c
     }
 
-    /// GPU-primary experts of one layer (memory-model consistency checks).
+    /// GPU-primary experts of one layer, any device (memory-model
+    /// consistency checks).
     pub fn gpu_count_layer(&self, layer: usize) -> usize {
         let i = layer * self.n_experts;
-        self.tier[i..i + self.n_experts].iter().filter(|t| **t == Tier::Gpu).count()
+        self.tier[i..i + self.n_experts].iter().filter(|t| t.is_gpu()).count()
     }
 
     /// Paper-scale bytes the host tier currently pins (slot fraction of
@@ -1076,6 +1190,37 @@ impl TieredStore {
         for (p, &i) in self.host_members.iter().enumerate() {
             if self.tier[i] != Tier::Host || self.member_pos[i] != p {
                 return Err(format!("member index corrupt at slot {p} (flat id {i})"));
+            }
+        }
+        // Per-device conservation: the tracked per-device counts must match
+        // a recount of the tier map (single residency is structural — one
+        // tier per expert — so a drift here means double-booking), every
+        // device stays within its budget, and no expert sits on a device
+        // tier beyond the configured device count.
+        let mut per_dev = [0usize; MAX_DEVICES];
+        for t in &self.tier {
+            if let Tier::Gpu(d) = t {
+                per_dev[*d as usize] += 1;
+            }
+        }
+        for d in 0..MAX_DEVICES {
+            if per_dev[d] != self.gpu_used[d] {
+                return Err(format!(
+                    "device {d} residency drift: counted {} vs tracked {}",
+                    per_dev[d], self.gpu_used[d]
+                ));
+            }
+            if self.gpu_used[d] > self.gpu_slots[d] {
+                return Err(format!(
+                    "device {d} over budget: {} used > {} slots",
+                    self.gpu_used[d], self.gpu_slots[d]
+                ));
+            }
+            if d >= self.n_devices && self.gpu_used[d] > 0 {
+                return Err(format!(
+                    "device {d} holds {} experts but only {} devices exist",
+                    self.gpu_used[d], self.n_devices
+                ));
             }
         }
         Ok(())
@@ -1169,11 +1314,11 @@ mod tests {
         let mut s = TieredStore::new(1, 4, StoreCfg { host_slots: 2, ..Default::default() });
         s.ensure_host(0, 0, 0, &c); // already host; no-op
         s.admit_to_gpu(0, 0);
-        assert_eq!(s.tier(0, 0), Tier::Gpu);
+        assert_eq!(s.tier(0, 0), Tier::Gpu(0));
         // GPU expert is pinned: promoting two more spills only expert 1
         s.ensure_host(0, 2, 0, &c);
         assert_eq!(s.tier(0, 1), Tier::Disk);
-        assert_eq!(s.tier(0, 0), Tier::Gpu);
+        assert_eq!(s.tier(0, 0), Tier::Gpu(0));
         let nvme = s.xfer.read_busy;
         s.demote_gpu(0, 0);
         assert_eq!(s.tier(0, 0), Tier::Host);
@@ -1186,8 +1331,8 @@ mod tests {
     fn sync_layer_is_free_and_idempotent() {
         let mut s = TieredStore::new(2, 4, StoreCfg { host_slots: 2, ..Default::default() });
         s.sync_layer(0, &[false, false, true, true]);
-        assert_eq!(s.tier(0, 2), Tier::Gpu);
-        assert_eq!(s.tier(0, 3), Tier::Gpu);
+        assert_eq!(s.tier(0, 2), Tier::Gpu(0));
+        assert_eq!(s.tier(0, 3), Tier::Gpu(0));
         assert_eq!(s.xfer.read_bytes, 0, "initial placement is free");
         // second sync of the same layer does nothing
         s.sync_layer(0, &[true, false, false, false]);
@@ -1541,6 +1686,77 @@ mod tests {
         assert_eq!(s.spills, 0);
         assert_eq!(s.host_used(), 2);
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn multi_device_seeding_shards_by_home_device() {
+        let mut s = TieredStore::new(2, 8, StoreCfg::default());
+        s.set_n_devices(2);
+        assert_eq!(s.n_devices(), 2);
+        for e in 0..8 {
+            assert_eq!(s.home_device(e), (e % 2) as u8);
+        }
+        s.sync_layer(0, &[true; 8]);
+        // round-robin striping: evens on device 0, odds on device 1
+        for e in 0..8 {
+            assert_eq!(s.tier(0, e), Tier::Gpu((e % 2) as u8));
+        }
+        assert_eq!(s.gpu_used_dev(0), 4);
+        assert_eq!(s.gpu_used_dev(1), 4);
+        let (g, _, _) = s.counts();
+        assert_eq!(g, 8, "counts() sums over every device tier");
+        s.check_invariants().unwrap();
+        // demotion releases the right device's count
+        s.demote_gpu(0, 3);
+        assert_eq!(s.gpu_used_dev(1), 3);
+        assert_eq!(s.gpu_used_dev(0), 4);
+        s.check_invariants().unwrap();
+        // a single-device store homes everything on device 0
+        let mut one = TieredStore::new(1, 4, StoreCfg::default());
+        one.sync_layer(0, &[true, true, false, false]);
+        assert_eq!(one.tier(0, 1), Tier::Gpu(0));
+        one.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn p2p_migration_charges_the_fabric_lane_once() {
+        let c = cost();
+        let mut s = TieredStore::new(1, 4, StoreCfg::default());
+        s.set_n_devices(2);
+        s.sync_layer(0, &[true, false, false, false]);
+        assert_eq!(s.tier(0, 0), Tier::Gpu(0));
+        // cross-device move: one expert of fp16 bytes on the P2P lane
+        let done = s.migrate_gpu_dev(0, 0, 1, 0, &c);
+        assert_eq!(done, c.p2p_time());
+        assert_eq!(s.tier(0, 0), Tier::Gpu(1));
+        assert_eq!(s.gpu_used_dev(0), 0);
+        assert_eq!(s.gpu_used_dev(1), 1);
+        assert_eq!(s.p2p_migrations, 1);
+        assert_eq!(s.xfer.p2p_copies, 1);
+        assert_eq!(s.xfer.p2p_bytes, c.expert_bytes() as u64);
+        assert_eq!(s.xfer.p2p_busy, c.p2p_time());
+        s.check_invariants().unwrap();
+        // same-device "move" is free and moves nothing
+        let same = s.migrate_gpu_dev(0, 0, 1, 99, &c);
+        assert_eq!(same, 99);
+        assert_eq!(s.xfer.p2p_copies, 1);
+        // NVMe accounting is untouched by fabric traffic
+        assert_eq!(s.xfer.read_bytes, 0);
+        assert_eq!(s.xfer.write_bytes, 0);
+    }
+
+    #[test]
+    fn per_device_budgets_are_enforced_by_the_invariant_check() {
+        let mut s = TieredStore::new(1, 8, StoreCfg::default());
+        s.set_n_devices(2);
+        s.set_gpu_slots(0, 2);
+        s.sync_layer(0, &[true, true, true, false, false, false, false, false]);
+        // e0/e2 home on device 0 (2 used, budget 2), e1 on device 1: legal
+        s.check_invariants().unwrap();
+        // a third device-0 admission breaches the budget
+        s.set_gpu_slots(0, 1);
+        let err = s.check_invariants().unwrap_err();
+        assert!(err.contains("device 0 over budget"), "{err}");
     }
 
     #[test]

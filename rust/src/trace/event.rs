@@ -37,10 +37,13 @@ pub enum Lane {
     GpuCompute,
     /// CPU expert execution.
     Cpu,
+    /// Inter-GPU P2P/NVLink fabric (cross-device expert copies; never
+    /// busy on single-GPU runs).
+    P2p,
 }
 
 impl Lane {
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 8;
     pub const ALL: [Lane; Lane::COUNT] = [
         Lane::NvmeRead,
         Lane::NvmeWrite,
@@ -49,6 +52,7 @@ impl Lane {
         Lane::PcieSpec,
         Lane::GpuCompute,
         Lane::Cpu,
+        Lane::P2p,
     ];
 
     /// Stable dense index (array slot + digest word).
@@ -61,6 +65,7 @@ impl Lane {
             Lane::PcieSpec => 4,
             Lane::GpuCompute => 5,
             Lane::Cpu => 6,
+            Lane::P2p => 7,
         }
     }
 
@@ -73,6 +78,7 @@ impl Lane {
             Lane::PcieSpec => "pcie_spec",
             Lane::GpuCompute => "gpu_compute",
             Lane::Cpu => "cpu",
+            Lane::P2p => "p2p",
         }
     }
 
@@ -92,11 +98,12 @@ impl Lane {
 pub enum Event {
     /// Assignment chose a device for one non-idle expert; `cost_ns` is the
     /// priced execution cost of the chosen side (GPU kernel estimate, or
-    /// the CPU GEMM time after the bundle's efficiency factor).
-    Assign { layer: u32, expert: u32, gpu: bool, workload: u32, cost_ns: Ns },
-    /// A speculative PCIe prefetch was issued for the next layer;
-    /// `arrival` is its scheduled GPU arrival instant.
-    PrefetchIssue { layer: u32, expert: u32, arrival: Ns },
+    /// the CPU GEMM time after the bundle's efficiency factor). `device`
+    /// is the GPU tier index the expert landed on (0 when `gpu` is false).
+    Assign { layer: u32, expert: u32, gpu: bool, device: u8, workload: u32, cost_ns: Ns },
+    /// A speculative PCIe prefetch was issued for the next layer onto GPU
+    /// `device`; `arrival` is its scheduled GPU arrival instant.
+    PrefetchIssue { layer: u32, expert: u32, device: u8, arrival: Ns },
     /// A prefetched expert was consumed by a GPU assignment with real
     /// workload (counts 1:1 with `RunMetrics::prefetch_useful`).
     PrefetchHit { layer: u32, expert: u32 },
@@ -116,15 +123,16 @@ pub enum Event {
     Fetch { layer: u32, expert: u32, demand: bool, arrival: Ns },
     /// Host→disk spill; `writeback` when an NVMe write was charged.
     Spill { layer: u32, expert: u32, writeback: bool },
-    /// Cache admitted an expert to the GPU-resident set.
-    CacheAdmit { layer: u32, expert: u32 },
-    /// Cache evicted an expert from the GPU-resident set (a demotion when
-    /// a tiered store is attached).
-    CacheEvict { layer: u32, expert: u32 },
-    /// One busy interval `[start, end)` on a lane. Sums per lane
-    /// reconstruct the corresponding `RunMetrics` busy integrals exactly
-    /// (see the carry rule on [`Event::Reset`]).
-    LaneBusy { lane: Lane, start: Ns, end: Ns },
+    /// Cache admitted an expert to GPU `device`'s resident set.
+    CacheAdmit { layer: u32, expert: u32, device: u8 },
+    /// Cache evicted an expert from GPU `device`'s resident set (a
+    /// demotion when a tiered store is attached).
+    CacheEvict { layer: u32, expert: u32, device: u8 },
+    /// One busy interval `[start, end)` on a lane of `device` (always 0
+    /// for the host-side NVMe/transcode/CPU lanes and the P2P fabric).
+    /// Sums per lane reconstruct the corresponding `RunMetrics` busy
+    /// integrals exactly (see the carry rule on [`Event::Reset`]).
+    LaneBusy { lane: Lane, device: u8, start: Ns, end: Ns },
     /// Metrics reset (warmup boundary): the clock rebased to 0 at `at`.
     /// Followed immediately by carry `LaneBusy` events re-seeding each
     /// NVMe/transcode lane with the residual of work still in flight, so
@@ -170,6 +178,10 @@ pub enum Event {
     /// The overload controller de-escalated the degradation ladder
     /// (`from` → `to`, one rung) with `queue_depth` requests pending.
     DegradeExit { at: Ns, from: u32, to: u32, queue_depth: u32 },
+    /// An expert's weights were copied GPU `from` → GPU `to` over the P2P
+    /// fabric (execution placed it off its caching device, or a demand
+    /// fetch is being re-homed). Multi-GPU runs only.
+    P2pCopy { layer: u32, expert: u32, from: u8, to: u8, start: Ns, end: Ns },
 }
 
 impl Event {
@@ -201,6 +213,7 @@ impl Event {
             Event::RequestEvict { .. } => "request_evict",
             Event::DegradeEnter { .. } => "degrade_enter",
             Event::DegradeExit { .. } => "degrade_exit",
+            Event::P2pCopy { .. } => "p2p_copy",
         }
     }
 
@@ -209,18 +222,23 @@ impl Event {
     /// allocation-free and stable across platforms.
     pub fn fold_words(&self, f: &mut impl FnMut(u64)) {
         match *self {
-            Event::Assign { layer, expert, gpu, workload, cost_ns } => {
+            Event::Assign { layer, expert, gpu, device, workload, cost_ns } => {
                 f(1);
                 f(layer as u64);
                 f(expert as u64);
-                f(gpu as u64);
+                // placement word: 0 = CPU, 1 + d = GPU device d. Device 0
+                // folds exactly like the old `gpu as u64`, so 1-GPU digests
+                // are unchanged by the device tag.
+                f(if gpu { 1 + device as u64 } else { 0 });
                 f(workload as u64);
                 f(cost_ns);
             }
-            Event::PrefetchIssue { layer, expert, arrival } => {
+            Event::PrefetchIssue { layer, expert, device, arrival } => {
                 f(2);
                 f(layer as u64);
-                f(expert as u64);
+                // device rides the high 32 bits of the expert word (zero —
+                // i.e. the pre-multi-GPU word — on device 0)
+                f(expert as u64 | (device as u64) << 32);
                 f(arrival);
             }
             Event::PrefetchHit { layer, expert } => {
@@ -263,19 +281,19 @@ impl Event {
                 f(expert as u64);
                 f(writeback as u64);
             }
-            Event::CacheAdmit { layer, expert } => {
+            Event::CacheAdmit { layer, expert, device } => {
                 f(10);
                 f(layer as u64);
-                f(expert as u64);
+                f(expert as u64 | (device as u64) << 32);
             }
-            Event::CacheEvict { layer, expert } => {
+            Event::CacheEvict { layer, expert, device } => {
                 f(11);
                 f(layer as u64);
-                f(expert as u64);
+                f(expert as u64 | (device as u64) << 32);
             }
-            Event::LaneBusy { lane, start, end } => {
+            Event::LaneBusy { lane, device, start, end } => {
                 f(12);
-                f(lane.idx() as u64);
+                f(lane.idx() as u64 | (device as u64) << 32);
                 f(start);
                 f(end);
             }
@@ -364,6 +382,15 @@ impl Event {
                 f(to as u64);
                 f(queue_depth as u64);
             }
+            Event::P2pCopy { layer, expert, from, to, start, end } => {
+                f(26);
+                f(layer as u64);
+                f(expert as u64);
+                f(from as u64);
+                f(to as u64);
+                f(start);
+                f(end);
+            }
         }
     }
 
@@ -373,16 +400,23 @@ impl Event {
     pub fn to_value(&self) -> Value {
         let ev = Value::str(self.name());
         match *self {
-            Event::Assign { layer, expert, gpu, workload, cost_ns } => Value::obj(vec![
+            Event::Assign { layer, expert, gpu, device, workload, cost_ns } => Value::obj(vec![
                 ("ev", ev),
                 ("layer", Value::num(layer as f64)),
                 ("expert", Value::num(expert as f64)),
                 ("gpu", Value::Bool(gpu)),
+                ("device", Value::num(device as f64)),
                 ("workload", Value::num(workload as f64)),
                 ("cost_ns", Value::num(cost_ns as f64)),
             ]),
-            Event::PrefetchIssue { layer, expert, arrival }
-            | Event::AheadIssue { layer, expert, arrival } => Value::obj(vec![
+            Event::PrefetchIssue { layer, expert, device, arrival } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("device", Value::num(device as f64)),
+                ("arrival", Value::num(arrival as f64)),
+            ]),
+            Event::AheadIssue { layer, expert, arrival } => Value::obj(vec![
                 ("ev", ev),
                 ("layer", Value::num(layer as f64)),
                 ("expert", Value::num(expert as f64)),
@@ -390,12 +424,17 @@ impl Event {
             ]),
             Event::PrefetchHit { layer, expert }
             | Event::PrefetchWasted { layer, expert }
-            | Event::AheadMiss { layer, expert }
-            | Event::CacheAdmit { layer, expert }
-            | Event::CacheEvict { layer, expert } => Value::obj(vec![
+            | Event::AheadMiss { layer, expert } => Value::obj(vec![
                 ("ev", ev),
                 ("layer", Value::num(layer as f64)),
                 ("expert", Value::num(expert as f64)),
+            ]),
+            Event::CacheAdmit { layer, expert, device }
+            | Event::CacheEvict { layer, expert, device } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("device", Value::num(device as f64)),
             ]),
             Event::AheadHit { layer, expert, hidden_ns } => Value::obj(vec![
                 ("ev", ev),
@@ -416,9 +455,10 @@ impl Event {
                 ("expert", Value::num(expert as f64)),
                 ("writeback", Value::Bool(writeback)),
             ]),
-            Event::LaneBusy { lane, start, end } => Value::obj(vec![
+            Event::LaneBusy { lane, device, start, end } => Value::obj(vec![
                 ("ev", ev),
                 ("lane", Value::str(lane.name())),
+                ("device", Value::num(device as f64)),
                 ("start", Value::num(start as f64)),
                 ("end", Value::num(end as f64)),
             ]),
@@ -500,6 +540,15 @@ impl Event {
                 ("to", Value::num(to as f64)),
                 ("queue_depth", Value::num(queue_depth as f64)),
             ]),
+            Event::P2pCopy { layer, expert, from, to, start, end } => Value::obj(vec![
+                ("ev", ev),
+                ("layer", Value::num(layer as f64)),
+                ("expert", Value::num(expert as f64)),
+                ("from", Value::num(from as f64)),
+                ("to", Value::num(to as f64)),
+                ("start", Value::num(start as f64)),
+                ("end", Value::num(end as f64)),
+            ]),
         }
     }
 
@@ -508,17 +557,21 @@ impl Event {
     pub fn from_value(v: &Value) -> Result<Event> {
         let le = |k: &str| -> Result<u32> { Ok(v.get(k)?.as_u64()? as u32) };
         let ns = |k: &str| -> Result<Ns> { v.get(k)?.as_u64() };
+        // absent on pre-multi-GPU trace files: default to device 0
+        let dev = || -> u8 { v.get("device").and_then(|x| x.as_u64()).unwrap_or(0) as u8 };
         Ok(match v.get("ev")?.as_str()? {
             "assign" => Event::Assign {
                 layer: le("layer")?,
                 expert: le("expert")?,
                 gpu: v.get("gpu")?.as_bool()?,
+                device: dev(),
                 workload: le("workload")?,
                 cost_ns: ns("cost_ns")?,
             },
             "prefetch_issue" => Event::PrefetchIssue {
                 layer: le("layer")?,
                 expert: le("expert")?,
+                device: dev(),
                 arrival: ns("arrival")?,
             },
             "prefetch_hit" => {
@@ -552,13 +605,14 @@ impl Event {
                 writeback: v.get("writeback")?.as_bool()?,
             },
             "cache_admit" => {
-                Event::CacheAdmit { layer: le("layer")?, expert: le("expert")? }
+                Event::CacheAdmit { layer: le("layer")?, expert: le("expert")?, device: dev() }
             }
             "cache_evict" => {
-                Event::CacheEvict { layer: le("layer")?, expert: le("expert")? }
+                Event::CacheEvict { layer: le("layer")?, expert: le("expert")?, device: dev() }
             }
             "lane" => Event::LaneBusy {
                 lane: Lane::from_name(v.get("lane")?.as_str()?)?,
+                device: dev(),
                 start: ns("start")?,
                 end: ns("end")?,
             },
@@ -632,6 +686,14 @@ impl Event {
                 to: le("to")?,
                 queue_depth: le("queue_depth")?,
             },
+            "p2p_copy" => Event::P2pCopy {
+                layer: le("layer")?,
+                expert: le("expert")?,
+                from: le("from")? as u8,
+                to: le("to")? as u8,
+                start: ns("start")?,
+                end: ns("end")?,
+            },
             other => bail!("unknown trace event '{other}'"),
         })
     }
@@ -641,9 +703,11 @@ impl Event {
     /// the match in `fold_words`/`to_value` fails to compile first).
     pub fn examples() -> Vec<Event> {
         vec![
-            Event::Assign { layer: 3, expert: 7, gpu: true, workload: 12, cost_ns: 4096 },
-            Event::Assign { layer: 3, expert: 2, gpu: false, workload: 1, cost_ns: 900 },
-            Event::PrefetchIssue { layer: 4, expert: 1, arrival: 77_000 },
+            Event::Assign { layer: 3, expert: 7, gpu: true, device: 0, workload: 12, cost_ns: 4096 },
+            Event::Assign { layer: 3, expert: 2, gpu: false, device: 0, workload: 1, cost_ns: 900 },
+            Event::Assign { layer: 3, expert: 4, gpu: true, device: 1, workload: 6, cost_ns: 2048 },
+            Event::PrefetchIssue { layer: 4, expert: 1, device: 0, arrival: 77_000 },
+            Event::PrefetchIssue { layer: 4, expert: 2, device: 3, arrival: 78_000 },
             Event::PrefetchHit { layer: 4, expert: 1 },
             Event::PrefetchWasted { layer: 4, expert: 6 },
             Event::AheadIssue { layer: 5, expert: 0, arrival: 123_456 },
@@ -653,11 +717,15 @@ impl Event {
             Event::Fetch { layer: 2, expert: 5, demand: false, arrival: 66_666 },
             Event::Spill { layer: 1, expert: 2, writeback: false },
             Event::Spill { layer: 1, expert: 3, writeback: true },
-            Event::CacheAdmit { layer: 0, expert: 5 },
-            Event::CacheEvict { layer: 0, expert: 2 },
-            Event::LaneBusy { lane: Lane::NvmeRead, start: 100, end: 350 },
-            Event::LaneBusy { lane: Lane::Transcode, start: 350, end: 400 },
-            Event::LaneBusy { lane: Lane::Cpu, start: 0, end: 10 },
+            Event::CacheAdmit { layer: 0, expert: 5, device: 0 },
+            Event::CacheAdmit { layer: 0, expert: 6, device: 2 },
+            Event::CacheEvict { layer: 0, expert: 2, device: 0 },
+            Event::CacheEvict { layer: 0, expert: 3, device: 1 },
+            Event::LaneBusy { lane: Lane::NvmeRead, device: 0, start: 100, end: 350 },
+            Event::LaneBusy { lane: Lane::Transcode, device: 0, start: 350, end: 400 },
+            Event::LaneBusy { lane: Lane::Cpu, device: 0, start: 0, end: 10 },
+            Event::LaneBusy { lane: Lane::GpuCompute, device: 1, start: 20, end: 44 },
+            Event::LaneBusy { lane: Lane::P2p, device: 0, start: 44, end: 60 },
             Event::Reset { at: 1_000_000 },
             Event::StepEnd { step: 9, decode: true, end_ns: 2_000_000, tokens: 8 },
             Event::FaultRetry { lane: Lane::NvmeRead, layer: 2, expert: 6, attempt: 1, at: 500 },
@@ -671,6 +739,7 @@ impl Event {
             Event::RequestEvict { req: 2, at: 8_000, generated: 5, overdue_ns: 3_000 },
             Event::DegradeEnter { at: 4_000, from: 0, to: 1, queue_depth: 9 },
             Event::DegradeExit { at: 7_000, from: 1, to: 0, queue_depth: 1 },
+            Event::P2pCopy { layer: 2, expert: 9, from: 0, to: 1, start: 60, end: 90 },
         ]
     }
 }

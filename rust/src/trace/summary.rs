@@ -81,6 +81,10 @@ pub struct TraceSummary {
     pub degrade_enters: u64,
     /// Degradation-ladder de-escalations (rung went down).
     pub degrade_exits: u64,
+    /// Inter-GPU P2P expert copies (multi-GPU runs only).
+    pub p2p_copies: u64,
+    /// Total fabric time across those copies.
+    pub p2p_busy_ns: Ns,
     /// Wasted-prefetch count per (layer, expert), since the last reset.
     pub wasted_by_expert: BTreeMap<(u32, u32), u64>,
 }
@@ -132,7 +136,9 @@ impl TraceSummary {
             }
             Event::CacheAdmit { .. } => self.cache_admits += 1,
             Event::CacheEvict { .. } => self.cache_evicts += 1,
-            Event::LaneBusy { lane, start, end } => {
+            Event::LaneBusy { lane, start, end, .. } => {
+                // device-merged: a lane's total busy sums every device's
+                // intervals (per-device splits live in RunMetrics)
                 self.lane_busy[lane.idx()] += end.saturating_sub(start);
                 self.lane_ops[lane.idx()] += 1;
             }
@@ -161,6 +167,10 @@ impl TraceSummary {
             Event::RequestEvict { .. } => self.request_evicts += 1,
             Event::DegradeEnter { .. } => self.degrade_enters += 1,
             Event::DegradeExit { .. } => self.degrade_exits += 1,
+            Event::P2pCopy { start, end, .. } => {
+                self.p2p_copies += 1;
+                self.p2p_busy_ns += end.saturating_sub(start);
+            }
         }
     }
 
@@ -240,6 +250,12 @@ impl TraceSummary {
             "cache: admits {}  evicts {}\n",
             self.cache_admits, self.cache_evicts
         ));
+        if self.p2p_copies > 0 {
+            out.push_str(&format!(
+                "p2p fabric: copies {}  busy {} ns\n",
+                self.p2p_copies, self.p2p_busy_ns
+            ));
+        }
         if self.fault_retries + self.fault_aborts + self.ram_pressure_events > 0 {
             out.push_str(&format!(
                 "faults: retries {}  aborts {}  ram-pressure events {} ({} spills)\n",

@@ -154,6 +154,68 @@ fn run_step_steady_state_is_allocation_free() {
         );
     }
 
+    // --- multi-device pass: expert-parallel sharding is zero-alloc too ----
+    // Two GPU pipelines, home-device sharding, the shared P2P fabric lane,
+    // per-device residency scratch, and the device-tagged event stream all
+    // ride the same pre-sized buffers: the `dev_*` scratch is reserved for
+    // MAX_DEVICES * n_routed at construction, per-device lane state lives
+    // in a fixed array, and P2P charging is scalar arithmetic. Steady-state
+    // 2-GPU decode on the memory-limited DeepSeek-V3 cell must allocate
+    // exactly as little as the single-device passes above: nothing.
+    {
+        let scenario = "deepseek-v3-sim-2gpu";
+        let (model, hw) = presets.scenario(scenario).unwrap();
+        assert_eq!(hw.num_gpus, 2, "{scenario}: preset must request two devices");
+        let dims = &model.sim;
+        let cost = CostModel::for_scenario(&presets, scenario).unwrap();
+        let trace =
+            synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 96, 0xa11c);
+        let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+        let cfg = FrameworkCfg::paper_default(dims);
+        let bundle = Framework::Dali.bundle(dims, &cost, &freq, &cfg);
+        let ids: Vec<usize> = (0..8).collect();
+        let store = TieredStore::for_model(hw, &cost, dims.layers, dims.n_routed);
+        assert!(!store.is_unlimited());
+        let mut sim = StepSimulator::new(
+            &cost,
+            bundle,
+            &freq,
+            dims.layers,
+            dims.n_routed,
+            dims.n_shared,
+            7,
+        )
+        .with_gpus(hw.num_gpus)
+        .with_sink(DigestSink::new())
+        .with_store(store);
+        let mut step = BatchStep::default();
+        trace.compose_prefill_into(&ids, &mut step);
+        sim.run_step(&step, 8, Phase::Prefill);
+        sim.reset_metrics();
+        let warmup = 32;
+        for s in 0..warmup {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+        }
+        let before = alloc_calls();
+        for s in warmup..trace.min_steps() {
+            trace.compose_decode_into(&ids, s, &mut step);
+            sim.run_step(&step, 16 + s, Phase::Decode);
+        }
+        let allocs = alloc_calls() - before;
+        let (m, sink) = sim.finish_with_sink();
+        assert!(m.tokens_out > 0, "{scenario}: multi-device audit must actually decode");
+        assert!(sink.events > 0, "the digest sink must have observed events");
+        assert!(
+            m.dev_compute_busy_ns[0] > 0 && m.dev_compute_busy_ns[1] > 0,
+            "{scenario}: both devices must have computed"
+        );
+        assert_eq!(
+            allocs, 0,
+            "{scenario}/dali+2gpu: multi-device run_step allocated {allocs} times (expected zero)"
+        );
+    }
+
     // --- fault-injection pass: a flaky-nvme plan must not cost allocations -
     // The degraded cost views are precomputed once at plan install, retry /
     // backoff / stall pricing is pure arithmetic against the fault hash, and

@@ -13,7 +13,8 @@ use dali::coordinator::cache::WorkloadAwareCache;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
 use dali::coordinator::prefetch::ResidualPrefetcher;
 use dali::coordinator::simrun::{
-    replay_decode, replay_decode_faulted, replay_decode_store, Phase, PolicyBundle, StepSimulator,
+    replay_decode, replay_decode_faulted, replay_decode_gpus, replay_decode_store, Phase,
+    PolicyBundle, StepSimulator,
 };
 use dali::fault::FaultPlan;
 use dali::hw::CostModel;
@@ -257,6 +258,74 @@ fn faulted_store_replays_are_bit_identical() {
         run(Some(clean)),
         unfaulted,
         "--faults clean must be bit-identical to the un-faulted replay"
+    );
+}
+
+#[test]
+fn multi_gpu_replays_are_deterministic_and_one_gpu_is_transparent() {
+    // The expert-parallel backcompat lock, dynamic half: `num_gpus = 1`
+    // through the generalized N-device entry point is bit-identical —
+    // digest included — to the legacy single-GPU replay (the static half
+    // is tests/golden/run_digests.json, blessed before the multi-device
+    // refactor and still asserted by trace_digest.rs). A 2-device replay
+    // must itself be bit-deterministic, and sharding must genuinely
+    // perturb the event stream (different digest from 1 GPU).
+    let p = Presets::load_default().unwrap();
+    let scenario = "mixtral-sim-ram16-q4";
+    let (model, hw) = p.scenario(scenario).unwrap();
+    let c = CostModel::for_scenario(&p, scenario).unwrap();
+    let dims = &model.sim;
+    let t = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 8, 48, LAYERS_SEED);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let ids: Vec<usize> = (0..6).collect();
+    let run = |gpus: usize| {
+        let mut bundle = dali_bundle(dims.layers, dims.n_routed);
+        bundle.placement = PlacementCfg::predictive(1);
+        let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+        replay_decode_gpus(
+            &t,
+            &ids,
+            32,
+            &c,
+            bundle,
+            &freq,
+            1,
+            7,
+            gpus,
+            None,
+            Some(store),
+            DigestSink::new(),
+        )
+        .0
+    };
+    let legacy = {
+        let mut bundle = dali_bundle(dims.layers, dims.n_routed);
+        bundle.placement = PlacementCfg::predictive(1);
+        let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+        replay_decode_faulted(
+            &t,
+            &ids,
+            32,
+            &c,
+            bundle,
+            &freq,
+            1,
+            7,
+            None,
+            Some(store),
+            DigestSink::new(),
+        )
+        .0
+    };
+    let one = run(1);
+    assert_eq!(one, legacy, "n_gpus = 1 must be the single-GPU replay, bit for bit");
+    let two_a = run(2);
+    let two_b = run(2);
+    assert_eq!(two_a, two_b, "2-GPU replays must be bit-identical, digest included");
+    assert!(two_a.trace_digest.is_some() && one.trace_digest.is_some());
+    assert_ne!(
+        two_a.trace_digest, one.trace_digest,
+        "device sharding must perturb the event stream"
     );
 }
 

@@ -49,6 +49,7 @@ fn prop_all_assigners_satisfy_constraints() {
             gpu_free_slots: slots,
             layer: rng.usize_below(4),
             layers: 4,
+            devices: None,
         };
         let assigners: Vec<Box<dyn Assigner>> = vec![
             Box::new(GreedyAssigner::new()),
@@ -87,6 +88,7 @@ fn prop_optimal_not_worse_than_any_heuristic() {
             gpu_free_slots: slots,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let opt = OptimalAssigner::new().assign(&ctx).makespan_estimate(&ctx);
         let greedy = GreedyAssigner::new().assign(&ctx).makespan_estimate(&ctx);
@@ -114,6 +116,7 @@ fn prop_greedy_within_2x_of_optimal() {
             gpu_free_slots: n,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let opt = OptimalAssigner::new().assign(&ctx).makespan_estimate(&ctx);
         let greedy = GreedyAssigner::new().assign(&ctx).makespan_estimate(&ctx);
@@ -204,6 +207,7 @@ fn prop_makespan_estimate_is_max_of_sides() {
             gpu_free_slots: n,
             layer: 0,
             layers: 4,
+            devices: None,
         };
         let a = GreedyAssigner::new().assign(&ctx);
         let mut t_cpu = 0u64;

@@ -9,7 +9,7 @@
 
 use dali::config::Presets;
 use dali::coordinator::frameworks::{Framework, FrameworkCfg};
-use dali::coordinator::simrun::{replay_decode_store, replay_decode_traced};
+use dali::coordinator::simrun::{replay_decode_gpus, replay_decode_store, replay_decode_traced};
 use dali::hw::CostModel;
 use dali::metrics::RunMetrics;
 use dali::store::{PlacementCfg, TieredStore};
@@ -72,6 +72,41 @@ fn digest(scenario: &str, fw: Framework, reactive: bool, seed: u64) -> u64 {
         .expect("a digest-sink replay must surface its digest")
 }
 
+/// Like [`digest`], but replays through the N-device entry point with the
+/// scenario's own `num_gpus` — the expert-parallel analogue of the golden
+/// lock. At `num_gpus = 1` this is digest-identical to [`digest`] by
+/// construction, so only multi-GPU scenarios earn their own keys.
+fn digest_gpus(scenario: &str, fw: Framework, seed: u64) -> u64 {
+    let p = Presets::load_default().unwrap();
+    let (model, hw) = p.scenario(scenario).unwrap();
+    let c = CostModel::new(model, hw).with_quant_ratio(p.quant_ratio(scenario));
+    let dims = &model.sim;
+    let trace = synthetic_locality_trace(dims.layers, dims.n_routed, dims.top_k, 16, 48, 0x7157);
+    let freq = vec![vec![0.0; dims.n_routed]; dims.layers];
+    let cfg = FrameworkCfg::paper_default(dims);
+    let bundle = fw.bundle(dims, &c, &freq, &cfg);
+    let store = TieredStore::for_model(hw, &c, dims.layers, dims.n_routed);
+    assert!(!store.is_unlimited());
+    let ids: Vec<usize> = (0..8).collect();
+    replay_decode_gpus(
+        &trace,
+        &ids,
+        40,
+        &c,
+        bundle,
+        &freq,
+        dims.n_shared,
+        seed,
+        hw.num_gpus,
+        None,
+        Some(store),
+        DigestSink::new(),
+    )
+    .0
+    .trace_digest
+    .expect("a digest-sink replay must surface its digest")
+}
+
 #[test]
 fn identical_replays_produce_equal_digests() {
     for scenario in ["mixtral-sim-ram16", "mixtral-sim-ram16-q4"] {
@@ -119,6 +154,13 @@ fn golden_digests_lock_comparison_set() {
             let key = format!("{scenario}/{}/seed11", fw.name());
             got.push((key, digest(scenario, fw, false, 11)));
         }
+    }
+    // Expert-parallel cells: Dali locks the device-aware assigner's
+    // schedule, HybriMoE locks the `align_devices` post-pass the
+    // single-device baselines ride through. Unblessed keys warn below.
+    for fw in [Framework::Dali, Framework::HybriMoE] {
+        let key = format!("deepseek-v3-sim-2gpu/{}/gpus2/seed11", fw.name());
+        got.push((key, digest_gpus("deepseek-v3-sim-2gpu", fw, 11)));
     }
     if std::env::var("DALI_BLESS_DIGESTS").is_ok() {
         let mut pairs: Vec<(&str, Value)> = vec![(

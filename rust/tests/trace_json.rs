@@ -59,7 +59,7 @@ fn every_event_variant_round_trips_through_json() {
     let examples = Event::examples();
     // the exemplar list must cover the whole taxonomy
     let names: BTreeSet<&str> = examples.iter().map(|e| e.name()).collect();
-    assert_eq!(names.len(), 21, "one exemplar per variant: {names:?}");
+    assert_eq!(names.len(), 22, "one exemplar per variant: {names:?}");
     for ev in examples {
         let text = ev.to_value().to_json();
         let back = Event::from_value(&Value::parse(&text).unwrap())
@@ -92,7 +92,7 @@ fn traced_replay_lane_intervals_are_monotone_per_lane() {
     for ev in &events {
         match *ev {
             Event::Reset { .. } => last = [None; Lane::COUNT],
-            Event::LaneBusy { lane, start, end } => {
+            Event::LaneBusy { lane, start, end, .. } => {
                 intervals += 1;
                 assert!(end >= start, "negative interval on {}: [{start}, {end})", lane.name());
                 if let Some(prev) = last[lane.idx()] {
